@@ -1,0 +1,74 @@
+//! Learning-curve prediction (the paper's AutoML experiment, Sec. 4):
+//! fit an exact LKGP over (hyperparameter config) x (epoch) learning
+//! curves where 90% of curves are right-censored, then extrapolate —
+//! the early-stopping decision problem.
+//!
+//! Run: cargo run --release --example learning_curves
+
+use lkgp::data::lcbench::LcBenchSim;
+use lkgp::gp::lkgp::{Lkgp, LkgpConfig};
+
+fn main() -> anyhow::Result<()> {
+    let sim = LcBenchSim::new(128, 52, 17);
+    let data = sim.generate();
+    println!(
+        "sim-LCBench: {} curves x {} epochs, {} observed cells ({}% missing, right-censored)",
+        data.p(),
+        data.q(),
+        data.n_observed(),
+        (100.0 * data.missing_ratio()).round()
+    );
+
+    let fit = Lkgp::fit(
+        &data,
+        LkgpConfig { train_iters: 20, n_samples: 32, ..LkgpConfig::default() },
+    )?;
+    let (test_rmse, test_nll) = fit.posterior.test_metrics(&data);
+    println!("extrapolation quality: test rmse {test_rmse:.3}, test nll {test_nll:.3}\n");
+
+    // early-stopping utility: rank curves by predicted final value and
+    // compare against the true final ranking
+    let q = data.q();
+    let censored: Vec<usize> =
+        (0..data.p()).filter(|&j| !data.mask[j * q + q - 1]).collect();
+    let mut pred_final: Vec<(usize, f64)> = censored
+        .iter()
+        .map(|&j| (j, fit.posterior.mean[j * q + q - 1]))
+        .collect();
+    pred_final.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    let true_best = censored
+        .iter()
+        .min_by(|&&a, &&b| {
+            data.y_grid[a * q + q - 1].partial_cmp(&data.y_grid[b * q + q - 1]).unwrap()
+        })
+        .copied()
+        .unwrap();
+    let predicted_rank_of_true_best = pred_final
+        .iter()
+        .position(|&(j, _)| j == true_best)
+        .unwrap();
+    println!(
+        "early stopping: true best curve {} ranked #{} of {} by predicted final error",
+        true_best,
+        predicted_rank_of_true_best + 1,
+        censored.len()
+    );
+
+    // spot-check one censored curve
+    let j = censored[censored.len() / 2];
+    let prefix = (0..q).take_while(|&k| data.mask[j * q + k]).count();
+    println!("\ncurve {j}: observed through epoch {prefix}, extrapolated to {q}:");
+    println!("{:>6} {:>10} {:>10} {:>8}", "epoch", "truth", "pred", "2sigma");
+    for k in (0..q).step_by(6) {
+        let idx = j * q + k;
+        println!(
+            "{:>6} {:>10.2} {:>10.2} {:>8.2}{}",
+            k,
+            data.y_grid[idx],
+            fit.posterior.mean[idx],
+            2.0 * fit.posterior.var[idx].sqrt(),
+            if data.mask[idx] { "" } else { "   <- missing" },
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,134 @@
+"""AOT compile path: lower every L2 builder for every shape config to
+HLO *text* + a manifest.json the rust runtime consumes.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published `xla` 0.1.6 crate binds) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. Lowered with return_tuple=True; the rust side unwraps the tuple.
+
+Run via `make artifacts` (from python/: `python -m compile.aot --out
+../artifacts`). Python never runs after this point.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import CONFIGS, n_theta
+from .model import BUILDERS
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def artifact_specs(name, cfg):
+    """Input ShapeDtypeStructs for each artifact, in call order.
+
+    This list is mirrored in manifest.json and is the ABI between the
+    compile path and the rust runtime — keep ordering stable.
+    """
+    p, q, ds = cfg["p"], cfg["q"], cfg["ds"]
+    b, k, nt = cfg["batch"], cfg["probes"], n_theta(cfg)
+    pq = p * q
+    if name == "kernels":
+        return [("s", spec(p, ds)), ("t", spec(q, 1)), ("theta", spec(nt))]
+    if name == "kron_mvm":
+        return [
+            ("kss", spec(p, p)),
+            ("ktt", spec(q, q)),
+            ("mask", spec(pq)),
+            ("sigma2", spec()),
+            ("v", spec(b, pq)),
+        ]
+    if name == "kron_apply":
+        return [("kss", spec(p, p)), ("ktt", spec(q, q)), ("v", spec(b, pq))]
+    if name == "prior_sample":
+        # Cholesky factors, not Gram matrices — see model.build_prior_sample
+        return [("ls", spec(p, p)), ("lt", spec(q, q)), ("z", spec(b, pq))]
+    if name == "mll_grads":
+        return [
+            ("s", spec(p, ds)),
+            ("t", spec(q, 1)),
+            ("theta", spec(nt)),
+            ("log_sigma2", spec()),
+            ("mask", spec(pq)),
+            ("alpha", spec(pq)),
+            ("w", spec(k, pq)),
+            ("z", spec(k, pq)),
+        ]
+    raise KeyError(name)
+
+
+def lower_artifact(name, cfg):
+    fn = BUILDERS[name](cfg)
+    specs = [s for _, s in artifact_specs(name, cfg)]
+    # keep_unused: ICM ignores `t`; the parameter must stay in the HLO
+    # signature so the rust ABI is uniform across kernel families.
+    lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+    return to_hlo_text(lowered), specs
+
+
+def build_all(out_dir, config_names=None):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"version": 1, "dtype": "f32", "configs": {}}
+    for cname, cfg in CONFIGS.items():
+        if config_names and cname not in config_names:
+            continue
+        entry = {
+            "p": cfg["p"],
+            "q": cfg["q"],
+            "ds": cfg["ds"],
+            "kernel_t": cfg["kernel_t"],
+            "batch": cfg["batch"],
+            "probes": cfg["probes"],
+            "n_theta": n_theta(cfg),
+            "artifacts": {},
+        }
+        for aname in BUILDERS:
+            fname = f"{aname}_{cname}.hlo.txt"
+            text, specs = lower_artifact(aname, cfg)
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            entry["artifacts"][aname] = {
+                "file": fname,
+                "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+                "inputs": [
+                    {"name": n, "shape": list(s.shape)}
+                    for n, s in artifact_specs(aname, cfg)
+                ],
+            }
+            print(f"  {fname}: {len(text) / 1024:.0f} KiB")
+        manifest["configs"][cname] = entry
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {out_dir}/manifest.json")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", nargs="*", default=None, help="subset of config names")
+    args = ap.parse_args()
+    build_all(args.out, args.configs)
+
+
+if __name__ == "__main__":
+    main()

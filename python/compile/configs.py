@@ -1,0 +1,75 @@
+"""Shape configurations for AOT artifact generation.
+
+Each config fixes the static shapes the PJRT runtime will execute:
+p spatial points, q time steps / tasks, d_s input dims, the time-kernel
+family, the CG right-hand-side batch, and the number of Hutchinson probes.
+
+The rust coordinator picks a config by name from artifacts/manifest.json;
+everything else (missing masks, hyperparameter values, data) is a runtime
+input, so one artifact set serves every missing ratio / seed of an
+experiment.
+"""
+
+# Time-kernel families. Determines both K_TT's functional form and the
+# hyperparameter packing (see theta_layout).
+KT_RBF = "rbf"                  # squared exponential on t
+KT_RBF_PERIODIC = "rbf_periodic"  # SE * periodic (climate seasonal trend)
+KT_ICM = "icm"                  # full-rank ICM task kernel (SARCOS torques)
+
+
+def theta_layout(cfg):
+    """Return (names, sizes) of the hyperparameter vector theta.
+
+    theta is a flat f32 vector; log-scale for positive quantities.
+    Layout: [log_ls_S (ARD, d_s) | log_outputscale | time-kernel params].
+    The observation noise log_sigma2 is a separate scalar input.
+    """
+    names = [("log_ls_s", cfg["ds"]), ("log_os", 1)]
+    kt = cfg["kernel_t"]
+    if kt == KT_RBF:
+        names.append(("log_ls_t", 1))
+    elif kt == KT_RBF_PERIODIC:
+        names.append(("log_ls_t", 1))
+        names.append(("log_ls_per", 1))
+        names.append(("log_period", 1))
+    elif kt == KT_ICM:
+        q = cfg["q"]
+        names.append(("icm_chol", q * (q + 1) // 2))
+    else:
+        raise ValueError(f"unknown kernel_t {kt!r}")
+    return names
+
+
+def n_theta(cfg):
+    return sum(size for _, size in theta_layout(cfg))
+
+
+# NOTE: sizes are scaled for a 1-core CPU testbed (see DESIGN.md §3/§6);
+# the paper's A100 sizes (p=5000, q=1000) use the same artifacts with
+# larger statics.
+#
+# `block` is the Pallas matmul tile, tuned per shape by the perf pass
+# (EXPERIMENTS.md §Perf). interpret=True executes the grid as an XLA
+# while-loop, so on CPU fewer/larger tiles win (3-10x over the 128^3
+# default). On a real TPU the same knob would be capped by VMEM
+# (3 * bm*bk * 4B <= ~12 MiB); 128^3 is the MXU-native choice there —
+# see DESIGN.md §Hardware-Adaptation.
+CONFIGS = {
+    # Tiny config: python tests + rust integration tests.
+    "tiny": dict(p=16, q=8, ds=2, kernel_t=KT_RBF, batch=4, probes=4, block=None),
+    # Fig 3: simulated SARCOS inverse dynamics, 7 torque tasks (ICM).
+    "sarcos": dict(
+        p=512, q=7, ds=21, kernel_t=KT_ICM, batch=8, probes=8,
+        block=(2048, 512, 512),
+    ),
+    # Table 1 / Fig 4: learning-curve prediction (configs x epochs).
+    "lcbench": dict(
+        p=256, q=52, ds=7, kernel_t=KT_RBF, batch=16, probes=8,
+        block=(1024, 256, 256),
+    ),
+    # Table 2 / Fig 5: spatiotemporal climate (lat/lon x days).
+    "climate": dict(
+        p=384, q=96, ds=2, kernel_t=KT_RBF_PERIODIC, batch=16, probes=8,
+        block=(1536, 384, 384),
+    ),
+}

@@ -1,0 +1,58 @@
+"""L1: masked latent-Kronecker matrix-vector products, built on the
+Pallas matmul kernel.
+
+Layout convention (shared with the rust coordinator): a grid vector v of
+length p*q is ``reshape(v, (p, q))`` row-major, i.e. ``v[j*q + k]`` is the
+value at (s_j, t_k). Under this layout
+
+    (K_SS (x) K_TT) v  ==  vec( K_SS @ unvec(v) @ K_TT^T ).
+
+The projection P / P^T of the paper is implemented as a dense {0,1} mask
+multiply (zero padding), which keeps layouts static — exactly the "lazy
+projection" the paper prescribes, and the TPU-friendly alternative to a
+gather.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def kron_apply(kss, ktt, v, *, block=None, interpret=True):
+    """(K_SS (x) K_TT) applied to a batch of grid vectors.
+
+    kss: (p, p), ktt: (q, q), v: (b, p*q) -> (b, p*q).
+    Two GEMMs: (b*p, q) @ K_TT^T then per-batch K_SS @ (.), expressed as
+    one (b*q, p) @ K_SS^T after a transpose so both halves use the same
+    2-D Pallas matmul kernel.
+    """
+    b, pq = v.shape
+    p, q = kss.shape[0], ktt.shape[0]
+    if pq != p * q:
+        raise ValueError(f"v has {pq} cols, expected {p}*{q}")
+    # right half: V @ K_TT^T, batched by stacking rows
+    t1 = matmul(v.reshape(b * p, q), ktt.T, block=block, interpret=interpret)
+    # left half: K_SS @ T1[b]  ==  (T1[b]^T @ K_SS^T)^T
+    t1 = t1.reshape(b, p, q).transpose(0, 2, 1).reshape(b * q, p)
+    t2 = matmul(t1, kss.T, block=block, interpret=interpret)
+    return t2.reshape(b, q, p).transpose(0, 2, 1).reshape(b, pq)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def kron_mvm(kss, ktt, mask, sigma2, v, *, block=None, interpret=True):
+    """System operator of LKGP: ``A = M (K_SS (x) K_TT) M + sigma2 I``.
+
+    mask: (p*q,) in {0,1}; sigma2: scalar; v: (b, p*q) -> (b, p*q).
+
+    On the observed subspace (mask == 1) this equals the paper's
+    ``P (K_SS (x) K_TT) P^T + sigma2 I``; on the missing coordinates it
+    acts as ``sigma2 I``, so CG iterates started at 0 with masked RHS
+    never leave the observed subspace — the projection is exact, not an
+    approximation.
+    """
+    kv = kron_apply(kss, ktt, v * mask[None, :], block=block, interpret=interpret)
+    return kv * mask[None, :] + sigma2 * v

@@ -1,0 +1,98 @@
+"""L1: tiled matrix-multiplication Pallas kernel.
+
+This is the compute primitive behind the latent-Kronecker MVM
+``v -> vec(K_SS . unvec(v) . K_TT^T)`` (two GEMMs) and the Cholesky-factor
+application in pathwise prior sampling.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the (bm, bk, bn) tiles
+stream HBM->VMEM via BlockSpec index maps; the inner ``jnp.dot`` hits the
+MXU with f32 accumulation. The k-axis is the innermost, sequential grid
+dimension so the output block acts as the VMEM accumulator (standard
+revisiting pattern). interpret=True lowers the same schedule to plain HLO
+for the CPU PJRT client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: MXU-shaped 128x128 tiles, f32 accumulation.
+# VMEM footprint per grid step: (bm*bk + bk*bn + bm*bn) * 4B = 192 KiB.
+DEFAULT_BLOCK = (128, 128, 128)
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, k_steps):
+    """One (i, j, s) grid step: o[i,j] (+)= x[i,s] @ y[s,j]."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pad_to(a, m, n):
+    pm, pn = m - a.shape[0], n - a.shape[1]
+    if pm == 0 and pn == 0:
+        return a
+    return jnp.pad(a, ((0, pm), (0, pn)))
+
+
+def _ceil_to(x, b):
+    return (x + b - 1) // b * b
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _matmul(x, y, block, interpret):
+    (m, k), (k2, n) = x.shape, y.shape
+    if k != k2:
+        raise ValueError(f"shape mismatch {x.shape} @ {y.shape}")
+    bm, bk, bn = block or DEFAULT_BLOCK
+    bm, bk, bn = min(bm, _ceil_to(m, 8)), min(bk, _ceil_to(k, 8)), min(bn, _ceil_to(n, 8))
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp, yp = _pad_to(x, mp, kp), _pad_to(y, kp, np_)
+    k_steps = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=interpret,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def _matmul_fwd(x, y, block, interpret):
+    return _matmul(x, y, block, interpret), (x, y)
+
+
+def _matmul_bwd(block, interpret, res, g):
+    # The cotangents are themselves tiled Pallas matmuls, so jax.grad of
+    # anything built on `matmul` (the MLL-gradient artifact in
+    # particular) stays on the L1 hot path.
+    x, y = res
+    dx = _matmul(g, y.T, block, interpret)
+    dy = _matmul(x.T, g, block, interpret)
+    return dx, dy
+
+
+_matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def matmul(x, y, *, block=None, interpret=True):
+    """Tiled ``x @ y`` via Pallas. Arbitrary (m, k) x (k, n) shapes.
+
+    Inputs are zero-padded up to tile multiples and the result is sliced
+    back, so the kernel itself only ever sees full tiles (static layout,
+    which is what Mosaic wants on real hardware). Differentiable via a
+    custom VJP whose backward matmuls reuse this same kernel.
+    """
+    return _matmul(x, y, block, interpret)

@@ -1,0 +1,169 @@
+"""L2: the LKGP compute graph in JAX, calling the L1 Pallas kernels.
+
+Five jit-able builders, one per AOT artifact (see aot.py):
+
+  kernels      (S, T, theta)                         -> (K_SS, K_TT)
+  kron_mvm     (K_SS, K_TT, mask, sigma2, V)         -> (A V,)
+  kron_apply   (K_SS, K_TT, V)                       -> ((K (x) K) V,)
+  prior_sample (K_SS, K_TT, Z)                       -> ((L_S (x) L_T) Z,)
+  mll_grads    (S, T, theta, log_s2, mask, a, W, Z)  -> (grads,)
+
+All positive hyperparameters are log-parameterized. The spatial Gram
+matrix K_SS (the large one, p x p) is computed by the Pallas RBF kernel;
+K_TT (q x q, q <= ~100) uses direct jnp broadcasting — it is tiny and its
+functional form varies per config (SE / SE*periodic / full-rank ICM).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import KT_ICM, KT_RBF, KT_RBF_PERIODIC, theta_layout
+from .kernels.kron_mvm import kron_apply, kron_mvm
+from .kernels.rbf import rbf_gram
+
+# Relative jitter added before Cholesky in prior sampling.
+CHOL_JITTER = 1e-4
+
+
+def unpack_theta(cfg, theta):
+    """Split the flat theta vector per configs.theta_layout."""
+    out, off = {}, 0
+    for name, size in theta_layout(cfg):
+        out[name] = theta[off : off + size]
+        off += size
+    return out
+
+
+def spatial_gram(s1, s2, log_ls_s, log_os, *, interpret=True):
+    """ARD squared-exponential Gram via the Pallas RBF kernel."""
+    ls = jnp.exp(log_ls_s)[None, :]
+    k = rbf_gram(s1 / ls, s2 / ls, interpret=interpret)
+    return jnp.exp(log_os[0]) * k
+
+
+def time_gram(cfg, t1, t2, th):
+    """K_TT for the config's time-kernel family (small q, direct jnp)."""
+    kt = cfg["kernel_t"]
+    if kt == KT_RBF:
+        ls = jnp.exp(th["log_ls_t"])
+        d2 = jnp.sum((t1[:, None, :] - t2[None, :, :]) ** 2, axis=-1)
+        return jnp.exp(-0.5 * d2 / ls[0] ** 2)
+    if kt == KT_RBF_PERIODIC:
+        ls = jnp.exp(th["log_ls_t"])[0]
+        lsp = jnp.exp(th["log_ls_per"])[0]
+        period = jnp.exp(th["log_period"])[0]
+        diff = t1[:, None, 0] - t2[None, :, 0]
+        se = jnp.exp(-0.5 * diff**2 / ls**2)
+        per = jnp.exp(-2.0 * jnp.sin(jnp.pi * diff / period) ** 2 / lsp**2)
+        return se * per
+    if kt == KT_ICM:
+        # Full-rank ICM: K_TT = L L^T with L lower-triangular, exp on the
+        # diagonal for positivity (the paper's SARCOS task kernel).
+        q = cfg["q"]
+        tril = th["icm_chol"]
+        il = jnp.tril_indices(q)
+        l = jnp.zeros((q, q), tril.dtype).at[il].set(tril)
+        diag = jnp.exp(jnp.diagonal(l))
+        l = l - jnp.diag(jnp.diagonal(l)) + jnp.diag(diag)
+        return l @ l.T + 1e-6 * jnp.eye(q, dtype=tril.dtype)
+    raise ValueError(f"unknown kernel_t {kt!r}")
+
+
+def build_kernels(cfg, *, interpret=True):
+    """(S[p,ds], T[q,dt], theta) -> (K_SS[p,p], K_TT[q,q])."""
+
+    def fn(s, t, theta):
+        th = unpack_theta(cfg, theta)
+        kss = spatial_gram(s, s, th["log_ls_s"], th["log_os"], interpret=interpret)
+        ktt = time_gram(cfg, t, t, th)
+        return kss, ktt.astype(kss.dtype)
+
+    return fn
+
+
+def build_kron_mvm(cfg, *, interpret=True):
+    """System operator A = M (K_SS (x) K_TT) M + sigma2 I, batched RHS."""
+
+    blk = cfg.get("block")
+
+    def fn(kss, ktt, mask, sigma2, v):
+        return (kron_mvm(kss, ktt, mask, sigma2, v, block=blk, interpret=interpret),)
+
+    return fn
+
+
+def build_kron_apply(cfg, *, interpret=True):
+    """Unmasked (K_SS (x) K_TT) V for pathwise-conditioning prediction."""
+
+    blk = cfg.get("block")
+
+    def fn(kss, ktt, v):
+        return (kron_apply(kss, ktt, v, block=blk, interpret=interpret),)
+
+    return fn
+
+
+def build_prior_sample(cfg, *, interpret=True):
+    """Kronecker-factored prior draws: (L_S (x) L_T) Z, Z ~ N(0, I).
+
+    Takes the *Cholesky factors* L_S (p x p) and L_T (q x q) as inputs:
+    factorizing the small Gram matrices is a setup-time host operation
+    (the rust coordinator does it in f64) — `jnp.linalg.cholesky` lowers
+    to a typed-FFI LAPACK custom call that xla_extension 0.5.1 cannot
+    load, and O(p^3 + q^3) is negligible next to the O(b pq(p+q)) factor
+    application, which is what runs here on the Pallas kron_apply path.
+    """
+
+    blk = cfg.get("block")
+
+    def fn(ls, lt, z):
+        return (kron_apply(ls, lt, z, block=blk, interpret=interpret),)
+
+    return fn
+
+
+def build_mll_grads(cfg, *, interpret=True):
+    """Hutchinson-estimated marginal-likelihood gradients.
+
+    With Khat(theta) = P K(theta) P^T + sigma2 I, alpha = Khat^-1 y and
+    probe solves W = Khat^-1 Z (computed by the rust CG driver), the NLL
+    gradient is
+
+      dNLL/dtheta ~= d/dtheta [ -1/2 a^T Khat(theta) a
+                                + 1/(2k) sum_i w_i^T Khat(theta) z_i ]
+
+    holding a, W, Z fixed (standard iterative-GP identity; Lin et al.
+    2024b). jax.grad differentiates the surrogate through the Pallas
+    kron MVM, so the gradient costs the same O(p^2 q + p q^2) as a
+    forward MVM. Returns a single vector [d/dtheta..., d/dlog_sigma2].
+    """
+
+    def surrogate(theta, log_sigma2, s, t, mask, alpha, w, z):
+        th = unpack_theta(cfg, theta)
+        kss = spatial_gram(s, s, th["log_ls_s"], th["log_os"], interpret=interpret)
+        ktt = time_gram(cfg, t, t, th).astype(kss.dtype)
+        s2 = jnp.exp(log_sigma2)
+        blk = cfg.get("block")
+        ka = kron_mvm(kss, ktt, mask, s2, alpha[None, :], block=blk, interpret=interpret)[0]
+        data_term = -0.5 * jnp.dot(alpha, ka)
+        kz = kron_mvm(kss, ktt, mask, s2, z, block=blk, interpret=interpret)
+        kprobes = z.shape[0]
+        trace_term = 0.5 / kprobes * jnp.sum(w * kz)
+        return data_term + trace_term
+
+    grad_fn = jax.grad(surrogate, argnums=(0, 1))
+
+    def fn(s, t, theta, log_sigma2, mask, alpha, w, z):
+        g_theta, g_s2 = grad_fn(theta, log_sigma2, s, t, mask, alpha, w, z)
+        return (jnp.concatenate([g_theta, g_s2[None]]),)
+
+    return fn
+
+
+BUILDERS = {
+    "kernels": build_kernels,
+    "kron_mvm": build_kron_mvm,
+    "kron_apply": build_kron_apply,
+    "prior_sample": build_prior_sample,
+    "mll_grads": build_mll_grads,
+}

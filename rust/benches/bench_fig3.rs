@@ -1,0 +1,40 @@
+//! Bench: the Figure-3 end-to-end comparison at one size — full
+//! LKGP fit vs dense-iterative fit on sim-SARCOS, at a low and a high
+//! missing ratio (below/above the Prop-3.1 break-even).
+
+use lkgp::data::sarcos::SarcosSim;
+use lkgp::gp::backend::MvmMode;
+use lkgp::gp::lkgp::{Backend, Lkgp, LkgpConfig};
+use lkgp::kron::breakeven;
+use lkgp::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::quick();
+    let p = 96;
+    println!(
+        "# bench_fig3 — end-to-end fit, sim-SARCOS p={p} q=7 \
+         (gamma*_time = {:.2})\n",
+        breakeven::gamma_time(p, 7)
+    );
+    for ratio in [0.2, 0.8] {
+        let data = SarcosSim::new(p, ratio, 0).generate();
+        let cfg = LkgpConfig {
+            train_iters: 5,
+            n_samples: 8,
+            probes: 4,
+            seed: 0,
+            ..LkgpConfig::default()
+        };
+        b.bench(&format!("lkgp_fit missing={ratio}"), || {
+            black_box(Lkgp::fit(&data, cfg.clone()).unwrap());
+        });
+        let cfg_d = LkgpConfig {
+            backend: Backend::Rust(MvmMode::DenseMaterialized),
+            ..cfg.clone()
+        };
+        b.bench(&format!("dense_fit missing={ratio}"), || {
+            black_box(Lkgp::fit(&data, cfg_d.clone()).unwrap());
+        });
+    }
+    b.save_csv("bench_fig3");
+}

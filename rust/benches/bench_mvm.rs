@@ -1,0 +1,75 @@
+//! Bench: MVM primitives — the Figure-2 companion.
+//!
+//! Dense n x n MVM vs latent-Kronecker MVM (rust backend) vs the
+//! AOT Pallas kron_mvm artifact on the PJRT client, with GFLOP/s.
+
+use lkgp::kron::{breakeven, KronOp, MaskedKronSystem};
+use lkgp::linalg::Matrix;
+use lkgp::runtime::{Manifest, Runtime, TensorF32};
+use lkgp::util::bench::{black_box, Bencher};
+use lkgp::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::default();
+    let mut rng = Rng::new(0);
+    println!("# bench_mvm — dense vs latent-Kronecker MVM (Fig. 2)\n");
+
+    for (p, q) in [(64usize, 16usize), (128, 32), (256, 64), (512, 96)] {
+        let n = p * q;
+        let kss = {
+            let a = Matrix::from_vec(p, 3, rng.normals(p * 3));
+            lkgp::kernels::RbfArd::new(3).gram(&a, &a)
+        };
+        let ktt = {
+            let a = Matrix::from_vec(q, 1, rng.normals(q));
+            lkgp::kernels::RbfArd::new(1).gram(&a, &a)
+        };
+        let sys = MaskedKronSystem::new(KronOp::new(kss, ktt), vec![1.0; n], 0.1);
+        let v = Matrix::from_vec(1, n, rng.normals(n));
+        b.bench_with_flops(
+            &format!("kron_mvm/rust p={p} q={q} (n={n})"),
+            Some(breakeven::kron_mvm_flops(p, q)),
+            || {
+                black_box(sys.apply_batch(&v));
+            },
+        );
+        if n <= 16384 {
+            let dense = sys.op.dense();
+            b.bench_with_flops(
+                &format!("dense_mvm/rust n={n}"),
+                Some(breakeven::dense_mvm_flops(n)),
+                || {
+                    black_box(dense.matvec(v.row(0)));
+                },
+            );
+        }
+    }
+
+    // PJRT artifact path (batched), if artifacts are present
+    if Manifest::default_dir().join("manifest.json").exists() {
+        let mut rt = Runtime::load_default().unwrap();
+        for cfg_name in ["tiny", "lcbench", "climate"] {
+            let cfg = rt.manifest.config(cfg_name).unwrap().clone();
+            let (p, q, bsz) = (cfg.p, cfg.q, cfg.batch);
+            let pq = p * q;
+            let inputs = [
+                TensorF32::new(vec![p, p], vec![0.1; p * p]),
+                TensorF32::new(vec![q, q], vec![0.1; q * q]),
+                TensorF32::vec1(vec![1.0; pq]),
+                TensorF32::scalar(0.1),
+                TensorF32::new(vec![bsz, pq], vec![0.5; bsz * pq]),
+            ];
+            rt.exec_f32(cfg_name, "kron_mvm", &inputs).unwrap(); // compile
+            b.bench_with_flops(
+                &format!("kron_mvm/pjrt {cfg_name} (batch {bsz})"),
+                Some(bsz as f64 * breakeven::kron_mvm_flops(p, q)),
+                || {
+                    black_box(rt.exec_f32(cfg_name, "kron_mvm", &inputs).unwrap());
+                },
+            );
+        }
+    } else {
+        println!("(artifacts not built; skipping PJRT series)");
+    }
+    b.save_csv("bench_mvm");
+}

@@ -1,0 +1,32 @@
+//! Bench: the Table-1 model set on one sim-LCBench dataset — per-model
+//! fit+predict wall time (the paper's "Time in min" rows, scaled).
+
+use lkgp::baselines::{BaselineModel, CaGp, Svgp, Vnngp};
+use lkgp::data::lcbench::LcBenchSim;
+use lkgp::gp::lkgp::{Lkgp, LkgpConfig};
+use lkgp::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::quick();
+    println!("# bench_table1 — per-model cost on sim-LCBench (p=48, q=52)\n");
+    let data = LcBenchSim::new(48, 52, 0).generate();
+    let cfg = LkgpConfig {
+        train_iters: 5,
+        n_samples: 8,
+        probes: 4,
+        ..LkgpConfig::default()
+    };
+    b.bench("LKGP fit+predict", || {
+        black_box(Lkgp::fit(&data, cfg.clone()).unwrap());
+    });
+    b.bench("SVGP fit+predict", || {
+        black_box(Svgp::new(64, 3, 0).fit_predict(&data).unwrap());
+    });
+    b.bench("VNNGP fit+predict", || {
+        black_box(Vnngp::new(16, 3, 0).fit_predict(&data).unwrap());
+    });
+    b.bench("CaGP fit+predict", || {
+        black_box(CaGp::new(32, 3, 0).fit_predict(&data).unwrap());
+    });
+    b.save_csv("bench_table1");
+}

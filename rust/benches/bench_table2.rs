@@ -1,0 +1,44 @@
+//! Bench: the Table-2 climate workload — LKGP cost across missing
+//! ratios (the paper's observation that LKGP gets *cheaper* with more
+//! missing data while approximate baselines do not benefit as much),
+//! plus the PJRT-backend variant when artifacts are available.
+
+use lkgp::data::climate::ClimateSim;
+use lkgp::gp::lkgp::{Backend, Lkgp, LkgpConfig};
+use lkgp::runtime::Manifest;
+use lkgp::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::quick();
+    println!("# bench_table2 — LKGP on sim-climate across missing ratios\n");
+    let cfg = LkgpConfig {
+        train_iters: 4,
+        n_samples: 8,
+        probes: 4,
+        ..LkgpConfig::default()
+    };
+    for ratio in [0.1, 0.3, 0.5] {
+        let data = ClimateSim::default_temperature(64, 48, ratio, 0);
+        b.bench(&format!("lkgp/rust climate missing={ratio}"), || {
+            black_box(Lkgp::fit(&data, cfg.clone()).unwrap());
+        });
+    }
+    // PJRT path on the tiny artifact config (kernel family must match
+    // the artifact: tiny is plain rbf, so use a well-specified grid)
+    if Manifest::default_dir().join("manifest.json").exists() {
+        let man = Manifest::load(&Manifest::default_dir()).unwrap();
+        if let Ok(c) = man.config("tiny") {
+            let kernel = lkgp::kernels::ProductGridKernel::new(c.ds, &c.kernel_t, c.q);
+            let data = lkgp::data::synthetic::well_specified(
+                c.p, c.q, c.ds, &kernel, 0.05, 0.3, 0,
+            );
+            let mut cfg_p = cfg.clone();
+            cfg_p.backend = Backend::Pjrt { config: "tiny".into() };
+            cfg_p.probes = c.probes;
+            b.bench("lkgp/pjrt tiny-config grid", || {
+                black_box(Lkgp::fit(&data, cfg_p.clone()).unwrap());
+            });
+        }
+    }
+    b.save_csv("bench_table2");
+}

@@ -1,0 +1,255 @@
+//! CaGP baseline (Wenger et al. 2024): computation-aware GP.
+//!
+//! Inference is projected onto m "actions" s_1..s_m (columns of S):
+//!
+//!   mean(x) = k(x, X) S (S^T Khat S)^{-1} S^T y
+//!   var(x)  = k(x,x) - k(x,X) S (S^T Khat S)^{-1} S^T k(X,x) + s2
+//!
+//! with Khat = K_nn + s2 I. Because the downdate uses the *projected*
+//! inverse, var is provably >= the exact GP posterior variance — the
+//! extra is the method's "computational uncertainty", which is what
+//! keeps CaGP calibrated at small m (the paper's Table 1/2 rows).
+//! Actions here are conjugate-gradient directions of Khat v = y
+//! (the CaGP-CG policy), which concentrate computation on the data fit.
+
+use anyhow::{Context, Result};
+
+use crate::data::GridDataset;
+use crate::gp::Posterior;
+use crate::linalg::chol::cholesky;
+use crate::linalg::Matrix;
+
+use super::common::{fd_adam, flatten, init_hypers, kernel_from};
+use super::{BaselineFit, BaselineModel};
+
+pub struct CaGp {
+    /// number of actions (projection dimension)
+    pub m: usize,
+    pub train_iters: usize,
+    pub lr: f64,
+    pub seed: u64,
+}
+
+impl CaGp {
+    pub fn new(m: usize, train_iters: usize, seed: u64) -> Self {
+        CaGp { m, train_iters, lr: 0.1, seed }
+    }
+}
+
+struct CagpState {
+    /// actions, n x m
+    s: Matrix<f64>,
+    /// chol of S^T Khat S
+    proj_chol: crate::linalg::chol::Cholesky<f64>,
+    /// S (S^T Khat S)^{-1} S^T y, length n (representer weights)
+    weights: Vec<f64>,
+}
+
+/// CG-direction actions + projected solves for fixed hypers.
+/// Returns (projected-NLL surrogate, state).
+fn cagp_solve(x: &Matrix<f64>, y: &[f64], m: usize, hypers: &[f64]) -> Result<(f64, CagpState)> {
+    let d = x.cols;
+    let n = x.rows;
+    let m = m.min(n);
+    let kernel = kernel_from(hypers, d);
+    let s2 = hypers[d + 1].exp();
+    let mut khat = kernel.gram(x, x);
+    khat.add_diag(s2);
+    // CG directions on Khat v = y
+    let mut s_cols: Vec<Vec<f64>> = Vec::with_capacity(m);
+    let mut r = y.to_vec();
+    let mut p = r.clone();
+    let mut v = vec![0.0; n];
+    let mut rr: f64 = r.iter().map(|a| a * a).sum();
+    for _ in 0..m {
+        if rr.sqrt() < 1e-12 {
+            break;
+        }
+        s_cols.push(p.clone());
+        let ap = khat.matvec(&p);
+        let pap: f64 = p.iter().zip(&ap).map(|(a, b)| a * b).sum();
+        if pap.abs() < 1e-300 {
+            break;
+        }
+        let alpha = rr / pap;
+        for i in 0..n {
+            v[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+        }
+        let rr_new: f64 = r.iter().map(|a| a * a).sum();
+        let beta = rr_new / rr;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+        rr = rr_new;
+    }
+    let m_eff = s_cols.len().max(1);
+    let mut s = Matrix::zeros(n, m_eff);
+    for (j, col) in s_cols.iter().enumerate() {
+        for i in 0..n {
+            s[(i, j)] = col[i];
+        }
+    }
+    if s_cols.is_empty() {
+        s = Matrix::from_fn(n, 1, |i, _| if i == 0 { 1.0 } else { 0.0 });
+    }
+    // projected system
+    let ks = khat.matmul(&s); // n x m
+    let mut proj = Matrix::zeros(s.cols, s.cols);
+    for a in 0..s.cols {
+        for b in 0..s.cols {
+            let mut acc = 0.0;
+            for i in 0..n {
+                acc += s[(i, a)] * ks[(i, b)];
+            }
+            proj[(a, b)] = acc;
+        }
+    }
+    // symmetrize tiny asymmetries
+    for a in 0..proj.rows {
+        for b in 0..a {
+            let avg = 0.5 * (proj[(a, b)] + proj[(b, a)]);
+            proj[(a, b)] = avg;
+            proj[(b, a)] = avg;
+        }
+    }
+    let proj_chol = cholesky(&proj).context("projected system chol")?;
+    let sty: Vec<f64> = (0..s.cols)
+        .map(|a| (0..n).map(|i| s[(i, a)] * y[i]).sum())
+        .collect();
+    let gamma = proj_chol.solve(&sty);
+    let weights: Vec<f64> =
+        (0..n).map(|i| (0..s.cols).map(|a| s[(i, a)] * gamma[a]).sum()).collect();
+    // projected-evidence surrogate (Wenger et al.'s projected NLL):
+    // 1/2 y^T weights + 1/2 log|S^T Khat S| - 1/2 log|S^T S|  + const
+    let yw: f64 = y.iter().zip(&weights).map(|(a, b)| a * b).sum();
+    let mut sts = Matrix::zeros(s.cols, s.cols);
+    for a in 0..s.cols {
+        for b in 0..s.cols {
+            let mut acc = 0.0;
+            for i in 0..n {
+                acc += s[(i, a)] * s[(i, b)];
+            }
+            sts[(a, b)] = acc;
+        }
+    }
+    let sts_logdet = cholesky(&sts).map(|c| c.logdet()).unwrap_or(0.0);
+    let nll = 0.5 * yw + 0.5 * (proj_chol.logdet() - sts_logdet);
+    Ok((nll, CagpState { s, proj_chol, weights }))
+}
+
+impl BaselineModel for CaGp {
+    fn name(&self) -> &'static str {
+        "CaGP"
+    }
+
+    fn fit_predict(&mut self, data: &GridDataset) -> Result<BaselineFit> {
+        let t0 = std::time::Instant::now();
+        let fd = flatten(data);
+        let d = fd.x.cols;
+        let mut hypers = init_hypers(d);
+        fd_adam(&mut hypers, self.train_iters, self.lr, 1e-4, |h| {
+            cagp_solve(&fd.x, &fd.y, self.m, h).map(|(nll, _)| nll).unwrap_or(1e12)
+        });
+        let (_, state) = cagp_solve(&fd.x, &fd.y, self.m, &hypers)?;
+        let kernel = kernel_from(&hypers, d);
+        let s2 = hypers[d + 1].exp();
+        let os = hypers[d].exp();
+
+        let kgx = kernel.gram(&fd.x_grid, &fd.x); // pq x n
+        let pq = fd.x_grid.rows;
+        let mut mean = vec![0.0; pq];
+        let mut var = vec![0.0; pq];
+        for r in 0..pq {
+            let krow = kgx.row(r);
+            let mu: f64 = krow.iter().zip(&state.weights).map(|(a, b)| a * b).sum();
+            // downdate: k S (S^T Khat S)^-1 S^T k
+            let sk: Vec<f64> = (0..state.s.cols)
+                .map(|a| (0..fd.x.rows).map(|i| state.s[(i, a)] * krow[i]).sum())
+                .collect();
+            let w = crate::linalg::chol::solve_lower(&state.proj_chol.l, &sk);
+            let red: f64 = w.iter().map(|x| x * x).sum();
+            let v = (os - red).max(1e-10) + s2;
+            mean[r] = mu * fd.y_std + fd.y_mean;
+            var[r] = v * fd.y_std * fd.y_std;
+        }
+        Ok(BaselineFit {
+            posterior: Posterior { mean, var },
+            train_secs: t0.elapsed().as_secs_f64(),
+            hypers,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::well_specified;
+    use crate::kernels::ProductGridKernel;
+
+    #[test]
+    fn fits_well_specified_data() {
+        let kernel = ProductGridKernel::new(2, "rbf", 6);
+        let data = well_specified(18, 6, 2, &kernel, 0.05, 0.3, 5);
+        let mut model = CaGp::new(24, 8, 0);
+        let fit = model.fit_predict(&data).unwrap();
+        let (rmse, nll) = fit.posterior.test_metrics(&data);
+        let (_, y_std) = data.target_stats();
+        assert!(rmse < y_std, "rmse {rmse} vs {y_std}");
+        assert!(nll < 2.5, "nll {nll}");
+    }
+
+    #[test]
+    fn variance_at_least_exact_gp() {
+        // CaGP's guarantee: projected posterior variance >= exact GP's.
+        let kernel = ProductGridKernel::new(1, "rbf", 4);
+        let data = well_specified(8, 4, 1, &kernel, 0.05, 0.25, 9);
+        let fd = flatten(&data);
+        let h = init_hypers(fd.x.cols);
+        let (_, state) = cagp_solve(&fd.x, &fd.y, 4, &h).unwrap();
+        let kern = kernel_from(&h, fd.x.cols);
+        let s2 = h[fd.x.cols + 1].exp();
+        let os = h[fd.x.cols].exp();
+        let mut khat = kern.gram(&fd.x, &fd.x);
+        khat.add_diag(s2);
+        let chol = cholesky(&khat).unwrap();
+        for r in (0..fd.x_grid.rows).step_by(3) {
+            let kx: Vec<f64> = (0..fd.x.rows)
+                .map(|i| kern.eval(fd.x.row(i), fd.x_grid.row(r)))
+                .collect();
+            // exact downdate
+            let sol = chol.solve(&kx);
+            let exact_red: f64 = kx.iter().zip(&sol).map(|(a, b)| a * b).sum();
+            // projected downdate
+            let sk: Vec<f64> = (0..state.s.cols)
+                .map(|a| (0..fd.x.rows).map(|i| state.s[(i, a)] * kx[i]).sum())
+                .collect();
+            let w = crate::linalg::chol::solve_lower(&state.proj_chol.l, &sk);
+            let proj_red: f64 = w.iter().map(|x| x * x).sum();
+            assert!(
+                proj_red <= exact_red + 1e-6,
+                "cell {r}: projected reduction {proj_red} > exact {exact_red}"
+            );
+            assert!(os - proj_red >= -1e-9);
+        }
+    }
+
+    #[test]
+    fn full_actions_recover_exact_mean() {
+        // m = n CG directions solve the system exactly.
+        let kernel = ProductGridKernel::new(1, "rbf", 3);
+        let data = well_specified(6, 3, 1, &kernel, 0.1, 0.2, 12);
+        let fd = flatten(&data);
+        let h = init_hypers(fd.x.cols);
+        let (_, state) = cagp_solve(&fd.x, &fd.y, fd.x.rows, &h).unwrap();
+        let kern = kernel_from(&h, fd.x.cols);
+        let s2 = h[fd.x.cols + 1].exp();
+        let mut khat = kern.gram(&fd.x, &fd.x);
+        khat.add_diag(s2);
+        let chol = cholesky(&khat).unwrap();
+        let alpha = chol.solve(&fd.y);
+        for (w, a) in state.weights.iter().zip(&alpha) {
+            assert!((w - a).abs() < 1e-4, "{w} vs {a}");
+        }
+    }
+}

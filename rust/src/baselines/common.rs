@@ -1,0 +1,128 @@
+//! Shared machinery for the baseline models: flattened feature views of
+//! grid datasets, heuristic hyperparameter initialization, and a
+//! finite-difference Adam loop for low-dimensional hyper optimization.
+
+use crate::data::GridDataset;
+use crate::kernels::RbfArd;
+use crate::linalg::Matrix;
+use crate::optim::Adam;
+use crate::util::rng::Rng;
+
+/// Observed data flattened to (X, y): x_i = [s_j.., t_k], y standardized.
+pub struct FlatData {
+    pub x: Matrix<f64>,
+    pub y: Vec<f64>,
+    /// all grid cells as feature rows (prediction targets)
+    pub x_grid: Matrix<f64>,
+    pub y_mean: f64,
+    pub y_std: f64,
+}
+
+pub fn flatten(data: &GridDataset) -> FlatData {
+    let (p, q) = (data.p(), data.q());
+    let d = data.s.cols + 1;
+    let (y_mean, y_std) = data.target_stats();
+    // time coordinates standardized to match spatial scaling
+    let t_mean = data.t.iter().sum::<f64>() / q as f64;
+    let t_var =
+        data.t.iter().map(|v| (v - t_mean) * (v - t_mean)).sum::<f64>() / q as f64;
+    let t_std = t_var.sqrt().max(1e-9);
+    let mut x_grid = Matrix::zeros(p * q, d);
+    for j in 0..p {
+        for k in 0..q {
+            let row = x_grid.row_mut(j * q + k);
+            row[..d - 1].copy_from_slice(data.s.row(j));
+            row[d - 1] = (data.t[k] - t_mean) / t_std;
+        }
+    }
+    let obs = data.observed_indices();
+    let mut x = Matrix::zeros(obs.len(), d);
+    let mut y = Vec::with_capacity(obs.len());
+    for (r, &i) in obs.iter().enumerate() {
+        x.row_mut(r).copy_from_slice(x_grid.row(i));
+        y.push((data.y_grid[i] - y_mean) / y_std);
+    }
+    FlatData { x, y, x_grid, y_mean, y_std }
+}
+
+/// Heuristic initialization: unit lengthscales on standardized features,
+/// unit outputscale (standardized targets), 10% noise.
+pub fn init_hypers(d: usize) -> Vec<f64> {
+    // [log_ls (shared per-dim via ARD), log_os, log_sigma2]
+    let mut h = vec![0.0; d + 1];
+    h.push((0.1f64).ln());
+    h
+}
+
+/// Build the RBF kernel from a hyper vector [log_ls.., log_os].
+pub fn kernel_from(h: &[f64], d: usize) -> RbfArd {
+    let mut k = RbfArd::new(d);
+    k.set_params(&h[..d + 1]);
+    k
+}
+
+/// Finite-difference Adam on a scalar loss. Central differences; the
+/// loss should be deterministic in `params` (fix RNG seeds inside).
+pub fn fd_adam(
+    params: &mut Vec<f64>,
+    iters: usize,
+    lr: f64,
+    eps: f64,
+    mut loss: impl FnMut(&[f64]) -> f64,
+) -> Vec<f64> {
+    let mut adam = Adam::new(params.len(), lr);
+    let mut trace = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let mut grad = vec![0.0; params.len()];
+        for i in 0..params.len() {
+            let mut pp = params.clone();
+            pp[i] += eps;
+            let lp = loss(&pp);
+            pp[i] -= 2.0 * eps;
+            let lm = loss(&pp);
+            grad[i] = (lp - lm) / (2.0 * eps);
+        }
+        adam.step(params, &grad);
+        trace.push(loss(params));
+    }
+    trace
+}
+
+/// Random subset of rows as initial inducing inputs.
+pub fn random_rows(x: &Matrix<f64>, m: usize, rng: &mut Rng) -> Matrix<f64> {
+    let m = m.min(x.rows);
+    let idx = rng.choose(x.rows, m);
+    let mut z = Matrix::zeros(m, x.cols);
+    for (r, &i) in idx.iter().enumerate() {
+        z.row_mut(r).copy_from_slice(x.row(i));
+    }
+    z
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::well_specified;
+    use crate::kernels::ProductGridKernel;
+
+    #[test]
+    fn flatten_shapes_and_standardization() {
+        let kernel = ProductGridKernel::new(2, "rbf", 5);
+        let data = well_specified(8, 5, 2, &kernel, 0.1, 0.25, 0);
+        let fd = flatten(&data);
+        assert_eq!(fd.x.cols, 3);
+        assert_eq!(fd.x.rows, data.n_observed());
+        assert_eq!(fd.x_grid.rows, 40);
+        let mean: f64 = fd.y.iter().sum::<f64>() / fd.y.len() as f64;
+        assert!(mean.abs() < 1e-9);
+    }
+
+    #[test]
+    fn fd_adam_minimizes() {
+        let mut p = vec![2.0, -3.0];
+        fd_adam(&mut p, 300, 0.1, 1e-5, |p| {
+            (p[0] - 0.5).powi(2) + (p[1] + 1.0).powi(2)
+        });
+        assert!((p[0] - 0.5).abs() < 0.05 && (p[1] + 1.0).abs() < 0.05, "{p:?}");
+    }
+}

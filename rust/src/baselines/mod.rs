@@ -1,0 +1,47 @@
+//! Sparse / variational / computation-aware GP baselines.
+//!
+//! The comparison set of the paper's Tables 1–2: SVGP (Hensman et al.
+//! 2013), VNNGP (Wu et al. 2022), and CaGP (Wenger et al. 2024),
+//! implemented in pure rust over the same datasets and metrics.
+//!
+//! Implementation notes (scaled to this testbed, see DESIGN.md):
+//! * Baselines model observations as points x = [s, t] in R^{d_s+1}
+//!   with an isotropic-per-dim SE kernel — the product-kernel structure
+//!   is the *LKGP* contribution; baselines are generic GP approximations.
+//! * With a Gaussian likelihood the optimum of SVGP's uncollapsed ELBO
+//!   is the Titsias collapsed solution; we train hyperparameters by
+//!   maximizing the collapsed ELBO directly (finite-difference Adam) and
+//!   recover q(u) in closed form. This is mathematically equivalent to
+//!   converged SVGP and avoids hand-deriving dozens of gradient terms.
+//! * VNNGP keeps inducing points at all training inputs and retains only
+//!   K-nearest-neighbor correlations — predictions are local-GP
+//!   conditionals, reproducing VNNGP's characteristic overconfidence
+//!   away from data.
+//! * CaGP projects inference onto m "actions" (CG directions on the
+//!   training system), with the guaranteed variance inflation
+//!   (computational uncertainty) of the original method.
+
+pub mod cagp;
+pub mod common;
+pub mod nn;
+pub mod svgp;
+pub mod vnngp;
+
+pub use cagp::CaGp;
+pub use svgp::Svgp;
+pub use vnngp::Vnngp;
+
+use crate::data::GridDataset;
+use crate::gp::Posterior;
+
+/// Uniform interface so experiment runners can iterate over models.
+pub trait BaselineModel {
+    fn name(&self) -> &'static str;
+    fn fit_predict(&mut self, data: &GridDataset) -> crate::Result<BaselineFit>;
+}
+
+pub struct BaselineFit {
+    pub posterior: Posterior,
+    pub train_secs: f64,
+    pub hypers: Vec<f64>,
+}

@@ -1,0 +1,76 @@
+//! k-nearest-neighbour search for VNNGP.
+//!
+//! Brute-force partial-selection kNN (n is moderate at this testbed's
+//! scale; a KD-tree gains little above d ~ 8, and SARCOS has d = 22).
+
+use crate::linalg::Matrix;
+
+/// Squared Euclidean distance between rows.
+#[inline]
+pub fn sqdist(a: &[f64], b: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+/// Indices of the k nearest rows of `xs` to `query` (excluding any index
+/// in `exclude`), ascending by distance.
+pub fn knn(xs: &Matrix<f64>, query: &[f64], k: usize, exclude: Option<usize>) -> Vec<usize> {
+    let k = k.min(xs.rows);
+    // (dist, idx) max-heap of size k via simple insertion (k is small)
+    let mut best: Vec<(f64, usize)> = Vec::with_capacity(k + 1);
+    for i in 0..xs.rows {
+        if exclude == Some(i) {
+            continue;
+        }
+        let d = sqdist(xs.row(i), query);
+        if best.len() < k {
+            best.push((d, i));
+            best.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        } else if d < best[k - 1].0 {
+            best[k - 1] = (d, i);
+            let mut j = k - 1;
+            while j > 0 && best[j].0 < best[j - 1].0 {
+                best.swap(j, j - 1);
+                j -= 1;
+            }
+        }
+    }
+    best.into_iter().map(|(_, i)| i).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn finds_true_neighbors() {
+        let mut rng = Rng::new(0);
+        let xs = Matrix::from_vec(50, 3, rng.normals(150));
+        let q = vec![0.1, -0.2, 0.3];
+        let got = knn(&xs, &q, 5, None);
+        // brute-force reference via full sort
+        let mut all: Vec<(f64, usize)> =
+            (0..50).map(|i| (sqdist(xs.row(i), &q), i)).collect();
+        all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let want: Vec<usize> = all[..5].iter().map(|&(_, i)| i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn exclude_self() {
+        let xs = Matrix::from_vec(3, 1, vec![0.0, 1.0, 2.0]);
+        let got = knn(&xs, &[0.0], 2, Some(0));
+        assert_eq!(got, vec![1, 2]);
+    }
+
+    #[test]
+    fn k_larger_than_n_clamps() {
+        let xs = Matrix::from_vec(3, 1, vec![0.0, 1.0, 2.0]);
+        assert_eq!(knn(&xs, &[5.0], 10, None).len(), 3);
+    }
+}

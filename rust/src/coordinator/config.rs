@@ -1,0 +1,125 @@
+//! Experiment scaling knobs.
+//!
+//! The paper ran on A100s (p=5000, q=1000, 2000 GPU-hours); this testbed
+//! is one CPU core. `quick` keeps every experiment under ~a minute,
+//! `paper` is the scaled-shape default used for EXPERIMENTS.md, `full`
+//! stretches as far as is sane on one core. The *shape* of every claim
+//! (who wins, break-even location) is scale-invariant — see DESIGN.md.
+
+use crate::util::cli::Args;
+
+#[derive(Clone, Debug)]
+pub struct ExperimentScale {
+    /// Fig 2: grid sizes n = p*q with p = q = sqrt(n)
+    pub fig2_sizes: Vec<usize>,
+    /// Fig 2: largest n for which the dense path is materialized
+    pub fig2_dense_cap: usize,
+    /// Fig 3: spatial points (q = 7 tasks fixed by the problem)
+    pub fig3_p: usize,
+    pub fig3_ratios: Vec<f64>,
+    pub fig3_seeds: u64,
+    /// Table 1 / Fig 4: learning curves per dataset, epochs
+    pub table1_p: usize,
+    pub table1_q: usize,
+    pub table1_seeds: u64,
+    /// Table 2: stations x days
+    pub table2_p: usize,
+    pub table2_q: usize,
+    pub table2_ratios: Vec<f64>,
+    pub table2_seeds: u64,
+    /// model-fit iteration budgets
+    pub gp_train_iters: usize,
+    pub baseline_train_iters: usize,
+    pub n_samples: usize,
+    /// LKGP backend: "rust" or a PJRT artifact config name
+    pub backend: String,
+}
+
+impl ExperimentScale {
+    pub fn quick() -> Self {
+        ExperimentScale {
+            fig2_sizes: vec![64, 256, 1024, 4096, 16384],
+            fig2_dense_cap: 4096,
+            fig3_p: 128,
+            fig3_ratios: vec![0.1, 0.3, 0.5, 0.7, 0.9],
+            fig3_seeds: 2,
+            table1_p: 64,
+            table1_q: 52,
+            table1_seeds: 2,
+            table2_p: 64,
+            table2_q: 48,
+            table2_ratios: vec![0.1, 0.3, 0.5],
+            table2_seeds: 1,
+            gp_train_iters: 10,
+            baseline_train_iters: 5,
+            n_samples: 16,
+            backend: "rust".into(),
+        }
+    }
+
+    pub fn paper() -> Self {
+        ExperimentScale {
+            fig2_sizes: vec![256, 1024, 4096, 16384, 65536, 262144],
+            fig2_dense_cap: 16384,
+            fig3_p: 512,
+            fig3_ratios: vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9],
+            fig3_seeds: 3,
+            table1_p: 256,
+            table1_q: 52,
+            table1_seeds: 3,
+            table2_p: 160,
+            table2_q: 64,
+            table2_ratios: vec![0.1, 0.2, 0.3, 0.4, 0.5],
+            table2_seeds: 2,
+            gp_train_iters: 20,
+            baseline_train_iters: 8,
+            n_samples: 32,
+            backend: "rust".into(),
+        }
+    }
+
+    /// Parse from CLI flags: --scale quick|paper plus per-knob overrides.
+    pub fn from_args(args: &Args) -> Self {
+        let mut s = match args.str("scale", "quick").as_str() {
+            "paper" => Self::paper(),
+            _ => Self::quick(),
+        };
+        s.fig3_p = args.usize("fig3-p", s.fig3_p);
+        s.fig3_seeds = args.u64("seeds", s.fig3_seeds);
+        s.table1_seeds = args.u64("seeds", s.table1_seeds);
+        s.table2_seeds = args.u64("seeds", s.table2_seeds).max(1);
+        s.fig3_ratios = args.f64_list("ratios", &s.fig3_ratios);
+        s.table2_ratios = args.f64_list("ratios", &s.table2_ratios);
+        s.gp_train_iters = args.usize("train-iters", s.gp_train_iters);
+        s.baseline_train_iters = args.usize("baseline-iters", s.baseline_train_iters);
+        s.n_samples = args.usize("samples", s.n_samples);
+        s.backend = args.str("backend", &s.backend);
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_is_smaller_than_paper() {
+        let (q, p) = (ExperimentScale::quick(), ExperimentScale::paper());
+        assert!(q.fig3_p < p.fig3_p);
+        assert!(q.table1_p < p.table1_p);
+        assert!(q.fig2_sizes.last() < p.fig2_sizes.last());
+    }
+
+    #[test]
+    fn args_override() {
+        let args = Args::parse(
+            "x --scale paper --fig3-p 99 --ratios 0.5 --seeds 1"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let s = ExperimentScale::from_args(&args);
+        assert_eq!(s.fig3_p, 99);
+        assert_eq!(s.fig3_ratios, vec![0.5]);
+        assert_eq!(s.fig3_seeds, 1);
+    }
+}

@@ -1,0 +1,10 @@
+//! One module per paper table/figure. Each exposes `run(&ExperimentScale)`.
+
+pub mod ablations;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod models;
+pub mod table1;
+pub mod table2;

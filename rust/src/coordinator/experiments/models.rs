@@ -1,0 +1,114 @@
+//! The four-model comparison harness shared by Table 1, Table 2 and
+//! Fig 4: LKGP (ours) vs SVGP / VNNGP / CaGP on one GridDataset.
+
+use anyhow::Result;
+
+use crate::baselines::{BaselineModel, CaGp, Svgp, Vnngp};
+use crate::coordinator::ExperimentScale;
+use crate::data::GridDataset;
+use crate::gp::lkgp::{Backend, Lkgp, LkgpConfig};
+use crate::gp::backend::MvmMode;
+use crate::gp::Posterior;
+
+#[derive(Clone, Debug)]
+pub struct ModelResult {
+    pub model: String,
+    pub train_rmse: f64,
+    pub test_rmse: f64,
+    pub train_nll: f64,
+    pub test_nll: f64,
+    pub secs: f64,
+}
+
+pub fn lkgp_config(scale: &ExperimentScale, seed: u64) -> LkgpConfig {
+    let backend = if scale.backend == "rust" {
+        Backend::Rust(MvmMode::Kron)
+    } else {
+        Backend::Pjrt { config: scale.backend.clone() }
+    };
+    LkgpConfig {
+        train_iters: scale.gp_train_iters,
+        n_samples: scale.n_samples,
+        seed,
+        backend,
+        ..LkgpConfig::default()
+    }
+}
+
+fn record(name: &str, post: &Posterior, data: &GridDataset, secs: f64) -> ModelResult {
+    let (train_rmse, train_nll) = post.train_metrics(data);
+    let (test_rmse, test_nll) = post.test_metrics(data);
+    ModelResult {
+        model: name.to_string(),
+        train_rmse,
+        test_rmse,
+        train_nll,
+        test_nll,
+        secs,
+    }
+}
+
+/// Run all four models on one dataset, returning posteriors for
+/// qualitative plots (Fig 4).
+pub fn run_all_models(
+    data: &GridDataset,
+    scale: &ExperimentScale,
+    seed: u64,
+) -> Result<(Vec<ModelResult>, Vec<(String, Posterior)>)> {
+    let mut results = Vec::new();
+    let mut posteriors = Vec::new();
+
+    let t0 = std::time::Instant::now();
+    let fit = Lkgp::fit(data, lkgp_config(scale, seed))?;
+    results.push(record("LKGP", &fit.posterior, data, t0.elapsed().as_secs_f64()));
+    posteriors.push(("LKGP".to_string(), fit.posterior));
+
+    let n = data.n_observed();
+    let m_inducing = (n / 8).clamp(16, 128);
+    let mut svgp = Svgp::new(m_inducing, scale.baseline_train_iters, seed);
+    let f = svgp.fit_predict(data)?;
+    results.push(record("SVGP", &f.posterior, data, f.train_secs));
+    posteriors.push(("SVGP".to_string(), f.posterior));
+
+    let k_nn = 24.min(n.saturating_sub(1)).max(2);
+    let mut vnngp = Vnngp::new(k_nn, scale.baseline_train_iters, seed);
+    let f = vnngp.fit_predict(data)?;
+    results.push(record("VNNGP", &f.posterior, data, f.train_secs));
+    posteriors.push(("VNNGP".to_string(), f.posterior));
+
+    let mut cagp = CaGp::new(m_inducing.min(48), scale.baseline_train_iters, seed);
+    let f = cagp.fit_predict(data)?;
+    results.push(record("CaGP", &f.posterior, data, f.train_secs));
+    posteriors.push(("CaGP".to_string(), f.posterior));
+
+    Ok((results, posteriors))
+}
+
+/// Aggregate per-seed results: mean ± sem strings per metric.
+pub fn aggregate(per_seed: &[Vec<ModelResult>]) -> Vec<(String, [String; 5], [f64; 5])> {
+    use crate::util::stats::{mean, mean_sem_str};
+    let models: Vec<String> = per_seed[0].iter().map(|r| r.model.clone()).collect();
+    let mut out = Vec::new();
+    for (mi, name) in models.iter().enumerate() {
+        let pick = |f: fn(&ModelResult) -> f64| -> Vec<f64> {
+            per_seed.iter().map(|seed| f(&seed[mi])).collect()
+        };
+        let tr = pick(|r| r.train_rmse);
+        let te = pick(|r| r.test_rmse);
+        let trn = pick(|r| r.train_nll);
+        let ten = pick(|r| r.test_nll);
+        let sec = pick(|r| r.secs);
+        out.push((
+            name.clone(),
+            [
+                mean_sem_str(&tr),
+                mean_sem_str(&te),
+                mean_sem_str(&trn),
+                mean_sem_str(&ten),
+                format!("{:.2}", mean(&sec)),
+            ],
+            [mean(&tr), mean(&te), mean(&trn), mean(&ten), mean(&sec)],
+        ));
+    }
+    out
+}

@@ -1,0 +1,107 @@
+//! Table 1 (and Tables 3–7): learning-curve prediction on the LCBench
+//! families — LKGP vs SVGP / VNNGP / CaGP, train/test RMSE + NLL +
+//! total time + average ranks.
+
+use crate::coordinator::experiments::models::{aggregate, run_all_models};
+use crate::coordinator::{report, ExperimentScale};
+use crate::data::lcbench::table1_datasets;
+use crate::util::stats::{mean, ranks};
+use crate::util::table::Table;
+
+pub fn run(scale: &ExperimentScale) {
+    println!(
+        "== Table 1: learning-curve prediction (sim-LCBench, p={}, q={}) ==\n",
+        scale.table1_p, scale.table1_q
+    );
+    let metric_names = ["Train RMSE", "Test RMSE", "Train NLL", "Test NLL", "Time (s)"];
+    let datasets = table1_datasets(scale.table1_p, scale.table1_q);
+    let ds_names: Vec<&str> = datasets.iter().map(|(n, _)| *n).collect();
+
+    // results[metric][model][dataset] = mean value; cells pretty strings
+    let n_models = 4;
+    let mut cell: Vec<Vec<Vec<String>>> =
+        vec![vec![vec![String::new(); ds_names.len()]; n_models]; 5];
+    let mut val: Vec<Vec<Vec<f64>>> = vec![vec![vec![0.0; ds_names.len()]; n_models]; 5];
+    let mut model_names: Vec<String> = vec![];
+
+    for (di, (name, sim)) in datasets.iter().enumerate() {
+        println!("dataset {name} ...");
+        let mut per_seed = Vec::new();
+        for seed in 0..scale.table1_seeds {
+            let mut sim2 =
+                crate::data::lcbench::LcBenchSim::new(sim.p, sim.q, sim.seed + 131 * seed);
+            sim2.full_fraction = sim.full_fraction;
+            let data = sim2.generate();
+            let (res, _) = run_all_models(&data, scale, seed).expect("models");
+            per_seed.push(res);
+        }
+        let agg = aggregate(&per_seed);
+        model_names = agg.iter().map(|(n, _, _)| n.clone()).collect();
+        for (mi, (_, cells, vals)) in agg.iter().enumerate() {
+            for metric in 0..5 {
+                cell[metric][mi][di] = cells[metric].clone();
+                val[metric][mi][di] = vals[metric];
+            }
+        }
+    }
+
+    // assemble the paper-style table: metric blocks x models x datasets
+    let mut header: Vec<&str> = vec!["Metric", "Model"];
+    header.extend(ds_names.iter());
+    header.push("Avg Rank");
+    let mut table = Table::new(
+        "Table 1 — learning-curve prediction across sim-LCBench families",
+        &header,
+    );
+    for (metric, mname) in metric_names.iter().enumerate() {
+        // ranks per dataset (lower = better for all five metrics)
+        let mut rank_acc = vec![0.0; n_models];
+        for di in 0..ds_names.len() {
+            let scores: Vec<f64> = (0..n_models).map(|mi| val[metric][mi][di]).collect();
+            for (mi, r) in ranks(&scores).into_iter().enumerate() {
+                rank_acc[mi] += r;
+            }
+        }
+        for mi in 0..n_models {
+            let mut row = vec![
+                if mi == 0 { mname.to_string() } else { String::new() },
+                model_names[mi].clone(),
+            ];
+            row.extend(cell[metric][mi].iter().cloned());
+            row.push(format!("{:.2}", rank_acc[mi] / ds_names.len() as f64));
+            table.row(row);
+        }
+    }
+    report::emit(&table, "table1_lcbench");
+
+    // headline checks from the paper
+    let lkgp_i = model_names.iter().position(|m| m == "LKGP").unwrap_or(0);
+    let avg = |metric: usize, mi: usize| -> f64 { mean(&val[metric][mi]) };
+    let mut notes = String::from("\nHeadline comparisons (paper Table 1):\n");
+    notes += &format!(
+        "- LKGP mean test NLL {:.3} vs best baseline {:.3} (paper: LKGP best)\n",
+        avg(3, lkgp_i),
+        (0..n_models)
+            .filter(|&m| m != lkgp_i)
+            .map(|m| avg(3, m))
+            .fold(f64::INFINITY, f64::min)
+    );
+    notes += &format!(
+        "- LKGP mean train RMSE {:.3} vs best baseline {:.3} (paper: LKGP best)\n",
+        avg(0, lkgp_i),
+        (0..n_models)
+            .filter(|&m| m != lkgp_i)
+            .map(|m| avg(0, m))
+            .fold(f64::INFINITY, f64::min)
+    );
+    notes += &format!(
+        "- LKGP mean time {:.2}s vs baselines {:?}s (paper: LKGP fastest)\n",
+        avg(4, lkgp_i),
+        (0..n_models)
+            .filter(|&m| m != lkgp_i)
+            .map(|m| (model_names[m].clone(), (avg(4, m) * 100.0).round() / 100.0))
+            .collect::<Vec<_>>()
+    );
+    report::note("table1_lcbench", &notes);
+    println!("{notes}");
+}

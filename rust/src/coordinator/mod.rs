@@ -1,0 +1,12 @@
+//! Experiment coordinator: regenerates every table and figure of the
+//! paper (see DESIGN.md §6 for the experiment index).
+//!
+//! Each runner is a pure function over an `ExperimentScale` (sizes,
+//! seeds, ratios) that prints markdown tables and writes them under
+//! `results/`. The CLI (`lkgp experiment <id>`) dispatches here.
+
+pub mod config;
+pub mod experiments;
+pub mod report;
+
+pub use config::ExperimentScale;

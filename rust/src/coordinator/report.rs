@@ -1,0 +1,53 @@
+//! Result persistence: every experiment prints its tables and saves
+//! markdown + CSV under results/, so EXPERIMENTS.md can reference them.
+
+use std::path::PathBuf;
+
+use crate::util::table::Table;
+
+pub fn results_dir() -> PathBuf {
+    let dir = std::env::var("LKGP_RESULTS").map(PathBuf::from).unwrap_or_else(|_| {
+        // anchor at the repo root if we can find it
+        let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        for _ in 0..4 {
+            if cur.join("Cargo.toml").exists() {
+                return cur.join("results");
+            }
+            if !cur.pop() {
+                break;
+            }
+        }
+        PathBuf::from("results")
+    });
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+/// Print and persist a table.
+pub fn emit(table: &Table, stem: &str) {
+    println!("{}", table.markdown());
+    if let Err(e) = table.save(&results_dir(), stem) {
+        eprintln!("warning: could not save {stem}: {e}");
+    } else {
+        println!("[saved results/{stem}.md + .csv]\n");
+    }
+}
+
+/// Append a free-form markdown note next to the tables.
+pub fn note(stem: &str, text: &str) {
+    let path = results_dir().join(format!("{stem}.md"));
+    let mut body = std::fs::read_to_string(&path).unwrap_or_default();
+    body.push_str(text);
+    let _ = std::fs::write(&path, body);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_dir_exists_after_call() {
+        let d = results_dir();
+        assert!(d.exists());
+    }
+}

@@ -1,0 +1,234 @@
+//! Partial-grid dataset container.
+
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// A regression problem on a p x q grid with missing values.
+///
+/// Layout matches the kron module: grid index `j*q + k` = (s_j, t_k).
+/// `y_grid` holds the *full* ground truth (simulators know it), `mask`
+/// marks which cells are observed during training; the complement is
+/// the test set.
+#[derive(Clone, Debug)]
+pub struct GridDataset {
+    /// Spatial inputs, p x d_s (standardized).
+    pub s: Matrix<f64>,
+    /// Time/task coordinates, length q.
+    pub t: Vec<f64>,
+    /// Full-grid targets (raw scale), length p*q.
+    pub y_grid: Vec<f64>,
+    /// Observed mask, length p*q.
+    pub mask: Vec<bool>,
+    /// Time-kernel family this dataset is modeled with.
+    pub time_family: String,
+    /// Dataset name for reports.
+    pub name: String,
+}
+
+impl GridDataset {
+    pub fn p(&self) -> usize {
+        self.s.rows
+    }
+
+    pub fn q(&self) -> usize {
+        self.t.len()
+    }
+
+    pub fn grid_len(&self) -> usize {
+        self.p() * self.q()
+    }
+
+    pub fn n_observed(&self) -> usize {
+        self.mask.iter().filter(|&&m| m).count()
+    }
+
+    pub fn missing_ratio(&self) -> f64 {
+        1.0 - self.n_observed() as f64 / self.grid_len() as f64
+    }
+
+    /// Mean/std of the *observed* targets (training statistics only —
+    /// no test leakage).
+    pub fn target_stats(&self) -> (f64, f64) {
+        let obs: Vec<f64> = self
+            .y_grid
+            .iter()
+            .zip(&self.mask)
+            .filter(|(_, &m)| m)
+            .map(|(y, _)| *y)
+            .collect();
+        let n = obs.len().max(1) as f64;
+        let mean = obs.iter().sum::<f64>() / n;
+        let var = obs.iter().map(|y| (y - mean) * (y - mean)).sum::<f64>() / n;
+        (mean, var.sqrt().max(1e-12))
+    }
+
+    /// Standardized targets padded with zeros at missing cells — the RHS
+    /// vector the LKGP solver consumes.
+    pub fn y_std_padded(&self) -> Vec<f64> {
+        let (mean, std) = self.target_stats();
+        self.y_grid
+            .iter()
+            .zip(&self.mask)
+            .map(|(y, &m)| if m { (y - mean) / std } else { 0.0 })
+            .collect()
+    }
+
+    /// Mask as f64 (1 observed / 0 missing).
+    pub fn mask_f64(&self) -> Vec<f64> {
+        self.mask.iter().map(|&m| if m { 1.0 } else { 0.0 }).collect()
+    }
+
+    /// Indices of observed cells.
+    pub fn observed_indices(&self) -> Vec<usize> {
+        (0..self.grid_len()).filter(|&i| self.mask[i]).collect()
+    }
+
+    /// Indices of missing (test) cells.
+    pub fn missing_indices(&self) -> Vec<usize> {
+        (0..self.grid_len()).filter(|&i| !self.mask[i]).collect()
+    }
+
+    /// Observed cells as (spatial index, time index) pairs.
+    pub fn observed_coords(&self) -> Vec<(usize, usize)> {
+        let q = self.q();
+        self.observed_indices().iter().map(|&i| (i / q, i % q)).collect()
+    }
+
+    /// Raw-scale test targets at missing cells.
+    pub fn test_targets(&self) -> Vec<f64> {
+        self.missing_indices().iter().map(|&i| self.y_grid[i]).collect()
+    }
+
+    /// Raw-scale train targets at observed cells.
+    pub fn train_targets(&self) -> Vec<f64> {
+        self.observed_indices().iter().map(|&i| self.y_grid[i]).collect()
+    }
+
+    /// Apply uniform-at-random missingness (paper's SARCOS/climate
+    /// protocol), preserving at least one observation.
+    pub fn mask_uniform(&mut self, missing_ratio: f64, seed: u64) {
+        let mut rng = Rng::new(seed ^ 0xC0FFEE);
+        let n = self.grid_len();
+        let n_missing = ((n as f64) * missing_ratio).round() as usize;
+        let n_missing = n_missing.min(n - 1);
+        self.mask = vec![true; n];
+        for idx in rng.choose(n, n_missing) {
+            self.mask[idx] = false;
+        }
+    }
+
+    /// Right-censor rows: for each spatial row not in `full_rows`, keep a
+    /// uniformly random prefix of time steps (the LCBench early-stopping
+    /// pattern, paper Sec. 4 "Learning Curve Prediction").
+    pub fn mask_censor_rows(&mut self, full_fraction: f64, min_prefix: usize, seed: u64) {
+        let mut rng = Rng::new(seed ^ 0xCE2508);
+        let (p, q) = (self.p(), self.q());
+        let n_full = ((p as f64) * full_fraction).round() as usize;
+        let full_rows: Vec<usize> = rng.choose(p, n_full.max(1));
+        let is_full = {
+            let mut v = vec![false; p];
+            for &r in &full_rows {
+                v[r] = true;
+            }
+            v
+        };
+        self.mask = vec![true; p * q];
+        for j in 0..p {
+            if is_full[j] {
+                continue;
+            }
+            let stop = min_prefix + rng.below(q - min_prefix);
+            for k in stop..q {
+                self.mask[j * q + k] = false;
+            }
+        }
+    }
+
+    /// Sanity-check the invariants experiments rely on.
+    pub fn validate(&self) {
+        assert_eq!(self.y_grid.len(), self.grid_len());
+        assert_eq!(self.mask.len(), self.grid_len());
+        assert!(self.n_observed() > 0, "no observed cells");
+        assert!(self.y_grid.iter().all(|y| y.is_finite()), "non-finite target");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(p: usize, q: usize) -> GridDataset {
+        GridDataset {
+            s: Matrix::from_fn(p, 2, |i, j| (i + j) as f64),
+            t: (0..q).map(|k| k as f64).collect(),
+            y_grid: (0..p * q).map(|i| i as f64).collect(),
+            mask: vec![true; p * q],
+            time_family: "rbf".into(),
+            name: "toy".into(),
+        }
+    }
+
+    #[test]
+    fn uniform_mask_hits_requested_ratio() {
+        let mut d = toy(20, 10);
+        d.mask_uniform(0.3, 7);
+        assert_eq!(d.grid_len() - d.n_observed(), 60);
+        assert!((d.missing_ratio() - 0.3).abs() < 1e-9);
+        d.validate();
+    }
+
+    #[test]
+    fn censor_mask_is_prefix_structured() {
+        let mut d = toy(30, 8);
+        d.mask_censor_rows(0.1, 2, 3);
+        for j in 0..30 {
+            let row = &d.mask[j * 8..(j + 1) * 8];
+            // once missing, stays missing (prefix observation)
+            let mut seen_missing = false;
+            let mut prefix_len = 0;
+            for &m in row {
+                if m {
+                    assert!(!seen_missing, "non-prefix mask in row {j}");
+                    prefix_len += 1;
+                } else {
+                    seen_missing = true;
+                }
+            }
+            assert!(prefix_len >= 2, "prefix too short in row {j}");
+        }
+        d.validate();
+    }
+
+    #[test]
+    fn standardization_uses_observed_only() {
+        let mut d = toy(4, 4);
+        // make missing cells wild — must not affect stats
+        d.mask = (0..16).map(|i| i % 2 == 0).collect();
+        for (i, y) in d.y_grid.iter_mut().enumerate() {
+            if i % 2 == 1 {
+                *y = 1e9;
+            }
+        }
+        let (mean, std) = d.target_stats();
+        let obs: Vec<f64> = (0..16).step_by(2).map(|i| i as f64).collect();
+        let want_mean = obs.iter().sum::<f64>() / 8.0;
+        assert!((mean - want_mean).abs() < 1e-9);
+        assert!(std < 10.0);
+        let ypad = d.y_std_padded();
+        for i in (1..16).step_by(2) {
+            assert_eq!(ypad[i], 0.0);
+        }
+    }
+
+    #[test]
+    fn train_test_partition() {
+        let mut d = toy(5, 4);
+        d.mask_uniform(0.25, 1);
+        assert_eq!(d.train_targets().len() + d.test_targets().len(), 20);
+        let obs = d.observed_coords();
+        assert_eq!(obs.len(), d.n_observed());
+        for (j, k) in obs {
+            assert!(d.mask[j * 4 + k]);
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! Simulated LCBench: learning-curve prediction workloads.
+//!
+//! The real LCBench (Zimmer et al. 2021) contains 35 datasets x 2000
+//! neural-network learning curves x 52 epochs, where each curve's shape
+//! depends on 7 hyperparameters. This simulator reproduces that
+//! structure (DESIGN.md §Substitutions): curves follow a saturating
+//! power-law/exponential family whose parameters are smooth (random
+//! quadratic) functions of the hyperparameter vector, plus
+//! heteroskedastic noise and a small fraction of divergent "outlier"
+//! curves (the paper's Fig. 4 third row). Missingness is right-censoring
+//! at a uniform random epoch — the early-stopping pattern.
+
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+use super::grid::GridDataset;
+
+const N_HYPER: usize = 7;
+
+/// One synthetic "LCBench dataset" family.
+pub struct LcBenchSim {
+    /// number of hyperparameter configurations (curves)
+    pub p: usize,
+    /// number of epochs per curve
+    pub q: usize,
+    /// fraction of curves observed in full during training
+    pub full_fraction: f64,
+    /// fraction of divergent outlier curves
+    pub outlier_fraction: f64,
+    pub seed: u64,
+}
+
+impl LcBenchSim {
+    pub fn new(p: usize, q: usize, seed: u64) -> Self {
+        LcBenchSim { p, q, full_fraction: 0.1, outlier_fraction: 0.02, seed }
+    }
+
+    /// The 7 paper names of the hyperparameters (for docs/reports).
+    pub fn hyper_names() -> [&'static str; N_HYPER] {
+        ["batch_size", "learning_rate", "momentum", "weight_decay", "num_layers",
+         "max_units", "dropout"]
+    }
+
+    pub fn generate(&self) -> GridDataset {
+        let mut rng = Rng::new(self.seed ^ 0x1CBE7C);
+        // dataset-level difficulty parameters
+        let base_floor = rng.uniform_in(5.0, 30.0); // best reachable error %
+        let base_start = rng.uniform_in(60.0, 95.0); // error at epoch 0
+        let noise_scale = rng.uniform_in(0.3, 1.2);
+
+        // random quadratic maps: hyperparams -> curve parameters.
+        // w1: linear terms, w2: pairwise interactions (low-rank).
+        let mut lin = |scale: f64| -> Vec<f64> {
+            (0..N_HYPER).map(|_| scale * rng.normal()).collect()
+        };
+        let w_floor = lin(0.8);
+        let w_rate = lin(0.5);
+        let w_start = lin(0.4);
+        let u: Vec<f64> = (0..N_HYPER).map(|_| rng.normal() * 0.4).collect();
+
+        let mut s = Matrix::zeros(self.p, N_HYPER);
+        let mut y = vec![0.0; self.p * self.q];
+        for i in 0..self.p {
+            // hyperparameters in [-1, 1] (log-scaled raw ranges)
+            let h: Vec<f64> = (0..N_HYPER).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            s.row_mut(i).copy_from_slice(&h);
+            let dotw = |w: &[f64]| -> f64 { w.iter().zip(&h).map(|(a, b)| a * b).sum() };
+            let inter: f64 = {
+                let t = u.iter().zip(&h).map(|(a, b)| a * b).sum::<f64>();
+                t * t
+            };
+            // curve parameters, all smooth in h
+            let floor = base_floor * (1.0 + 0.5 * (dotw(&w_floor) + inter).tanh());
+            let start = base_start * (1.0 + 0.2 * dotw(&w_start).tanh());
+            let rate = 0.12 * (1.0 + 0.9 * dotw(&w_rate).tanh()); // per-epoch decay
+            let is_outlier = rng.uniform() < self.outlier_fraction;
+            let diverge_at = if is_outlier { rng.uniform_in(0.2, 0.7) * self.q as f64 } else { f64::INFINITY };
+            let het = noise_scale * rng.uniform_in(0.5, 1.5);
+            for k in 0..self.q {
+                let t = k as f64;
+                let mut v = floor + (start - floor) * (-rate * t).exp();
+                if t > diverge_at {
+                    // divergence: error climbs back up after some epoch
+                    v += (t - diverge_at) * rng.uniform_in(0.8, 1.6);
+                }
+                // heteroskedastic noise, larger early in training
+                let sigma = het * (0.3 + (-0.05 * t).exp());
+                v += sigma * rng.normal();
+                y[i * self.q + k] = v.clamp(0.0, 120.0);
+            }
+        }
+        let mut ds = GridDataset {
+            s,
+            t: (0..self.q).map(|k| k as f64 / (self.q - 1).max(1) as f64).collect(),
+            y_grid: y,
+            mask: vec![true; self.p * self.q],
+            time_family: "rbf".into(),
+            name: format!("lcbench-sim-{}", self.seed),
+        };
+        ds.mask_censor_rows(self.full_fraction, 2, self.seed);
+        ds.validate();
+        ds
+    }
+}
+
+/// The 7 named dataset families reported in Table 1 (every fifth of the
+/// paper's 35), regenerated as seeded simulator instances.
+pub fn table1_datasets(p: usize, q: usize) -> Vec<(&'static str, LcBenchSim)> {
+    ["APSFailure", "MiniBooNE", "blood", "covertype", "higgs", "kr-vs-kp", "segment"]
+        .into_iter()
+        .enumerate()
+        .map(|(i, name)| (name, LcBenchSim::new(p, q, 1000 + i as u64)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curves_decrease_on_average() {
+        let ds = LcBenchSim::new(100, 52, 0).generate();
+        let q = ds.q();
+        let mut early = 0.0;
+        let mut late = 0.0;
+        for i in 0..ds.p() {
+            early += ds.y_grid[i * q];
+            late += ds.y_grid[i * q + q - 1];
+        }
+        assert!(late < early, "curves should improve: early {early} late {late}");
+    }
+
+    #[test]
+    fn censoring_structure() {
+        let ds = LcBenchSim::new(200, 52, 1).generate();
+        // ~10% rows full
+        let q = ds.q();
+        let full_rows = (0..ds.p())
+            .filter(|&i| (0..q).all(|k| ds.mask[i * q + k]))
+            .count();
+        assert!((15..=25).contains(&full_rows), "{full_rows} full rows");
+        // all test points are at curve tails
+        for i in 0..ds.p() {
+            let mut missing_started = false;
+            for k in 0..q {
+                if !ds.mask[i * q + k] {
+                    missing_started = true;
+                } else {
+                    assert!(!missing_started);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn distinct_seeds_distinct_datasets() {
+        let a = LcBenchSim::new(50, 20, 1).generate();
+        let b = LcBenchSim::new(50, 20, 2).generate();
+        let diff: f64 = a.y_grid.iter().zip(&b.y_grid).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 1.0);
+    }
+
+    #[test]
+    fn outliers_exist_with_high_fraction() {
+        let mut sim = LcBenchSim::new(200, 40, 3);
+        sim.outlier_fraction = 0.5;
+        let ds = sim.generate();
+        let q = ds.q();
+        // an outlier curve ends higher than its own minimum by a margin
+        let n_outlier = (0..ds.p())
+            .filter(|&i| {
+                let row = &ds.y_grid[i * q..(i + 1) * q];
+                let min = row.iter().cloned().fold(f64::INFINITY, f64::min);
+                row[q - 1] > min + 10.0
+            })
+            .count();
+        assert!(n_outlier > 20, "only {n_outlier} outliers");
+    }
+
+    #[test]
+    fn table1_families_are_seven() {
+        let fams = table1_datasets(10, 8);
+        assert_eq!(fams.len(), 7);
+        assert_eq!(fams[0].0, "APSFailure");
+    }
+}

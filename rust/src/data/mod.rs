@@ -1,0 +1,16 @@
+//! Datasets: the partial-grid regression problems of the paper.
+//!
+//! Every experiment starts from a *fully gridded* ground truth plus a
+//! missing mask; missing cells are withheld from training and used as
+//! test targets (exactly the paper's protocol, Sec. 4). The real
+//! datasets (SARCOS, LCBench, Nordic climate) are unavailable offline,
+//! so faithful simulators generate workloads with the same structure
+//! (see DESIGN.md §Substitutions).
+
+pub mod climate;
+pub mod grid;
+pub mod lcbench;
+pub mod sarcos;
+pub mod synthetic;
+
+pub use grid::GridDataset;

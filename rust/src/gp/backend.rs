@@ -1,0 +1,642 @@
+//! Compute backends for the LKGP model.
+//!
+//! `KronBackend` abstracts the five operations inference needs; two
+//! implementations:
+//!
+//! * `RustKronBackend` — pure-rust kernels + Kronecker algebra. Also
+//!   hosts the *dense baseline* MVM modes (materialized / lazy) so the
+//!   Fig-2/Fig-3 comparisons change exactly one thing: the MVM.
+//! * `PjrtKronBackend` — the production three-layer path: all five ops
+//!   run as AOT-compiled Pallas/JAX artifacts on the PJRT CPU client.
+//!
+//! An integration test (rust/tests/) asserts the two backends agree.
+
+use anyhow::{bail, Context, Result};
+
+use crate::kernels::ProductGridKernel;
+use crate::kron::lazy::LazyGramOp;
+use crate::kron::{KronOp, MaskedKronSystem};
+use crate::linalg::{cholesky, Matrix};
+use crate::runtime::{Runtime, TensorF32};
+use crate::solvers::cg::BatchedOp;
+
+use super::grad::{mll_surrogate_grads, standard_pairs};
+
+/// How the CG system operator is applied (the Fig-3 comparison axis).
+#[derive(Clone, Debug, PartialEq)]
+pub enum MvmMode {
+    /// Latent Kronecker structure: O(p^2 q + p q^2) per MVM (the paper).
+    Kron,
+    /// Materialized dense n x n observed kernel matrix (f32):
+    /// O(n^2) time and memory — the standard iterative baseline.
+    DenseMaterialized,
+    /// Lazy dense: kernel entries recomputed every MVM (O(n^2 d) time,
+    /// O(n * block) memory) — the out-of-memory regime of Fig. 2.
+    DenseLazy { block_rows: usize },
+}
+
+/// Operations LKGP inference needs from a backend. All vectors live in
+/// the padded p*q grid space; masking conventions follow kron::.
+pub trait KronBackend {
+    fn dim(&self) -> usize;
+    /// number of Hutchinson probes the gradient path expects
+    fn probes(&self) -> usize;
+    /// install data (spatial inputs, time grid, mask); called once
+    fn set_data(&mut self, s: &Matrix<f64>, t: &[f64], mask: &[f64]) -> Result<()>;
+    /// install hyperparameters; recomputes Gram state
+    fn set_hypers(&mut self, theta: &[f64], log_sigma2: f64) -> Result<()>;
+    /// v -> M (K (x) K) M v + sigma2 v, batched rows
+    fn system_mvm(&mut self, v: &Matrix<f64>) -> Result<Matrix<f64>>;
+    /// v -> (K (x) K) v (unmasked cross-covariance apply)
+    fn kron_apply(&mut self, v: &Matrix<f64>) -> Result<Matrix<f64>>;
+    /// z -> (L_S (x) L_T) z prior sample
+    fn prior_sample(&mut self, z: &Matrix<f64>) -> Result<Matrix<f64>>;
+    /// gradient of the Hutchinson MLL surrogate: [d theta.., d log_s2]
+    fn mll_grads(&mut self, alpha: &[f64], w: &Matrix<f64>, z: &Matrix<f64>)
+        -> Result<Vec<f64>>;
+    /// diagonal of the system matrix (Jacobi preconditioner)
+    fn system_diag(&self) -> Vec<f64>;
+    /// one column of M (K (x) K) M (pivoted-Cholesky preconditioner)
+    fn kernel_col(&self, idx: usize) -> Vec<f64>;
+    /// bytes held by the kernel representation (Fig-2/3 memory axis)
+    fn kernel_bytes(&self) -> u64;
+    /// kernel evaluations performed since set_hypers (Fig-2 axis)
+    fn kernel_evals(&self) -> u64;
+}
+
+/// Adapter: use a backend as a CG operator.
+pub struct SystemOp<'a, B: KronBackend>(pub &'a mut B);
+
+impl<'a, B: KronBackend> BatchedOp<f64> for SystemOp<'a, B> {
+    fn dim(&self) -> usize {
+        self.0.dim()
+    }
+    fn apply_batch(&mut self, v: &Matrix<f64>) -> Matrix<f64> {
+        self.0.system_mvm(v).expect("backend MVM failed")
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rust-native backend
+// ---------------------------------------------------------------------
+
+pub struct RustKronBackend {
+    pub kernel: ProductGridKernel,
+    pub mode: MvmMode,
+    probes: usize,
+    s: Matrix<f64>,
+    t: Vec<f64>,
+    mask: Vec<f64>,
+    log_sigma2: f64,
+    sys: Option<MaskedKronSystem<f64>>,
+    /// dense baseline state
+    dense: Option<Matrix<f32>>,
+    obs_idx: Vec<usize>,
+    kernel_evals: u64,
+}
+
+impl RustKronBackend {
+    pub fn new(ds: usize, time_family: &str, q: usize, probes: usize) -> Self {
+        RustKronBackend {
+            kernel: ProductGridKernel::new(ds, time_family, q),
+            mode: MvmMode::Kron,
+            probes,
+            s: Matrix::zeros(0, ds),
+            t: Vec::new(),
+            mask: Vec::new(),
+            log_sigma2: 0.0,
+            sys: None,
+            dense: None,
+            obs_idx: Vec::new(),
+            kernel_evals: 0,
+        }
+    }
+
+    pub fn with_mode(mut self, mode: MvmMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    fn sys(&self) -> &MaskedKronSystem<f64> {
+        self.sys.as_ref().expect("set_hypers not called")
+    }
+
+    /// gather padded grid vector -> observed coords
+    fn gather(&self, v: &[f64]) -> Vec<f64> {
+        self.obs_idx.iter().map(|&i| v[i]).collect()
+    }
+
+    /// scatter observed -> padded grid vector
+    fn scatter(&self, v: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim()];
+        for (val, &i) in v.iter().zip(&self.obs_idx) {
+            out[i] = *val;
+        }
+        out
+    }
+}
+
+impl KronBackend for RustKronBackend {
+    fn dim(&self) -> usize {
+        self.s.rows * self.t.len()
+    }
+
+    fn probes(&self) -> usize {
+        self.probes
+    }
+
+    fn set_data(&mut self, s: &Matrix<f64>, t: &[f64], mask: &[f64]) -> Result<()> {
+        self.s = s.clone();
+        self.t = t.to_vec();
+        self.mask = mask.to_vec();
+        self.obs_idx =
+            (0..mask.len()).filter(|&i| mask[i] != 0.0).collect();
+        self.sys = None;
+        self.dense = None;
+        Ok(())
+    }
+
+    fn set_hypers(&mut self, theta: &[f64], log_sigma2: f64) -> Result<()> {
+        self.kernel.set_theta(theta);
+        self.log_sigma2 = log_sigma2;
+        let kss = self.kernel.gram_s(&self.s);
+        let ktt = self.kernel.gram_t(&self.t);
+        let (p, q) = (kss.rows, ktt.rows);
+        self.kernel_evals = (p * p + q * q) as u64;
+        self.sys = Some(MaskedKronSystem::new(
+            KronOp::new(kss, ktt),
+            self.mask.clone(),
+            log_sigma2.exp(),
+        ));
+        self.dense = None;
+        if self.mode == MvmMode::DenseMaterialized {
+            // n x n observed Gram in f32 (what the standard iterative
+            // baseline stores on the GPU)
+            let sys = self.sys.as_ref().unwrap();
+            let n = self.obs_idx.len();
+            let q = sys.op.q();
+            let mut dense = Matrix::<f32>::zeros(n, n);
+            for (a, &ia) in self.obs_idx.iter().enumerate() {
+                let (sa, ta) = (ia / q, ia % q);
+                for (b, &ib) in self.obs_idx.iter().enumerate() {
+                    let (sb, tb) = (ib / q, ib % q);
+                    dense[(a, b)] =
+                        (sys.op.kss[(sa, sb)] * sys.op.ktt[(ta, tb)]) as f32;
+                }
+            }
+            self.kernel_evals = (n * n) as u64;
+            self.dense = Some(dense);
+        }
+        Ok(())
+    }
+
+    fn system_mvm(&mut self, v: &Matrix<f64>) -> Result<Matrix<f64>> {
+        match &self.mode {
+            MvmMode::Kron => Ok(self.sys().apply_batch(v)),
+            MvmMode::DenseMaterialized => {
+                let dense = self.dense.as_ref().context("dense gram")?;
+                let s2 = self.log_sigma2.exp();
+                let mut out = Matrix::zeros(v.rows, v.cols);
+                for b in 0..v.rows {
+                    let vo = self.gather(v.row(b));
+                    let vo32: Vec<f32> = vo.iter().map(|&x| x as f32).collect();
+                    let mut acc = vec![0.0f64; vo.len()];
+                    for i in 0..dense.rows {
+                        let row = dense.row(i);
+                        let mut sum = 0.0f32;
+                        for (k, x) in row.iter().zip(&vo32) {
+                            sum += k * x;
+                        }
+                        acc[i] = sum as f64;
+                    }
+                    let mut padded = self.scatter(&acc);
+                    // sigma2 acts on all padded coords (same convention
+                    // as the kron system operator)
+                    for (o, vi) in padded.iter_mut().zip(v.row(b)) {
+                        *o += s2 * vi;
+                    }
+                    out.row_mut(b).copy_from_slice(&padded);
+                }
+                Ok(out)
+            }
+            MvmMode::DenseLazy { block_rows } => {
+                let sys = self.sys.as_ref().context("hypers")?;
+                let n = self.obs_idx.len();
+                let q = sys.op.q();
+                let (kss, ktt) = (&sys.op.kss, &sys.op.ktt);
+                let obs = &self.obs_idx;
+                let entry = |i: usize, j: usize| -> f64 {
+                    let (ia, ib) = (obs[i], obs[j]);
+                    kss[(ia / q, ib / q)] * ktt[(ia % q, ib % q)]
+                };
+                let op = LazyGramOp::new(n, *block_rows, entry, 0.0);
+                let s2 = self.log_sigma2.exp();
+                let mut out = Matrix::zeros(v.rows, v.cols);
+                let mut vo = Matrix::zeros(v.rows, n);
+                for b in 0..v.rows {
+                    vo.row_mut(b).copy_from_slice(&self.gather(v.row(b)));
+                }
+                let (r, evals) = op.apply_batch(&vo);
+                self.kernel_evals += evals * v.rows as u64;
+                for b in 0..v.rows {
+                    let mut padded = self.scatter(r.row(b));
+                    for (o, vi) in padded.iter_mut().zip(v.row(b)) {
+                        *o += s2 * vi;
+                    }
+                    out.row_mut(b).copy_from_slice(&padded);
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    fn kron_apply(&mut self, v: &Matrix<f64>) -> Result<Matrix<f64>> {
+        Ok(self.sys().op.apply_batch(v))
+    }
+
+    fn prior_sample(&mut self, z: &Matrix<f64>) -> Result<Matrix<f64>> {
+        let sys = self.sys();
+        let (p, q) = (sys.op.p(), sys.op.q());
+        let mut kss_j = sys.op.kss.clone();
+        kss_j.add_diag(1e-4 * kss_j.trace() / p as f64);
+        let mut ktt_j = sys.op.ktt.clone();
+        ktt_j.add_diag(1e-4 * ktt_j.trace() / q as f64);
+        let ls = cholesky(&kss_j).context("K_SS cholesky")?.l;
+        let lt = cholesky(&ktt_j).context("K_TT cholesky")?.l;
+        Ok(KronOp::new(ls, lt).apply_batch(z))
+    }
+
+    fn mll_grads(
+        &mut self,
+        alpha: &[f64],
+        w: &Matrix<f64>,
+        z: &Matrix<f64>,
+    ) -> Result<Vec<f64>> {
+        let sys = self.sys();
+        let pairs = standard_pairs(alpha, w, z);
+        Ok(mll_surrogate_grads(
+            &self.kernel,
+            &self.s,
+            &self.t,
+            &sys.op.kss,
+            &sys.op.ktt,
+            self.log_sigma2,
+            &pairs,
+        ))
+    }
+
+    fn system_diag(&self) -> Vec<f64> {
+        self.sys().diag()
+    }
+
+    fn kernel_col(&self, idx: usize) -> Vec<f64> {
+        self.sys().kernel_col(idx)
+    }
+
+    fn kernel_bytes(&self) -> u64 {
+        match &self.mode {
+            MvmMode::Kron => {
+                let (p, q) = (self.s.rows, self.t.len());
+                ((p * p + q * q) * 8) as u64
+            }
+            MvmMode::DenseMaterialized => {
+                let n = self.obs_idx.len();
+                (n * n * 4) as u64
+            }
+            MvmMode::DenseLazy { block_rows } => {
+                (self.obs_idx.len() * block_rows * 8) as u64
+            }
+        }
+    }
+
+    fn kernel_evals(&self) -> u64 {
+        self.kernel_evals
+    }
+}
+
+// ---------------------------------------------------------------------
+// PJRT backend (the three-layer production path)
+// ---------------------------------------------------------------------
+
+pub struct PjrtKronBackend {
+    rt: Runtime,
+    pub config: String,
+    p: usize,
+    q: usize,
+    ds: usize,
+    batch: usize,
+    n_probes: usize,
+    n_theta: usize,
+    // state tensors (f32, PJRT boundary)
+    s32: Vec<f32>,
+    t32: Vec<f32>,
+    mask32: Vec<f32>,
+    theta32: Vec<f32>,
+    log_sigma2: f64,
+    // Gram matrices fetched back to host after `kernels` runs (used by
+    // preconditioner construction; p^2 + q^2 floats, cheap by design)
+    kss: Vec<f32>,
+    ktt: Vec<f32>,
+    fresh: bool,
+}
+
+impl PjrtKronBackend {
+    /// Build over the named artifact config; verifies shape compatibility.
+    pub fn new(rt: Runtime, config: &str) -> Result<Self> {
+        let meta = rt.manifest.config(config)?.clone();
+        Ok(PjrtKronBackend {
+            rt,
+            config: config.to_string(),
+            p: meta.p,
+            q: meta.q,
+            ds: meta.ds,
+            batch: meta.batch,
+            n_probes: meta.probes,
+            n_theta: meta.n_theta,
+            s32: vec![],
+            t32: vec![],
+            mask32: vec![],
+            theta32: vec![],
+            log_sigma2: 0.0,
+            kss: vec![],
+            ktt: vec![],
+            fresh: false,
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// Run an artifact over a batched matrix, chunking rows into the
+    /// config's static batch size (zero-padding the tail chunk).
+    fn exec_batched(
+        &mut self,
+        artifact: &str,
+        fixed: &[TensorF32],
+        v: &Matrix<f64>,
+    ) -> Result<Matrix<f64>> {
+        let pq = self.p * self.q;
+        assert_eq!(v.cols, pq);
+        let mut out = Matrix::zeros(v.rows, pq);
+        let b = self.batch;
+        let mut row = 0;
+        while row < v.rows {
+            let take = (v.rows - row).min(b);
+            let mut chunk = vec![0.0f32; b * pq];
+            for r in 0..take {
+                for (c, x) in v.row(row + r).iter().enumerate() {
+                    chunk[r * pq + c] = *x as f32;
+                }
+            }
+            let mut inputs = fixed.to_vec();
+            inputs.push(TensorF32::new(vec![b, pq], chunk));
+            let res = self.rt.exec_f32(&self.config, artifact, &inputs)?;
+            let y = &res[0];
+            for r in 0..take {
+                for c in 0..pq {
+                    out[(row + r, c)] = y[r * pq + c] as f64;
+                }
+            }
+            row += take;
+        }
+        Ok(out)
+    }
+
+    fn gram_inputs(&self) -> [TensorF32; 2] {
+        [
+            TensorF32::new(vec![self.p, self.p], self.kss.clone()),
+            TensorF32::new(vec![self.q, self.q], self.ktt.clone()),
+        ]
+    }
+
+    fn check_fresh(&self) -> Result<()> {
+        if !self.fresh {
+            bail!("set_hypers must be called before backend ops");
+        }
+        Ok(())
+    }
+}
+
+impl KronBackend for PjrtKronBackend {
+    fn dim(&self) -> usize {
+        self.p * self.q
+    }
+
+    fn probes(&self) -> usize {
+        self.n_probes
+    }
+
+    fn set_data(&mut self, s: &Matrix<f64>, t: &[f64], mask: &[f64]) -> Result<()> {
+        if s.rows != self.p || s.cols != self.ds || t.len() != self.q {
+            bail!(
+                "data ({}x{}, q={}) does not match artifact config {:?} ({}x{}, q={})",
+                s.rows,
+                s.cols,
+                t.len(),
+                self.config,
+                self.p,
+                self.ds,
+                self.q
+            );
+        }
+        self.s32 = s.data.iter().map(|&x| x as f32).collect();
+        self.t32 = t.iter().map(|&x| x as f32).collect();
+        self.mask32 = mask.iter().map(|&x| x as f32).collect();
+        self.fresh = false;
+        Ok(())
+    }
+
+    fn set_hypers(&mut self, theta: &[f64], log_sigma2: f64) -> Result<()> {
+        if theta.len() != self.n_theta {
+            bail!("theta len {} != {}", theta.len(), self.n_theta);
+        }
+        self.theta32 = theta.iter().map(|&x| x as f32).collect();
+        self.log_sigma2 = log_sigma2;
+        let out = self.rt.exec_f32(
+            &self.config,
+            "kernels",
+            &[
+                TensorF32::new(vec![self.p, self.ds], self.s32.clone()),
+                TensorF32::new(vec![self.q, 1], self.t32.clone()),
+                TensorF32::vec1(self.theta32.clone()),
+            ],
+        )?;
+        self.kss = out[0].clone();
+        self.ktt = out[1].clone();
+        self.fresh = true;
+        Ok(())
+    }
+
+    fn system_mvm(&mut self, v: &Matrix<f64>) -> Result<Matrix<f64>> {
+        self.check_fresh()?;
+        let [kss, ktt] = self.gram_inputs();
+        let fixed = [
+            kss,
+            ktt,
+            TensorF32::vec1(self.mask32.clone()),
+            TensorF32::scalar(self.log_sigma2.exp() as f32),
+        ];
+        self.exec_batched("kron_mvm", &fixed, v)
+    }
+
+    fn kron_apply(&mut self, v: &Matrix<f64>) -> Result<Matrix<f64>> {
+        self.check_fresh()?;
+        let fixed = self.gram_inputs();
+        self.exec_batched("kron_apply", &fixed, v)
+    }
+
+    fn prior_sample(&mut self, z: &Matrix<f64>) -> Result<Matrix<f64>> {
+        self.check_fresh()?;
+        // Cholesky of the small factors happens host-side in f64 (setup
+        // op; the artifact's job is the O(b pq (p+q)) factor application
+        // — see python/compile/model.py::build_prior_sample).
+        let to_f64 = |v: &[f32], n: usize| -> Matrix<f64> {
+            Matrix::from_vec(n, n, v.iter().map(|&x| x as f64).collect())
+        };
+        let chol_jittered = |mut m: Matrix<f64>| -> Result<Matrix<f64>> {
+            let n = m.rows;
+            m.add_diag(1e-4 * m.trace() / n as f64);
+            Ok(cholesky(&m).context("gram cholesky")?.l)
+        };
+        let ls = chol_jittered(to_f64(&self.kss, self.p))?;
+        let lt = chol_jittered(to_f64(&self.ktt, self.q))?;
+        let fixed = [
+            TensorF32::from_f64(vec![self.p, self.p], &ls.data),
+            TensorF32::from_f64(vec![self.q, self.q], &lt.data),
+        ];
+        self.exec_batched("prior_sample", &fixed, z)
+    }
+
+    fn mll_grads(
+        &mut self,
+        alpha: &[f64],
+        w: &Matrix<f64>,
+        z: &Matrix<f64>,
+    ) -> Result<Vec<f64>> {
+        self.check_fresh()?;
+        let k = self.n_probes;
+        if w.rows != k || z.rows != k {
+            bail!("probe count {} != artifact's static {}", w.rows, k);
+        }
+        let pq = self.p * self.q;
+        let out = self.rt.exec_f32(
+            &self.config,
+            "mll_grads",
+            &[
+                TensorF32::new(vec![self.p, self.ds], self.s32.clone()),
+                TensorF32::new(vec![self.q, 1], self.t32.clone()),
+                TensorF32::vec1(self.theta32.clone()),
+                TensorF32::scalar(self.log_sigma2 as f32),
+                TensorF32::vec1(self.mask32.clone()),
+                TensorF32::from_f64(vec![pq], alpha),
+                TensorF32::from_f64(vec![k, pq], &w.data),
+                TensorF32::from_f64(vec![k, pq], &z.data),
+            ],
+        )?;
+        Ok(out[0].iter().map(|&x| x as f64).collect())
+    }
+
+    fn system_diag(&self) -> Vec<f64> {
+        let s2 = self.log_sigma2.exp();
+        let mut d = Vec::with_capacity(self.p * self.q);
+        for j in 0..self.p {
+            let ks = self.kss[j * self.p + j] as f64;
+            for kk in 0..self.q {
+                let idx = j * self.q + kk;
+                d.push(
+                    self.mask32[idx] as f64 * ks * self.ktt[kk * self.q + kk] as f64 + s2,
+                );
+            }
+        }
+        d
+    }
+
+    fn kernel_col(&self, idx: usize) -> Vec<f64> {
+        let (j0, k0) = (idx / self.q, idx % self.q);
+        let mcol = self.mask32[idx] as f64;
+        let mut col = Vec::with_capacity(self.p * self.q);
+        for j in 0..self.p {
+            let ks = self.kss[j * self.p + j0] as f64;
+            for kk in 0..self.q {
+                let v = ks * self.ktt[kk * self.q + k0] as f64;
+                col.push(v * self.mask32[j * self.q + kk] as f64 * mcol);
+            }
+        }
+        col
+    }
+
+    fn kernel_bytes(&self) -> u64 {
+        ((self.p * self.p + self.q * self.q) * 4) as u64
+    }
+
+    fn kernel_evals(&self) -> u64 {
+        ((self.p * self.p) + (self.q * self.q)) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn toy_backend(mode: MvmMode) -> RustKronBackend {
+        let mut rng = Rng::new(7);
+        let (p, q, ds) = (8, 5, 2);
+        let s = Matrix::from_vec(p, ds, rng.normals(p * ds));
+        let t: Vec<f64> = (0..q).map(|k| k as f64 / (q - 1) as f64).collect();
+        let mut mask = vec![1.0; p * q];
+        for i in (0..p * q).step_by(3) {
+            mask[i] = 0.0;
+        }
+        let mut be = RustKronBackend::new(ds, "rbf", q, 4).with_mode(mode);
+        be.set_data(&s, &t, &mask).unwrap();
+        be.set_hypers(&vec![0.0; be.kernel.n_theta()], -1.5).unwrap();
+        be
+    }
+
+    #[test]
+    fn dense_modes_match_kron_mvm() {
+        let mut rng = Rng::new(11);
+        let mut kron = toy_backend(MvmMode::Kron);
+        let mut dense = toy_backend(MvmMode::DenseMaterialized);
+        let mut lazy = toy_backend(MvmMode::DenseLazy { block_rows: 3 });
+        let v = Matrix::from_vec(2, kron.dim(), rng.normals(2 * kron.dim()));
+        // dense modes only act on the observed subspace; compare there
+        let mut vm = v.clone();
+        for b in 0..2 {
+            for (x, m) in vm.row_mut(b).iter_mut().zip(&kron.mask) {
+                *x *= *m;
+            }
+        }
+        let a = kron.system_mvm(&vm).unwrap();
+        let b = dense.system_mvm(&vm).unwrap();
+        let c = lazy.system_mvm(&vm).unwrap();
+        for i in 0..a.data.len() {
+            assert!((a.data[i] - b.data[i]).abs() < 1e-3, "dense idx {i}");
+            assert!((a.data[i] - c.data[i]).abs() < 1e-6, "lazy idx {i}");
+        }
+    }
+
+    #[test]
+    fn kernel_bytes_ordering() {
+        let kron = toy_backend(MvmMode::Kron);
+        let dense = toy_backend(MvmMode::DenseMaterialized);
+        // 8x5 grid with 1/3 missing: n ~ 26, n^2*4 ~ 2.7 KB vs (64+25)*8
+        assert!(kron.kernel_bytes() < dense.kernel_bytes());
+    }
+
+    #[test]
+    fn prior_sample_has_kernel_covariance() {
+        let mut be = toy_backend(MvmMode::Kron);
+        let mut rng = Rng::new(3);
+        let nsamp = 2000;
+        let z = Matrix::from_vec(nsamp, be.dim(), rng.normals(nsamp * be.dim()));
+        let f = be.prior_sample(&z).unwrap();
+        // marginal variance ~ diag(K (x) K) = 1 (unit outputscale/kernels)
+        for c in 0..be.dim() {
+            let var: f64 = (0..nsamp).map(|r| f[(r, c)] * f[(r, c)]).sum::<f64>() / nsamp as f64;
+            assert!((var - 1.0).abs() < 0.2, "cell {c} var {var}");
+        }
+    }
+}

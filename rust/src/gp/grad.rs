@@ -1,0 +1,271 @@
+//! Analytic hyperparameter gradients of the Hutchinson MLL surrogate —
+//! the rust-native mirror of the `mll_grads` AOT artifact.
+//!
+//! Surrogate (same convention as python/compile/model.py):
+//!
+//!   g(theta, log_s2) = -1/2 a^T Khat a + 1/(2k) sum_i w_i^T Khat z_i
+//!   Khat v = M (A (x) B) M v + s2 v,   A = K_SS(theta), B = K_TT(theta)
+//!
+//! For any masked pair (u, v), d(u^T (A (x) B) v)/dA = U B V^T and
+//! d(.)/dB = U^T A V with U = unvec(u) (p x q, row-major). Pair
+//! contributions are accumulated into GA (p x p) and GB (q x q) once,
+//! then contracted against dA/dtheta, dB/dtheta per kernel family.
+//! Integration tests assert this matches the jax.grad artifact.
+
+use crate::kernels::{ProductGridKernel, TimeKernel};
+use crate::kron::KronOp;
+use crate::linalg::gemm::{matmul_acc, matmul_nt};
+use crate::linalg::Matrix;
+
+/// A (u, v, coefficient) quadratic-form pair of the surrogate.
+pub struct Pair<'a> {
+    pub u: &'a [f64],
+    pub v: &'a [f64],
+    pub coef: f64,
+}
+
+/// Gradient of the surrogate w.r.t. [theta.., log_sigma2].
+/// All pair vectors must already be masked (zeros at missing cells).
+pub fn mll_surrogate_grads(
+    kernel: &ProductGridKernel,
+    s: &Matrix<f64>,
+    t: &[f64],
+    kss: &Matrix<f64>,
+    ktt: &Matrix<f64>,
+    log_sigma2: f64,
+    pairs: &[Pair<'_>],
+) -> Vec<f64> {
+    let (p, q) = (kss.rows, ktt.rows);
+    // ---- accumulate GA, GB, and the noise quadratic form ----
+    let mut ga = Matrix::<f64>::zeros(p, p);
+    let mut gb = Matrix::<f64>::zeros(q, q);
+    let mut uv_sum = 0.0;
+    for pair in pairs {
+        assert_eq!(pair.u.len(), p * q);
+        assert_eq!(pair.v.len(), p * q);
+        let u = Matrix { rows: p, cols: q, data: pair.u.to_vec() };
+        let v = Matrix { rows: p, cols: q, data: pair.v.to_vec() };
+        // GA += coef * U B V^T ; B symmetric so U B = (B U^T)^T computed
+        // directly as matmul. ub: p x q
+        let ub = {
+            let mut m = u.matmul(ktt); // U (p x q) @ B (q x q) -> B symmetric
+            m.scale(pair.coef);
+            m
+        };
+        // ga += ub @ v^T
+        let ubvt = matmul_nt(&ub, &v);
+        ga.add_assign(&ubvt);
+        // GB += coef * U^T A V : (q x p) @ (p x p) @ (p x q)
+        let au = kss.matmul(&u); // A U (p x q); A symmetric => U^T A = (A U)^T
+        let mut gb_c = Matrix::<f64>::zeros(q, q);
+        // gb_c = (A U)^T @ V
+        matmul_acc(&au.transpose(), &v, &mut gb_c);
+        gb_c.scale(pair.coef);
+        gb.add_assign(&gb_c);
+        // noise: coef * u^T v
+        let mut d = 0.0;
+        for (a, b) in pair.u.iter().zip(pair.v) {
+            d += a * b;
+        }
+        uv_sum += pair.coef * d;
+    }
+
+    // ---- contract GA with dA/dtheta (spatial ARD-SE) ----
+    let ds = kernel.spatial.dim();
+    let mut grads = Vec::with_capacity(kernel.n_theta() + 1);
+    // d/dlog_ls_d : sum_ij GA_ij A_ij (ds_ijd / ls_d)^2
+    let ls: Vec<f64> = kernel.spatial.log_ls.iter().map(|l| l.exp()).collect();
+    let mut g_ls = vec![0.0; ds];
+    let mut g_os = 0.0;
+    for i in 0..p {
+        for j in 0..p {
+            let w = ga[(i, j)] * kss[(i, j)];
+            g_os += w;
+            let (si, sj) = (s.row(i), s.row(j));
+            for d in 0..ds {
+                let z = (si[d] - sj[d]) / ls[d];
+                g_ls[d] += w * z * z;
+            }
+        }
+    }
+    grads.extend_from_slice(&g_ls);
+    grads.push(g_os);
+
+    // ---- contract GB with dB/dtheta (time family) ----
+    match &kernel.time {
+        TimeKernel::Rbf { log_ls } => {
+            let lt = log_ls.exp();
+            let mut g = 0.0;
+            for k in 0..q {
+                for l in 0..q {
+                    let z = (t[k] - t[l]) / lt;
+                    g += gb[(k, l)] * ktt[(k, l)] * z * z;
+                }
+            }
+            grads.push(g);
+        }
+        TimeKernel::RbfPeriodic { log_ls, log_ls_per, log_period } => {
+            let (lt, lsp, per) = (log_ls.exp(), log_ls_per.exp(), log_period.exp());
+            let (mut g_lt, mut g_lsp, mut g_per) = (0.0, 0.0, 0.0);
+            for k in 0..q {
+                for l in 0..q {
+                    let dt = t[k] - t[l];
+                    let w = gb[(k, l)] * ktt[(k, l)];
+                    let z = dt / lt;
+                    g_lt += w * z * z;
+                    let x = std::f64::consts::PI * dt / per;
+                    let sx = x.sin();
+                    g_lsp += w * 4.0 * sx * sx / (lsp * lsp);
+                    g_per += w * 2.0 * std::f64::consts::PI * dt * (2.0 * x).sin()
+                        / (lsp * lsp * per);
+                }
+            }
+            grads.push(g_lt);
+            grads.push(g_lsp);
+            grads.push(g_per);
+        }
+        TimeKernel::Icm { q: qq, .. } => {
+            // B = L L^T (+const jitter): dg/dL = (GB + GB^T) L, exp-chain
+            // on the diagonal.
+            let l = kernel.time.icm_l();
+            let mut gsym = gb.clone();
+            let gbt = gb.transpose();
+            gsym.add_assign(&gbt);
+            let gl = gsym.matmul(&l);
+            for i in 0..*qq {
+                for j in 0..=i {
+                    let g = if i == j { gl[(i, j)] * l[(i, i)] } else { gl[(i, j)] };
+                    grads.push(g);
+                }
+            }
+        }
+    }
+
+    // ---- noise ----
+    // d/dlog_s2 [ s2 * sum coef u^T v ] = s2 * uv_sum
+    grads.push(log_sigma2.exp() * uv_sum);
+    grads
+}
+
+/// Convenience: build the standard surrogate pair set from alpha and
+/// probe solves (all masked): (a, a, -1/2) + (w_i, z_i, 1/(2k)).
+pub fn standard_pairs<'a>(
+    alpha: &'a [f64],
+    w: &'a Matrix<f64>,
+    z: &'a Matrix<f64>,
+) -> Vec<Pair<'a>> {
+    assert_eq!(w.rows, z.rows);
+    let k = w.rows.max(1) as f64;
+    let mut pairs = vec![Pair { u: alpha, v: alpha, coef: -0.5 }];
+    for i in 0..w.rows {
+        pairs.push(Pair { u: w.row(i), v: z.row(i), coef: 0.5 / k });
+    }
+    pairs
+}
+
+/// The surrogate value itself (used by finite-difference tests).
+pub fn mll_surrogate_value(
+    kss: &Matrix<f64>,
+    ktt: &Matrix<f64>,
+    mask: &[f64],
+    log_sigma2: f64,
+    pairs: &[Pair<'_>],
+) -> f64 {
+    let op = KronOp::new(kss.clone(), ktt.clone());
+    let s2 = log_sigma2.exp();
+    let mut total = 0.0;
+    for pair in pairs {
+        let mut vm = Matrix { rows: 1, cols: pair.v.len(), data: pair.v.to_vec() };
+        for (x, m) in vm.row_mut(0).iter_mut().zip(mask) {
+            *x *= m;
+        }
+        let kv = op.apply_batch(&vm);
+        let mut quad = 0.0;
+        for ((u, kvi), m) in pair.u.iter().zip(kv.row(0)).zip(mask) {
+            quad += u * kvi * m;
+        }
+        let mut uv = 0.0;
+        for (u, v) in pair.u.iter().zip(pair.v) {
+            uv += u * v;
+        }
+        total += pair.coef * (quad + s2 * uv);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::testing::Gen;
+
+    /// finite-difference check of the analytic gradient for every family
+    fn fd_check(family: &str, q: usize, seed: u64) {
+        let mut g = Gen { rng: Rng::new(seed) };
+        let (p, ds) = (6, 2);
+        let mut kernel = ProductGridKernel::new(ds, family, q);
+        let theta0: Vec<f64> = (0..kernel.n_theta()).map(|_| g.f64_in(-0.3, 0.3)).collect();
+        kernel.set_theta(&theta0);
+        let s = Matrix::from_vec(p, ds, g.vec_normal(p * ds));
+        let t: Vec<f64> = (0..q).map(|k| k as f64 / (q - 1) as f64).collect();
+        let mask = g.mask(p * q, 0.3);
+        let log_s2 = -1.2;
+        // masked pair vectors
+        let mk = |g: &mut Gen| -> Vec<f64> {
+            g.vec_normal(p * q).iter().zip(&mask).map(|(x, m)| x * m).collect()
+        };
+        let alpha = mk(&mut g);
+        let w = Matrix::from_vec(2, p * q, [mk(&mut g), mk(&mut g)].concat());
+        let z = Matrix::from_vec(2, p * q, [mk(&mut g), mk(&mut g)].concat());
+        let pairs = standard_pairs(&alpha, &w, &z);
+
+        let kss = kernel.gram_s(&s);
+        let ktt = kernel.gram_t(&t);
+        let got = mll_surrogate_grads(&kernel, &s, &t, &kss, &ktt, log_s2, &pairs);
+        assert_eq!(got.len(), kernel.n_theta() + 1);
+
+        let eval = |theta: &[f64], ls2: f64| -> f64 {
+            let mut k2 = kernel.clone();
+            k2.set_theta(theta);
+            let kss = k2.gram_s(&s);
+            let ktt = k2.gram_t(&t);
+            let pairs = standard_pairs(&alpha, &w, &z);
+            mll_surrogate_value(&kss, &ktt, &mask, ls2, &pairs)
+        };
+        let eps = 1e-5;
+        for d in 0..kernel.n_theta() {
+            let mut tp = theta0.clone();
+            tp[d] += eps;
+            let mut tm = theta0.clone();
+            tm[d] -= eps;
+            let fd = (eval(&tp, log_s2) - eval(&tm, log_s2)) / (2.0 * eps);
+            assert!(
+                (got[d] - fd).abs() < 1e-4 * (1.0 + fd.abs()),
+                "{family} theta[{d}]: analytic {} vs fd {fd}",
+                got[d]
+            );
+        }
+        let fd_s2 =
+            (eval(&theta0, log_s2 + eps) - eval(&theta0, log_s2 - eps)) / (2.0 * eps);
+        let gs2 = got[kernel.n_theta()];
+        assert!(
+            (gs2 - fd_s2).abs() < 1e-4 * (1.0 + fd_s2.abs()),
+            "{family} log_s2: {gs2} vs {fd_s2}"
+        );
+    }
+
+    #[test]
+    fn fd_rbf() {
+        fd_check("rbf", 5, 101);
+    }
+
+    #[test]
+    fn fd_rbf_periodic() {
+        fd_check("rbf_periodic", 6, 103);
+    }
+
+    #[test]
+    fn fd_icm() {
+        fd_check("icm", 4, 107);
+    }
+}

@@ -1,0 +1,56 @@
+//! Gaussian-process models.
+//!
+//! * `lkgp` — the paper's Latent Kronecker GP: exact GP inference on a
+//!   partial grid via masked Kronecker MVMs + iterative solvers +
+//!   pathwise conditioning. The dense iterative *baseline* is the same
+//!   model with `MvmMode::DenseMaterialized` (identical prior,
+//!   hyperparameters and solver; only the MVM changes — exactly the
+//!   Fig-3 comparison).
+//! * `backend` — compute backends (rust-native / PJRT artifacts).
+//! * `grad` — analytic MLL surrogate gradients (mirror of the AOT
+//!   `mll_grads` artifact).
+
+pub mod backend;
+pub mod grad;
+pub mod lkgp;
+
+use crate::data::GridDataset;
+use crate::util::stats;
+
+/// Full-grid predictive posterior in raw target scale.
+#[derive(Clone, Debug)]
+pub struct Posterior {
+    /// predictive mean per grid cell
+    pub mean: Vec<f64>,
+    /// predictive variance per grid cell (includes observation noise)
+    pub var: Vec<f64>,
+}
+
+impl Posterior {
+    /// RMSE over the given grid indices.
+    pub fn rmse_at(&self, data: &GridDataset, idx: &[usize]) -> f64 {
+        let pred: Vec<f64> = idx.iter().map(|&i| self.mean[i]).collect();
+        let target: Vec<f64> = idx.iter().map(|&i| data.y_grid[i]).collect();
+        stats::rmse(&pred, &target)
+    }
+
+    /// Mean Gaussian NLL over the given grid indices.
+    pub fn nll_at(&self, data: &GridDataset, idx: &[usize]) -> f64 {
+        let pred: Vec<f64> = idx.iter().map(|&i| self.mean[i]).collect();
+        let var: Vec<f64> = idx.iter().map(|&i| self.var[i]).collect();
+        let target: Vec<f64> = idx.iter().map(|&i| data.y_grid[i]).collect();
+        stats::gaussian_nll(&pred, &var, &target)
+    }
+
+    /// Test metrics (missing cells).
+    pub fn test_metrics(&self, data: &GridDataset) -> (f64, f64) {
+        let idx = data.missing_indices();
+        (self.rmse_at(data, &idx), self.nll_at(data, &idx))
+    }
+
+    /// Train metrics (observed cells).
+    pub fn train_metrics(&self, data: &GridDataset) -> (f64, f64) {
+        let idx = data.observed_indices();
+        (self.rmse_at(data, &idx), self.nll_at(data, &idx))
+    }
+}

@@ -1,0 +1,129 @@
+//! The product kernel on the S x T grid — the model class of the paper.
+//!
+//! `k_X((s,t), (s',t')) = k_S(s, s') * k_T(t, t')`, with a shared flat
+//! hyperparameter vector matching the AOT artifacts' `theta` ABI.
+
+use crate::linalg::Matrix;
+
+use super::rbf::RbfArd;
+use super::time::TimeKernel;
+
+/// Product kernel k_S (ARD-SE over s) x k_T (time family over t).
+#[derive(Clone, Debug)]
+pub struct ProductGridKernel {
+    pub spatial: RbfArd,
+    pub time: TimeKernel,
+}
+
+impl ProductGridKernel {
+    pub fn new(ds: usize, time_family: &str, q: usize) -> Self {
+        ProductGridKernel { spatial: RbfArd::new(ds), time: TimeKernel::new(time_family, q) }
+    }
+
+    /// Total hyperparameter count (matches python configs.n_theta).
+    pub fn n_theta(&self) -> usize {
+        self.spatial.dim() + 1 + self.time.n_params()
+    }
+
+    /// Flat theta = [log_ls_s.., log_os, time params..].
+    pub fn theta(&self) -> Vec<f64> {
+        let mut p = self.spatial.params();
+        p.extend(self.time.params());
+        p
+    }
+
+    pub fn set_theta(&mut self, theta: &[f64]) {
+        assert_eq!(theta.len(), self.n_theta(), "theta length");
+        let ns = self.spatial.dim() + 1;
+        self.spatial.set_params(&theta[..ns]);
+        self.time.set_params(&theta[ns..]);
+    }
+
+    /// theta as f32 for the PJRT boundary.
+    pub fn theta_f32(&self) -> Vec<f32> {
+        self.theta().iter().map(|&x| x as f32).collect()
+    }
+
+    /// K_SS over spatial points (rows of `s`).
+    pub fn gram_s(&self, s: &Matrix<f64>) -> Matrix<f64> {
+        self.spatial.gram(s, s)
+    }
+
+    /// K_TT over time coordinates.
+    pub fn gram_t(&self, t: &[f64]) -> Matrix<f64> {
+        self.time.gram(t)
+    }
+
+    /// Full product-kernel evaluation between two grid points.
+    pub fn eval(&self, s1: &[f64], t1: f64, s2: &[f64], t2: f64, t_grid: &[f64]) -> f64 {
+        // for ICM, t is a task index into the grid
+        let kt = match &self.time {
+            TimeKernel::Icm { .. } => {
+                let g = self.time.gram(t_grid);
+                let (i, j) = (t1 as usize, t2 as usize);
+                g[(i, j)]
+            }
+            _ => {
+                let g = self.time.gram(&[t1, t2]);
+                g[(0, 1)]
+            }
+        };
+        self.spatial.eval(s1, s2) * kt
+    }
+
+    /// Dense n x n kernel matrix over an arbitrary list of (row, col)
+    /// grid observations — what the *dense baseline* materializes. Each
+    /// observation is (spatial index, time index) into the grids.
+    pub fn dense_gram(
+        &self,
+        s: &Matrix<f64>,
+        t: &[f64],
+        obs: &[(usize, usize)],
+    ) -> Matrix<f64> {
+        let kss = self.gram_s(s);
+        let ktt = self.gram_t(t);
+        Matrix::from_fn(obs.len(), obs.len(), |a, b| {
+            let (ia, ja) = obs[a];
+            let (ib, jb) = obs[b];
+            kss[(ia, ib)] * ktt[(ja, jb)]
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn theta_roundtrip_matches_layout() {
+        let mut k = ProductGridKernel::new(3, "rbf_periodic", 10);
+        assert_eq!(k.n_theta(), 3 + 1 + 3);
+        let theta: Vec<f64> = (0..k.n_theta()).map(|i| i as f64 * 0.01).collect();
+        k.set_theta(&theta);
+        assert_eq!(k.theta(), theta);
+    }
+
+    #[test]
+    fn dense_gram_is_product_of_factors() {
+        let mut rng = Rng::new(0);
+        let k = ProductGridKernel::new(2, "rbf", 4);
+        let s = Matrix::from_vec(3, 2, rng.normals(6));
+        let t: Vec<f64> = vec![0.0, 0.3, 0.6, 1.0];
+        let obs: Vec<(usize, usize)> = vec![(0, 0), (0, 3), (1, 1), (2, 2), (2, 0)];
+        let dense = k.dense_gram(&s, &t, &obs);
+        let (kss, ktt) = (k.gram_s(&s), k.gram_t(&t));
+        for (a, &(ia, ja)) in obs.iter().enumerate() {
+            for (b, &(ib, jb)) in obs.iter().enumerate() {
+                let want = kss[(ia, ib)] * ktt[(ja, jb)];
+                assert!((dense[(a, b)] - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn icm_task_count_matches() {
+        let k = ProductGridKernel::new(21, "icm", 7);
+        assert_eq!(k.n_theta(), 21 + 1 + 28);
+    }
+}

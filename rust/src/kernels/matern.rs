@@ -1,0 +1,117 @@
+//! Matérn kernels (nu = 1/2, 3/2, 5/2) — the "specialized kernels"
+//! future-work item (paper Sec. 5). Drop-in spatial alternatives to the
+//! squared exponential for rougher fields (precipitation, terrain).
+
+use crate::linalg::Matrix;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MaternNu {
+    Half,
+    ThreeHalves,
+    FiveHalves,
+}
+
+/// Isotropic Matérn kernel with ARD lengthscales and outputscale.
+#[derive(Clone, Debug)]
+pub struct MaternArd {
+    pub nu: MaternNu,
+    pub log_ls: Vec<f64>,
+    pub log_os: f64,
+}
+
+impl MaternArd {
+    pub fn new(nu: MaternNu, d: usize) -> Self {
+        MaternArd { nu, log_ls: vec![0.0; d], log_os: 0.0 }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.log_ls.len()
+    }
+
+    /// Scaled distance r = sqrt(sum_d ((x_d - y_d)/ls_d)^2).
+    fn scaled_r(&self, x: &[f64], y: &[f64]) -> f64 {
+        let mut r2 = 0.0;
+        for ((xi, yi), lls) in x.iter().zip(y).zip(&self.log_ls) {
+            let z = (xi - yi) / lls.exp();
+            r2 += z * z;
+        }
+        r2.sqrt()
+    }
+
+    pub fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        let r = self.scaled_r(x, y);
+        let core = match self.nu {
+            MaternNu::Half => (-r).exp(),
+            MaternNu::ThreeHalves => {
+                let a = 3f64.sqrt() * r;
+                (1.0 + a) * (-a).exp()
+            }
+            MaternNu::FiveHalves => {
+                let a = 5f64.sqrt() * r;
+                (1.0 + a + a * a / 3.0) * (-a).exp()
+            }
+        };
+        self.log_os.exp() * core
+    }
+
+    pub fn gram(&self, xs: &Matrix<f64>, ys: &Matrix<f64>) -> Matrix<f64> {
+        Matrix::from_fn(xs.rows, ys.rows, |i, j| self.eval(xs.row(i), ys.row(j)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::cholesky;
+    use crate::util::rng::Rng;
+
+    fn points(n: usize, d: usize, seed: u64) -> Matrix<f64> {
+        let mut rng = Rng::new(seed);
+        Matrix::from_vec(n, d, rng.normals(n * d))
+    }
+
+    #[test]
+    fn all_nus_are_psd_kernels() {
+        for nu in [MaternNu::Half, MaternNu::ThreeHalves, MaternNu::FiveHalves] {
+            let k = MaternArd::new(nu, 3);
+            let xs = points(25, 3, 1);
+            let mut g = k.gram(&xs, &xs);
+            g.add_diag(1e-8);
+            assert!(cholesky(&g).is_some(), "{nu:?} gram not PSD");
+        }
+    }
+
+    #[test]
+    fn smoothness_ordering_near_origin() {
+        // higher nu decays slower near r=0 (smoother process)
+        let x = [0.0];
+        let y = [0.4];
+        let vals: Vec<f64> = [MaternNu::Half, MaternNu::ThreeHalves, MaternNu::FiveHalves]
+            .iter()
+            .map(|&nu| MaternArd::new(nu, 1).eval(&x, &y))
+            .collect();
+        assert!(vals[0] < vals[1] && vals[1] < vals[2], "{vals:?}");
+    }
+
+    #[test]
+    fn matern_52_approaches_se_for_small_r() {
+        let m = MaternArd::new(MaternNu::FiveHalves, 1);
+        let se = crate::kernels::RbfArd::new(1);
+        for r in [0.01, 0.05] {
+            let km = m.eval(&[0.0], &[r]);
+            let ks = se.eval(&[0.0], &[r]);
+            assert!((km - ks).abs() < 5e-3, "r={r}: {km} vs {ks}");
+        }
+    }
+
+    #[test]
+    fn diag_is_outputscale() {
+        let mut k = MaternArd::new(MaternNu::ThreeHalves, 2);
+        k.log_os = 0.4;
+        let xs = points(5, 2, 2);
+        let g = k.gram(&xs, &xs);
+        for i in 0..5 {
+            assert!((g[(i, i)] - 0.4f64.exp()).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! Kernel functions (rust side).
+//!
+//! These mirror the L2 JAX kernel families *exactly* — same functional
+//! forms, same flat hyperparameter layout (`theta`), log-scale for
+//! positive quantities — so the RustKron backend, the dense baselines,
+//! and the PJRT artifacts all consume one hyperparameter vector:
+//!
+//! ```text
+//! theta = [ log_ls_s (ARD, d_s) | log_outputscale | time-kernel params ]
+//! ```
+//!
+//! Time-kernel params per family:
+//!   rbf           -> [log_ls_t]
+//!   rbf_periodic  -> [log_ls_t, log_ls_per, log_period]
+//!   icm           -> [q*(q+1)/2 Cholesky entries, exp() on the diagonal]
+
+pub mod grid;
+pub mod matern;
+pub mod rbf;
+pub mod time;
+
+pub use grid::ProductGridKernel;
+pub use matern::{MaternArd, MaternNu};
+pub use rbf::RbfArd;
+pub use time::TimeKernel;

@@ -1,0 +1,141 @@
+//! ARD squared-exponential kernel with outputscale.
+
+use crate::linalg::gemm::matmul_nt;
+use crate::linalg::Matrix;
+
+/// k(x, y) = exp(log_os) * exp(-0.5 * sum_d (x_d - y_d)^2 / ls_d^2)
+#[derive(Clone, Debug)]
+pub struct RbfArd {
+    pub log_ls: Vec<f64>,
+    pub log_os: f64,
+}
+
+impl RbfArd {
+    pub fn new(d: usize) -> Self {
+        RbfArd { log_ls: vec![0.0; d], log_os: 0.0 }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.log_ls.len()
+    }
+
+    pub fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), self.dim());
+        let mut d2 = 0.0;
+        for ((xi, yi), lls) in x.iter().zip(y).zip(&self.log_ls) {
+            let z = (xi - yi) / lls.exp();
+            d2 += z * z;
+        }
+        self.log_os.exp() * (-0.5 * d2).exp()
+    }
+
+    /// Gram matrix via the GEMM trick: with inputs pre-scaled by 1/ls,
+    /// ||x-y||^2 = x.x + y.y - 2 x.y^T, so the O(n m d) inner work is a
+    /// single matmul_nt — the same schedule as the L1 Pallas RBF kernel.
+    pub fn gram(&self, xs: &Matrix<f64>, ys: &Matrix<f64>) -> Matrix<f64> {
+        assert_eq!(xs.cols, self.dim());
+        assert_eq!(ys.cols, self.dim());
+        let scale: Vec<f64> = self.log_ls.iter().map(|l| (-l).exp()).collect();
+        let scaled = |m: &Matrix<f64>| {
+            let mut s = m.clone();
+            for i in 0..s.rows {
+                for (v, sc) in s.row_mut(i).iter_mut().zip(&scale) {
+                    *v *= sc;
+                }
+            }
+            s
+        };
+        let (xs_s, ys_s) = (scaled(xs), scaled(ys));
+        let sqn = |m: &Matrix<f64>| -> Vec<f64> {
+            (0..m.rows).map(|i| m.row(i).iter().map(|v| v * v).sum()).collect()
+        };
+        let (xn, yn) = (sqn(&xs_s), sqn(&ys_s));
+        let mut k = matmul_nt(&xs_s, &ys_s);
+        let os = self.log_os.exp();
+        for i in 0..k.rows {
+            let xi = xn[i];
+            for (j, v) in k.row_mut(i).iter_mut().enumerate() {
+                let d2 = (xi + yn[j] - 2.0 * *v).max(0.0);
+                *v = os * (-0.5 * d2).exp();
+            }
+        }
+        k
+    }
+
+    /// Symmetric Gram with optional diagonal jitter.
+    pub fn gram_sym(&self, xs: &Matrix<f64>, jitter: f64) -> Matrix<f64> {
+        let mut k = self.gram(xs, xs);
+        if jitter > 0.0 {
+            k.add_diag(jitter);
+        }
+        k
+    }
+
+    pub fn params(&self) -> Vec<f64> {
+        let mut p = self.log_ls.clone();
+        p.push(self.log_os);
+        p
+    }
+
+    pub fn set_params(&mut self, p: &[f64]) {
+        let d = self.dim();
+        assert_eq!(p.len(), d + 1);
+        self.log_ls.copy_from_slice(&p[..d]);
+        self.log_os = p[d];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::{assert_close, prop_check};
+
+    #[test]
+    fn prop_gram_matches_eval() {
+        prop_check("rbf-gram-vs-eval", 41, 15, |g| {
+            let d = g.size(1, 6);
+            let (m, n) = (g.size(1, 20), g.size(1, 20));
+            let mut k = RbfArd::new(d);
+            k.log_ls = (0..d).map(|_| g.f64_in(-1.0, 1.0)).collect();
+            k.log_os = g.f64_in(-1.0, 1.0);
+            let xs = Matrix::from_vec(m, d, g.vec_normal(m * d));
+            let ys = Matrix::from_vec(n, d, g.vec_normal(n * d));
+            let gram = k.gram(&xs, &ys);
+            let mut want = Vec::with_capacity(m * n);
+            for i in 0..m {
+                for j in 0..n {
+                    want.push(k.eval(xs.row(i), ys.row(j)));
+                }
+            }
+            assert_close(&gram.data, &want, 1e-9)
+        });
+    }
+
+    #[test]
+    fn diag_equals_outputscale() {
+        let mut k = RbfArd::new(3);
+        k.log_os = 0.7;
+        let xs = Matrix::from_fn(5, 3, |i, j| (i * j) as f64 * 0.3);
+        let gram = k.gram_sym(&xs, 0.0);
+        for i in 0..5 {
+            assert!((gram[(i, i)] - 0.7f64.exp()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn params_roundtrip() {
+        let mut k = RbfArd::new(2);
+        k.set_params(&[0.1, -0.2, 0.5]);
+        assert_eq!(k.params(), vec![0.1, -0.2, 0.5]);
+    }
+
+    #[test]
+    fn longer_lengthscale_higher_correlation() {
+        let mut k = RbfArd::new(1);
+        k.log_ls[0] = 0.0;
+        let near = k.eval(&[0.0], &[1.0]);
+        k.log_ls[0] = 2.0;
+        let far = k.eval(&[0.0], &[1.0]);
+        assert!(far > near);
+    }
+}

@@ -1,0 +1,175 @@
+//! Time/task kernel families for the T axis of the product kernel.
+//!
+//! Mirrors python/compile/model.py::time_gram exactly (same math, same
+//! parameter packing) — integration tests assert rust and PJRT agree.
+
+use crate::linalg::Matrix;
+
+/// K_TT family. `t` inputs are the q grid coordinates (as f64 scalars
+/// for rbf/rbf_periodic; ignored for icm, which keys on task index).
+#[derive(Clone, Debug)]
+pub enum TimeKernel {
+    /// Squared exponential on t: params [log_ls_t].
+    Rbf { log_ls: f64 },
+    /// SE * periodic (seasonal trends): [log_ls_t, log_ls_per, log_period].
+    RbfPeriodic { log_ls: f64, log_ls_per: f64, log_period: f64 },
+    /// Full-rank ICM task kernel B = L L^T over q tasks:
+    /// [q*(q+1)/2 packed row-major lower-triangular entries of L,
+    /// exp() applied to diagonal entries for positivity].
+    Icm { q: usize, tril: Vec<f64> },
+}
+
+impl TimeKernel {
+    pub fn new(family: &str, q: usize) -> Self {
+        match family {
+            "rbf" => TimeKernel::Rbf { log_ls: 0.0 },
+            "rbf_periodic" => {
+                TimeKernel::RbfPeriodic { log_ls: 0.0, log_ls_per: 0.0, log_period: 0.0 }
+            }
+            "icm" => TimeKernel::Icm { q, tril: vec![0.0; q * (q + 1) / 2] },
+            other => panic!("unknown time kernel family {other:?}"),
+        }
+    }
+
+    pub fn family(&self) -> &'static str {
+        match self {
+            TimeKernel::Rbf { .. } => "rbf",
+            TimeKernel::RbfPeriodic { .. } => "rbf_periodic",
+            TimeKernel::Icm { .. } => "icm",
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        match self {
+            TimeKernel::Rbf { .. } => 1,
+            TimeKernel::RbfPeriodic { .. } => 3,
+            TimeKernel::Icm { q, .. } => q * (q + 1) / 2,
+        }
+    }
+
+    pub fn params(&self) -> Vec<f64> {
+        match self {
+            TimeKernel::Rbf { log_ls } => vec![*log_ls],
+            TimeKernel::RbfPeriodic { log_ls, log_ls_per, log_period } => {
+                vec![*log_ls, *log_ls_per, *log_period]
+            }
+            TimeKernel::Icm { tril, .. } => tril.clone(),
+        }
+    }
+
+    pub fn set_params(&mut self, p: &[f64]) {
+        assert_eq!(p.len(), self.n_params());
+        match self {
+            TimeKernel::Rbf { log_ls } => *log_ls = p[0],
+            TimeKernel::RbfPeriodic { log_ls, log_ls_per, log_period } => {
+                *log_ls = p[0];
+                *log_ls_per = p[1];
+                *log_period = p[2];
+            }
+            TimeKernel::Icm { tril, .. } => tril.copy_from_slice(p),
+        }
+    }
+
+    /// Gram matrix over grid coordinates `t` (length q).
+    pub fn gram(&self, t: &[f64]) -> Matrix<f64> {
+        let q = t.len();
+        match self {
+            TimeKernel::Rbf { log_ls } => {
+                let ls = log_ls.exp();
+                Matrix::from_fn(q, q, |i, j| {
+                    let d = (t[i] - t[j]) / ls;
+                    (-0.5 * d * d).exp()
+                })
+            }
+            TimeKernel::RbfPeriodic { log_ls, log_ls_per, log_period } => {
+                let (ls, lsp, period) = (log_ls.exp(), log_ls_per.exp(), log_period.exp());
+                Matrix::from_fn(q, q, |i, j| {
+                    let d = t[i] - t[j];
+                    let se = (-0.5 * d * d / (ls * ls)).exp();
+                    let s = (std::f64::consts::PI * d / period).sin();
+                    let per = (-2.0 * s * s / (lsp * lsp)).exp();
+                    se * per
+                })
+            }
+            TimeKernel::Icm { q: qq, .. } => {
+                assert_eq!(q, *qq, "ICM gram requires q grid points");
+                let l = self.icm_l();
+                let mut k = l.matmul(&l.transpose());
+                k.add_diag(1e-6);
+                k
+            }
+        }
+    }
+
+    /// The lower-triangular ICM factor L (exp on diagonal).
+    pub fn icm_l(&self) -> Matrix<f64> {
+        match self {
+            TimeKernel::Icm { q, tril } => {
+                let mut l = Matrix::zeros(*q, *q);
+                let mut idx = 0;
+                for i in 0..*q {
+                    for j in 0..=i {
+                        l[(i, j)] = if i == j { tril[idx].exp() } else { tril[idx] };
+                        idx += 1;
+                    }
+                }
+                l
+            }
+            _ => panic!("icm_l on non-ICM kernel"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::cholesky;
+
+    fn grid(q: usize) -> Vec<f64> {
+        (0..q).map(|i| i as f64 / (q.max(2) - 1) as f64).collect()
+    }
+
+    #[test]
+    fn rbf_unit_diag_and_symmetry() {
+        let k = TimeKernel::new("rbf", 8);
+        let g = k.gram(&grid(8));
+        for i in 0..8 {
+            assert!((g[(i, i)] - 1.0).abs() < 1e-12);
+            for j in 0..8 {
+                assert!((g[(i, j)] - g[(j, i)]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn periodic_repeats_at_period() {
+        let mut k = TimeKernel::new("rbf_periodic", 0);
+        // long SE lengthscale so the periodic part dominates
+        k.set_params(&[3.0f64.ln(), 0.0, 0.25f64.ln()]);
+        let t = [0.0, 0.25, 0.5, 0.125];
+        let g = k.gram(&t);
+        // lag exactly one period -> periodic factor is 1
+        assert!((g[(0, 1)] - g[(0, 2)]).abs() < 0.05, "{} {}", g[(0, 1)], g[(0, 2)]);
+        assert!(g[(0, 3)] < g[(0, 1)]); // half-period lag is least similar
+    }
+
+    #[test]
+    fn icm_gram_is_psd_full_rank() {
+        let mut k = TimeKernel::new("icm", 5);
+        let p: Vec<f64> = (0..k.n_params()).map(|i| (i as f64 * 0.37).sin() * 0.5).collect();
+        k.set_params(&p);
+        let g = k.gram(&grid(5));
+        assert!(cholesky(&g).is_some(), "ICM gram not PD");
+    }
+
+    #[test]
+    fn param_roundtrip_all_families() {
+        for fam in ["rbf", "rbf_periodic", "icm"] {
+            let mut k = TimeKernel::new(fam, 4);
+            let p: Vec<f64> = (0..k.n_params()).map(|i| i as f64 * 0.1 - 0.2).collect();
+            k.set_params(&p);
+            assert_eq!(k.params(), p, "{fam}");
+            assert_eq!(k.family(), fam);
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Proposition 3.1: asymptotic break-even missing ratios, plus the
+//! analytic FLOP/byte cost models used by the Fig-2/Fig-3 analyses.
+//!
+//! With missing ratio gamma = 1 - n/(p q):
+//!   time break-even  gamma*_time = 1 - sqrt(1/p + 1/q)
+//!   memory break-even gamma*_mem = 1 - sqrt(1/p^2 + 1/q^2)
+//! Below the break-even (fewer missing values) latent Kronecker wins;
+//! above it, the dense representation of the n x n observed matrix is
+//! asymptotically cheaper.
+
+/// gamma*_time = 1 - sqrt(1/p + 1/q).
+pub fn gamma_time(p: usize, q: usize) -> f64 {
+    1.0 - (1.0 / p as f64 + 1.0 / q as f64).sqrt()
+}
+
+/// gamma*_mem = 1 - sqrt(1/p^2 + 1/q^2).
+pub fn gamma_mem(p: usize, q: usize) -> f64 {
+    let (p, q) = (p as f64, q as f64);
+    1.0 - (1.0 / (p * p) + 1.0 / (q * q)).sqrt()
+}
+
+/// Observed count n for a missing ratio gamma on a p x q grid.
+pub fn observed_count(p: usize, q: usize, gamma: f64) -> usize {
+    (((1.0 - gamma) * (p * q) as f64).round() as usize).clamp(1, p * q)
+}
+
+/// FLOPs of one dense MVM on the n x n observed kernel matrix.
+pub fn dense_mvm_flops(n: usize) -> f64 {
+    2.0 * (n as f64) * (n as f64)
+}
+
+/// FLOPs of one latent-Kronecker MVM on the p x q grid.
+pub fn kron_mvm_flops(p: usize, q: usize) -> f64 {
+    2.0 * ((p * p * q) as f64 + (p * q * q) as f64)
+}
+
+/// Kernel-evaluation counts (the Fig-2 "kernel time" axis).
+pub fn dense_kernel_evals(n: usize) -> f64 {
+    (n as f64) * (n as f64)
+}
+
+pub fn kron_kernel_evals(p: usize, q: usize) -> f64 {
+    (p * p) as f64 + (q * q) as f64
+}
+
+/// Predicted speedup of latent-Kron MVM over dense MVM at ratio gamma.
+pub fn predicted_mvm_speedup(p: usize, q: usize, gamma: f64) -> f64 {
+    let n = observed_count(p, q, gamma);
+    dense_mvm_flops(n) / kron_mvm_flops(p, q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::prop_check;
+
+    #[test]
+    fn matches_paper_algebra() {
+        // Appendix A: (1-gamma)^2 = 1/p + 1/q at the time break-even.
+        prop_check("prop31-time", 67, 50, |g| {
+            let (p, q) = (g.size(2, 5000), g.size(2, 5000));
+            let gamma = gamma_time(p, q);
+            let lhs = (1.0 - gamma) * (1.0 - gamma);
+            let rhs = 1.0 / p as f64 + 1.0 / q as f64;
+            if (lhs - rhs).abs() > 1e-12 {
+                return Err(format!("{lhs} != {rhs}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn breakeven_flops_cross_at_gamma_star() {
+        // At gamma*_time, dense and kron MVM FLOPs must be (nearly) equal,
+        // below it kron is cheaper, above it dense is cheaper.
+        for &(p, q) in &[(5000, 7), (2000, 52), (384, 96), (100, 100)] {
+            let gstar = gamma_time(p, q);
+            if gstar <= 0.0 {
+                continue;
+            }
+            let at = predicted_mvm_speedup(p, q, gstar);
+            assert!((at - 1.0).abs() < 0.05, "p={p} q={q}: speedup at g*={at}");
+            assert!(predicted_mvm_speedup(p, q, (gstar - 0.2).max(0.0)) > 1.0);
+            assert!(predicted_mvm_speedup(p, q, (gstar + 0.2).min(0.99)) < 1.0);
+        }
+    }
+
+    #[test]
+    fn mem_breakeven_higher_than_time() {
+        // sqrt(1/p^2+1/q^2) <= sqrt(1/p+1/q) for p,q >= 1, so the memory
+        // break-even tolerates more missing data than the time one.
+        prop_check("prop31-order", 71, 50, |g| {
+            let (p, q) = (g.size(2, 3000), g.size(2, 3000));
+            if gamma_mem(p, q) < gamma_time(p, q) - 1e-12 {
+                return Err("mem breakeven below time".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn paper_scale_values() {
+        // SARCOS scale (p=5000, q=7): time break-even ~ 62%.
+        assert!((gamma_time(5000, 7) - 0.6216).abs() < 0.001);
+        // memory break-even essentially 1 - 1/q for q << p
+        assert!((gamma_mem(5000, 7) - (1.0 - (1.0f64 / 25e6 + 1.0 / 49.0).sqrt())).abs() < 1e-9);
+    }
+
+    #[test]
+    fn observed_count_bounds() {
+        assert_eq!(observed_count(10, 10, 0.0), 100);
+        assert_eq!(observed_count(10, 10, 1.0), 1);
+        assert_eq!(observed_count(10, 10, 0.25), 75);
+    }
+}

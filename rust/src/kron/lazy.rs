@@ -1,0 +1,97 @@
+//! Lazy (on-demand) kernel evaluation MVM for the dense baseline.
+//!
+//! When the n x n kernel matrix does not fit in memory, iterative
+//! methods must rematerialize kernel values during every MVM — this is
+//! the regime Figure 2 highlights where "kernel evaluation time
+//! dominates matrix multiplication time". This operator evaluates Gram
+//! blocks on the fly with O(block) storage, trading FLOPs for memory.
+
+use crate::linalg::{Matrix, Scalar};
+
+/// Row-block lazily evaluated symmetric operator: entries come from an
+/// entry oracle `f(i, j)`; only `block_rows x n` values are live at once.
+pub struct LazyGramOp<F> {
+    pub n: usize,
+    pub block_rows: usize,
+    pub entry: F,
+    pub sigma2: f64,
+}
+
+impl<F: Fn(usize, usize) -> f64> LazyGramOp<F> {
+    pub fn new(n: usize, block_rows: usize, entry: F, sigma2: f64) -> Self {
+        LazyGramOp { n, block_rows: block_rows.max(1), entry, sigma2 }
+    }
+
+    /// (K + sigma2 I) V^T for batched RHS rows of `v`, materializing only
+    /// one row block of K at a time. Also returns the number of kernel
+    /// evaluations performed (the Fig-2 bookkeeping).
+    pub fn apply_batch<T: Scalar>(&self, v: &Matrix<T>) -> (Matrix<T>, u64) {
+        assert_eq!(v.cols, self.n);
+        let mut out = Matrix::<T>::zeros(v.rows, self.n);
+        let mut evals = 0u64;
+        let mut block = vec![0.0f64; self.block_rows * self.n];
+        for i0 in (0..self.n).step_by(self.block_rows) {
+            let i1 = (i0 + self.block_rows).min(self.n);
+            // materialize rows [i0, i1)
+            for i in i0..i1 {
+                for j in 0..self.n {
+                    block[(i - i0) * self.n + j] = (self.entry)(i, j);
+                }
+            }
+            evals += ((i1 - i0) * self.n) as u64;
+            for b in 0..v.rows {
+                let vrow = v.row(b);
+                for i in i0..i1 {
+                    let krow = &block[(i - i0) * self.n..(i - i0 + 1) * self.n];
+                    let mut acc = 0.0f64;
+                    for (kij, vj) in krow.iter().zip(vrow) {
+                        acc += *kij * vj.to_f64();
+                    }
+                    out[(b, i)] = T::from_f64(acc + self.sigma2 * vrow[i].to_f64());
+                }
+            }
+        }
+        (out, evals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::{assert_close, prop_check};
+
+    #[test]
+    fn prop_lazy_matches_materialized() {
+        prop_check("lazy-vs-dense", 73, 15, |g| {
+            let n = g.size(1, 30);
+            let a = g.spd(n);
+            let a2 = a.clone();
+            let op = LazyGramOp::new(n, g.size(1, 7), move |i, j| a2[i * n + j], 0.25);
+            let v = Matrix::from_vec(2, n, g.vec_normal(2 * n));
+            let (got, evals) = op.apply_batch(&v);
+            let am = Matrix::from_vec(n, n, a);
+            let mut want = Matrix::zeros(2, n);
+            for b in 0..2 {
+                let mut r = am.matvec(v.row(b));
+                for (ri, vi) in r.iter_mut().zip(v.row(b)) {
+                    *ri += 0.25 * vi;
+                }
+                want.row_mut(b).copy_from_slice(&r);
+            }
+            if evals != (n * n) as u64 {
+                return Err(format!("evals {evals} != n^2"));
+            }
+            assert_close(&got.data, &want.data, 1e-9)
+        });
+    }
+
+    #[test]
+    fn eval_count_is_per_mvm() {
+        let n = 16;
+        let op = LazyGramOp::new(n, 4, |i, j| if i == j { 2.0 } else { 0.0 }, 0.0);
+        let v = Matrix::<f64>::from_vec(1, n, vec![1.0; n]);
+        let (out, evals) = op.apply_batch(&v);
+        assert_eq!(evals, 256);
+        assert!(out.data.iter().all(|&x| (x - 2.0).abs() < 1e-12));
+    }
+}

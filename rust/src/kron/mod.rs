@@ -1,0 +1,369 @@
+//! Latent Kronecker structure — the paper's core contribution (Sec. 3).
+//!
+//! A grid vector v of length p*q uses the row-major layout
+//! `v[j*q + k] = value at (s_j, t_k)` (shared with the AOT artifacts),
+//! under which `(K_SS (x) K_TT) v = vec(K_SS @ unvec(v) @ K_TT^T)`.
+//! The projection P of the paper is a {0,1} mask multiply; the masked
+//! system operator is `M (K_SS (x) K_TT) M + sigma2 I`, which restricted
+//! to the observed subspace equals `P K P^T + sigma2 I` exactly.
+
+pub mod breakeven;
+pub mod lazy;
+pub mod multi;
+pub mod toeplitz;
+
+use crate::linalg::gemm::{matmul_acc, matmul_nt};
+use crate::linalg::{Matrix, Scalar};
+
+/// Kronecker product operator K_SS (x) K_TT held in factored form.
+#[derive(Clone, Debug)]
+pub struct KronOp<T: Scalar = f64> {
+    pub kss: Matrix<T>,
+    pub ktt: Matrix<T>,
+}
+
+impl<T: Scalar> KronOp<T> {
+    pub fn new(kss: Matrix<T>, ktt: Matrix<T>) -> Self {
+        assert_eq!(kss.rows, kss.cols);
+        assert_eq!(ktt.rows, ktt.cols);
+        KronOp { kss, ktt }
+    }
+
+    pub fn p(&self) -> usize {
+        self.kss.rows
+    }
+
+    pub fn q(&self) -> usize {
+        self.ktt.rows
+    }
+
+    pub fn dim(&self) -> usize {
+        self.p() * self.q()
+    }
+
+    /// Apply to a batch of grid vectors (rows of `v`, each length p*q):
+    /// out[b] = vec(K_SS @ unvec(v[b]) @ K_TT^T).
+    /// Cost O(b (p^2 q + p q^2)) — the headline complexity reduction.
+    ///
+    /// Perf note: a whole-batch two-GEMM rewrite (the Pallas artifact's
+    /// schedule) was tried and reverted — on this scalar backend the
+    /// block-transposes cost more than the GEMM batching saves (20.1ms
+    /// vs 8.3ms at p=512, q=96; see EXPERIMENTS.md §Perf). The per-row
+    /// form keeps both halves on blocked kernels with zero reshuffling.
+    pub fn apply_batch(&self, v: &Matrix<T>) -> Matrix<T> {
+        let (p, q) = (self.p(), self.q());
+        assert_eq!(v.cols, p * q, "grid vector length");
+        let mut out = Matrix::zeros(v.rows, p * q);
+        for b in 0..v.rows {
+            let vb = Matrix { rows: p, cols: q, data: v.row(b).to_vec() };
+            // T1 = V @ K_TT^T  (p x q), via dot-product form
+            let t1 = matmul_nt(&vb, &self.ktt);
+            // out_b = K_SS @ T1 (p x q)
+            let mut ob = Matrix { rows: p, cols: q, data: out.row(b).to_vec() };
+            matmul_acc(&self.kss, &t1, &mut ob);
+            out.row_mut(b).copy_from_slice(&ob.data);
+        }
+        out
+    }
+
+    /// Materialize the full Kronecker product (tests / tiny sizes only).
+    pub fn dense(&self) -> Matrix<T> {
+        let (p, q) = (self.p(), self.q());
+        Matrix::from_fn(p * q, p * q, |a, b| {
+            self.kss[(a / q, b / q)] * self.ktt[(a % q, b % q)]
+        })
+    }
+}
+
+/// The LKGP system operator `M (K_SS (x) K_TT) M + D` with the
+/// projection represented lazily by a mask (paper Fig. 1 / Sec. 3).
+/// D is `sigma2 I` by default; `with_noise_vec` / `with_task_noise`
+/// generalize to heteroskedastic noise (per-cell / per-task variances —
+/// the paper's Sec. 5 future-work item).
+#[derive(Clone, Debug)]
+pub struct MaskedKronSystem<T: Scalar = f64> {
+    pub op: KronOp<T>,
+    pub mask: Vec<T>,
+    pub sigma2: T,
+    /// optional per-cell noise variances (overrides sigma2 where set)
+    pub noise: Option<Vec<T>>,
+}
+
+impl<T: Scalar> MaskedKronSystem<T> {
+    pub fn new(op: KronOp<T>, mask: Vec<T>, sigma2: T) -> Self {
+        assert_eq!(mask.len(), op.dim());
+        MaskedKronSystem { op, mask, sigma2, noise: None }
+    }
+
+    /// Heteroskedastic variant: per-grid-cell noise variances.
+    pub fn with_noise_vec(mut self, noise: Vec<T>) -> Self {
+        assert_eq!(noise.len(), self.op.dim());
+        self.noise = Some(noise);
+        self
+    }
+
+    /// Heteroskedastic variant keyed by task: noise[k] applies to every
+    /// cell (s_j, t_k) — e.g. one variance per SARCOS torque channel.
+    pub fn with_task_noise(self, task_noise: &[T]) -> Self {
+        let (p, q) = (self.op.p(), self.op.q());
+        assert_eq!(task_noise.len(), q);
+        let mut noise = Vec::with_capacity(p * q);
+        for _ in 0..p {
+            noise.extend_from_slice(task_noise);
+        }
+        self.with_noise_vec(noise)
+    }
+
+    #[inline]
+    fn noise_at(&self, idx: usize) -> T {
+        match &self.noise {
+            Some(n) => n[idx],
+            None => self.sigma2,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.op.dim()
+    }
+
+    pub fn apply_batch(&self, v: &Matrix<T>) -> Matrix<T> {
+        let mut masked = v.clone();
+        for i in 0..masked.rows {
+            for (x, m) in masked.row_mut(i).iter_mut().zip(&self.mask) {
+                *x *= *m;
+            }
+        }
+        let mut kv = self.op.apply_batch(&masked);
+        for i in 0..kv.rows {
+            let row = kv.row_mut(i);
+            let vrow = v.row(i);
+            for (idx, ((x, m), v0)) in
+                row.iter_mut().zip(&self.mask).zip(vrow).enumerate()
+            {
+                *x = *x * *m + self.noise_at(idx) * *v0;
+            }
+        }
+        kv
+    }
+
+    /// Diagonal of the system matrix (for Jacobi preconditioning):
+    /// diag = mask * diag(K_SS) (x) diag(K_TT) + sigma2.
+    pub fn diag(&self) -> Vec<T> {
+        let (p, q) = (self.op.p(), self.op.q());
+        let mut d = Vec::with_capacity(p * q);
+        for j in 0..p {
+            let ds = self.op.kss[(j, j)];
+            for k in 0..q {
+                let idx = j * q + k;
+                d.push(self.mask[idx] * ds * self.op.ktt[(k, k)] + self.noise_at(idx));
+            }
+        }
+        d
+    }
+
+    /// One column of the *observed-space padded* kernel matrix
+    /// M (K (x) K) M (no noise), for lazy pivoted Cholesky.
+    pub fn kernel_col(&self, idx: usize) -> Vec<T> {
+        let (p, q) = (self.op.p(), self.op.q());
+        let (j0, k0) = (idx / q, idx % q);
+        let mut col = Vec::with_capacity(p * q);
+        let mcol = self.mask[idx];
+        for j in 0..p {
+            let ks = self.op.kss[(j, j0)];
+            for k in 0..q {
+                let v = ks * self.op.ktt[(k, k0)];
+                col.push(v * self.mask[j * q + k] * mcol);
+            }
+        }
+        col
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::{assert_close, prop_check};
+
+    #[test]
+    fn prop_kron_apply_matches_dense() {
+        prop_check("kron-apply-vs-dense", 53, 20, |g| {
+            let (p, q, b) = (g.size(1, 10), g.size(1, 10), g.size(1, 3));
+            let op = KronOp::new(
+                Matrix::from_vec(p, p, g.spd(p)),
+                Matrix::from_vec(q, q, g.spd(q)),
+            );
+            let v = Matrix::from_vec(b, p * q, g.vec_normal(b * p * q));
+            let got = op.apply_batch(&v);
+            let dense = op.dense();
+            let mut want = Matrix::zeros(b, p * q);
+            for bi in 0..b {
+                let r = dense.matvec(v.row(bi));
+                want.row_mut(bi).copy_from_slice(&r);
+            }
+            assert_close(&got.data, &want.data, 1e-8)
+        });
+    }
+
+    #[test]
+    fn prop_masked_system_matches_dense_projection() {
+        prop_check("masked-kron-vs-dense", 59, 20, |g| {
+            let (p, q) = (g.size(1, 8), g.size(1, 8));
+            let op = KronOp::new(
+                Matrix::from_vec(p, p, g.spd(p)),
+                Matrix::from_vec(q, q, g.spd(q)),
+            );
+            let missing = g.f64_in(0.0, 0.8);
+            let mask = g.mask(p * q, missing);
+            let sigma2 = g.f64_in(0.01, 1.0);
+            let sys = MaskedKronSystem::new(op.clone(), mask.clone(), sigma2);
+            let v = Matrix::from_vec(2, p * q, g.vec_normal(2 * p * q));
+            let got = sys.apply_batch(&v);
+            // dense: diag(m) K diag(m) + sigma2 I
+            let dense = op.dense();
+            let n = p * q;
+            let mut want = Matrix::zeros(2, n);
+            for bi in 0..2 {
+                for i in 0..n {
+                    let mut acc = 0.0;
+                    for j in 0..n {
+                        acc += mask[i] * dense[(i, j)] * mask[j] * v[(bi, j)];
+                    }
+                    want[(bi, i)] = acc + sigma2 * v[(bi, i)];
+                }
+            }
+            assert_close(&got.data, &want.data, 1e-8)
+        });
+    }
+
+    #[test]
+    fn prop_diag_and_col_consistent() {
+        prop_check("kron-diag-col", 61, 15, |g| {
+            let (p, q) = (g.size(1, 7), g.size(1, 7));
+            let sys = MaskedKronSystem::new(
+                KronOp::new(
+                    Matrix::from_vec(p, p, g.spd(p)),
+                    Matrix::from_vec(q, q, g.spd(q)),
+                ),
+                g.mask(p * q, 0.3),
+                0.17,
+            );
+            let d = sys.diag();
+            for idx in 0..p * q {
+                let col = sys.kernel_col(idx);
+                // diag = kernel diag + sigma2
+                let want = col[idx] + 0.17;
+                if (d[idx] - want).abs() > 1e-9 {
+                    return Err(format!("idx {idx}: diag {} vs col {}", d[idx], want));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn masked_apply_keeps_observed_subspace() {
+        let mut g = crate::util::testing::Gen { rng: crate::util::rng::Rng::new(5) };
+        let (p, q) = (6, 5);
+        let op = KronOp::new(
+            Matrix::from_vec(p, p, g.spd(p)),
+            Matrix::from_vec(q, q, g.spd(q)),
+        );
+        let mask = g.mask(p * q, 0.4);
+        let sys = MaskedKronSystem::new(op, mask.clone(), 0.1);
+        let mut v = Matrix::from_vec(1, p * q, g.vec_normal(p * q));
+        for (x, m) in v.row_mut(0).iter_mut().zip(&mask) {
+            *x *= *m;
+        }
+        let out = sys.apply_batch(&v);
+        for (i, m) in mask.iter().enumerate() {
+            if *m == 0.0 {
+                assert!(out[(0, i)].abs() < 1e-12, "leaked into missing coord {i}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod hetero_tests {
+    use super::*;
+    use crate::util::testing::{assert_close, prop_check};
+
+    #[test]
+    fn prop_per_cell_noise_matches_dense() {
+        prop_check("hetero-noise", 241, 12, |g| {
+            let (p, q) = (g.size(1, 6), g.size(1, 6));
+            let op = KronOp::new(
+                Matrix::from_vec(p, p, g.spd(p)),
+                Matrix::from_vec(q, q, g.spd(q)),
+            );
+            let mask = g.mask(p * q, 0.3);
+            let noise: Vec<f64> = (0..p * q).map(|_| g.f64_in(0.05, 2.0)).collect();
+            let sys = MaskedKronSystem::new(op.clone(), mask.clone(), 0.0)
+                .with_noise_vec(noise.clone());
+            let v = Matrix::from_vec(1, p * q, g.vec_normal(p * q));
+            let got = sys.apply_batch(&v);
+            let dense = op.dense();
+            let n = p * q;
+            let mut want = vec![0.0; n];
+            for i in 0..n {
+                let mut acc = 0.0;
+                for j in 0..n {
+                    acc += mask[i] * dense[(i, j)] * mask[j] * v[(0, j)];
+                }
+                want[i] = acc + noise[i] * v[(0, i)];
+            }
+            assert_close(got.row(0), &want, 1e-8)?;
+            // diag consistency
+            let d = sys.diag();
+            for i in 0..n {
+                let col = sys.kernel_col(i);
+                if (d[i] - (col[i] + noise[i])).abs() > 1e-9 {
+                    return Err(format!("diag mismatch at {i}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn task_noise_broadcasts_over_rows() {
+        let mut g = crate::util::testing::Gen { rng: crate::util::rng::Rng::new(6) };
+        let (p, q) = (4, 3);
+        let sys = MaskedKronSystem::new(
+            KronOp::new(Matrix::from_vec(p, p, g.spd(p)), Matrix::from_vec(q, q, g.spd(q))),
+            vec![1.0; p * q],
+            0.0,
+        )
+        .with_task_noise(&[0.1, 0.2, 0.3]);
+        let noise = sys.noise.as_ref().unwrap();
+        for j in 0..p {
+            assert_eq!(noise[j * q], 0.1);
+            assert_eq!(noise[j * q + 1], 0.2);
+            assert_eq!(noise[j * q + 2], 0.3);
+        }
+        // heteroskedastic CG still solves the system
+        let rhs = Matrix::from_vec(1, p * q, g.vec_normal(p * q));
+        use crate::solvers::cg::{solve_cg, BatchedOp, CgOptions};
+        use crate::solvers::precond::Preconditioner;
+        struct Op<'a>(&'a MaskedKronSystem<f64>);
+        impl<'a> BatchedOp<f64> for Op<'a> {
+            fn dim(&self) -> usize {
+                self.0.dim()
+            }
+            fn apply_batch(&mut self, v: &Matrix<f64>) -> Matrix<f64> {
+                self.0.apply_batch(v)
+            }
+        }
+        let (x, stats) = solve_cg(
+            &mut Op(&sys),
+            &rhs,
+            &Preconditioner::jacobi(&sys.diag()),
+            &CgOptions { max_iters: 500, tol: 1e-8 },
+        );
+        assert!(stats.converged);
+        let back = sys.apply_batch(&x);
+        for (a, b) in back.row(0).iter().zip(rhs.row(0)) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}

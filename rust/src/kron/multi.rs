@@ -1,0 +1,207 @@
+//! Multi-factor latent Kronecker structure — the paper's "multi-product
+//! generalizations" future-work item (Sec. 5).
+//!
+//! Generalizes the two-factor algebra to `K_1 (x) K_2 (x) ... (x) K_d`
+//! with missing values, via sequential mode products: for a grid tensor
+//! v of shape (n_1, ..., n_d),
+//!
+//!   (K_1 (x) ... (x) K_d) vec(V) = vec(V x_1 K_1 x_2 K_2 ... x_d K_d)
+//!
+//! where `x_j` is the mode-j product. Cost O(N * sum_j n_j) for
+//! N = prod n_j — the d-factor version of O(p^2 q + p q^2). The masked
+//! system operator (projection + noise) works exactly as in the
+//! two-factor case.
+
+use crate::linalg::{Matrix, Scalar};
+
+/// Kronecker product of d square factors, held in factored form.
+#[derive(Clone, Debug)]
+pub struct MultiKronOp<T: Scalar = f64> {
+    pub factors: Vec<Matrix<T>>,
+}
+
+impl<T: Scalar> MultiKronOp<T> {
+    pub fn new(factors: Vec<Matrix<T>>) -> Self {
+        assert!(!factors.is_empty());
+        for f in &factors {
+            assert_eq!(f.rows, f.cols, "factors must be square");
+        }
+        MultiKronOp { factors }
+    }
+
+    pub fn dims(&self) -> Vec<usize> {
+        self.factors.iter().map(|f| f.rows).collect()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.factors.iter().map(|f| f.rows).product()
+    }
+
+    /// Apply to one grid vector (row-major layout: the last factor's
+    /// index varies fastest, matching the 2-factor `v[j*q + k]`).
+    pub fn apply(&self, v: &[T]) -> Vec<T> {
+        let n = self.dim();
+        assert_eq!(v.len(), n);
+        let mut cur = v.to_vec();
+        // mode-j product for each factor in turn. Maintain the value as
+        // a (left, n_j, right) tensor, contracting n_j with K_j.
+        let dims = self.dims();
+        for (j, k) in self.factors.iter().enumerate() {
+            let nj = dims[j];
+            let left: usize = dims[..j].iter().product();
+            let right: usize = dims[j + 1..].iter().product();
+            let mut next = vec![T::ZERO; n];
+            // cur[(l, a, r)] at index (l*nj + a)*right + r
+            for l in 0..left {
+                for a_out in 0..nj {
+                    let krow = k.row(a_out);
+                    let out_base = (l * nj + a_out) * right;
+                    for (a_in, &kv) in krow.iter().enumerate() {
+                        if kv == T::ZERO {
+                            continue;
+                        }
+                        let in_base = (l * nj + a_in) * right;
+                        let (src, dst) =
+                            (&cur[in_base..in_base + right], &mut next[out_base..out_base + right]);
+                        for (d, s) in dst.iter_mut().zip(src) {
+                            *d += kv * *s;
+                        }
+                    }
+                }
+            }
+            cur = next;
+        }
+        cur
+    }
+
+    /// Materialize the full Kronecker product (tests / tiny dims only).
+    pub fn dense(&self) -> Matrix<T> {
+        let n = self.dim();
+        let dims = self.dims();
+        let index = |mut flat: usize| -> Vec<usize> {
+            let mut idx = vec![0; dims.len()];
+            for j in (0..dims.len()).rev() {
+                idx[j] = flat % dims[j];
+                flat /= dims[j];
+            }
+            idx
+        };
+        Matrix::from_fn(n, n, |r, c| {
+            let (ri, ci) = (index(r), index(c));
+            let mut prod = T::ONE;
+            for (j, f) in self.factors.iter().enumerate() {
+                prod *= f[(ri[j], ci[j])];
+            }
+            prod
+        })
+    }
+}
+
+/// Masked multi-factor system: M (K_1 (x) ... (x) K_d) M + sigma2 I.
+pub struct MultiMaskedSystem<T: Scalar = f64> {
+    pub op: MultiKronOp<T>,
+    pub mask: Vec<T>,
+    pub sigma2: T,
+}
+
+impl<T: Scalar> MultiMaskedSystem<T> {
+    pub fn new(op: MultiKronOp<T>, mask: Vec<T>, sigma2: T) -> Self {
+        assert_eq!(mask.len(), op.dim());
+        MultiMaskedSystem { op, mask, sigma2 }
+    }
+
+    pub fn apply(&self, v: &[T]) -> Vec<T> {
+        let masked: Vec<T> = v.iter().zip(&self.mask).map(|(x, m)| *x * *m).collect();
+        let mut kv = self.op.apply(&masked);
+        for ((o, m), v0) in kv.iter_mut().zip(&self.mask).zip(v) {
+            *o = *o * *m + self.sigma2 * *v0;
+        }
+        kv
+    }
+}
+
+/// FLOPs of one d-factor Kron MVM (generalizes kron_mvm_flops).
+pub fn multi_kron_flops(dims: &[usize]) -> f64 {
+    let n: f64 = dims.iter().map(|&d| d as f64).product();
+    2.0 * n * dims.iter().map(|&d| d as f64).sum::<f64>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kron::KronOp;
+    use crate::util::testing::{assert_close, prop_check};
+
+    #[test]
+    fn prop_matches_dense_three_factors() {
+        prop_check("multikron-vs-dense", 201, 15, |g| {
+            let dims = [g.size(1, 5), g.size(1, 5), g.size(1, 5)];
+            let factors: Vec<Matrix<f64>> =
+                dims.iter().map(|&d| Matrix::from_vec(d, d, g.spd(d))).collect();
+            let op = MultiKronOp::new(factors);
+            let v = g.vec_normal(op.dim());
+            let got = op.apply(&v);
+            let want = op.dense().matvec(&v);
+            assert_close(&got, &want, 1e-8)
+        });
+    }
+
+    #[test]
+    fn two_factor_case_matches_kronop() {
+        prop_check("multikron-2f", 203, 15, |g| {
+            let (p, q) = (g.size(1, 8), g.size(1, 8));
+            let a = Matrix::from_vec(p, p, g.spd(p));
+            let b = Matrix::from_vec(q, q, g.spd(q));
+            let multi = MultiKronOp::new(vec![a.clone(), b.clone()]);
+            let two = KronOp::new(a, b);
+            let v = Matrix::from_vec(1, p * q, g.vec_normal(p * q));
+            let got = multi.apply(v.row(0));
+            let want = two.apply_batch(&v);
+            assert_close(&got, want.row(0), 1e-9)
+        });
+    }
+
+    #[test]
+    fn prop_masked_system_matches_dense() {
+        prop_check("multikron-masked", 207, 10, |g| {
+            let dims = [g.size(1, 4), g.size(1, 4), g.size(1, 4)];
+            let factors: Vec<Matrix<f64>> =
+                dims.iter().map(|&d| Matrix::from_vec(d, d, g.spd(d))).collect();
+            let op = MultiKronOp::new(factors);
+            let n = op.dim();
+            let mask = g.mask(n, 0.4);
+            let sys = MultiMaskedSystem::new(op.clone(), mask.clone(), 0.3);
+            let v = g.vec_normal(n);
+            let got = sys.apply(&v);
+            let dense = op.dense();
+            let mut want = vec![0.0; n];
+            for i in 0..n {
+                let mut acc = 0.0;
+                for j in 0..n {
+                    acc += mask[i] * dense[(i, j)] * mask[j] * v[j];
+                }
+                want[i] = acc + 0.3 * v[i];
+            }
+            assert_close(&got, &want, 1e-8)
+        });
+    }
+
+    #[test]
+    fn single_factor_is_plain_matvec() {
+        let mut g = crate::util::testing::Gen { rng: crate::util::rng::Rng::new(1) };
+        let a = Matrix::from_vec(6, 6, g.spd(6));
+        let op = MultiKronOp::new(vec![a.clone()]);
+        let v = g.vec_normal(6);
+        assert_close(&op.apply(&v), &a.matvec(&v), 1e-10).unwrap();
+    }
+
+    #[test]
+    fn flops_model_generalizes() {
+        // d=2 must agree with the paper's O(p^2 q + p q^2)
+        assert_eq!(
+            multi_kron_flops(&[30, 7]),
+            crate::kron::breakeven::kron_mvm_flops(30, 7)
+        );
+        assert!(multi_kron_flops(&[8, 8, 8]) < 2.0 * 512.0 * 512.0);
+    }
+}

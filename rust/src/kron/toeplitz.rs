@@ -1,0 +1,242 @@
+//! Toeplitz acceleration for the temporal factor (paper Sec. 2, last
+//! paragraph): if the time grid is uniform and k_T stationary, K_TT is
+//! Toeplitz and its MVM runs in O(q log q) via circulant embedding +
+//! FFT, making LKGP quasi-linear in the number of time steps.
+//!
+//! Includes a self-contained radix-2 complex FFT (no external crates in
+//! the offline set) and a `ToeplitzOp` that embeds the q x q Toeplitz
+//! matrix into a 2m-point circulant (m = next power of two >= q).
+
+use crate::linalg::Matrix;
+
+/// In-place iterative radix-2 Cooley–Tukey FFT on interleaved
+/// (re, im) pairs. `inverse` applies the conjugate transform WITHOUT
+/// the 1/n scaling (caller scales).
+pub fn fft_inplace(re: &mut [f64], im: &mut [f64], inverse: bool) {
+    let n = re.len();
+    assert_eq!(im.len(), n);
+    assert!(n.is_power_of_two(), "fft length must be a power of two");
+    // bit reversal
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let (wr, wi) = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let (mut cr, mut ci) = (1.0f64, 0.0f64);
+            for k in 0..len / 2 {
+                let (ur, ui) = (re[i + k], im[i + k]);
+                let (vr, vi) = (
+                    re[i + k + len / 2] * cr - im[i + k + len / 2] * ci,
+                    re[i + k + len / 2] * ci + im[i + k + len / 2] * cr,
+                );
+                re[i + k] = ur + vr;
+                im[i + k] = ui + vi;
+                re[i + k + len / 2] = ur - vr;
+                im[i + k + len / 2] = ui - vi;
+                let ncr = cr * wr - ci * wi;
+                ci = cr * wi + ci * wr;
+                cr = ncr;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Symmetric Toeplitz operator defined by its first column, applied via
+/// circulant embedding: O(q log q) per MVM after an O(q log q) setup.
+pub struct ToeplitzOp {
+    pub q: usize,
+    m: usize,
+    /// FFT of the embedded circulant's first column
+    eig_re: Vec<f64>,
+    eig_im: Vec<f64>,
+}
+
+impl ToeplitzOp {
+    /// `col` is the first column [k(0), k(1), ..., k(q-1)] of the
+    /// symmetric Toeplitz matrix.
+    pub fn new(col: &[f64]) -> Self {
+        let q = col.len();
+        let m = (2 * q).next_power_of_two();
+        // circulant first column: [c0, c1, .., c_{q-1}, 0.., c_{q-1}, .., c1]
+        let mut cre = vec![0.0; m];
+        let mut cim = vec![0.0; m];
+        cre[..q].copy_from_slice(col);
+        for lag in 1..q {
+            cre[m - lag] = col[lag];
+        }
+        fft_inplace(&mut cre, &mut cim, false);
+        ToeplitzOp { q, m, eig_re: cre, eig_im: cim }
+    }
+
+    /// Build from a stationary kernel on a uniform grid with spacing dt.
+    pub fn from_kernel(q: usize, dt: f64, k: impl Fn(f64) -> f64) -> Self {
+        let col: Vec<f64> = (0..q).map(|lag| k(lag as f64 * dt)).collect();
+        Self::new(&col)
+    }
+
+    /// y = T v in O(q log q).
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.q);
+        let mut re = vec![0.0; self.m];
+        let mut im = vec![0.0; self.m];
+        re[..self.q].copy_from_slice(v);
+        fft_inplace(&mut re, &mut im, false);
+        for i in 0..self.m {
+            let (ar, ai) = (re[i], im[i]);
+            re[i] = ar * self.eig_re[i] - ai * self.eig_im[i];
+            im[i] = ar * self.eig_im[i] + ai * self.eig_re[i];
+        }
+        fft_inplace(&mut re, &mut im, true);
+        let scale = 1.0 / self.m as f64;
+        re[..self.q].iter().map(|x| x * scale).collect()
+    }
+
+    /// Dense materialization (tests).
+    pub fn dense(&self, col: &[f64]) -> Matrix<f64> {
+        Matrix::from_fn(self.q, self.q, |i, j| col[i.abs_diff(j)])
+    }
+}
+
+/// Latent-Kronecker MVM with a Toeplitz time factor:
+/// out[b] = vec(K_SS @ unvec(v[b]) @ T^T) where T is Toeplitz-symmetric.
+/// Cost O(b (p^2 q + p q log q)) instead of O(b (p^2 q + p q^2)).
+pub struct KronToeplitzOp {
+    pub kss: Matrix<f64>,
+    pub ktt: ToeplitzOp,
+}
+
+impl KronToeplitzOp {
+    pub fn apply_batch(&self, v: &Matrix<f64>) -> Matrix<f64> {
+        let (p, q) = (self.kss.rows, self.ktt.q);
+        assert_eq!(v.cols, p * q);
+        let mut out = Matrix::zeros(v.rows, p * q);
+        for b in 0..v.rows {
+            // right half: each of the p rows through the FFT MVM
+            let mut t1 = Matrix::zeros(p, q);
+            for i in 0..p {
+                let row = &v.row(b)[i * q..(i + 1) * q];
+                t1.row_mut(i).copy_from_slice(&self.ktt.matvec(row));
+            }
+            // left half: K_SS @ T1 (blocked GEMM)
+            let mut ob = Matrix::zeros(p, q);
+            crate::linalg::gemm::matmul_acc(&self.kss, &t1, &mut ob);
+            out.row_mut(b).copy_from_slice(&ob.data);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::testing::{assert_close, prop_check, Gen};
+
+    #[test]
+    fn fft_roundtrip() {
+        prop_check("fft-roundtrip", 231, 15, |g| {
+            let n = 1 << g.size(1, 9);
+            let re0 = g.vec_normal(n);
+            let im0 = g.vec_normal(n);
+            let (mut re, mut im) = (re0.clone(), im0.clone());
+            fft_inplace(&mut re, &mut im, false);
+            fft_inplace(&mut re, &mut im, true);
+            let scale = 1.0 / n as f64;
+            for v in re.iter_mut().chain(im.iter_mut()) {
+                *v *= scale;
+            }
+            assert_close(&re, &re0, 1e-9)?;
+            assert_close(&im, &im0, 1e-9)
+        });
+    }
+
+    #[test]
+    fn fft_matches_dft_definition() {
+        let mut rng = Rng::new(4);
+        let n = 16;
+        let re0 = rng.normals(n);
+        let (mut re, mut im) = (re0.clone(), vec![0.0; n]);
+        fft_inplace(&mut re, &mut im, false);
+        for k in 0..n {
+            let (mut sr, mut si) = (0.0, 0.0);
+            for (t, x) in re0.iter().enumerate() {
+                let ang = -2.0 * std::f64::consts::PI * (k * t) as f64 / n as f64;
+                sr += x * ang.cos();
+                si += x * ang.sin();
+            }
+            assert!((re[k] - sr).abs() < 1e-9 && (im[k] - si).abs() < 1e-9, "bin {k}");
+        }
+    }
+
+    #[test]
+    fn prop_toeplitz_matvec_matches_dense() {
+        prop_check("toeplitz-vs-dense", 233, 15, |g| {
+            let q = g.size(1, 50);
+            // SE-like decaying first column keeps things well-scaled
+            let col: Vec<f64> =
+                (0..q).map(|lag| (-0.5 * (lag as f64 / 3.0).powi(2)).exp()).collect();
+            let op = ToeplitzOp::new(&col);
+            let v = g.vec_normal(q);
+            let got = op.matvec(&v);
+            let want = op.dense(&col).matvec(&v);
+            assert_close(&got, &want, 1e-9)
+        });
+    }
+
+    #[test]
+    fn kron_toeplitz_matches_kronop() {
+        let mut g = Gen { rng: Rng::new(9) };
+        let (p, q) = (6, 12);
+        let kernel = crate::kernels::RbfArd::new(2);
+        let s = Matrix::from_vec(p, 2, g.vec_normal(p * 2));
+        let kss = kernel.gram(&s, &s);
+        let col: Vec<f64> =
+            (0..q).map(|lag| (-0.5 * (lag as f64 / 2.0).powi(2)).exp()).collect();
+        let ktt_dense = Matrix::from_fn(q, q, |i, j| col[i.abs_diff(j)]);
+        let fast = KronToeplitzOp { kss: kss.clone(), ktt: ToeplitzOp::new(&col) };
+        let slow = crate::kron::KronOp::new(kss, ktt_dense);
+        let v = Matrix::from_vec(2, p * q, g.vec_normal(2 * p * q));
+        let a = fast.apply_batch(&v);
+        let b = slow.apply_batch(&v);
+        assert_close(&a.data, &b.data, 1e-8).unwrap();
+    }
+
+    #[test]
+    fn quasi_linear_scaling() {
+        // FLOP count sanity: FFT path beats dense q^2 once q is large
+        let q = 1024;
+        let col: Vec<f64> = (0..q).map(|lag| (-(lag as f64) / 40.0).exp()).collect();
+        let op = ToeplitzOp::new(&col);
+        let mut rng = Rng::new(1);
+        let v = rng.normals(q);
+        let t0 = std::time::Instant::now();
+        for _ in 0..50 {
+            std::hint::black_box(op.matvec(&v));
+        }
+        let fast = t0.elapsed();
+        let dense = op.dense(&col);
+        let t0 = std::time::Instant::now();
+        for _ in 0..50 {
+            std::hint::black_box(dense.matvec(&v));
+        }
+        let slow = t0.elapsed();
+        assert!(fast < slow, "fft {fast:?} !< dense {slow:?}");
+    }
+}

@@ -1,0 +1,31 @@
+//! # LKGP — Latent Kronecker Gaussian Processes
+//!
+//! Production reproduction of *"Scalable Gaussian Processes with Latent
+//! Kronecker Structure"* (ICML 2025) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **Layer 1/2** (build time, `python/`): Pallas matmul/RBF kernels and
+//!   the JAX LKGP compute graph, AOT-lowered to HLO text artifacts.
+//! * **Layer 3** (this crate): the runtime coordinator — PJRT artifact
+//!   execution, batched preconditioned CG, hyperparameter training,
+//!   pathwise-conditioning prediction, datasets, baselines
+//!   (dense iterative exact GP, SVGP, VNNGP, CaGP), and the experiment
+//!   harness regenerating every table/figure of the paper.
+//!
+//! Python never runs on the request path: once `make artifacts` has
+//! produced `artifacts/*.hlo.txt`, the `lkgp` binary is self-contained.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod gp;
+pub mod kernels;
+pub mod kron;
+pub mod linalg;
+pub mod optim;
+pub mod runtime;
+pub mod solvers;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

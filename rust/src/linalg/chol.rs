@@ -1,0 +1,303 @@
+//! Cholesky factorization, triangular solves, and pivoted Cholesky.
+//!
+//! The pivoted (rank-revealing, greedily truncated) Cholesky implements
+//! the paper's CG preconditioner (Appendix C: "pivoted Cholesky
+//! preconditioner of rank 100") and also backs CaGP's low-rank actions.
+
+use super::matrix::{Matrix, Scalar};
+
+/// Lower-triangular Cholesky factor of an SPD matrix.
+pub struct Cholesky<T: Scalar> {
+    pub l: Matrix<T>,
+}
+
+/// Factor A = L L^T. Returns None if A is not positive definite
+/// (after exhausting a small relative jitter escalation).
+pub fn cholesky<T: Scalar>(a: &Matrix<T>) -> Option<Cholesky<T>> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mean_diag = a.trace().to_f64() / n.max(1) as f64;
+    let mut jitter = 0.0f64;
+    'attempt: for attempt in 0..6 {
+        if attempt > 0 {
+            jitter = if jitter == 0.0 { 1e-10 * mean_diag.max(1e-30) } else { jitter * 100.0 };
+        }
+        let mut l = a.clone();
+        for i in 0..n {
+            l[(i, i)] += T::from_f64(jitter);
+        }
+        for j in 0..n {
+            // update column j using columns < j
+            for k in 0..j {
+                let ljk = l[(j, k)];
+                if ljk == T::ZERO {
+                    continue;
+                }
+                for i in j..n {
+                    let v = l[(i, k)];
+                    l[(i, j)] -= v * ljk;
+                }
+            }
+            let d = l[(j, j)];
+            if d.to_f64() <= 0.0 || !d.to_f64().is_finite() {
+                continue 'attempt;
+            }
+            let inv = T::ONE / d.sqrt();
+            for i in j..n {
+                l[(i, j)] *= inv;
+            }
+        }
+        // zero the strict upper triangle
+        for i in 0..n {
+            for j in i + 1..n {
+                l[(i, j)] = T::ZERO;
+            }
+        }
+        return Some(Cholesky { l });
+    }
+    None
+}
+
+impl<T: Scalar> Cholesky<T> {
+    /// Solve A x = b via forward + backward substitution.
+    pub fn solve(&self, b: &[T]) -> Vec<T> {
+        let mut y = solve_lower(&self.l, b);
+        solve_lower_t_inplace(&self.l, &mut y);
+        y
+    }
+
+    /// Solve A X = B for matrix RHS.
+    pub fn solve_mat(&self, b: &Matrix<T>) -> Matrix<T> {
+        let mut out = Matrix::zeros(b.rows, b.cols);
+        for j in 0..b.cols {
+            let col: Vec<T> = (0..b.rows).map(|i| b[(i, j)]).collect();
+            let x = self.solve(&col);
+            for i in 0..b.rows {
+                out[(i, j)] = x[i];
+            }
+        }
+        out
+    }
+
+    /// log |A| = 2 sum log diag(L).
+    pub fn logdet(&self) -> f64 {
+        (0..self.l.rows).map(|i| 2.0 * self.l[(i, i)].to_f64().ln()).sum()
+    }
+
+    /// L @ v (e.g. correlated sampling).
+    pub fn l_apply(&self, v: &[T]) -> Vec<T> {
+        let n = self.l.rows;
+        let mut out = vec![T::ZERO; n];
+        for i in 0..n {
+            let row = &self.l.data[i * n..i * n + i + 1];
+            let mut acc = T::ZERO;
+            for (a, b) in row.iter().zip(v) {
+                acc += *a * *b;
+            }
+            out[i] = acc;
+        }
+        out
+    }
+}
+
+/// Solve L y = b (L lower-triangular).
+pub fn solve_lower<T: Scalar>(l: &Matrix<T>, b: &[T]) -> Vec<T> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut y = b.to_vec();
+    for i in 0..n {
+        let mut acc = y[i];
+        let row = &l.data[i * n..i * n + i];
+        for (a, yj) in row.iter().zip(&y[..i]) {
+            acc -= *a * *yj;
+        }
+        y[i] = acc / l[(i, i)];
+    }
+    y
+}
+
+/// Solve L^T x = b (L lower-triangular).
+pub fn solve_lower_t<T: Scalar>(l: &Matrix<T>, b: &[T]) -> Vec<T> {
+    let mut x = b.to_vec();
+    solve_lower_t_inplace(l, &mut x);
+    x
+}
+
+fn solve_lower_t_inplace<T: Scalar>(l: &Matrix<T>, x: &mut [T]) {
+    let n = l.rows;
+    assert_eq!(x.len(), n);
+    for i in (0..n).rev() {
+        let xi = x[i] / l[(i, i)];
+        x[i] = xi;
+        // subtract xi * L[i, :i] from x[:i]  (column i of L^T)
+        for j in 0..i {
+            x[j] -= l[(i, j)] * xi;
+        }
+    }
+}
+
+/// Greedy pivoted Cholesky: returns (L, pivots) with L of shape n x rank
+/// such that P A P^T ~= L L^T (in original index order: A ~= L L^T after
+/// row permutation is *already applied*, i.e. rows of L correspond to
+/// original indices). Stops at `rank` columns or when the largest
+/// remaining diagonal falls below `tol * max_diag`.
+pub fn pivoted_cholesky<T: Scalar>(a: &Matrix<T>, rank: usize, tol: f64) -> (Matrix<T>, Vec<usize>) {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let rank = rank.min(n);
+    let mut d: Vec<f64> = (0..n).map(|i| a[(i, i)].to_f64()).collect();
+    let max0 = d.iter().cloned().fold(0.0, f64::max).max(1e-300);
+    let mut l = Matrix::<T>::zeros(n, rank);
+    let mut pivots = Vec::with_capacity(rank);
+    let mut used = vec![false; n];
+    for k in 0..rank {
+        // pick the largest remaining diagonal
+        let (piv, &dmax) = d
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !used[*i])
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        if dmax < tol * max0 || dmax <= 0.0 {
+            let mut ltrim = Matrix::zeros(n, k);
+            for i in 0..n {
+                for j in 0..k {
+                    ltrim[(i, j)] = l[(i, j)];
+                }
+            }
+            return (ltrim, pivots);
+        }
+        used[piv] = true;
+        pivots.push(piv);
+        let s = dmax.sqrt();
+        l[(piv, k)] = T::from_f64(s);
+        for i in 0..n {
+            if used[i] && i != piv {
+                continue;
+            }
+            if i == piv {
+                continue;
+            }
+            // L[i,k] = (A[i,piv] - sum_j L[i,j] L[piv,j]) / s
+            let mut acc = a[(i, piv)].to_f64();
+            for j in 0..k {
+                acc -= l[(i, j)].to_f64() * l[(piv, j)].to_f64();
+            }
+            let v = acc / s;
+            l[(i, k)] = T::from_f64(v);
+            d[i] -= v * v;
+        }
+        d[piv] = 0.0;
+    }
+    (l, pivots)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::{assert_close, prop_check};
+
+    #[test]
+    fn prop_cholesky_recomposes() {
+        prop_check("chol-recompose", 23, 20, |g| {
+            let n = g.size(1, 25);
+            let a = Matrix::from_vec(n, n, g.spd(n));
+            let ch = cholesky(&a).ok_or("not spd")?;
+            let back = ch.l.matmul(&ch.l.transpose());
+            assert_close(&back.data, &a.data, 1e-8)
+        });
+    }
+
+    #[test]
+    fn prop_solve_inverts() {
+        prop_check("chol-solve", 29, 20, |g| {
+            let n = g.size(1, 25);
+            let a = Matrix::from_vec(n, n, g.spd(n));
+            let b = g.vec_normal(n);
+            let ch = cholesky(&a).ok_or("not spd")?;
+            let x = ch.solve(&b);
+            let back = a.matvec(&x);
+            assert_close(&back, &b, 1e-7)
+        });
+    }
+
+    #[test]
+    fn logdet_matches_2x2() {
+        let a = Matrix::from_vec(2, 2, vec![4.0, 1.0, 1.0, 3.0]);
+        let ch = cholesky(&a).unwrap();
+        let det: f64 = 4.0 * 3.0 - 1.0;
+        assert!((ch.logdet() - det.ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn triangular_solves_match() {
+        prop_check("tri-solves", 31, 15, |g| {
+            let n = g.size(1, 20);
+            let a = Matrix::from_vec(n, n, g.spd(n));
+            let ch = cholesky(&a).ok_or("not spd")?;
+            let b = g.vec_normal(n);
+            let y = solve_lower(&ch.l, &b);
+            assert_close(&ch.l.matvec(&y), &b, 1e-8)?;
+            let x = solve_lower_t(&ch.l, &b);
+            assert_close(&ch.l.transpose().matvec(&x), &b, 1e-8)
+        });
+    }
+
+    #[test]
+    fn pivoted_full_rank_recovers_matrix() {
+        prop_check("piv-chol-full", 37, 15, |g| {
+            let n = g.size(1, 15);
+            let a = Matrix::from_vec(n, n, g.spd(n));
+            let (l, piv) = pivoted_cholesky(&a, n, 1e-12);
+            if piv.len() != n {
+                return Err(format!("rank {} < {}", piv.len(), n));
+            }
+            let back = l.matmul(&l.transpose());
+            assert_close(&back.data, &a.data, 1e-6)
+        });
+    }
+
+    #[test]
+    fn pivoted_low_rank_error_decays() {
+        // A smooth RBF-like Gram matrix has fast-decaying spectrum: the
+        // rank-k pivoted Cholesky error must decrease with k.
+        let n = 40;
+        let a = Matrix::from_fn(n, n, |i, j| {
+            let d = (i as f64 - j as f64) / 5.0;
+            (-0.5 * d * d).exp()
+        });
+        let mut prev = f64::INFINITY;
+        for rank in [2, 5, 10, 20] {
+            let (l, _) = pivoted_cholesky(&a, rank, 0.0);
+            let mut diff = a.clone();
+            let ll = l.matmul(&l.transpose());
+            for (d, v) in diff.data.iter_mut().zip(&ll.data) {
+                *d -= *v;
+            }
+            let err = diff.frob_norm();
+            assert!(err < prev + 1e-9, "rank {rank}: {err} !< {prev}");
+            prev = err;
+        }
+        assert!(prev < 1e-3, "rank-20 error {prev}");
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eig -1, 3
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn f32_cholesky_works() {
+        let a64 = Matrix::<f64>::from_fn(10, 10, |i, j| {
+            let d = (i as f64 - j as f64) / 3.0;
+            (-0.5 * d * d).exp() + if i == j { 0.1 } else { 0.0 }
+        });
+        let a: Matrix<f32> = a64.cast();
+        let ch = cholesky(&a).unwrap();
+        let back = ch.l.matmul(&ch.l.transpose());
+        for (g, w) in back.data.iter().zip(&a.data) {
+            assert!((g - w).abs() < 1e-4);
+        }
+    }
+}

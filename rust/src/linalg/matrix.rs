@@ -1,0 +1,345 @@
+//! Row-major dense matrix generic over f32/f64.
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Floating-point scalar abstraction (f32 | f64).
+pub trait Scalar:
+    Copy
+    + PartialOrd
+    + fmt::Debug
+    + fmt::Display
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::Neg<Output = Self>
+    + std::ops::AddAssign
+    + std::ops::SubAssign
+    + std::ops::MulAssign
+    + 'static
+{
+    const ZERO: Self;
+    const ONE: Self;
+    fn sqrt(self) -> Self;
+    fn abs(self) -> Self;
+    fn ln(self) -> Self;
+    fn exp(self) -> Self;
+    fn from_f64(x: f64) -> Self;
+    fn to_f64(self) -> f64;
+}
+
+macro_rules! impl_scalar {
+    ($t:ty) => {
+        impl Scalar for $t {
+            const ZERO: Self = 0.0;
+            const ONE: Self = 1.0;
+            #[inline]
+            fn sqrt(self) -> Self {
+                self.sqrt()
+            }
+            #[inline]
+            fn abs(self) -> Self {
+                self.abs()
+            }
+            #[inline]
+            fn ln(self) -> Self {
+                self.ln()
+            }
+            #[inline]
+            fn exp(self) -> Self {
+                self.exp()
+            }
+            #[inline]
+            fn from_f64(x: f64) -> Self {
+                x as $t
+            }
+            #[inline]
+            fn to_f64(self) -> f64 {
+                self as f64
+            }
+        }
+    };
+}
+
+impl_scalar!(f32);
+impl_scalar!(f64);
+
+/// Dense row-major matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix<T: Scalar = f64> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<T>,
+}
+
+impl<T: Scalar> Matrix<T> {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![T::ZERO; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = T::ONE;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> T) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[T] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [T] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<T> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn transpose(&self) -> Matrix<T> {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Matrix product via the blocked GEMM (see gemm.rs).
+    pub fn matmul(&self, other: &Matrix<T>) -> Matrix<T> {
+        super::gemm::matmul(self, other)
+    }
+
+    /// self @ v for a vector v.
+    pub fn matvec(&self, v: &[T]) -> Vec<T> {
+        assert_eq!(v.len(), self.cols);
+        let mut out = vec![T::ZERO; self.rows];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut acc = T::ZERO;
+            for (a, b) in row.iter().zip(v) {
+                acc += *a * *b;
+            }
+            out[i] = acc;
+        }
+        out
+    }
+
+    /// self^T @ v.
+    pub fn matvec_t(&self, v: &[T]) -> Vec<T> {
+        assert_eq!(v.len(), self.rows);
+        let mut out = vec![T::ZERO; self.cols];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let vi = v[i];
+            for (o, a) in out.iter_mut().zip(row) {
+                *o += *a * vi;
+            }
+        }
+        out
+    }
+
+    pub fn scale(&mut self, s: T) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Matrix<T>) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += *b;
+        }
+    }
+
+    /// Add s to the diagonal (jitter / noise).
+    pub fn add_diag(&mut self, s: T) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self[(i, i)] += s;
+        }
+    }
+
+    pub fn diag(&self) -> Vec<T> {
+        (0..self.rows.min(self.cols)).map(|i| self[(i, i)]).collect()
+    }
+
+    pub fn trace(&self) -> T {
+        let mut t = T::ZERO;
+        for i in 0..self.rows.min(self.cols) {
+            t += self[(i, i)];
+        }
+        t
+    }
+
+    pub fn frob_norm(&self) -> T {
+        let mut s = T::ZERO;
+        for x in &self.data {
+            s += *x * *x;
+        }
+        s.sqrt()
+    }
+
+    /// Convert precision (f64 <-> f32 boundaries).
+    pub fn cast<U: Scalar>(&self) -> Matrix<U> {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| U::from_f64(x.to_f64())).collect(),
+        }
+    }
+
+    /// Extract the submatrix with the given row/col indices.
+    pub fn submatrix(&self, rows: &[usize], cols: &[usize]) -> Matrix<T> {
+        Matrix::from_fn(rows.len(), cols.len(), |i, j| self[(rows[i], cols[j])])
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().map(|x| x.abs().to_f64()).fold(0.0, f64::max)
+    }
+}
+
+impl<T: Scalar> Index<(usize, usize)> for Matrix<T> {
+    type Output = T;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &T {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl<T: Scalar> IndexMut<(usize, usize)> for Matrix<T> {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut T {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl<T: Scalar> fmt::Debug for Matrix<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:>10.4} ", self[(i, j)].to_f64())?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "..." } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+// ---- vector helpers used across the crate ----
+
+pub fn dot<T: Scalar>(a: &[T], b: &[T]) -> T {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = T::ZERO;
+    for (x, y) in a.iter().zip(b) {
+        s += *x * *y;
+    }
+    s
+}
+
+pub fn axpy<T: Scalar>(alpha: T, x: &[T], y: &mut [T]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (xi, yi) in x.iter().zip(y.iter_mut()) {
+        *yi += alpha * *xi;
+    }
+}
+
+pub fn norm2<T: Scalar>(x: &[T]) -> T {
+    dot(x, x).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_and_transpose() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(m[(1, 2)], 6.0);
+        let t = m.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t[(2, 1)], 6.0);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let m = Matrix::from_fn(4, 3, |i, j| (i * 3 + j) as f64);
+        let v = vec![1.0, -1.0, 2.0];
+        let got = m.matvec(&v);
+        let vm = Matrix::from_vec(3, 1, v.clone());
+        let want = m.matmul(&vm);
+        for i in 0..4 {
+            assert!((got[i] - want[(i, 0)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matvec_t_is_transpose_matvec() {
+        let m = Matrix::from_fn(4, 3, |i, j| ((i + 1) * (j + 2)) as f64);
+        let v = vec![1.0, 0.5, -2.0, 3.0];
+        let got = m.matvec_t(&v);
+        let want = m.transpose().matvec(&v);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn eye_is_identity_under_matmul() {
+        let m = Matrix::from_fn(5, 5, |i, j| (i as f64 - j as f64) * 0.3);
+        let prod = m.matmul(&Matrix::eye(5));
+        assert!((&prod.data[..])
+            .iter()
+            .zip(&m.data)
+            .all(|(a, b)| (a - b).abs() < 1e-12));
+    }
+
+    #[test]
+    fn cast_roundtrip() {
+        let m = Matrix::<f64>::from_fn(3, 3, |i, j| (i + j) as f64 * 0.5);
+        let m32: Matrix<f32> = m.cast();
+        let back: Matrix<f64> = m32.cast();
+        assert!(m.data.iter().zip(&back.data).all(|(a, b)| (a - b).abs() < 1e-6));
+    }
+
+    #[test]
+    fn submatrix_picks_entries() {
+        let m = Matrix::from_fn(4, 4, |i, j| (i * 10 + j) as f64);
+        let s = m.submatrix(&[1, 3], &[0, 2]);
+        assert_eq!(s.data, vec![10.0, 12.0, 30.0, 32.0]);
+    }
+
+    #[test]
+    fn trace_and_diag() {
+        let m = Matrix::from_fn(3, 3, |i, j| if i == j { (i + 1) as f64 } else { 9.0 });
+        assert_eq!(m.trace(), 6.0);
+        assert_eq!(m.diag(), vec![1.0, 2.0, 3.0]);
+    }
+}

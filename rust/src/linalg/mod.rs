@@ -1,0 +1,14 @@
+//! Dense linear algebra substrate (no BLAS/LAPACK in the offline set).
+//!
+//! Everything the GP stack needs: a generic row-major matrix over
+//! f32/f64, a blocked GEMM, Cholesky factorization + triangular solves,
+//! and the rank-revealing pivoted Cholesky used both by the CG
+//! preconditioner (paper Appendix C: "pivoted Cholesky preconditioner of
+//! rank 100") and by CaGP's low-rank actions.
+
+pub mod chol;
+pub mod gemm;
+pub mod matrix;
+
+pub use chol::{cholesky, pivoted_cholesky, solve_lower, solve_lower_t, Cholesky};
+pub use matrix::{Matrix, Scalar};

@@ -1,0 +1,197 @@
+//! lkgp — Latent Kronecker GP coordinator CLI.
+//!
+//! Subcommands:
+//!   info                         artifact manifest + platform report
+//!   train  --data <set> ...      fit one model on one dataset, report
+//!   experiment <id> [--scale ..] regenerate a paper table/figure
+//!                                (fig2 | fig3 | fig4 | fig5 | table1 |
+//!                                 table2 | all)
+//!
+//! Python never runs here: the binary consumes artifacts/ produced once
+//! by `make artifacts`.
+
+use lkgp::coordinator::{experiments, ExperimentScale};
+use lkgp::data::climate::ClimateSim;
+use lkgp::data::lcbench::LcBenchSim;
+use lkgp::data::sarcos::SarcosSim;
+use lkgp::data::synthetic::well_specified;
+use lkgp::data::GridDataset;
+use lkgp::gp::backend::MvmMode;
+use lkgp::gp::lkgp::{Backend, Lkgp, LkgpConfig};
+use lkgp::kernels::ProductGridKernel;
+use lkgp::runtime::{Manifest, Runtime};
+use lkgp::util::cli::Args;
+
+const USAGE: &str = "usage: lkgp <info|train|experiment> [flags]
+  lkgp info
+  lkgp train --data <climate|climate-precip|lcbench|sarcos|synthetic>
+             [--p N] [--q N] [--missing R] [--seed S]
+             [--backend rust|<artifact-config>] [--dense] [--iters N]
+  lkgp experiment <fig2|fig3|fig4|fig5|table1|table2|ablations|all>
+             [--scale quick|paper] [--seeds N] [--ratios a,b,..]
+             [--backend rust|<artifact-config>]";
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand.as_deref() {
+        Some("info") => cmd_info(),
+        Some("train") => cmd_train(&args),
+        Some("experiment") => cmd_experiment(&args),
+        _ => {
+            eprintln!("{USAGE}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_info() -> i32 {
+    println!("lkgp — Latent Kronecker Gaussian Processes (ICML 2025 reproduction)");
+    match Runtime::load_default() {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("artifact configs:");
+            for (name, cfg) in &rt.manifest.configs {
+                println!(
+                    "  {name:>8}: p={:<5} q={:<4} ds={:<3} kernel_t={:<13} batch={} probes={} n_theta={}",
+                    cfg.p, cfg.q, cfg.ds, cfg.kernel_t, cfg.batch, cfg.probes, cfg.n_theta
+                );
+            }
+            0
+        }
+        Err(e) => {
+            println!("artifacts unavailable: {e:#}");
+            println!("(run `make artifacts`; dir searched: {:?})", Manifest::default_dir());
+            1
+        }
+    }
+}
+
+fn load_dataset(args: &Args) -> GridDataset {
+    let missing = args.f64("missing", 0.3);
+    let seed = args.u64("seed", 0);
+    match args.str("data", "synthetic").as_str() {
+        "climate" => ClimateSim::default_temperature(
+            args.usize("p", 96),
+            args.usize("q", 64),
+            missing,
+            seed,
+        ),
+        "climate-precip" => ClimateSim::default_precipitation(
+            args.usize("p", 96),
+            args.usize("q", 64),
+            missing,
+            seed,
+        ),
+        "lcbench" => {
+            let mut sim = LcBenchSim::new(args.usize("p", 128), args.usize("q", 52), seed);
+            sim.full_fraction = 0.1;
+            sim.generate()
+        }
+        "sarcos" => SarcosSim::new(args.usize("p", 256), missing, seed).generate(),
+        _ => {
+            let kernel = ProductGridKernel::new(2, "rbf", args.usize("q", 16));
+            well_specified(
+                args.usize("p", 64),
+                args.usize("q", 16),
+                2,
+                &kernel,
+                0.05,
+                missing,
+                seed,
+            )
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let data = load_dataset(args);
+    let backend = match args.str("backend", "rust").as_str() {
+        "rust" => {
+            if args.bool("dense") {
+                Backend::Rust(MvmMode::DenseMaterialized)
+            } else {
+                Backend::Rust(MvmMode::Kron)
+            }
+        }
+        cfg => Backend::Pjrt { config: cfg.to_string() },
+    };
+    let cfg = LkgpConfig {
+        train_iters: args.usize("iters", 20),
+        n_samples: args.usize("samples", 32),
+        precond_rank: args.usize("precond-rank", 0),
+        seed: args.u64("seed", 0),
+        backend,
+        ..LkgpConfig::default()
+    };
+    if let Err(e) = args.finish() {
+        eprintln!("{e}\n{USAGE}");
+        return 2;
+    }
+    println!(
+        "dataset {}: p={} q={} observed {} / {} (missing {:.1}%)",
+        data.name,
+        data.p(),
+        data.q(),
+        data.n_observed(),
+        data.grid_len(),
+        100.0 * data.missing_ratio()
+    );
+    match Lkgp::fit(&data, cfg) {
+        Ok(fit) => {
+            let (train_rmse, train_nll) = fit.posterior.train_metrics(&data);
+            let (test_rmse, test_nll) = fit.posterior.test_metrics(&data);
+            println!("loss trace (0.5 y^T alpha): {:?}", round3(&fit.loss_trace));
+            println!("train: rmse {train_rmse:.4}  nll {train_nll:.4}");
+            println!("test : rmse {test_rmse:.4}  nll {test_nll:.4}");
+            println!(
+                "time: train {:.2}s predict {:.2}s | CG iters {} | kernel bytes {}",
+                fit.train_secs, fit.predict_secs, fit.cg_iters_total, fit.kernel_bytes
+            );
+            println!("\nprofile:\n{}", fit.profile.render());
+            0
+        }
+        Err(e) => {
+            eprintln!("fit failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn round3(xs: &[f64]) -> Vec<f64> {
+    xs.iter().map(|x| (x * 1000.0).round() / 1000.0).collect()
+}
+
+fn cmd_experiment(args: &Args) -> i32 {
+    let which = args
+        .positional()
+        .first()
+        .cloned()
+        .or_else(|| args.str_opt("name"))
+        .unwrap_or_else(|| "all".to_string());
+    let scale = ExperimentScale::from_args(args);
+    let t0 = std::time::Instant::now();
+    match which.as_str() {
+        "fig2" => experiments::fig2::run(&scale),
+        "fig3" => experiments::fig3::run(&scale),
+        "fig4" => experiments::fig4::run(&scale),
+        "fig5" => experiments::fig5::run(&scale),
+        "table1" => experiments::table1::run(&scale),
+        "table2" => experiments::table2::run(&scale),
+        "ablations" => experiments::ablations::run(&scale),
+        "all" => {
+            experiments::fig2::run(&scale);
+            experiments::fig3::run(&scale);
+            experiments::fig4::run(&scale);
+            experiments::fig5::run(&scale);
+            experiments::table1::run(&scale);
+            experiments::table2::run(&scale);
+        }
+        other => {
+            eprintln!("unknown experiment {other:?}\n{USAGE}");
+            return 2;
+        }
+    }
+    println!("[experiment {which} done in {:.1}s]", t0.elapsed().as_secs_f64());
+    0
+}

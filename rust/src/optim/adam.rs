@@ -1,0 +1,87 @@
+//! Adam (Kingma & Ba 2015) — used for marginal-likelihood hyperparameter
+//! optimization (paper Appendix C: "Adam with a learning rate of 0.1")
+//! and for the variational baselines' ELBO training.
+
+/// Adam optimizer state over a flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(n_params: usize, lr: f64) -> Self {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, m: vec![0.0; n_params], v: vec![0.0; n_params], t: 0 }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.m.len()
+    }
+
+    /// One descent step: params -= lr * mhat / (sqrt(vhat) + eps).
+    /// `grad` is the gradient of the loss being *minimized*.
+    pub fn step(&mut self, params: &mut [f64], grad: &[f64]) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grad.len(), self.m.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let g = if grad[i].is_finite() { grad[i] } else { 0.0 };
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = self.m[i] / b1t;
+            let vhat = self.v[i] / b2t;
+            params[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic() {
+        // f(x) = sum (x - c)^2
+        let c = [3.0, -1.5, 0.25];
+        let mut x = vec![0.0; 3];
+        let mut opt = Adam::new(3, 0.1);
+        for _ in 0..500 {
+            let grad: Vec<f64> = x.iter().zip(&c).map(|(xi, ci)| 2.0 * (xi - ci)).collect();
+            opt.step(&mut x, &grad);
+        }
+        for (xi, ci) in x.iter().zip(&c) {
+            assert!((xi - ci).abs() < 1e-2, "{xi} vs {ci}");
+        }
+    }
+
+    #[test]
+    fn ignores_nan_gradients() {
+        let mut x = vec![1.0];
+        let mut opt = Adam::new(1, 0.1);
+        opt.step(&mut x, &[f64::NAN]);
+        assert!(x[0].is_finite());
+    }
+
+    #[test]
+    fn rosenbrock_descends() {
+        let mut x = vec![-1.0, 1.0];
+        let mut opt = Adam::new(2, 0.02);
+        let f = |x: &[f64]| (1.0 - x[0]).powi(2) + 100.0 * (x[1] - x[0] * x[0]).powi(2);
+        let f0 = f(&x);
+        for _ in 0..2000 {
+            let g = vec![
+                -2.0 * (1.0 - x[0]) - 400.0 * x[0] * (x[1] - x[0] * x[0]),
+                200.0 * (x[1] - x[0] * x[0]),
+            ];
+            opt.step(&mut x, &g);
+        }
+        assert!(f(&x) < 0.1 * f0, "f={} from {}", f(&x), f0);
+    }
+}

@@ -1,0 +1,5 @@
+//! Optimizers for hyperparameter / variational training loops.
+
+pub mod adam;
+
+pub use adam::Adam;

@@ -1,0 +1,166 @@
+//! artifacts/manifest.json loader — the ABI between the AOT compile path
+//! (python/compile/aot.py) and the rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ArtifactInput {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ArtifactInput {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub file: PathBuf,
+    pub inputs: Vec<ArtifactInput>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ConfigMeta {
+    pub name: String,
+    pub p: usize,
+    pub q: usize,
+    pub ds: usize,
+    pub kernel_t: String,
+    pub batch: usize,
+    pub probes: usize,
+    pub n_theta: usize,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, ConfigMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        if root.at(&["version"]).as_usize() != Some(1) {
+            bail!("unsupported manifest version");
+        }
+        let mut configs = BTreeMap::new();
+        let Some(cfgs) = root.get("configs").and_then(|c| c.as_obj()) else {
+            bail!("manifest missing configs");
+        };
+        for (cname, c) in cfgs {
+            let geti = |k: &str| -> anyhow::Result<usize> {
+                c.get(k).and_then(|v| v.as_usize()).context(format!("config {cname}: {k}"))
+            };
+            let mut artifacts = BTreeMap::new();
+            let arts = c.get("artifacts").and_then(|a| a.as_obj()).unwrap_or(&[]);
+            for (aname, a) in arts {
+                let file = a
+                    .get("file")
+                    .and_then(|f| f.as_str())
+                    .context("artifact file")?
+                    .to_string();
+                let mut inputs = Vec::new();
+                for inp in a.get("inputs").and_then(|i| i.as_arr()).unwrap_or(&[]) {
+                    inputs.push(ArtifactInput {
+                        name: inp.get("name").and_then(|n| n.as_str()).unwrap_or("").into(),
+                        shape: inp
+                            .get("shape")
+                            .and_then(|s| s.as_arr())
+                            .map(|s| s.iter().filter_map(|d| d.as_usize()).collect())
+                            .unwrap_or_default(),
+                    });
+                }
+                artifacts
+                    .insert(aname.clone(), ArtifactMeta { file: dir.join(file), inputs });
+            }
+            configs.insert(
+                cname.clone(),
+                ConfigMeta {
+                    name: cname.clone(),
+                    p: geti("p")?,
+                    q: geti("q")?,
+                    ds: geti("ds")?,
+                    kernel_t: c
+                        .get("kernel_t")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("rbf")
+                        .into(),
+                    batch: geti("batch")?,
+                    probes: geti("probes")?,
+                    n_theta: geti("n_theta")?,
+                    artifacts,
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), configs })
+    }
+
+    pub fn config(&self, name: &str) -> anyhow::Result<&ConfigMeta> {
+        self.configs
+            .get(name)
+            .with_context(|| format!("config {name:?} not in manifest ({:?})",
+                self.configs.keys().collect::<Vec<_>>()))
+    }
+
+    /// Default artifact directory: $LKGP_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("LKGP_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+            // walk up from cwd to find artifacts/manifest.json (tests run
+            // from target subdirs)
+            let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+            for _ in 0..4 {
+                let cand = cur.join("artifacts");
+                if cand.join("manifest.json").exists() {
+                    return cand;
+                }
+                if !cur.pop() {
+                    break;
+                }
+            }
+            PathBuf::from("artifacts")
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_generated_manifest_if_present() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let man = Manifest::load(&dir).unwrap();
+        let tiny = man.config("tiny").unwrap();
+        assert_eq!(tiny.p * tiny.q, 128);
+        let mvm = &tiny.artifacts["kron_mvm"];
+        assert_eq!(mvm.inputs.len(), 5);
+        assert_eq!(mvm.inputs[4].shape, vec![tiny.batch, tiny.p * tiny.q]);
+        assert!(mvm.file.exists());
+    }
+
+    #[test]
+    fn missing_config_is_error() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let man = Manifest::load(&dir).unwrap();
+        assert!(man.config("nope").is_err());
+    }
+}

@@ -1,0 +1,203 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on
+//! the CPU PJRT client (`xla` crate). This is the only place the process
+//! touches XLA; Python never runs here.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO text ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute`. Artifacts were lowered with
+//! return_tuple=True, so every execution returns one tuple literal that
+//! is decomposed into the artifact's outputs.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::{ArtifactMeta, ConfigMeta, Manifest};
+
+/// Handle to a compiled artifact set + the PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<(String, String), xla::PjRtLoadedExecutable>,
+    /// wall time spent inside PJRT execute (for the perf pass)
+    pub exec_secs: f64,
+    pub exec_calls: u64,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime over an artifact directory.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, cache: HashMap::new(), exec_secs: 0.0, exec_calls: 0 })
+    }
+
+    /// Load from the default artifact location.
+    pub fn load_default() -> Result<Runtime> {
+        Self::load(&Manifest::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an artifact executable.
+    fn executable(&mut self, config: &str, artifact: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        let key = (config.to_string(), artifact.to_string());
+        if !self.cache.contains_key(&key) {
+            let cfg = self.manifest.config(config)?;
+            let meta = cfg
+                .artifacts
+                .get(artifact)
+                .with_context(|| format!("artifact {artifact:?} in config {config:?}"))?;
+            let proto = xla::HloModuleProto::from_text_file(
+                meta.file.to_str().context("artifact path utf8")?,
+            )
+            .with_context(|| format!("parsing HLO text {:?}", meta.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {config}/{artifact}"))?;
+            self.cache.insert(key.clone(), exe);
+        }
+        Ok(&self.cache[&key])
+    }
+
+    /// Pre-compile all artifacts of a config (so timing loops exclude
+    /// compilation).
+    pub fn warmup(&mut self, config: &str) -> Result<()> {
+        let names: Vec<String> =
+            self.manifest.config(config)?.artifacts.keys().cloned().collect();
+        for a in names {
+            self.executable(config, &a)?;
+        }
+        Ok(())
+    }
+
+    /// Execute `config/artifact` with f32 tensor inputs, checking shapes
+    /// against the manifest ABI. Returns the decomposed output tuple as
+    /// f32 vectors.
+    pub fn exec_f32(
+        &mut self,
+        config: &str,
+        artifact: &str,
+        inputs: &[TensorF32],
+    ) -> Result<Vec<Vec<f32>>> {
+        // ABI check
+        {
+            let cfg = self.manifest.config(config)?;
+            let meta = cfg.artifacts.get(artifact).context("artifact")?;
+            if meta.inputs.len() != inputs.len() {
+                bail!(
+                    "{config}/{artifact}: expected {} inputs, got {}",
+                    meta.inputs.len(),
+                    inputs.len()
+                );
+            }
+            for (spec, got) in meta.inputs.iter().zip(inputs) {
+                if spec.len() != got.data.len() {
+                    bail!(
+                        "{config}/{artifact}: input {:?} expects {:?} ({} elems), got {}",
+                        spec.name,
+                        spec.shape,
+                        spec.len(),
+                        got.data.len()
+                    );
+                }
+            }
+        }
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let t0 = std::time::Instant::now();
+        let exe = self.executable(config, artifact)?;
+        let result = exe.execute::<xla::Literal>(&lits).context("execute")?;
+        let tuple = result[0][0].to_literal_sync()?;
+        self.exec_secs += t0.elapsed().as_secs_f64();
+        self.exec_calls += 1;
+        let parts = tuple.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for lit in parts {
+            out.push(lit.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// A shaped f32 tensor crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub struct TensorF32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorF32 {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>().max(1), data.len().max(1));
+        TensorF32 { shape, data }
+    }
+
+    pub fn scalar(x: f32) -> Self {
+        TensorF32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn vec1(data: Vec<f32>) -> Self {
+        TensorF32 { shape: vec![data.len()], data }
+    }
+
+    pub fn from_f64(shape: Vec<usize>, data: &[f64]) -> Self {
+        TensorF32::new(shape, data.iter().map(|&x| x as f32).collect())
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        if self.shape.is_empty() {
+            return Ok(xla::Literal::scalar(self.data[0]));
+        }
+        let flat = xla::Literal::vec1(&self.data);
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(flat.reshape(&dims)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime_or_skip() -> Option<Runtime> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn executes_kernels_artifact() {
+        let Some(mut rt) = runtime_or_skip() else { return };
+        let cfg = rt.manifest.config("tiny").unwrap().clone();
+        let (p, q, ds, nt) = (cfg.p, cfg.q, cfg.ds, cfg.n_theta);
+        let s =
+            TensorF32::new(vec![p, ds], (0..p * ds).map(|i| (i as f32 * 0.1).sin()).collect());
+        let t = TensorF32::new(vec![q, 1], (0..q).map(|i| i as f32 / q as f32).collect());
+        let theta = TensorF32::vec1(vec![0.0; nt]);
+        let out = rt.exec_f32("tiny", "kernels", &[s, t, theta]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].len(), p * p);
+        assert_eq!(out[1].len(), q * q);
+        // K_SS diagonal = outputscale exp(0) = 1
+        for i in 0..p {
+            assert!((out[0][i * p + i] - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_is_error() {
+        let Some(mut rt) = runtime_or_skip() else { return };
+        let bad = TensorF32::vec1(vec![0.0; 3]);
+        assert!(rt.exec_f32("tiny", "kernels", &[bad.clone(), bad.clone(), bad]).is_err());
+    }
+}

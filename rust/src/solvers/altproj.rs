@@ -1,0 +1,150 @@
+//! Alternating-projections linear solver (Wu et al. 2024, cited in
+//! paper Sec. 2 as one of the iterative-GP solver families).
+//!
+//! Solves (K + sigma2 I) x = b by cycling over coordinate blocks B and
+//! applying the exact block update
+//!
+//!   x_B <- x_B + (K_BB + sigma2 I)^{-1} r_B,
+//!
+//! which is a projection of the residual onto the block subspace in the
+//! K-norm. Converges linearly for SPD systems; each sweep costs
+//! O(n b^2 + n^2) via cached block Cholesky factors (amortized across
+//! sweeps) plus one full MVM for the residual refresh.
+
+use crate::linalg::chol::{cholesky, Cholesky};
+use crate::linalg::{Matrix, Scalar};
+
+use super::cg::{BatchedOp, CgStats};
+
+pub struct AltProjOptions {
+    pub block_size: usize,
+    pub max_sweeps: usize,
+    pub tol: f64,
+}
+
+impl Default for AltProjOptions {
+    fn default() -> Self {
+        AltProjOptions { block_size: 64, max_sweeps: 60, tol: 1e-2 }
+    }
+}
+
+/// Solve A X = B (rows of `b` are independent RHS) with alternating
+/// projections. `entry(i, j)` must return A_ij (including the noise on
+/// the diagonal). The operator `op` provides the full MVM used for
+/// residual refreshes.
+pub fn solve_altproj<T: Scalar>(
+    op: &mut impl BatchedOp<T>,
+    entry: impl Fn(usize, usize) -> f64,
+    b: &Matrix<T>,
+    opts: &AltProjOptions,
+) -> (Matrix<T>, CgStats) {
+    let n = op.dim();
+    assert_eq!(b.cols, n);
+    let nsys = b.rows;
+    let bs = opts.block_size.min(n).max(1);
+    let nblocks = n.div_ceil(bs);
+
+    // cache block Cholesky factors once (hyperparameters are fixed
+    // during a solve)
+    let mut block_chols: Vec<(usize, usize, Cholesky<f64>)> = Vec::with_capacity(nblocks);
+    for blk in 0..nblocks {
+        let lo = blk * bs;
+        let hi = ((blk + 1) * bs).min(n);
+        let m = Matrix::<f64>::from_fn(hi - lo, hi - lo, |a, c| entry(lo + a, lo + c));
+        let ch = cholesky(&m).expect("block not PD");
+        block_chols.push((lo, hi, ch));
+    }
+
+    let mut x = Matrix::<T>::zeros(nsys, n);
+    let mut r = b.clone(); // residual b - A x (x = 0)
+    let b_norms: Vec<f64> = (0..nsys)
+        .map(|s| {
+            b.row(s).iter().map(|v| v.to_f64() * v.to_f64()).sum::<f64>().sqrt().max(1e-300)
+        })
+        .collect();
+    let mut stats = CgStats::default();
+
+    for sweep in 0..opts.max_sweeps {
+        for (lo, hi, ch) in &block_chols {
+            for s in 0..nsys {
+                let rb: Vec<f64> =
+                    r.row(s)[*lo..*hi].iter().map(|v| v.to_f64()).collect();
+                let dx = ch.solve(&rb);
+                for (i, d) in dx.iter().enumerate() {
+                    let xi = &mut x.row_mut(s)[lo + i];
+                    *xi += T::from_f64(*d);
+                }
+            }
+            // cheap local residual update is possible, but the exact
+            // refresh below keeps the implementation simple and robust.
+        }
+        // refresh residual exactly: r = b - A x
+        let ax = op.apply_batch(&x);
+        stats.mvm_count += 1;
+        let mut worst = 0.0f64;
+        for s in 0..nsys {
+            let rrow = r.row_mut(s);
+            let mut acc = 0.0;
+            for ((ri, bi), axi) in rrow.iter_mut().zip(b.row(s)).zip(ax.row(s)) {
+                *ri = *bi - *axi;
+                acc += ri.to_f64() * ri.to_f64();
+            }
+            worst = worst.max(acc.sqrt() / b_norms[s]);
+        }
+        stats.iters = sweep + 1;
+        stats.rel_residuals = vec![worst];
+        if worst < opts.tol {
+            stats.converged = true;
+            return (x, stats);
+        }
+    }
+    (x, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::cg::DenseOp;
+    use crate::util::testing::{assert_close, prop_check};
+
+    #[test]
+    fn prop_solves_spd_systems() {
+        prop_check("altproj-solves", 211, 10, |g| {
+            let n = g.size(2, 40);
+            let mut a = Matrix::from_vec(n, n, g.spd(n));
+            a.add_diag(0.5);
+            let b = Matrix::from_vec(2, n, g.vec_normal(2 * n));
+            let a2 = a.clone();
+            let (x, stats) = solve_altproj(
+                &mut DenseOp(&a),
+                |i, j| a2[(i, j)],
+                &b,
+                &AltProjOptions { block_size: 7, max_sweeps: 500, tol: 1e-8 },
+            );
+            if !stats.converged {
+                return Err(format!("not converged: {:?}", stats.rel_residuals));
+            }
+            for s in 0..2 {
+                assert_close(&a.matvec(x.row(s)), b.row(s), 1e-5)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn single_block_converges_in_one_sweep() {
+        let mut g = crate::util::testing::Gen { rng: crate::util::rng::Rng::new(2) };
+        let n = 12;
+        let a = Matrix::from_vec(n, n, g.spd(n));
+        let b = Matrix::from_vec(1, n, g.vec_normal(n));
+        let a2 = a.clone();
+        let (x, stats) = solve_altproj(
+            &mut DenseOp(&a),
+            |i, j| a2[(i, j)],
+            &b,
+            &AltProjOptions { block_size: n, max_sweeps: 3, tol: 1e-10 },
+        );
+        assert!(stats.converged && stats.iters == 1, "{stats:?}");
+        assert_close(&a.matvec(x.row(0)), b.row(0), 1e-7).unwrap();
+    }
+}

@@ -1,0 +1,14 @@
+//! Iterative linear-system solvers (the paper's inference engine).
+//!
+//! The LKGP posterior, probe solves, and pathwise-conditioning samples
+//! are all solutions of `(P K P^T + sigma2 I) x = b` computed by batched
+//! preconditioned conjugate gradients against a matrix-free operator
+//! (rust Kron backend or the PJRT kron_mvm artifact).
+
+pub mod altproj;
+pub mod cg;
+pub mod precond;
+pub mod sgd;
+
+pub use cg::{BatchedOp, CgOptions, CgStats, solve_cg};
+pub use precond::Preconditioner;

@@ -1,0 +1,189 @@
+//! CG preconditioners.
+//!
+//! * `Identity` — plain CG.
+//! * `Jacobi` — diagonal scaling.
+//! * `LowRankPlusNoise` — the paper's pivoted-Cholesky preconditioner
+//!   (Appendix C, rank 100): M = L L^T + sigma2 I with L a rank-r
+//!   pivoted Cholesky factor of the kernel matrix; M^{-1} applied via
+//!   the Woodbury identity in O(n r) per vector after an O(r^3) setup.
+
+use crate::linalg::chol::{cholesky, Cholesky};
+use crate::linalg::{Matrix, Scalar};
+
+pub enum Preconditioner<T: Scalar> {
+    Identity,
+    Jacobi { inv_diag: Vec<T> },
+    LowRankPlusNoise { l: Matrix<T>, sigma2: T, cap_chol: Cholesky<T> },
+}
+
+impl<T: Scalar> Preconditioner<T> {
+    pub fn jacobi(diag: &[f64]) -> Self {
+        Preconditioner::Jacobi {
+            inv_diag: diag.iter().map(|&d| T::from_f64(1.0 / d.max(1e-12))).collect(),
+        }
+    }
+
+    /// Build the Woodbury form for M = L L^T + sigma2 I:
+    /// M^{-1} = (1/s2) [ I - L (s2 I_r + L^T L)^{-1} L^T ].
+    pub fn low_rank(l: Matrix<T>, sigma2: f64) -> Self {
+        let r = l.cols;
+        let mut cap = l.transpose().matmul(&l); // r x r
+        for i in 0..r {
+            cap[(i, i)] += T::from_f64(sigma2);
+        }
+        let cap_chol = cholesky(&cap).expect("capacitance matrix not PD");
+        Preconditioner::LowRankPlusNoise { l, sigma2: T::from_f64(sigma2), cap_chol }
+    }
+
+    /// Build from a lazily-evaluated kernel: greedy pivoted Cholesky
+    /// using only the kernel diagonal and single columns (never the full
+    /// matrix) — O(n r^2) work, O(n r) memory.
+    pub fn pivoted_from_columns(
+        diag_no_noise: Vec<f64>,
+        col: impl Fn(usize) -> Vec<T>,
+        rank: usize,
+        sigma2: f64,
+    ) -> Self {
+        let n = diag_no_noise.len();
+        let rank = rank.min(n);
+        let mut d = diag_no_noise;
+        let max0 = d.iter().cloned().fold(0.0, f64::max).max(1e-300);
+        let mut l = Matrix::<T>::zeros(n, rank);
+        let mut used = vec![false; n];
+        let mut k_eff = 0;
+        for k in 0..rank {
+            let Some((piv, &dmax)) = d
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !used[*i])
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            else {
+                break;
+            };
+            if dmax < 1e-8 * max0 || dmax <= 0.0 {
+                break;
+            }
+            used[piv] = true;
+            let s = dmax.sqrt();
+            let a_col = col(piv);
+            for i in 0..n {
+                if i == piv {
+                    l[(i, k)] = T::from_f64(s);
+                    continue;
+                }
+                if used[i] {
+                    l[(i, k)] = T::ZERO;
+                    continue;
+                }
+                let mut acc = a_col[i].to_f64();
+                for j in 0..k {
+                    acc -= l[(i, j)].to_f64() * l[(piv, j)].to_f64();
+                }
+                let v = acc / s;
+                l[(i, k)] = T::from_f64(v);
+                d[i] = (d[i] - v * v).max(0.0);
+            }
+            d[piv] = 0.0;
+            k_eff = k + 1;
+        }
+        // trim unused columns
+        let mut ltrim = Matrix::<T>::zeros(n, k_eff.max(1));
+        for i in 0..n {
+            for j in 0..k_eff.max(1).min(rank) {
+                ltrim[(i, j)] = l[(i, j)];
+            }
+        }
+        Self::low_rank(ltrim, sigma2)
+    }
+
+    /// Apply M^{-1} to each row of `r`.
+    pub fn apply_batch(&self, r: &Matrix<T>) -> Matrix<T> {
+        match self {
+            Preconditioner::Identity => r.clone(),
+            Preconditioner::Jacobi { inv_diag } => {
+                let mut out = r.clone();
+                for i in 0..out.rows {
+                    for (x, d) in out.row_mut(i).iter_mut().zip(inv_diag) {
+                        *x *= *d;
+                    }
+                }
+                out
+            }
+            Preconditioner::LowRankPlusNoise { l, sigma2, cap_chol } => {
+                let mut out = Matrix::zeros(r.rows, r.cols);
+                let inv_s2 = T::ONE / *sigma2;
+                for b in 0..r.rows {
+                    let rb = r.row(b);
+                    let lt_r = l.matvec_t(rb); // r-dim
+                    let sol = cap_chol.solve(&lt_r);
+                    let l_sol = l.matvec(&sol);
+                    for ((o, ri), ls) in out.row_mut(b).iter_mut().zip(rb).zip(&l_sol) {
+                        *o = inv_s2 * (*ri - *ls);
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::{assert_close, prop_check};
+
+    #[test]
+    fn prop_woodbury_matches_dense_inverse() {
+        prop_check("woodbury", 91, 15, |g| {
+            let n = g.size(1, 20);
+            let r = g.size(1, n.min(6));
+            let l = Matrix::from_vec(n, r, g.vec_normal(n * r));
+            let sigma2 = g.f64_in(0.1, 2.0);
+            let pre = Preconditioner::low_rank(l.clone(), sigma2);
+            // dense M
+            let mut m = l.matmul(&l.transpose());
+            m.add_diag(sigma2);
+            let rhs = Matrix::from_vec(2, n, g.vec_normal(2 * n));
+            let got = pre.apply_batch(&rhs);
+            let ch = cholesky(&m).ok_or("M not PD")?;
+            for b in 0..2 {
+                let want = ch.solve(rhs.row(b));
+                assert_close(got.row(b), &want, 1e-6)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pivoted_from_columns_matches_direct_pivoted() {
+        prop_check("lazy-pivchol", 97, 10, |g| {
+            let n = g.size(2, 18);
+            let a = g.spd(n);
+            let am = Matrix::from_vec(n, n, a.clone());
+            let diag: Vec<f64> = (0..n).map(|i| am[(i, i)]).collect();
+            let am2 = am.clone();
+            let pre = Preconditioner::<f64>::pivoted_from_columns(
+                diag,
+                move |j| am2.col(j),
+                n,
+                0.5,
+            );
+            // full-rank pivoted chol + noise must invert A + 0.5 I
+            let mut m = am.clone();
+            m.add_diag(0.5);
+            let rhs = Matrix::from_vec(1, n, g.vec_normal(n));
+            let got = pre.apply_batch(&rhs);
+            let ch = cholesky(&m).ok_or("not PD")?;
+            let want = ch.solve(rhs.row(0));
+            assert_close(got.row(0), &want, 1e-5)
+        });
+    }
+
+    #[test]
+    fn jacobi_scales() {
+        let pre = Preconditioner::<f64>::jacobi(&[2.0, 4.0]);
+        let r = Matrix::from_vec(1, 2, vec![2.0, 4.0]);
+        let out = pre.apply_batch(&r);
+        assert_close(out.row(0), &[1.0, 1.0], 1e-12).unwrap();
+    }
+}

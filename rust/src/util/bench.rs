@@ -1,0 +1,166 @@
+//! Benchmark framework for `cargo bench` targets (harness = false;
+//! criterion is not in the offline crate set).
+//!
+//! Auto-calibrates iteration counts to a target measurement time,
+//! reports median / mean / p10-p90 across samples, and supports the
+//! throughput annotations the MVM benches use (FLOP/s, bytes).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement result.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub samples: usize,
+    pub flops: Option<f64>,
+}
+
+impl Measurement {
+    pub fn secs(&self) -> f64 {
+        self.median_ns / 1e9
+    }
+
+    pub fn report(&self) -> String {
+        let human = |ns: f64| {
+            if ns < 1e3 {
+                format!("{ns:.0} ns")
+            } else if ns < 1e6 {
+                format!("{:.2} µs", ns / 1e3)
+            } else if ns < 1e9 {
+                format!("{:.2} ms", ns / 1e6)
+            } else {
+                format!("{:.3} s", ns / 1e9)
+            }
+        };
+        let mut line = format!(
+            "{:<44} {:>12} (mean {:>12}, p10 {:>12}, p90 {:>12}, n={})",
+            self.name,
+            human(self.median_ns),
+            human(self.mean_ns),
+            human(self.p10_ns),
+            human(self.p90_ns),
+            self.samples,
+        );
+        if let Some(f) = self.flops {
+            line += &format!("  [{:.2} GFLOP/s]", f / self.secs() / 1e9);
+        }
+        line
+    }
+}
+
+/// Bench runner with a global time budget per measurement.
+pub struct Bencher {
+    pub sample_target: Duration,
+    pub samples: usize,
+    pub results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            sample_target: Duration::from_millis(200),
+            samples: 7,
+            results: Vec::new(),
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { sample_target: Duration::from_millis(60), samples: 3, results: Vec::new() }
+    }
+
+    /// Measure `f`, auto-calibrating inner iterations.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        self.bench_with_flops(name, None, move || {
+            black_box(f());
+        })
+    }
+
+    /// Measure with a FLOP count per call for throughput reporting.
+    pub fn bench_with_flops(
+        &mut self,
+        name: &str,
+        flops: Option<f64>,
+        mut f: impl FnMut(),
+    ) -> &Measurement {
+        // calibrate: how many inner iters fit the sample target?
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().max(Duration::from_nanos(50));
+        let iters = (self.sample_target.as_nanos() / once.as_nanos()).clamp(1, 1_000_000) as u64;
+
+        let mut times: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            times.push(t.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pick = |q: f64| times[((times.len() - 1) as f64 * q).round() as usize];
+        let m = Measurement {
+            name: name.to_string(),
+            median_ns: pick(0.5),
+            mean_ns: times.iter().sum::<f64>() / times.len() as f64,
+            p10_ns: pick(0.1),
+            p90_ns: pick(0.9),
+            samples: self.samples,
+            flops,
+        };
+        println!("{}", m.report());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Write all results as CSV under results/bench/.
+    pub fn save_csv(&self, stem: &str) {
+        let dir = std::path::Path::new("results/bench");
+        let _ = std::fs::create_dir_all(dir);
+        let mut csv = String::from("name,median_ns,mean_ns,p10_ns,p90_ns,samples\n");
+        for m in &self.results {
+            csv += &format!(
+                "{},{},{},{},{},{}\n",
+                m.name, m.median_ns, m.mean_ns, m.p10_ns, m.p90_ns, m.samples
+            );
+        }
+        let _ = std::fs::write(dir.join(format!("{stem}.csv")), csv);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher::quick();
+        let m = b.bench("noop-sum", || (0..100u64).sum::<u64>());
+        assert!(m.median_ns > 0.0);
+        assert!(m.p10_ns <= m.p90_ns);
+    }
+
+    #[test]
+    fn ordering_sane() {
+        let mut b = Bencher::quick();
+        let fast = b.bench("fast", || black_box(3u64) * 7).median_ns;
+        // black_box the bound so release builds cannot const-fold the loop
+        let slow = b
+            .bench("slow", || {
+                (0..black_box(20_000u64)).fold(0u64, |a, x| a.wrapping_add(x * x))
+            })
+            .median_ns;
+        assert!(slow > fast, "slow={slow} fast={fast}");
+    }
+}

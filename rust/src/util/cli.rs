@@ -1,0 +1,152 @@
+//! Minimal CLI argument parser (no clap offline).
+//!
+//! Supports `lkgp <subcommand> [--flag] [--key value] [positional...]`.
+//! Typed getters with defaults; unknown-flag detection via `finish()`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // --key=value | --key value | --flag
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(key.to_string(), v);
+                } else {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.flags.get(key).cloned()
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.str_opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.str_opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.str_opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        self.str_opt(key).map(|v| v != "false" && v != "0").unwrap_or(false)
+    }
+
+    /// Comma-separated list of floats, e.g. `--ratios 0.1,0.2,0.5`.
+    pub fn f64_list(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        match self.str_opt(key) {
+            Some(v) => v.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Return Err listing any flags that were provided but never read.
+    pub fn finish(&self) -> Result<(), String> {
+        let seen = self.seen.borrow();
+        let unknown: Vec<&String> =
+            self.flags.keys().filter(|k| !seen.contains(k)).collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!(
+                "unknown flags: {}",
+                unknown.iter().map(|s| format!("--{s}")).collect::<Vec<_>>().join(", ")
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        // note: bare flags consume a following bare word as their value,
+        // so positionals go before flags or bare flags go last.
+        let a = parse("experiment pos1 --name fig3 --seeds 5 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("experiment"));
+        assert_eq!(a.str("name", ""), "fig3");
+        assert_eq!(a.usize("seeds", 0), 5);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn eq_style_and_lists() {
+        let a = parse("run --ratios=0.1,0.5,0.9 --lr=0.1");
+        assert_eq!(a.f64_list("ratios", &[]), vec![0.1, 0.5, 0.9]);
+        assert_eq!(a.f64("lr", 0.0), 0.1);
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = parse("run --typo 3");
+        let _ = a.str("name", "");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.usize("iters", 7), 7);
+        assert_eq!(a.f64_list("r", &[0.5]), vec![0.5]);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse("run --offset -3.5");
+        assert_eq!(a.f64("offset", 0.0), -3.5);
+    }
+}

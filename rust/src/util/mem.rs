@@ -1,0 +1,78 @@
+//! Memory accounting.
+//!
+//! Two complementary views, mirroring the paper's Figure 2/3 memory axes:
+//! * `ByteCounter` — analytic bytes for the kernel-matrix representations
+//!   (dense n^2 vs latent-Kronecker p^2 + q^2), the quantity Prop. 3.1
+//!   reasons about;
+//! * `peak_rss_bytes` — process peak RSS from /proc for empirical checks.
+
+/// Analytic byte accounting for matrix storage.
+#[derive(Default, Debug, Clone, Copy)]
+pub struct ByteCounter {
+    pub bytes: u64,
+}
+
+impl ByteCounter {
+    pub fn add_matrix_f32(&mut self, rows: usize, cols: usize) {
+        self.bytes += (rows as u64) * (cols as u64) * 4;
+    }
+
+    pub fn add_vector_f32(&mut self, n: usize) {
+        self.bytes += n as u64 * 4;
+    }
+
+    pub fn mib(&self) -> f64 {
+        self.bytes as f64 / (1024.0 * 1024.0)
+    }
+}
+
+/// Dense kernel-matrix bytes for n observed points (f32).
+pub fn dense_kernel_bytes(n: usize) -> u64 {
+    (n as u64) * (n as u64) * 4
+}
+
+/// Latent-Kronecker kernel bytes for a p x q grid (f32).
+pub fn kron_kernel_bytes(p: usize, q: usize) -> u64 {
+    ((p as u64) * (p as u64) + (q as u64) * (q as u64)) * 4
+}
+
+/// Peak resident set size of this process, in bytes (Linux).
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches(" kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// Current resident set size of this process, in bytes (Linux).
+pub fn current_rss_bytes() -> Option<u64> {
+    let statm = std::fs::read_to_string("/proc/self/statm").ok()?;
+    let pages: u64 = statm.split_whitespace().nth(1)?.parse().ok()?;
+    Some(pages * 4096)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytic_counts() {
+        assert_eq!(dense_kernel_bytes(1000), 4_000_000);
+        assert_eq!(kron_kernel_bytes(100, 10), (10_000 + 100) * 4);
+        let mut c = ByteCounter::default();
+        c.add_matrix_f32(256, 256);
+        assert!((c.mib() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rss_readable() {
+        let peak = peak_rss_bytes().unwrap();
+        let cur = current_rss_bytes().unwrap();
+        assert!(peak > 0 && cur > 0);
+        assert!(peak >= cur / 2, "peak {peak} vs cur {cur}");
+    }
+}

@@ -1,0 +1,18 @@
+//! Hand-rolled substrate utilities.
+//!
+//! The offline vendored crate set has no serde/clap/criterion/proptest/
+//! rand, so the pieces this framework needs are implemented here:
+//! a counter-based RNG, a JSON codec, a CLI argument parser, a markdown/
+//! CSV table writer, wall-clock + peak-memory instrumentation, a mini
+//! property-testing harness, and a benchmark framework used by
+//! `cargo bench` targets (harness = false).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod mem;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod testing;
+pub mod timer;

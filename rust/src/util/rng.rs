@@ -1,0 +1,193 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! PCG64-style generator (xsl-rr output on a 128-bit LCG) seeded via
+//! SplitMix64, plus the distribution helpers the GP stack needs:
+//! standard normals (Box–Muller with caching), Rademacher probes,
+//! permutations, and subset sampling. No external crates.
+
+/// SplitMix64: used to expand a user seed into generator state.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// PCG XSL-RR 128/64 generator. Deterministic across platforms.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u128,
+    inc: u128,
+    cached_normal: Option<f64>,
+}
+
+impl Rng {
+    /// Create a generator from a seed; distinct seeds give independent
+    /// streams (seed also perturbs the stream increment).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let a = splitmix64(&mut sm) as u128;
+        let b = splitmix64(&mut sm) as u128;
+        let c = splitmix64(&mut sm) as u128;
+        let d = splitmix64(&mut sm) as u128;
+        let mut rng = Rng {
+            state: (a << 64) | b,
+            inc: ((c << 64) | d) | 1,
+            cached_normal: None,
+        };
+        rng.next_u64(); // warm up
+        rng
+    }
+
+    /// Derive an independent child stream (for parallel workers/tasks).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self
+            .state
+            .wrapping_mul(0x2360ED051FC65DA44385DF649FCCF645)
+            .wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // multiply-shift; bias is negligible for n << 2^64
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller (second value cached).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.cached_normal.take() {
+            return z;
+        }
+        let (u1, u2) = (self.uniform().max(1e-300), self.uniform());
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.cached_normal = Some(r * s);
+        r * c
+    }
+
+    /// Vector of standard normals.
+    pub fn normals(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// Vector of f32 standard normals (PJRT boundary convenience).
+    pub fn normals_f32(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal() as f32).collect()
+    }
+
+    /// Rademacher (+1/-1) probe vector, as f32.
+    pub fn rademacher_f32(&mut self, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| if self.next_u64() & 1 == 0 { 1.0 } else { -1.0 })
+            .collect()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            v.swap(i, self.below(i + 1));
+        }
+    }
+
+    /// Choose k distinct indices out of n (k <= n), unsorted.
+    pub fn choose(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_give_distinct_streams() {
+        let (mut a, mut b) = (Rng::new(1), Rng::new(2));
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut rng = Rng::new(7);
+        let xs: Vec<f64> = (0..20000).map(|_| rng.uniform()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(3);
+        let xs = rng.normals(40000);
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut rng = Rng::new(11);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            seen[rng.below(10)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn choose_distinct() {
+        let mut rng = Rng::new(5);
+        let mut got = rng.choose(100, 30);
+        got.sort_unstable();
+        got.dedup();
+        assert_eq!(got.len(), 30);
+    }
+
+    #[test]
+    fn rademacher_balanced() {
+        let mut rng = Rng::new(9);
+        let v = rng.rademacher_f32(10000);
+        let sum: f32 = v.iter().sum();
+        assert!(sum.abs() < 300.0);
+        assert!(v.iter().all(|&x| x == 1.0 || x == -1.0));
+    }
+}

@@ -1,0 +1,117 @@
+//! Metric helpers shared by experiments and tests: RMSE, Gaussian NLL,
+//! means/standard errors, and rank aggregation (the "Average Rank"
+//! column of the paper's tables).
+
+/// Root mean squared error.
+pub fn rmse(pred: &[f64], target: &[f64]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = pred.iter().zip(target).map(|(p, t)| (p - t) * (p - t)).sum();
+    (s / pred.len() as f64).sqrt()
+}
+
+/// Mean Gaussian negative log-likelihood with per-point predictive
+/// variance (the paper's NLL metric).
+pub fn gaussian_nll(mean: &[f64], var: &[f64], target: &[f64]) -> f64 {
+    assert_eq!(mean.len(), target.len());
+    assert_eq!(var.len(), target.len());
+    if mean.is_empty() {
+        return 0.0;
+    }
+    let ln2pi = (2.0 * std::f64::consts::PI).ln();
+    let s: f64 = mean
+        .iter()
+        .zip(var)
+        .zip(target)
+        .map(|((m, v), t)| {
+            let v = v.max(1e-12);
+            0.5 * (ln2pi + v.ln() + (t - m) * (t - m) / v)
+        })
+        .sum();
+    s / mean.len() as f64
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+/// Standard error of the mean.
+pub fn sem(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    (variance(xs) / xs.len() as f64).sqrt()
+}
+
+/// `mean ± sem` formatted like the paper's tables.
+pub fn mean_sem_str(xs: &[f64]) -> String {
+    format!("{:.3} ± {:.3}", mean(xs), sem(xs))
+}
+
+/// Ranks (1 = best = smallest) with ties sharing the average rank.
+pub fn ranks(scores: &[f64]) -> Vec<f64> {
+    let n = scores.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    let mut out = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            out[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmse_basics() {
+        assert!((rmse(&[1.0, 2.0], &[1.0, 2.0])).abs() < 1e-12);
+        assert!((rmse(&[0.0, 0.0], &[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nll_matches_closed_form() {
+        // N(0,1) evaluated at 0: 0.5*ln(2*pi)
+        let got = gaussian_nll(&[0.0], &[1.0], &[0.0]);
+        assert!((got - 0.5 * (2.0 * std::f64::consts::PI).ln()).abs() < 1e-12);
+        // wrong confident prediction is penalized more than wide one
+        let tight = gaussian_nll(&[0.0], &[0.01], &[1.0]);
+        let wide = gaussian_nll(&[0.0], &[1.0], &[1.0]);
+        assert!(tight > wide);
+    }
+
+    #[test]
+    fn rank_with_ties() {
+        assert_eq!(ranks(&[0.1, 0.3, 0.1, 0.9]), vec![1.5, 3.0, 1.5, 4.0]);
+    }
+
+    #[test]
+    fn sem_decreases_with_n() {
+        let a = sem(&[1.0, 2.0, 3.0, 4.0]);
+        let b = sem(&[1.0, 2.0, 3.0, 4.0, 1.0, 2.0, 3.0, 4.0]);
+        assert!(b < a);
+    }
+}

@@ -1,0 +1,142 @@
+//! Mini property-testing harness (no proptest offline).
+//!
+//! `prop_check` runs a property over N randomized cases drawn from a
+//! seeded RNG; on failure it reports the failing case index and seed so
+//! the case can be replayed deterministically. `Gen` wraps the RNG with
+//! generators for the shapes/values the numeric property tests need.
+
+use super::rng::Rng;
+
+/// Value generators for property tests.
+pub struct Gen {
+    pub rng: Rng,
+}
+
+impl Gen {
+    pub fn size(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    pub fn vec_normal(&mut self, n: usize) -> Vec<f64> {
+        self.rng.normals(n)
+    }
+
+    pub fn vec_normal_f32(&mut self, n: usize) -> Vec<f32> {
+        self.rng.normals_f32(n)
+    }
+
+    /// Random SPD matrix (row-major n x n): A A^T + n I.
+    pub fn spd(&mut self, n: usize) -> Vec<f64> {
+        let a = self.rng.normals(n * n);
+        let mut out = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += a[i * n + k] * a[j * n + k];
+                }
+                out[i * n + j] = s + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        out
+    }
+
+    /// Random {0,1} mask of length n with roughly `missing` fraction of
+    /// zeros, guaranteed at least one observed entry.
+    pub fn mask(&mut self, n: usize, missing: f64) -> Vec<f64> {
+        let mut m: Vec<f64> = (0..n)
+            .map(|_| if self.rng.uniform() < missing { 0.0 } else { 1.0 })
+            .collect();
+        if m.iter().all(|&x| x == 0.0) {
+            let i = self.rng.below(n);
+            m[i] = 1.0;
+        }
+        m
+    }
+}
+
+/// Run `prop` over `cases` randomized inputs. Panics with replay info on
+/// the first failure. `prop` returns Err(description) to fail.
+pub fn prop_check<F>(name: &str, seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen { rng: Rng::new(case_seed) };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay seed {case_seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two slices are elementwise close (absolute + relative).
+pub fn assert_close(got: &[f64], want: &[f64], tol: f64) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("length mismatch {} vs {}", got.len(), want.len()));
+    }
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let scale = 1.0f64.max(w.abs());
+        if (g - w).abs() > tol * scale {
+            return Err(format!("index {i}: got {g}, want {w} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        prop_check("add-commutes", 1, 50, |g| {
+            let (a, b) = (g.f64_in(-5.0, 5.0), g.f64_in(-5.0, 5.0));
+            assert_close(&[a + b], &[b + a], 1e-15)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn reports_failing_case() {
+        prop_check("always-fails", 2, 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn spd_is_symmetric_positive() {
+        prop_check("spd", 3, 10, |g| {
+            let n = g.size(1, 8);
+            let a = g.spd(n);
+            for i in 0..n {
+                for j in 0..n {
+                    if (a[i * n + j] - a[j * n + i]).abs() > 1e-9 {
+                        return Err("not symmetric".into());
+                    }
+                }
+                if a[i * n + i] <= 0.0 {
+                    return Err("diag not positive".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mask_never_empty() {
+        prop_check("mask", 4, 20, |g| {
+            let n = g.size(1, 50);
+            let m = g.mask(n, 0.99);
+            if m.iter().sum::<f64>() < 1.0 {
+                return Err("all missing".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,102 @@
+//! Wall-clock instrumentation: scoped timers and a named-phase profile
+//! accumulator used by the perf pass (EXPERIMENTS.md §Perf).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Simple scoped stopwatch.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Accumulates wall time per named phase; prints a profile table.
+#[derive(Default, Debug, Clone)]
+pub struct Profile {
+    acc: BTreeMap<String, (Duration, u64)>,
+}
+
+impl Profile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(name, t.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, name: &str, d: Duration) {
+        let e = self.acc.entry(name.to_string()).or_insert((Duration::ZERO, 0));
+        e.0 += d;
+        e.1 += 1;
+    }
+
+    pub fn secs(&self, name: &str) -> f64 {
+        self.acc.get(name).map(|(d, _)| d.as_secs_f64()).unwrap_or(0.0)
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.acc.values().map(|(d, _)| d.as_secs_f64()).sum()
+    }
+
+    pub fn merge(&mut self, other: &Profile) {
+        for (k, (d, n)) in &other.acc {
+            let e = self.acc.entry(k.clone()).or_insert((Duration::ZERO, 0));
+            e.0 += *d;
+            e.1 += n;
+        }
+    }
+
+    /// Render as an aligned text table, descending by total time.
+    pub fn render(&self) -> String {
+        let mut rows: Vec<_> = self.acc.iter().collect();
+        rows.sort_by(|a, b| b.1 .0.cmp(&a.1 .0));
+        let total = self.total_secs().max(1e-12);
+        let mut out = format!("{:<28} {:>10} {:>8} {:>7}\n", "phase", "secs", "calls", "%");
+        for (name, (d, n)) in rows {
+            let s = d.as_secs_f64();
+            out += &format!("{:<28} {:>10.4} {:>8} {:>6.1}%\n", name, s, n, 100.0 * s / total);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_phases() {
+        let mut p = Profile::new();
+        let x: u64 = p.time("work", || (0..1000).sum());
+        assert_eq!(x, 499500);
+        p.add("work", Duration::from_millis(1));
+        assert!(p.secs("work") > 0.0);
+        assert!(p.render().contains("work"));
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = Profile::new();
+        a.add("x", Duration::from_millis(2));
+        let mut b = Profile::new();
+        b.add("x", Duration::from_millis(3));
+        a.merge(&b);
+        assert!((a.secs("x") - 0.005).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,106 @@
+//! End-to-end tests over the full coordinator stack (rust backend —
+//! fast; the PJRT path is covered by pjrt_integration.rs and the
+//! climate_e2e example).
+
+use lkgp::baselines::{BaselineModel, CaGp, Svgp, Vnngp};
+use lkgp::coordinator::ExperimentScale;
+use lkgp::data::climate::ClimateSim;
+use lkgp::data::lcbench::LcBenchSim;
+use lkgp::data::sarcos::SarcosSim;
+use lkgp::gp::lkgp::{Lkgp, LkgpConfig};
+use lkgp::kron::breakeven;
+
+fn quick_cfg(seed: u64) -> LkgpConfig {
+    LkgpConfig {
+        train_iters: 8,
+        n_samples: 8,
+        probes: 4,
+        seed,
+        ..LkgpConfig::default()
+    }
+}
+
+#[test]
+fn lkgp_beats_mean_predictor_on_climate() {
+    let data = ClimateSim::default_temperature(48, 32, 0.3, 0);
+    let fit = Lkgp::fit(&data, quick_cfg(0)).unwrap();
+    let (rmse, nll) = fit.posterior.test_metrics(&data);
+    let (_, y_std) = data.target_stats();
+    assert!(rmse < 0.8 * y_std, "rmse {rmse} vs std {y_std}");
+    assert!(nll.is_finite());
+}
+
+#[test]
+fn lkgp_handles_censored_lcbench_pattern() {
+    let data = LcBenchSim::new(48, 30, 1).generate();
+    let fit = Lkgp::fit(&data, quick_cfg(1)).unwrap();
+    let (train_rmse, _) = fit.posterior.train_metrics(&data);
+    let (test_rmse, _) = fit.posterior.test_metrics(&data);
+    assert!(train_rmse.is_finite() && test_rmse.is_finite());
+    assert!(train_rmse < test_rmse, "exact GP should fit train better");
+}
+
+#[test]
+fn lkgp_multioutput_icm_on_sarcos() {
+    let data = SarcosSim::new(48, 0.25, 2).generate();
+    assert_eq!(data.time_family, "icm");
+    let fit = Lkgp::fit(&data, quick_cfg(2)).unwrap();
+    let (rmse, _) = fit.posterior.test_metrics(&data);
+    let (_, y_std) = data.target_stats();
+    assert!(rmse < 1.5 * y_std, "rmse {rmse} vs {y_std}");
+}
+
+#[test]
+fn all_baselines_run_on_all_dataset_families() {
+    for (name, data) in [
+        ("climate", ClimateSim::default_temperature(24, 16, 0.3, 3)),
+        ("lcbench", LcBenchSim::new(24, 16, 3).generate()),
+        ("sarcos", SarcosSim::new(24, 0.3, 3).generate()),
+    ] {
+        for model in &mut [
+            &mut Svgp::new(16, 2, 0) as &mut dyn BaselineModel,
+            &mut Vnngp::new(8, 2, 0),
+            &mut CaGp::new(8, 2, 0),
+        ] {
+            let fit = model
+                .fit_predict(&data)
+                .unwrap_or_else(|e| panic!("{} on {name}: {e:#}", model.name()));
+            let (rmse, nll) = fit.posterior.test_metrics(&data);
+            assert!(rmse.is_finite() && nll.is_finite(), "{} on {name}", model.name());
+        }
+    }
+}
+
+#[test]
+fn experiment_scales_parse_and_are_consistent() {
+    let s = ExperimentScale::quick();
+    assert!(!s.fig3_ratios.is_empty());
+    // Prop 3.1 consistency at the fig3 scale
+    let g = breakeven::gamma_time(s.fig3_p, 7);
+    assert!(g > 0.0 && g < 1.0);
+}
+
+#[test]
+fn dense_and_kron_agree_on_every_dataset_family() {
+    use lkgp::gp::backend::MvmMode;
+    use lkgp::gp::lkgp::Backend;
+    for data in [
+        ClimateSim::default_temperature(20, 12, 0.3, 4),
+        SarcosSim::new(20, 0.3, 4).generate(),
+    ] {
+        let base = quick_cfg(7);
+        let fk = Lkgp::fit(&data, base.clone()).unwrap();
+        let fd = Lkgp::fit(
+            &data,
+            LkgpConfig { backend: Backend::Rust(MvmMode::DenseMaterialized), ..base },
+        )
+        .unwrap();
+        let (rk, _) = fk.posterior.test_metrics(&data);
+        let (rd, _) = fd.posterior.test_metrics(&data);
+        assert!(
+            (rk - rd).abs() < 0.1 * rk.max(rd) + 1e-3,
+            "{}: kron {rk} vs dense {rd}",
+            data.name
+        );
+    }
+}

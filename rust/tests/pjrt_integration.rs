@@ -1,0 +1,164 @@
+//! Integration tests across the three layers: the PJRT artifacts
+//! (Pallas L1 + JAX L2, AOT-compiled) must agree with the rust-native
+//! backend on every LKGP operation, and a full fit must produce the
+//! same posterior through either path.
+//!
+//! Requires `make artifacts` (tests self-skip when artifacts are absent).
+
+use lkgp::data::synthetic::well_specified;
+use lkgp::gp::backend::{KronBackend, MvmMode, PjrtKronBackend, RustKronBackend};
+use lkgp::gp::lkgp::{Backend, Lkgp, LkgpConfig};
+use lkgp::kernels::ProductGridKernel;
+use lkgp::linalg::Matrix;
+use lkgp::runtime::{Manifest, Runtime};
+use lkgp::util::rng::Rng;
+
+fn artifacts_available() -> bool {
+    Manifest::default_dir().join("manifest.json").exists()
+}
+
+/// Build matched (rust, pjrt) backends on the tiny config with the same
+/// data + hypers installed.
+fn matched_backends(seed: u64) -> Option<(RustKronBackend, PjrtKronBackend, usize, usize)> {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    let rt = Runtime::load_default().unwrap();
+    let cfg = rt.manifest.config("tiny").unwrap().clone();
+    let (p, q, ds) = (cfg.p, cfg.q, cfg.ds);
+    let mut rng = Rng::new(seed);
+    let s = Matrix::from_vec(p, ds, rng.normals(p * ds));
+    let t: Vec<f64> = (0..q).map(|k| k as f64 / (q - 1) as f64).collect();
+    let mask: Vec<f64> =
+        (0..p * q).map(|_| if rng.uniform() < 0.3 { 0.0 } else { 1.0 }).collect();
+    let theta: Vec<f64> = (0..cfg.n_theta).map(|_| 0.2 * rng.normal()).collect();
+    let log_s2 = -1.5;
+
+    let mut rust = RustKronBackend::new(ds, &cfg.kernel_t, q, cfg.probes);
+    rust.set_data(&s, &t, &mask).unwrap();
+    rust.set_hypers(&theta, log_s2).unwrap();
+
+    let mut pjrt = PjrtKronBackend::new(rt, "tiny").unwrap();
+    pjrt.set_data(&s, &t, &mask).unwrap();
+    pjrt.set_hypers(&theta, log_s2).unwrap();
+    Some((rust, pjrt, p, q))
+}
+
+fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+#[test]
+fn system_mvm_agrees() {
+    let Some((mut rust, mut pjrt, p, q)) = matched_backends(1) else { return };
+    let mut rng = Rng::new(99);
+    let v = Matrix::from_vec(3, p * q, rng.normals(3 * p * q));
+    let a = rust.system_mvm(&v).unwrap();
+    let b = pjrt.system_mvm(&v).unwrap();
+    let d = max_abs_diff(&a.data, &b.data);
+    assert!(d < 1e-3, "system_mvm diff {d}");
+}
+
+#[test]
+fn kron_apply_agrees() {
+    let Some((mut rust, mut pjrt, p, q)) = matched_backends(2) else { return };
+    let mut rng = Rng::new(98);
+    let v = Matrix::from_vec(2, p * q, rng.normals(2 * p * q));
+    let a = rust.kron_apply(&v).unwrap();
+    let b = pjrt.kron_apply(&v).unwrap();
+    let d = max_abs_diff(&a.data, &b.data);
+    assert!(d < 1e-3, "kron_apply diff {d}");
+}
+
+#[test]
+fn prior_sample_agrees_on_same_z() {
+    // both backends apply (L_S (x) L_T); same z must give (nearly) the
+    // same sample — Cholesky is deterministic. Jitter conventions match
+    // (1e-4 relative trace) by construction.
+    let Some((mut rust, mut pjrt, p, q)) = matched_backends(3) else { return };
+    let mut rng = Rng::new(97);
+    let z = Matrix::from_vec(2, p * q, rng.normals(2 * p * q));
+    let a = rust.prior_sample(&z).unwrap();
+    let b = pjrt.prior_sample(&z).unwrap();
+    let d = max_abs_diff(&a.data, &b.data);
+    assert!(d < 5e-3, "prior_sample diff {d}");
+}
+
+#[test]
+fn mll_grads_agree() {
+    // The strongest cross-layer check: jax.grad through the Pallas
+    // custom-VJP kernels vs the hand-derived rust gradients.
+    let Some((mut rust, mut pjrt, p, q)) = matched_backends(4) else { return };
+    let probes = rust.probes();
+    let mut rng = Rng::new(96);
+    let mask_mul = |m: &mut Matrix<f64>, rust: &RustKronBackend| {
+        let _ = rust; // mask is in the backends; rebuild here
+        let _ = m;
+    };
+    let _ = mask_mul;
+    // masked vectors: reuse the system diag to find the mask (diag has
+    // +s2 on all coords; kernel part zero at missing)
+    let diag = rust.system_diag();
+    let s2 = (-1.5f64).exp();
+    let mask: Vec<f64> =
+        diag.iter().map(|&d| if (d - s2).abs() < 1e-9 { 0.0 } else { 1.0 }).collect();
+    let mk = |rng: &mut Rng| -> Vec<f64> {
+        rng.normals(p * q).iter().zip(&mask).map(|(x, m)| x * m).collect()
+    };
+    let alpha = mk(&mut rng);
+    let mut w = Matrix::zeros(probes, p * q);
+    let mut z = Matrix::zeros(probes, p * q);
+    for i in 0..probes {
+        w.row_mut(i).copy_from_slice(&mk(&mut rng));
+        z.row_mut(i).copy_from_slice(&mk(&mut rng));
+    }
+    let ga = rust.mll_grads(&alpha, &w, &z).unwrap();
+    let gb = pjrt.mll_grads(&alpha, &w, &z).unwrap();
+    assert_eq!(ga.len(), gb.len());
+    for (i, (x, y)) in ga.iter().zip(&gb).enumerate() {
+        assert!(
+            (x - y).abs() < 1e-2 * (1.0 + x.abs()),
+            "grad[{i}]: rust {x} vs pjrt {y}"
+        );
+    }
+}
+
+#[test]
+fn full_fit_agrees_across_backends() {
+    if !artifacts_available() {
+        return;
+    }
+    let kernel = ProductGridKernel::new(2, "rbf", 8);
+    let data = well_specified(16, 8, 2, &kernel, 0.05, 0.25, 21);
+    let mk_cfg = |backend| LkgpConfig {
+        train_iters: 8,
+        n_samples: 8,
+        probes: 4,
+        seed: 9,
+        backend,
+        ..LkgpConfig::default()
+    };
+    let fit_rust = Lkgp::fit(&data, mk_cfg(Backend::Rust(MvmMode::Kron))).unwrap();
+    let fit_pjrt =
+        Lkgp::fit(&data, mk_cfg(Backend::Pjrt { config: "tiny".into() })).unwrap();
+    // same seeds, same probes: hyperparameter trajectories should track
+    // closely (f32 artifacts vs f64 rust), posterior means close.
+    let scale = fit_rust.posterior.mean.iter().map(|x| x.abs()).fold(0.0, f64::max);
+    let d = max_abs_diff(&fit_rust.posterior.mean, &fit_pjrt.posterior.mean);
+    assert!(d < 0.05 * scale + 0.05, "posterior mean diff {d} (scale {scale})");
+    let (rmse_r, _) = fit_rust.posterior.test_metrics(&data);
+    let (rmse_p, _) = fit_pjrt.posterior.test_metrics(&data);
+    assert!((rmse_r - rmse_p).abs() < 0.2 * rmse_r.max(rmse_p) + 0.02);
+}
+
+#[test]
+fn pjrt_backend_rejects_mismatched_data() {
+    if !artifacts_available() {
+        return;
+    }
+    let rt = Runtime::load_default().unwrap();
+    let mut be = PjrtKronBackend::new(rt, "tiny").unwrap();
+    let s = Matrix::zeros(3, 2); // wrong p
+    assert!(be.set_data(&s, &[0.0; 8], &[1.0; 24]).is_err());
+}
