@@ -1,10 +1,14 @@
 //! Bench: MVM primitives — the Figure-2 companion.
 //!
 //! Dense n x n MVM vs latent-Kronecker MVM (rust backend) vs the
-//! AOT Pallas kron_mvm artifact on the PJRT client, with GFLOP/s.
+//! AOT Pallas kron_mvm artifact on the PJRT client, with GFLOP/s and
+//! the worker-thread count in every row. Machine-readable JSON lands
+//! next to the CSV under results/bench/.
 
 use lkgp::kron::{breakeven, KronOp, MaskedKronSystem};
+use lkgp::linalg::gemm::gemm_flops;
 use lkgp::linalg::Matrix;
+use lkgp::par;
 use lkgp::runtime::{Manifest, Runtime, TensorF32};
 use lkgp::util::bench::{black_box, Bencher};
 use lkgp::util::rng::Rng;
@@ -12,7 +16,10 @@ use lkgp::util::rng::Rng;
 fn main() {
     let mut b = Bencher::default();
     let mut rng = Rng::new(0);
-    println!("# bench_mvm — dense vs latent-Kronecker MVM (Fig. 2)\n");
+    println!(
+        "# bench_mvm — dense vs latent-Kronecker MVM (Fig. 2) [threads={}]\n",
+        par::num_threads()
+    );
 
     for (p, q) in [(64usize, 16usize), (128, 32), (256, 64), (512, 96)] {
         let n = p * q;
@@ -31,6 +38,15 @@ fn main() {
             Some(breakeven::kron_mvm_flops(p, q)),
             || {
                 black_box(sys.apply_batch(&v));
+            },
+        );
+        // the K_SS-side GEMM underneath the Kron MVM, via gemm_flops
+        let t1 = Matrix::from_vec(p, q, rng.normals(p * q));
+        b.bench_with_flops(
+            &format!("gemm/rust {p}x{p}x{q}"),
+            Some(gemm_flops(p, p, q)),
+            || {
+                black_box(sys.op.kss.matmul(&t1));
             },
         );
         if n <= 16384 {
@@ -72,4 +88,5 @@ fn main() {
         println!("(artifacts not built; skipping PJRT series)");
     }
     b.save_csv("bench_mvm");
+    b.save_json("bench_mvm");
 }

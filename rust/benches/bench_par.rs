@@ -1,0 +1,151 @@
+//! Bench: parallel scaling of the compute subsystem (`lkgp::par`).
+//!
+//! Measures the batched Kronecker MVM, the blocked GEMM, and an
+//! end-to-end `Lkgp::fit` on a p=256, q=32 synthetic workload at
+//! 1/2/4/8 worker threads, asserts the MVM outputs and the fit
+//! posterior are bit-identical across thread counts, and writes
+//! `BENCH_par.json` (the machine-readable perf-trajectory seed) plus
+//! the usual results/bench CSV/JSON.
+
+use lkgp::data::synthetic::well_specified;
+use lkgp::gp::lkgp::{Lkgp, LkgpConfig};
+use lkgp::kernels::{ProductGridKernel, RbfArd};
+use lkgp::kron::{breakeven, KronOp, MaskedKronSystem};
+use lkgp::linalg::gemm::gemm_flops;
+use lkgp::linalg::Matrix;
+use lkgp::par;
+use lkgp::util::bench::{black_box, Bencher};
+use lkgp::util::json::Json;
+use lkgp::util::rng::Rng;
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+fn main() {
+    let mut b = Bencher::default();
+    let mut rng = Rng::new(0);
+    println!("# bench_par — thread scaling (cores available: {})\n", cores());
+
+    // ---- batched Kron MVM (p=256, q=32 — the Fig-3 shape) ----
+    let (p, q) = (256usize, 32usize);
+    let n = p * q;
+    let kss = {
+        let a = Matrix::from_vec(p, 3, rng.normals(p * 3));
+        RbfArd::new(3).gram(&a, &a)
+    };
+    let ktt = {
+        let a = Matrix::from_vec(q, 1, rng.normals(q));
+        RbfArd::new(1).gram(&a, &a)
+    };
+    let sys = MaskedKronSystem::new(KronOp::new(kss, ktt), vec![1.0; n], 0.1);
+    let batch = 8usize;
+    let v = Matrix::from_vec(batch, n, rng.normals(batch * n));
+    let mut mvm_ref: Option<Vec<u64>> = None;
+    for &t in &THREADS {
+        let out = par::with_threads(t, || {
+            b.bench_with_flops(
+                &format!("kron_mvm p={p} q={q} batch={batch} threads={t}"),
+                Some(batch as f64 * breakeven::kron_mvm_flops(p, q)),
+                || {
+                    black_box(sys.apply_batch(&v));
+                },
+            );
+            sys.apply_batch(&v)
+        });
+        let bits: Vec<u64> = out.data.iter().map(|x| x.to_bits()).collect();
+        match &mvm_ref {
+            None => mvm_ref = Some(bits),
+            Some(want) => assert_eq!(want, &bits, "kron MVM not bit-identical at t={t}"),
+        }
+    }
+    println!();
+
+    // ---- blocked GEMM ----
+    let (gm, gk, gn) = (384usize, 384, 384);
+    let ga = Matrix::from_vec(gm, gk, rng.normals(gm * gk));
+    let gb = Matrix::from_vec(gk, gn, rng.normals(gk * gn));
+    for &t in &THREADS {
+        par::with_threads(t, || {
+            b.bench_with_flops(
+                &format!("gemm {gm}x{gk}x{gn} threads={t}"),
+                Some(gemm_flops(gm, gk, gn)),
+                || {
+                    black_box(ga.matmul(&gb));
+                },
+            );
+        });
+    }
+    println!();
+
+    // ---- end-to-end fit (p=256, q=32 synthetic workload) ----
+    let kernel = ProductGridKernel::new(2, "rbf", q);
+    let data = well_specified(p, q, 2, &kernel, 0.05, 0.25, 7);
+    let cfg = LkgpConfig {
+        train_iters: 3,
+        n_samples: 16,
+        probes: 4,
+        cg_max_iters: 100,
+        seed: 11,
+        ..LkgpConfig::default()
+    };
+    let mut fit_rows = Vec::new();
+    let mut fit_base = f64::NAN;
+    let mut post_ref: Option<(Vec<u64>, Vec<u64>)> = None;
+    for &t in &THREADS {
+        let (secs, fit) = par::with_threads(t, || {
+            // one warm-up fit, then keep the faster of two timed runs
+            let _ = Lkgp::fit(&data, cfg.clone()).unwrap();
+            let mut best = f64::INFINITY;
+            let mut last = None;
+            for _ in 0..2 {
+                let t0 = std::time::Instant::now();
+                let fit = Lkgp::fit(&data, cfg.clone()).unwrap();
+                best = best.min(t0.elapsed().as_secs_f64());
+                last = Some(fit);
+            }
+            (best, last.unwrap())
+        });
+        if t == 1 {
+            fit_base = secs;
+        }
+        let bits = (
+            fit.posterior.mean.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            fit.posterior.var.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        );
+        let identical = match &post_ref {
+            None => {
+                post_ref = Some(bits);
+                true
+            }
+            Some(want) => *want == bits,
+        };
+        assert!(identical, "fit posterior not bit-identical at t={t}");
+        let speedup = fit_base / secs;
+        println!(
+            "fit/e2e p={p} q={q} threads={t}: {secs:.3}s  speedup {speedup:.2}x  \
+             bit-identical: {identical}"
+        );
+        fit_rows.push(Json::obj(vec![
+            ("name", Json::Str(format!("fit/e2e p={p} q={q}"))),
+            ("threads", Json::Num(t as f64)),
+            ("secs", Json::Num(secs)),
+            ("speedup_vs_1", Json::Num(speedup)),
+            ("bit_identical", Json::Bool(identical)),
+        ]));
+    }
+
+    // machine-readable perf trajectory seed
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("bench_par".to_string())),
+        ("cores", Json::Num(cores() as f64)),
+        ("micro", b.to_json()),
+        ("fit", Json::Arr(fit_rows)),
+    ]);
+    let _ = std::fs::write("BENCH_par.json", format!("{doc}\n"));
+    b.save_csv("bench_par");
+    b.save_json("bench_par");
+    println!("\nwrote BENCH_par.json + results/bench/bench_par.{{csv,json}}");
+}

@@ -65,14 +65,51 @@ pub trait KronBackend {
 }
 
 /// Adapter: use a backend as a CG operator.
-pub struct SystemOp<'a, B: KronBackend>(pub &'a mut B);
+///
+/// `BatchedOp::apply_batch` is infallible by contract, but backend MVMs
+/// (notably PJRT execution) can fail mid-solve. Instead of panicking,
+/// the first failure is parked in an error slot, `BatchedOp::failed`
+/// reports it so `solve_cg` stops at its next check, and the caller
+/// surfaces the error through [`SystemOp::take_err`] after the solve —
+/// see `gp/lkgp.rs`.
+pub struct SystemOp<'a, B: KronBackend> {
+    be: &'a mut B,
+    err: Option<anyhow::Error>,
+}
+
+impl<'a, B: KronBackend> SystemOp<'a, B> {
+    pub fn new(be: &'a mut B) -> Self {
+        SystemOp { be, err: None }
+    }
+
+    /// Return the first backend error observed during the solve, if any.
+    /// Must be called after `solve_cg` for failures to propagate.
+    pub fn take_err(&mut self) -> Result<()> {
+        match self.err.take() {
+            Some(e) => Err(e.context("backend MVM failed during CG solve")),
+            None => Ok(()),
+        }
+    }
+}
 
 impl<'a, B: KronBackend> BatchedOp<f64> for SystemOp<'a, B> {
     fn dim(&self) -> usize {
-        self.0.dim()
+        self.be.dim()
     }
     fn apply_batch(&mut self, v: &Matrix<f64>) -> Matrix<f64> {
-        self.0.system_mvm(v).expect("backend MVM failed")
+        if self.err.is_some() {
+            return Matrix::zeros(v.rows, v.cols);
+        }
+        match self.be.system_mvm(v) {
+            Ok(out) => out,
+            Err(e) => {
+                self.err = Some(e);
+                Matrix::zeros(v.rows, v.cols)
+            }
+        }
+    }
+    fn failed(&self) -> bool {
+        self.err.is_some()
     }
 }
 
@@ -171,19 +208,20 @@ impl KronBackend for RustKronBackend {
         self.dense = None;
         if self.mode == MvmMode::DenseMaterialized {
             // n x n observed Gram in f32 (what the standard iterative
-            // baseline stores on the GPU)
+            // baseline stores on the GPU); rows built in parallel
             let sys = self.sys.as_ref().unwrap();
             let n = self.obs_idx.len();
             let q = sys.op.q();
             let mut dense = Matrix::<f32>::zeros(n, n);
-            for (a, &ia) in self.obs_idx.iter().enumerate() {
+            let obs = &self.obs_idx;
+            crate::par::par_chunks_mut(&mut dense.data, n.max(1), |a, row| {
+                let ia = obs[a];
                 let (sa, ta) = (ia / q, ia % q);
-                for (b, &ib) in self.obs_idx.iter().enumerate() {
+                for (x, &ib) in row.iter_mut().zip(obs.iter()) {
                     let (sb, tb) = (ib / q, ib % q);
-                    dense[(a, b)] =
-                        (sys.op.kss[(sa, sb)] * sys.op.ktt[(ta, tb)]) as f32;
+                    *x = (sys.op.kss[(sa, sb)] * sys.op.ktt[(ta, tb)]) as f32;
                 }
-            }
+            });
             self.kernel_evals = (n * n) as u64;
             self.dense = Some(dense);
         }
@@ -196,27 +234,27 @@ impl KronBackend for RustKronBackend {
             MvmMode::DenseMaterialized => {
                 let dense = self.dense.as_ref().context("dense gram")?;
                 let s2 = self.log_sigma2.exp();
+                let obs = &self.obs_idx;
                 let mut out = Matrix::zeros(v.rows, v.cols);
-                for b in 0..v.rows {
-                    let vo = self.gather(v.row(b));
-                    let vo32: Vec<f32> = vo.iter().map(|&x| x as f32).collect();
-                    let mut acc = vec![0.0f64; vo.len()];
-                    for i in 0..dense.rows {
+                // batch rows are independent systems: one worker per row
+                // (gather -> f32 dense MVM -> scatter -> +sigma2 v)
+                crate::par::par_chunks_mut(&mut out.data, v.cols.max(1), |b, orow| {
+                    let vrow = v.row(b);
+                    let vo32: Vec<f32> = obs.iter().map(|&i| vrow[i] as f32).collect();
+                    for (i, &io) in obs.iter().enumerate() {
                         let row = dense.row(i);
                         let mut sum = 0.0f32;
                         for (k, x) in row.iter().zip(&vo32) {
                             sum += k * x;
                         }
-                        acc[i] = sum as f64;
+                        orow[io] = sum as f64;
                     }
-                    let mut padded = self.scatter(&acc);
                     // sigma2 acts on all padded coords (same convention
                     // as the kron system operator)
-                    for (o, vi) in padded.iter_mut().zip(v.row(b)) {
+                    for (o, vi) in orow.iter_mut().zip(vrow) {
                         *o += s2 * vi;
                     }
-                    out.row_mut(b).copy_from_slice(&padded);
-                }
+                });
                 Ok(out)
             }
             MvmMode::DenseLazy { block_rows } => {
@@ -237,7 +275,9 @@ impl KronBackend for RustKronBackend {
                     vo.row_mut(b).copy_from_slice(&self.gather(v.row(b)));
                 }
                 let (r, evals) = op.apply_batch(&vo);
-                self.kernel_evals += evals * v.rows as u64;
+                // evals counts actual entry evaluations: each block is
+                // materialized once and shared across all batch rows
+                self.kernel_evals += evals;
                 for b in 0..v.rows {
                     let mut padded = self.scatter(r.row(b));
                     for (o, vi) in padded.iter_mut().zip(v.row(b)) {

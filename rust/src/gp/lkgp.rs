@@ -18,7 +18,7 @@ use anyhow::{Context, Result};
 use crate::data::GridDataset;
 use crate::linalg::Matrix;
 use crate::runtime::Runtime;
-use crate::solvers::cg::{solve_cg, CgOptions};
+use crate::solvers::cg::{solve_cg, CgOptions, CgStats};
 use crate::solvers::precond::Preconditioner;
 use crate::util::rng::Rng;
 use crate::util::timer::Profile;
@@ -194,8 +194,12 @@ fn fit_with_backend<B: KronBackend>(
             rhs.row_mut(1 + i).copy_from_slice(z_probes.row(i));
         }
         let pre = prof.time("precond", || build_precond(be, cfg.precond_rank, log_s2.exp()));
-        let (sol, stats) =
-            prof.time("cg_solve", || solve_cg(&mut SystemOp(be), &rhs, &pre, &cg_opts));
+        let (sol, stats) = prof.time("cg_solve", || -> Result<(Matrix<f64>, CgStats)> {
+            let mut op = SystemOp::new(be);
+            let out = solve_cg(&mut op, &rhs, &pre, &cg_opts);
+            op.take_err()?;
+            Ok(out)
+        })?;
         cg_iters_total += stats.iters;
         mvm_total += stats.mvm_count;
         alpha.copy_from_slice(sol.row(0));
@@ -242,32 +246,58 @@ fn fit_with_backend<B: KronBackend>(
         let b = chunk.min(nsamp - done);
         let z = Matrix::from_vec(b, pq, rng.normals(b * pq));
         let f_prior = prof.time("prior_sample", || be.prior_sample(&z))?;
-        // rhs = M (y - f - eps)
+        // rhs = M (y - f - eps). Per-row noise streams are forked from
+        // the master rng *sequentially*, then rows are assembled in
+        // parallel from the independent streams — deterministic for any
+        // thread count.
+        let row_rngs: Vec<Rng> = (0..b).map(|r| rng.fork(r as u64)).collect();
+        let sigma = sigma2.sqrt();
         let mut rhs = Matrix::zeros(b, pq);
-        for r in 0..b {
-            for c in 0..pq {
-                let eps = sigma2.sqrt() * rng.normal();
-                rhs[(r, c)] = mask[c] * (y[c] - f_prior[(r, c)] - eps);
-            }
-        }
-        let (v, stats) =
-            prof.time("cg_sample", || solve_cg(&mut SystemOp(be), &rhs, &pre, &cg_opts));
+        prof.time("rhs_assemble", || {
+            crate::par::par_chunks_mut(&mut rhs.data, pq, |r, row| {
+                let mut noise = row_rngs[r].clone();
+                for (c, x) in row.iter_mut().enumerate() {
+                    let eps = sigma * noise.normal();
+                    *x = mask[c] * (y[c] - f_prior[(r, c)] - eps);
+                }
+            });
+        });
+        let (v, stats) = prof.time("cg_sample", || -> Result<(Matrix<f64>, CgStats)> {
+            let mut op = SystemOp::new(be);
+            let out = solve_cg(&mut op, &rhs, &pre, &cg_opts);
+            op.take_err()?;
+            Ok(out)
+        })?;
         mvm_total += stats.mvm_count;
         // f_post = f_prior + (K (x) K) M v
         let mut vm = v;
-        for r in 0..b {
-            for (x, m) in vm.row_mut(r).iter_mut().zip(&mask) {
+        crate::par::par_chunks_mut_cheap(&mut vm.data, pq, |_, row| {
+            for (x, m) in row.iter_mut().zip(&mask) {
                 *x *= *m;
             }
-        }
+        });
         let kv = prof.time("predict_apply", || be.kron_apply(&vm))?;
-        for r in 0..b {
-            for c in 0..pq {
-                let f = f_prior[(r, c)] + kv[(r, c)];
-                mean_acc[c] += f;
-                var_acc[c] += f * f;
-            }
-        }
+        // accumulate pathwise moments per grid cell in parallel; the
+        // per-cell reduction over sample rows runs in a fixed order, so
+        // the posterior is bit-identical for any thread count
+        prof.time("var_accum", || {
+            let block = 1024usize;
+            crate::par::par_zip_mut(&mut mean_acc, &mut var_acc, block, |ci, mseg, vseg| {
+                let base = ci * block;
+                for (off, (ma, va)) in mseg.iter_mut().zip(vseg.iter_mut()).enumerate() {
+                    let c = base + off;
+                    let mut msum = 0.0;
+                    let mut vsum = 0.0;
+                    for r in 0..b {
+                        let f = f_prior[(r, c)] + kv[(r, c)];
+                        msum += f;
+                        vsum += f * f;
+                    }
+                    *ma += msum;
+                    *va += vsum;
+                }
+            });
+        });
         done += b;
     }
     let mut mean = vec![0.0; pq];

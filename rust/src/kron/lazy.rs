@@ -17,7 +17,7 @@ pub struct LazyGramOp<F> {
     pub sigma2: f64,
 }
 
-impl<F: Fn(usize, usize) -> f64> LazyGramOp<F> {
+impl<F: Fn(usize, usize) -> f64 + Sync> LazyGramOp<F> {
     pub fn new(n: usize, block_rows: usize, entry: F, sigma2: f64) -> Self {
         LazyGramOp { n, block_rows: block_rows.max(1), entry, sigma2 }
     }
@@ -25,31 +25,42 @@ impl<F: Fn(usize, usize) -> f64> LazyGramOp<F> {
     /// (K + sigma2 I) V^T for batched RHS rows of `v`, materializing only
     /// one row block of K at a time. Also returns the number of kernel
     /// evaluations performed (the Fig-2 bookkeeping).
+    ///
+    /// Both halves of each block step run on the `crate::par` pool with
+    /// disjoint writes: kernel rows of the block are materialized in
+    /// parallel (this is the dominant cost in the out-of-memory Fig-2
+    /// regime), then each batch row's partial MVM over the block is
+    /// computed in parallel across batch rows.
     pub fn apply_batch<T: Scalar>(&self, v: &Matrix<T>) -> (Matrix<T>, u64) {
         assert_eq!(v.cols, self.n);
-        let mut out = Matrix::<T>::zeros(v.rows, self.n);
+        let n = self.n;
+        let mut out = Matrix::<T>::zeros(v.rows, n);
         let mut evals = 0u64;
-        let mut block = vec![0.0f64; self.block_rows * self.n];
-        for i0 in (0..self.n).step_by(self.block_rows) {
-            let i1 = (i0 + self.block_rows).min(self.n);
-            // materialize rows [i0, i1)
-            for i in i0..i1 {
-                for j in 0..self.n {
-                    block[(i - i0) * self.n + j] = (self.entry)(i, j);
+        let mut block = vec![0.0f64; self.block_rows * n];
+        for i0 in (0..n).step_by(self.block_rows) {
+            let i1 = (i0 + self.block_rows).min(n);
+            let rows = i1 - i0;
+            // materialize rows [i0, i1), one kernel row per task
+            crate::par::par_chunks_mut(&mut block[..rows * n], n, |r, brow| {
+                let i = i0 + r;
+                for (j, x) in brow.iter_mut().enumerate() {
+                    *x = (self.entry)(i, j);
                 }
-            }
-            evals += ((i1 - i0) * self.n) as u64;
-            for b in 0..v.rows {
+            });
+            evals += (rows * n) as u64;
+            // partial MVM: each batch row owns its output row
+            let block_ref = &block;
+            crate::par::par_chunks_mut(&mut out.data, n, |b, orow| {
                 let vrow = v.row(b);
                 for i in i0..i1 {
-                    let krow = &block[(i - i0) * self.n..(i - i0 + 1) * self.n];
+                    let krow = &block_ref[(i - i0) * n..(i - i0 + 1) * n];
                     let mut acc = 0.0f64;
                     for (kij, vj) in krow.iter().zip(vrow) {
                         acc += *kij * vj.to_f64();
                     }
-                    out[(b, i)] = T::from_f64(acc + self.sigma2 * vrow[i].to_f64());
+                    orow[i] = T::from_f64(acc + self.sigma2 * vrow[i].to_f64());
                 }
-            }
+            });
         }
         (out, evals)
     }

@@ -45,24 +45,29 @@ impl<T: Scalar> KronOp<T> {
     /// out[b] = vec(K_SS @ unvec(v[b]) @ K_TT^T).
     /// Cost O(b (p^2 q + p q^2)) — the headline complexity reduction.
     ///
-    /// Perf note: a whole-batch two-GEMM rewrite (the Pallas artifact's
-    /// schedule) was tried and reverted — on this scalar backend the
-    /// block-transposes cost more than the GEMM batching saves (20.1ms
-    /// vs 8.3ms at p=512, q=96; see EXPERIMENTS.md §Perf). The per-row
-    /// form keeps both halves on blocked kernels with zero reshuffling.
+    /// Parallel schedule: batch rows are embarrassingly parallel, so
+    /// they are distributed across the `crate::par` worker pool (one
+    /// output row per task, contiguous row groups per worker). For a
+    /// single-row batch the fan-out happens *inside* the two blocked
+    /// GEMMs instead — nested regions collapse, so exactly one level
+    /// ever spawns. Either way each output element is produced by one
+    /// worker with a fixed reduction order, so the result is
+    /// bit-identical for any `LKGP_THREADS` (see
+    /// rust/tests/par_invariance.rs). The per-row two-GEMM form keeps
+    /// both halves on blocked kernels with zero reshuffling.
     pub fn apply_batch(&self, v: &Matrix<T>) -> Matrix<T> {
         let (p, q) = (self.p(), self.q());
         assert_eq!(v.cols, p * q, "grid vector length");
         let mut out = Matrix::zeros(v.rows, p * q);
-        for b in 0..v.rows {
+        crate::par::par_chunks_mut(&mut out.data, p * q, |b, orow| {
             let vb = Matrix { rows: p, cols: q, data: v.row(b).to_vec() };
             // T1 = V @ K_TT^T  (p x q), via dot-product form
             let t1 = matmul_nt(&vb, &self.ktt);
             // out_b = K_SS @ T1 (p x q)
-            let mut ob = Matrix { rows: p, cols: q, data: out.row(b).to_vec() };
+            let mut ob = Matrix { rows: p, cols: q, data: vec![T::ZERO; p * q] };
             matmul_acc(&self.kss, &t1, &mut ob);
-            out.row_mut(b).copy_from_slice(&ob.data);
-        }
+            orow.copy_from_slice(&ob.data);
+        });
         out
     }
 
@@ -126,55 +131,60 @@ impl<T: Scalar> MaskedKronSystem<T> {
         self.op.dim()
     }
 
+    /// System MVM `M (K (x) K) M v + D v`, batched over rows of `v`.
+    /// The mask/noise sweeps are parallelized over batch rows (disjoint
+    /// row writes); the Kronecker apply parallelizes internally.
     pub fn apply_batch(&self, v: &Matrix<T>) -> Matrix<T> {
+        let cols = v.cols;
         let mut masked = v.clone();
-        for i in 0..masked.rows {
-            for (x, m) in masked.row_mut(i).iter_mut().zip(&self.mask) {
+        crate::par::par_chunks_mut_cheap(&mut masked.data, cols.max(1), |_, row| {
+            for (x, m) in row.iter_mut().zip(&self.mask) {
                 *x *= *m;
             }
-        }
+        });
         let mut kv = self.op.apply_batch(&masked);
-        for i in 0..kv.rows {
-            let row = kv.row_mut(i);
-            let vrow = v.row(i);
+        crate::par::par_chunks_mut_cheap(&mut kv.data, cols.max(1), |b, row| {
+            let vrow = v.row(b);
             for (idx, ((x, m), v0)) in
                 row.iter_mut().zip(&self.mask).zip(vrow).enumerate()
             {
                 *x = *x * *m + self.noise_at(idx) * *v0;
             }
-        }
+        });
         kv
     }
 
     /// Diagonal of the system matrix (for Jacobi preconditioning):
     /// diag = mask * diag(K_SS) (x) diag(K_TT) + sigma2.
+    /// Parallelized over the p spatial blocks (q entries each).
     pub fn diag(&self) -> Vec<T> {
         let (p, q) = (self.op.p(), self.op.q());
-        let mut d = Vec::with_capacity(p * q);
-        for j in 0..p {
+        let mut d = vec![T::ZERO; p * q];
+        crate::par::par_chunks_mut_cheap(&mut d, q.max(1), |j, seg| {
             let ds = self.op.kss[(j, j)];
-            for k in 0..q {
+            for (k, out) in seg.iter_mut().enumerate() {
                 let idx = j * q + k;
-                d.push(self.mask[idx] * ds * self.op.ktt[(k, k)] + self.noise_at(idx));
+                *out = self.mask[idx] * ds * self.op.ktt[(k, k)] + self.noise_at(idx);
             }
-        }
+        });
         d
     }
 
     /// One column of the *observed-space padded* kernel matrix
     /// M (K (x) K) M (no noise), for lazy pivoted Cholesky.
+    /// Parallelized over the p spatial blocks (q entries each).
     pub fn kernel_col(&self, idx: usize) -> Vec<T> {
         let (p, q) = (self.op.p(), self.op.q());
         let (j0, k0) = (idx / q, idx % q);
-        let mut col = Vec::with_capacity(p * q);
         let mcol = self.mask[idx];
-        for j in 0..p {
+        let mut col = vec![T::ZERO; p * q];
+        crate::par::par_chunks_mut_cheap(&mut col, q.max(1), |j, seg| {
             let ks = self.op.kss[(j, j0)];
-            for k in 0..q {
+            for (k, out) in seg.iter_mut().enumerate() {
                 let v = ks * self.op.ktt[(k, k0)];
-                col.push(v * self.mask[j * q + k] * mcol);
+                *out = v * self.mask[j * q + k] * mcol;
             }
-        }
+        });
         col
     }
 }

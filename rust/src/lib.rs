@@ -14,6 +14,12 @@
 //!
 //! Python never runs on the request path: once `make artifacts` has
 //! produced `artifacts/*.hlo.txt`, the `lkgp` binary is self-contained.
+//!
+//! The whole inference hot path (blocked GEMM, Kronecker MVMs, dense
+//! baselines, preconditioner construction, pathwise sampling) is
+//! multithreaded through the [`par`] worker-pool subsystem
+//! (`LKGP_THREADS`, default = available cores) with bit-identical
+//! results for any thread count.
 
 pub mod baselines;
 pub mod coordinator;
@@ -23,6 +29,7 @@ pub mod kernels;
 pub mod kron;
 pub mod linalg;
 pub mod optim;
+pub mod par;
 pub mod runtime;
 pub mod solvers;
 pub mod util;

@@ -1,15 +1,26 @@
-//! Blocked GEMM for row-major matrices.
+//! Blocked, multithreaded GEMM for row-major matrices.
 //!
-//! Single-threaded, cache-blocked i-k-j kernel: the innermost loop is a
-//! contiguous fused multiply-add over the output row, which LLVM
-//! auto-vectorizes. This is the dense-baseline hot path the Fig-2/Fig-3
+//! Cache-blocked i-k-j kernels whose innermost loops are contiguous
+//! fused multiply-adds over the output row (LLVM auto-vectorizes them),
+//! parallelized over disjoint output row blocks via `crate::par`. Block
+//! boundaries depend only on the matrix shape and `MC` — never on the
+//! thread count — and each block is written by exactly one worker with
+//! a fixed k-order, so results are bit-identical for any
+//! `LKGP_THREADS`. This is the dense-baseline hot path the Fig-2/Fig-3
 //! comparisons run on, so it gets its own module + perf tests.
 
 use super::matrix::{Matrix, Scalar};
+use crate::par;
 
-/// Cache block sizes (rows of A, columns of B, inner depth).
+/// Cache block sizes (rows of A, inner depth).
 const MC: usize = 64;
 const KC: usize = 256;
+
+/// Below this many FLOPs a GEMM runs sequentially: thread spawn/join
+/// costs tens of microseconds, which only pays off once the product is
+/// a few hundred thousand FLOPs. Sequential and parallel paths are
+/// bit-identical, so this is purely a scheduling decision.
+const PAR_MIN_FLOPS: f64 = 2.5e5;
 
 /// C = A @ B.
 pub fn matmul<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>) -> Matrix<T> {
@@ -18,79 +29,134 @@ pub fn matmul<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>) -> Matrix<T> {
     c
 }
 
-/// C += A @ B (C must be a.rows x b.cols).
+/// C += A @ B (C must be a.rows x b.cols). MC-row blocks of C are
+/// distributed across the worker pool.
 pub fn matmul_acc<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, c: &mut Matrix<T>) {
     assert_eq!(a.cols, b.rows, "inner dims {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
     assert_eq!((c.rows, c.cols), (a.rows, b.cols));
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    for i0 in (0..m).step_by(MC) {
-        let i1 = (i0 + MC).min(m);
-        for k0 in (0..k).step_by(KC) {
-            let k1 = (k0 + KC).min(k);
-            // 2x register blocking over A rows: each B row loaded from
-            // cache feeds two output rows (perf pass: +20-30% on the
-            // K_SS @ T1 half of the Kron MVM).
-            let mut i = i0;
-            while i + 1 < i1 {
-                let (c_lo, c_hi) = c.data.split_at_mut((i + 1) * n);
-                let crow0 = &mut c_lo[i * n..];
-                let crow1 = &mut c_hi[..n];
-                let arow0 = &a.data[i * k..(i + 1) * k];
-                let arow1 = &a.data[(i + 1) * k..(i + 2) * k];
-                for kk in k0..k1 {
-                    let (a0, a1) = (arow0[kk], arow1[kk]);
-                    if a0 == T::ZERO && a1 == T::ZERO {
-                        continue;
-                    }
-                    let brow = &b.data[kk * n..(kk + 1) * n];
-                    for ((c0, c1), bv) in
-                        crow0.iter_mut().zip(crow1.iter_mut()).zip(brow)
-                    {
-                        *c0 += a0 * *bv;
-                        *c1 += a1 * *bv;
-                    }
+    let n = b.cols;
+    if c.data.is_empty() {
+        return;
+    }
+    if gemm_flops(a.rows, a.cols, n) < PAR_MIN_FLOPS {
+        for (ib, cblock) in c.data.chunks_mut(MC * n).enumerate() {
+            matmul_block_acc(a, b, ib * MC, cblock);
+        }
+        return;
+    }
+    par::par_chunks_mut(&mut c.data, MC * n, |ib, cblock| {
+        matmul_block_acc(a, b, ib * MC, cblock);
+    });
+}
+
+/// One MC-row block of `matmul_acc`: C[i0.., :] += A[i0.., :] @ B, with
+/// 2x register blocking over A rows — each B row loaded from cache
+/// feeds two output rows (perf pass: +20-30% on the K_SS @ T1 half of
+/// the Kron MVM).
+fn matmul_block_acc<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, i0: usize, cblock: &mut [T]) {
+    let (k, n) = (a.cols, b.cols);
+    let rows = cblock.len() / n;
+    let i1 = i0 + rows;
+    for k0 in (0..k).step_by(KC) {
+        let k1 = (k0 + KC).min(k);
+        let mut i = i0;
+        while i + 1 < i1 {
+            let li = i - i0;
+            let (c_lo, c_hi) = cblock.split_at_mut((li + 1) * n);
+            let crow0 = &mut c_lo[li * n..];
+            let crow1 = &mut c_hi[..n];
+            let arow0 = &a.data[i * k..(i + 1) * k];
+            let arow1 = &a.data[(i + 1) * k..(i + 2) * k];
+            for kk in k0..k1 {
+                let (a0, a1) = (arow0[kk], arow1[kk]);
+                if a0 == T::ZERO && a1 == T::ZERO {
+                    continue;
                 }
-                i += 2;
-            }
-            while i < i1 {
-                let arow = &a.data[i * k..(i + 1) * k];
-                let crow = &mut c.data[i * n..(i + 1) * n];
-                for kk in k0..k1 {
-                    let aik = arow[kk];
-                    if aik == T::ZERO {
-                        continue;
-                    }
-                    let brow = &b.data[kk * n..(kk + 1) * n];
-                    // contiguous axpy over the output row — vectorizes
-                    for (cv, bv) in crow.iter_mut().zip(brow) {
-                        *cv += aik * *bv;
-                    }
+                let brow = &b.data[kk * n..(kk + 1) * n];
+                for ((c0, c1), bv) in
+                    crow0.iter_mut().zip(crow1.iter_mut()).zip(brow)
+                {
+                    *c0 += a0 * *bv;
+                    *c1 += a1 * *bv;
                 }
-                i += 1;
             }
+            i += 2;
+        }
+        while i < i1 {
+            let li = i - i0;
+            let arow = &a.data[i * k..(i + 1) * k];
+            let crow = &mut cblock[li * n..(li + 1) * n];
+            for kk in k0..k1 {
+                let aik = arow[kk];
+                if aik == T::ZERO {
+                    continue;
+                }
+                let brow = &b.data[kk * n..(kk + 1) * n];
+                // contiguous axpy over the output row — vectorizes
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += aik * *bv;
+                }
+            }
+            i += 1;
         }
     }
 }
 
 /// C = A @ B^T without materializing the transpose (dot-product form,
-/// both operand rows contiguous). Used by kernel Gram construction.
+/// both operand rows contiguous), register-blocked 1x4 over B rows and
+/// parallelized over output rows. Used by kernel Gram construction and
+/// the V @ K_TT^T half of the Kron MVM.
 pub fn matmul_nt<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>) -> Matrix<T> {
     assert_eq!(a.cols, b.cols, "inner dims for A B^T");
-    let (m, n, _k) = (a.rows, b.rows, a.cols);
+    let (m, n) = (a.rows, b.rows);
     let mut c = Matrix::zeros(m, n);
-    for i in 0..m {
-        let arow = a.row(i);
-        let crow = c.row_mut(i);
-        for j in 0..n {
-            let brow = b.row(j);
-            let mut acc = T::ZERO;
-            for (x, y) in arow.iter().zip(brow) {
-                acc += *x * *y;
-            }
-            crow[j] = acc;
-        }
+    if m == 0 || n == 0 {
+        return c;
     }
+    if gemm_flops(m, a.cols, n) < PAR_MIN_FLOPS {
+        for (i, crow) in c.data.chunks_mut(n).enumerate() {
+            matmul_nt_row(a, b, i, crow);
+        }
+        return c;
+    }
+    par::par_chunks_mut(&mut c.data, n, |i, crow| {
+        matmul_nt_row(a, b, i, crow);
+    });
     c
+}
+
+/// One output row of `matmul_nt`: four dot products march down the A
+/// row together, so each A element loaded from registers feeds four
+/// outputs. Per-output accumulation runs in fixed ascending k-order, so
+/// the result matches the scalar dot product bit-for-bit.
+fn matmul_nt_row<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, i: usize, crow: &mut [T]) {
+    let arow = a.row(i);
+    let n = b.rows;
+    let mut j = 0;
+    while j + 4 <= n {
+        let (b0, b1, b2, b3) = (b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3));
+        let (mut s0, mut s1, mut s2, mut s3) = (T::ZERO, T::ZERO, T::ZERO, T::ZERO);
+        for (idx, x) in arow.iter().enumerate() {
+            s0 += *x * b0[idx];
+            s1 += *x * b1[idx];
+            s2 += *x * b2[idx];
+            s3 += *x * b3[idx];
+        }
+        crow[j] = s0;
+        crow[j + 1] = s1;
+        crow[j + 2] = s2;
+        crow[j + 3] = s3;
+        j += 4;
+    }
+    while j < n {
+        let brow = b.row(j);
+        let mut acc = T::ZERO;
+        for (x, y) in arow.iter().zip(brow) {
+            acc += *x * *y;
+        }
+        crow[j] = acc;
+        j += 1;
+    }
 }
 
 /// FLOP count of an (m x k) @ (k x n) product, for throughput reports.

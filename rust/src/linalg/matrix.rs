@@ -3,10 +3,13 @@
 use std::fmt;
 use std::ops::{Index, IndexMut};
 
-/// Floating-point scalar abstraction (f32 | f64).
+/// Floating-point scalar abstraction (f32 | f64). `Send + Sync` so
+/// matrices over any scalar can cross the `crate::par` worker pool.
 pub trait Scalar:
     Copy
     + PartialOrd
+    + Send
+    + Sync
     + fmt::Debug
     + fmt::Display
     + std::ops::Add<Output = Self>

@@ -1,0 +1,454 @@
+//! Dependency-free data-parallel compute subsystem.
+//!
+//! A scoped worker pool (`std::thread::scope`) behind a global
+//! [`Parallelism`] configuration: the thread count comes from the
+//! `LKGP_THREADS` environment variable (read once, at first use),
+//! defaulting to the number of available cores; [`set_threads`]
+//! overrides it process-wide and [`with_threads`] overrides it for one
+//! scope on the calling thread.
+//!
+//! Every helper splits work over *disjoint* output chunks whose
+//! boundaries depend only on the problem shape (never on the thread
+//! count), and each chunk is written by exactly one worker with a fixed
+//! sequential reduction order. Parallel results are therefore
+//! **bit-identical for any thread count** — the invariant the whole
+//! inference hot path relies on, asserted end-to-end by
+//! `rust/tests/par_invariance.rs`.
+//!
+//! Nested parallel regions collapse: work spawned from inside a pool
+//! worker runs inline on that worker. This prevents oversubscription
+//! (e.g. a batched Kron MVM parallelized over batch rows calling the
+//! parallel GEMM per row) while letting single-row calls still fan out
+//! at the inner level.
+
+use std::cell::Cell;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-wide thread-count override (0 = derive from the environment
+/// on first use).
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Per-thread override installed by [`with_threads`] (0 = unset).
+    static TL_THREADS: Cell<usize> = Cell::new(0);
+    /// True while the current thread is executing inside a pool worker.
+    static IN_POOL: Cell<bool> = Cell::new(false);
+}
+
+/// Snapshot of the effective parallelism configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Parallelism {
+    /// Worker threads a new parallel region may use.
+    pub threads: usize,
+}
+
+impl Parallelism {
+    /// Resolve the currently effective configuration: a [`with_threads`]
+    /// scope wins over [`set_threads`], which wins over `LKGP_THREADS`,
+    /// which wins over the detected core count.
+    pub fn current() -> Self {
+        Parallelism { threads: num_threads() }
+    }
+}
+
+fn detected_cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+fn env_threads() -> usize {
+    match std::env::var("LKGP_THREADS") {
+        Ok(s) => match s.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => detected_cores(),
+        },
+        Err(_) => detected_cores(),
+    }
+}
+
+/// Effective worker count for new parallel regions on this thread.
+pub fn num_threads() -> usize {
+    let tl = TL_THREADS.with(|c| c.get());
+    if tl != 0 {
+        return tl;
+    }
+    let g = GLOBAL_THREADS.load(Ordering::Relaxed);
+    if g != 0 {
+        return g;
+    }
+    let n = env_threads();
+    GLOBAL_THREADS.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Set the process-wide thread count (overrides `LKGP_THREADS`).
+pub fn set_threads(n: usize) {
+    GLOBAL_THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Run `f` with the calling thread's parallelism pinned to `n` —
+/// a scoped override used by benches and the invariance tests. The
+/// previous value is restored even if `f` panics.
+pub fn with_threads<T>(n: usize, f: impl FnOnce() -> T) -> T {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            let prev = self.0;
+            TL_THREADS.with(|c| c.set(prev));
+        }
+    }
+    let prev = TL_THREADS.with(|c| {
+        let p = c.get();
+        c.set(n.max(1));
+        p
+    });
+    let _restore = Restore(prev);
+    f()
+}
+
+/// RAII marker: the current thread is a pool worker, so nested parallel
+/// regions must run inline.
+struct PoolGuard {
+    prev: bool,
+}
+
+impl PoolGuard {
+    fn enter() -> Self {
+        let prev = IN_POOL.with(|c| {
+            let p = c.get();
+            c.set(true);
+            p
+        });
+        PoolGuard { prev }
+    }
+}
+
+impl Drop for PoolGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        IN_POOL.with(|c| c.set(prev));
+    }
+}
+
+/// Worker count for a region with `work_items` independent items:
+/// 1 inside an existing pool worker (no nesting), otherwise
+/// `min(num_threads(), work_items)`.
+fn pool_width(work_items: usize) -> usize {
+    if work_items <= 1 || IN_POOL.with(|c| c.get()) {
+        1
+    } else {
+        num_threads().min(work_items)
+    }
+}
+
+/// Run `f(worker)` on `nt` workers; worker 0 runs on the calling thread.
+fn run_pool<F: Fn(usize) + Sync>(nt: usize, f: F) {
+    if nt <= 1 {
+        f(0);
+        return;
+    }
+    std::thread::scope(|s| {
+        for w in 1..nt {
+            let fr = &f;
+            s.spawn(move || {
+                let _in_pool = PoolGuard::enter();
+                fr(w);
+            });
+        }
+        let _in_pool = PoolGuard::enter();
+        f(0);
+    });
+}
+
+/// Split `0..n` into one contiguous range per worker and run `f` on each
+/// range in parallel. The range boundaries depend on the thread count,
+/// so `f` must compute each index independently (no cross-index
+/// accumulation) for results to stay thread-count invariant.
+pub fn par_rows<F>(n: usize, f: F)
+where
+    F: Fn(Range<usize>) + Sync,
+{
+    let nt = pool_width(n);
+    if nt <= 1 {
+        if n > 0 {
+            f(0..n);
+        }
+        return;
+    }
+    let per = (n + nt - 1) / nt;
+    run_pool(nt, |w| {
+        let lo = w * per;
+        let hi = ((w + 1) * per).min(n);
+        if lo < hi {
+            f(lo..hi);
+        }
+    });
+}
+
+/// Below this many total elements, a cheap elementwise sweep is not
+/// worth spawning for: thread spawn/join costs tens of microseconds
+/// while the sweep costs nanoseconds per element. Only used by
+/// [`par_chunks_mut_cheap`]; heavy per-element work (dot products, RNG
+/// draws, GEMM blocks) should use [`par_chunks_mut`] directly.
+pub const CHEAP_SWEEP_MIN: usize = 1 << 14;
+
+/// Split `data` into contiguous segments of `per` whole chunks each,
+/// tagged with the index of their first chunk. Shared by
+/// [`par_chunks_mut`] / [`par_zip_mut`] so the chunk->segment mapping
+/// cannot diverge between them.
+fn split_segments<T>(data: &mut [T], chunk_len: usize, per: usize) -> Vec<(usize, &mut [T])> {
+    let seg_elems = per * chunk_len;
+    let mut segments = Vec::new();
+    let mut rest = data;
+    let mut chunk0 = 0usize;
+    while !rest.is_empty() {
+        let take = seg_elems.min(rest.len());
+        let (seg, tail) = std::mem::take(&mut rest).split_at_mut(take);
+        segments.push((chunk0, seg));
+        rest = tail;
+        chunk0 += per;
+    }
+    segments
+}
+
+/// Process disjoint `chunk_len`-sized chunks of `data` in parallel:
+/// `f(chunk_index, chunk)`. Chunk boundaries depend only on `chunk_len`
+/// (the tail chunk may be short) and each chunk is written by exactly
+/// one worker, so output bits never depend on the thread count.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    let n_chunks = (data.len() + chunk_len - 1) / chunk_len;
+    let nt = pool_width(n_chunks);
+    if nt <= 1 {
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    // contiguous blocks of whole chunks per worker
+    let per = (n_chunks + nt - 1) / nt;
+    let segments = split_segments(data, chunk_len, per);
+    std::thread::scope(|s| {
+        let fr = &f;
+        let mut iter = segments.into_iter();
+        let head = iter.next();
+        for (c0, seg) in iter {
+            s.spawn(move || {
+                let _in_pool = PoolGuard::enter();
+                for (i, chunk) in seg.chunks_mut(chunk_len).enumerate() {
+                    fr(c0 + i, chunk);
+                }
+            });
+        }
+        if let Some((c0, seg)) = head {
+            let _in_pool = PoolGuard::enter();
+            for (i, chunk) in seg.chunks_mut(chunk_len).enumerate() {
+                fr(c0 + i, chunk);
+            }
+        }
+    });
+}
+
+/// Like [`par_chunks_mut`] but stays sequential below
+/// [`CHEAP_SWEEP_MIN`] total elements — for cheap elementwise sweeps
+/// (mask multiplies, diagonal fills) where thread spawn/join would
+/// dominate the work. The sequential and parallel paths are bit-exact
+/// identical, so this is purely a scheduling decision.
+pub fn par_chunks_mut_cheap<T, F>(data: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.len() < CHEAP_SWEEP_MIN {
+        if data.is_empty() {
+            return;
+        }
+        assert!(chunk_len > 0, "chunk_len must be positive");
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    par_chunks_mut(data, chunk_len, f);
+}
+
+/// Like [`par_chunks_mut`] over two equal-length slices split at the
+/// same chunk boundaries: `f(chunk_index, a_chunk, b_chunk)`.
+pub fn par_zip_mut<A, B, F>(a: &mut [A], b: &mut [B], chunk_len: usize, f: F)
+where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &mut [A], &mut [B]) + Sync,
+{
+    assert_eq!(a.len(), b.len(), "par_zip_mut slices must have equal length");
+    if a.is_empty() {
+        return;
+    }
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    let n_chunks = (a.len() + chunk_len - 1) / chunk_len;
+    let nt = pool_width(n_chunks);
+    if nt <= 1 {
+        for (i, (ca, cb)) in a.chunks_mut(chunk_len).zip(b.chunks_mut(chunk_len)).enumerate() {
+            f(i, ca, cb);
+        }
+        return;
+    }
+    let per = (n_chunks + nt - 1) / nt;
+    let seg_a = split_segments(a, chunk_len, per);
+    let seg_b = split_segments(b, chunk_len, per);
+    let segments: Vec<(usize, &mut [A], &mut [B])> = seg_a
+        .into_iter()
+        .zip(seg_b)
+        .map(|((c0, sa), (_, sb))| (c0, sa, sb))
+        .collect();
+    std::thread::scope(|s| {
+        let fr = &f;
+        let mut iter = segments.into_iter();
+        let head = iter.next();
+        for (c0, sa, sb) in iter {
+            s.spawn(move || {
+                let _in_pool = PoolGuard::enter();
+                for (i, (ca, cb)) in
+                    sa.chunks_mut(chunk_len).zip(sb.chunks_mut(chunk_len)).enumerate()
+                {
+                    fr(c0 + i, ca, cb);
+                }
+            });
+        }
+        if let Some((c0, sa, sb)) = head {
+            let _in_pool = PoolGuard::enter();
+            for (i, (ca, cb)) in
+                sa.chunks_mut(chunk_len).zip(sb.chunks_mut(chunk_len)).enumerate()
+            {
+                fr(c0 + i, ca, cb);
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn with_threads_scopes_override() {
+        let outside = num_threads();
+        with_threads(3, || assert_eq!(num_threads(), 3));
+        assert_eq!(num_threads(), outside);
+    }
+
+    #[test]
+    fn parallelism_reports_current() {
+        with_threads(5, || assert_eq!(Parallelism::current().threads, 5));
+    }
+
+    #[test]
+    fn par_rows_covers_all_indices_once() {
+        for &t in &[1usize, 2, 5] {
+            with_threads(t, || {
+                let n = 103;
+                let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                par_rows(n, |range| {
+                    for i in range {
+                        hits[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+                assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+            });
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_indices_and_values() {
+        for &t in &[1usize, 2, 8] {
+            with_threads(t, || {
+                let mut data = vec![0usize; 25];
+                par_chunks_mut(&mut data, 4, |ci, chunk| {
+                    for (off, x) in chunk.iter_mut().enumerate() {
+                        *x = ci * 4 + off;
+                    }
+                });
+                let want: Vec<usize> = (0..25).collect();
+                assert_eq!(data, want);
+            });
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_handles_empty_and_tail() {
+        let mut empty: Vec<u8> = vec![];
+        par_chunks_mut(&mut empty, 4, |_, _| panic!("no chunks expected"));
+        with_threads(4, || {
+            let mut data = vec![0u8; 5]; // 2 chunks, short tail
+            par_chunks_mut(&mut data, 3, |ci, chunk| {
+                for x in chunk.iter_mut() {
+                    *x = ci as u8 + 1;
+                }
+            });
+            assert_eq!(data, vec![1, 1, 1, 2, 2]);
+        });
+    }
+
+    #[test]
+    fn cheap_variant_matches_parallel_below_and_above_threshold() {
+        for &len in &[100usize, CHEAP_SWEEP_MIN + 5] {
+            with_threads(4, || {
+                let mut a = vec![0usize; len];
+                let mut b = vec![0usize; len];
+                par_chunks_mut_cheap(&mut a, 7, |ci, chunk| {
+                    for (off, x) in chunk.iter_mut().enumerate() {
+                        *x = ci * 7 + off;
+                    }
+                });
+                par_chunks_mut(&mut b, 7, |ci, chunk| {
+                    for (off, x) in chunk.iter_mut().enumerate() {
+                        *x = ci * 7 + off;
+                    }
+                });
+                assert_eq!(a, b);
+            });
+        }
+    }
+
+    #[test]
+    fn par_zip_mut_splits_consistently() {
+        for &t in &[1usize, 4] {
+            with_threads(t, || {
+                let mut a = vec![0u32; 17];
+                let mut b = vec![0u32; 17];
+                par_zip_mut(&mut a, &mut b, 3, |ci, ca, cb| {
+                    for (off, (x, y)) in ca.iter_mut().zip(cb.iter_mut()).enumerate() {
+                        *x = (ci * 3 + off) as u32;
+                        *y = *x * 2;
+                    }
+                });
+                for i in 0..17 {
+                    assert_eq!(a[i], i as u32);
+                    assert_eq!(b[i], 2 * i as u32);
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn nested_regions_run_inline() {
+        with_threads(4, || {
+            par_rows(4, |range| {
+                for _ in range {
+                    // inside a worker the nested width must collapse to 1
+                    assert_eq!(super::pool_width(128), 1);
+                }
+            });
+            // back outside the pool, width is restored
+            assert_eq!(super::pool_width(128), 4);
+        });
+    }
+}

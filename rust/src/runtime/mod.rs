@@ -9,6 +9,10 @@
 //! is decomposed into the artifact's outputs.
 
 pub mod manifest;
+/// PJRT bindings: an in-tree stub with the real crate's signatures (the
+/// offline build has no `xla` dependency; see xla.rs to swap in the
+/// real bindings).
+mod xla;
 
 use std::collections::HashMap;
 use std::path::Path;

@@ -16,6 +16,14 @@ use super::precond::Preconditioner;
 pub trait BatchedOp<T: Scalar> {
     fn dim(&self) -> usize;
     fn apply_batch(&mut self, v: &Matrix<T>) -> Matrix<T>;
+    /// Operators whose applies can fail mid-solve (e.g. a PJRT backend,
+    /// see `gp::backend::SystemOp`) report it here so the solver stops
+    /// iterating instead of spinning on degenerate products; the caller
+    /// is responsible for surfacing the underlying error after the
+    /// solve returns.
+    fn failed(&self) -> bool {
+        false
+    }
 }
 
 impl<T: Scalar, O: BatchedOp<T> + ?Sized> BatchedOp<T> for &mut O {
@@ -24,6 +32,9 @@ impl<T: Scalar, O: BatchedOp<T> + ?Sized> BatchedOp<T> for &mut O {
     }
     fn apply_batch(&mut self, v: &Matrix<T>) -> Matrix<T> {
         (**self).apply_batch(v)
+    }
+    fn failed(&self) -> bool {
+        (**self).failed()
     }
 }
 
@@ -112,6 +123,9 @@ pub fn solve_cg<T: Scalar>(
 
         let ap = op.apply_batch(&p);
         stats.mvm_count += 1;
+        if op.failed() {
+            break; // operator failure: stop, caller surfaces the error
+        }
         let pap = dot_rows(&p, &ap);
         for sys in 0..nsys {
             if !active[sys] || pap[sys].abs() < 1e-300 {
@@ -155,6 +169,28 @@ mod tests {
     use super::*;
     use crate::solvers::precond::Preconditioner;
     use crate::util::testing::{assert_close, prop_check};
+
+    #[test]
+    fn failed_operator_stops_after_one_mvm() {
+        struct FailingOp;
+        impl BatchedOp<f64> for FailingOp {
+            fn dim(&self) -> usize {
+                8
+            }
+            fn apply_batch(&mut self, v: &Matrix<f64>) -> Matrix<f64> {
+                Matrix::zeros(v.rows, v.cols)
+            }
+            fn failed(&self) -> bool {
+                true
+            }
+        }
+        let b = Matrix::from_vec(1, 8, vec![1.0; 8]);
+        let (x, stats) =
+            solve_cg(&mut FailingOp, &b, &Preconditioner::Identity, &CgOptions::default());
+        assert!(!stats.converged);
+        assert_eq!(stats.mvm_count, 1);
+        assert!(x.data.iter().all(|&v| v == 0.0));
+    }
 
     #[test]
     fn prop_cg_solves_spd_systems() {

@@ -38,12 +38,20 @@ impl<T: Scalar> Preconditioner<T> {
     /// Build from a lazily-evaluated kernel: greedy pivoted Cholesky
     /// using only the kernel diagonal and single columns (never the full
     /// matrix) — O(n r^2) work, O(n r) memory.
+    ///
+    /// Pivot selection is inherently sequential, but each column update
+    /// sweeps n rows; those rows are split across the `crate::par`
+    /// worker pool (disjoint row blocks, fixed per-row reduction order,
+    /// so the factor is bit-identical for any thread count). The
+    /// `col` oracle itself typically parallelizes internally too (e.g.
+    /// `MaskedKronSystem::kernel_col`).
     pub fn pivoted_from_columns(
         diag_no_noise: Vec<f64>,
         col: impl Fn(usize) -> Vec<T>,
         rank: usize,
         sigma2: f64,
     ) -> Self {
+        const ROW_BLOCK: usize = 256;
         let n = diag_no_noise.len();
         let rank = rank.min(n);
         let mut d = diag_no_noise;
@@ -66,22 +74,45 @@ impl<T: Scalar> Preconditioner<T> {
             used[piv] = true;
             let s = dmax.sqrt();
             let a_col = col(piv);
-            for i in 0..n {
-                if i == piv {
-                    l[(i, k)] = T::from_f64(s);
-                    continue;
+            // L[piv, ..k] is read by every row update; snapshot it once
+            let lpiv: Vec<f64> = (0..k).map(|j| l[(piv, j)].to_f64()).collect();
+            let mut newcol = vec![T::ZERO; n];
+            {
+                let lref = &l;
+                let usedref = &used;
+                let a_ref = &a_col;
+                let update = |ci: usize, cseg: &mut [T], dseg: &mut [f64]| {
+                    let base = ci * ROW_BLOCK;
+                    for (off, (cv, dv)) in cseg.iter_mut().zip(dseg.iter_mut()).enumerate() {
+                        let i = base + off;
+                        if i == piv {
+                            *cv = T::from_f64(s);
+                            continue;
+                        }
+                        if usedref[i] {
+                            *cv = T::ZERO;
+                            continue;
+                        }
+                        let mut acc = a_ref[i].to_f64();
+                        for (j, lp) in lpiv.iter().enumerate() {
+                            acc -= lref[(i, j)].to_f64() * lp;
+                        }
+                        let v = acc / s;
+                        *cv = T::from_f64(v);
+                        *dv = (*dv - v * v).max(0.0);
+                    }
+                };
+                // early columns do ~n*k flops — below spawn cost, run
+                // inline (one whole-slice "chunk 0" is bit-identical to
+                // the chunked parallel sweep)
+                if n * (k + 1) < 1 << 17 {
+                    update(0, &mut newcol, &mut d);
+                } else {
+                    crate::par::par_zip_mut(&mut newcol, &mut d, ROW_BLOCK, &update);
                 }
-                if used[i] {
-                    l[(i, k)] = T::ZERO;
-                    continue;
-                }
-                let mut acc = a_col[i].to_f64();
-                for j in 0..k {
-                    acc -= l[(i, j)].to_f64() * l[(piv, j)].to_f64();
-                }
-                let v = acc / s;
-                l[(i, k)] = T::from_f64(v);
-                d[i] = (d[i] - v * v).max(0.0);
+            }
+            for (i, cv) in newcol.iter().enumerate() {
+                l[(i, k)] = *cv;
             }
             d[piv] = 0.0;
             k_eff = k + 1;
@@ -96,31 +127,35 @@ impl<T: Scalar> Preconditioner<T> {
         Self::low_rank(ltrim, sigma2)
     }
 
-    /// Apply M^{-1} to each row of `r`.
+    /// Apply M^{-1} to each row of `r`. Rows are independent systems,
+    /// so they are distributed across the worker pool (each row's solve
+    /// runs internally sequential — thread-count invariant).
     pub fn apply_batch(&self, r: &Matrix<T>) -> Matrix<T> {
         match self {
             Preconditioner::Identity => r.clone(),
             Preconditioner::Jacobi { inv_diag } => {
                 let mut out = r.clone();
-                for i in 0..out.rows {
-                    for (x, d) in out.row_mut(i).iter_mut().zip(inv_diag) {
+                let cols = out.cols;
+                crate::par::par_chunks_mut_cheap(&mut out.data, cols.max(1), |_, row| {
+                    for (x, d) in row.iter_mut().zip(inv_diag) {
                         *x *= *d;
                     }
-                }
+                });
                 out
             }
             Preconditioner::LowRankPlusNoise { l, sigma2, cap_chol } => {
                 let mut out = Matrix::zeros(r.rows, r.cols);
                 let inv_s2 = T::ONE / *sigma2;
-                for b in 0..r.rows {
+                let cols = r.cols;
+                crate::par::par_chunks_mut(&mut out.data, cols.max(1), |b, orow| {
                     let rb = r.row(b);
                     let lt_r = l.matvec_t(rb); // r-dim
                     let sol = cap_chol.solve(&lt_r);
                     let l_sol = l.matvec(&sol);
-                    for ((o, ri), ls) in out.row_mut(b).iter_mut().zip(rb).zip(&l_sol) {
+                    for ((o, ri), ls) in orow.iter_mut().zip(rb).zip(&l_sol) {
                         *o = inv_s2 * (*ri - *ls);
                     }
-                }
+                });
                 out
             }
         }

@@ -7,6 +7,8 @@
 
 use std::time::{Duration, Instant};
 
+use super::json::Json;
+
 /// One benchmark measurement result.
 #[derive(Debug, Clone)]
 pub struct Measurement {
@@ -17,6 +19,8 @@ pub struct Measurement {
     pub p90_ns: f64,
     pub samples: usize,
     pub flops: Option<f64>,
+    /// worker threads in effect (`crate::par`) when the measurement ran
+    pub threads: usize,
 }
 
 impl Measurement {
@@ -37,13 +41,14 @@ impl Measurement {
             }
         };
         let mut line = format!(
-            "{:<44} {:>12} (mean {:>12}, p10 {:>12}, p90 {:>12}, n={})",
+            "{:<44} {:>12} (mean {:>12}, p10 {:>12}, p90 {:>12}, n={}, t={})",
             self.name,
             human(self.median_ns),
             human(self.mean_ns),
             human(self.p10_ns),
             human(self.p90_ns),
             self.samples,
+            self.threads,
         );
         if let Some(f) = self.flops {
             line += &format!("  [{:.2} GFLOP/s]", f / self.secs() / 1e9);
@@ -118,6 +123,7 @@ impl Bencher {
             p90_ns: pick(0.9),
             samples: self.samples,
             flops,
+            threads: crate::par::num_threads(),
         };
         println!("{}", m.report());
         self.results.push(m);
@@ -128,20 +134,73 @@ impl Bencher {
     pub fn save_csv(&self, stem: &str) {
         let dir = std::path::Path::new("results/bench");
         let _ = std::fs::create_dir_all(dir);
-        let mut csv = String::from("name,median_ns,mean_ns,p10_ns,p90_ns,samples\n");
+        let mut csv = String::from("name,median_ns,mean_ns,p10_ns,p90_ns,samples,threads\n");
         for m in &self.results {
             csv += &format!(
-                "{},{},{},{},{},{}\n",
-                m.name, m.median_ns, m.mean_ns, m.p10_ns, m.p90_ns, m.samples
+                "{},{},{},{},{},{},{}\n",
+                m.name, m.median_ns, m.mean_ns, m.p10_ns, m.p90_ns, m.samples, m.threads
             );
         }
         let _ = std::fs::write(dir.join(format!("{stem}.csv")), csv);
+    }
+
+    /// All results as a JSON array — the machine-readable companion of
+    /// the printed table (threads and achieved GFLOP/s included).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.results
+                .iter()
+                .map(|m| {
+                    let mut kv = vec![
+                        ("name", Json::Str(m.name.clone())),
+                        ("median_ns", Json::Num(m.median_ns)),
+                        ("mean_ns", Json::Num(m.mean_ns)),
+                        ("p10_ns", Json::Num(m.p10_ns)),
+                        ("p90_ns", Json::Num(m.p90_ns)),
+                        ("samples", Json::Num(m.samples as f64)),
+                        ("threads", Json::Num(m.threads as f64)),
+                    ];
+                    if let Some(fl) = m.flops {
+                        kv.push(("flops", Json::Num(fl)));
+                        kv.push(("gflops_per_s", Json::Num(fl / m.secs() / 1e9)));
+                    }
+                    Json::obj(kv)
+                })
+                .collect(),
+        )
+    }
+
+    /// Write results as JSON to an explicit path.
+    pub fn save_json_to(&self, path: &std::path::Path) {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+        }
+        let _ = std::fs::write(path, format!("{}\n", self.to_json()));
+    }
+
+    /// Write results as JSON under results/bench/ (next to the CSV).
+    pub fn save_json(&self, stem: &str) {
+        self.save_json_to(&std::path::Path::new("results/bench").join(format!("{stem}.json")));
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_roundtrip_includes_threads_and_gflops() {
+        let mut b = Bencher::quick();
+        b.bench_with_flops("with-flops", Some(1e6), || {
+            black_box((0..100u64).sum::<u64>());
+        });
+        let parsed = crate::util::json::Json::parse(&b.to_json().to_string()).unwrap();
+        let first = &parsed.as_arr().unwrap()[0];
+        assert!(first.get("threads").and_then(|t| t.as_f64()).unwrap() >= 1.0);
+        assert!(first.get("gflops_per_s").is_some());
+    }
 
     #[test]
     fn measures_something() {

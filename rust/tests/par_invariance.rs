@@ -1,0 +1,133 @@
+//! Thread-count invariance: every parallel kernel in the inference hot
+//! path must produce *bit-identical* results for any `LKGP_THREADS`.
+//! The `crate::par` helpers guarantee this by construction (chunk
+//! boundaries depend only on the problem shape; each output element is
+//! written by exactly one worker with a fixed sequential reduction
+//! order) — these tests assert it end-to-end, from the GEMM primitives
+//! up through a full `Lkgp::fit` posterior.
+
+use lkgp::data::synthetic::well_specified;
+use lkgp::gp::lkgp::{Lkgp, LkgpConfig};
+use lkgp::kernels::ProductGridKernel;
+use lkgp::kron::{KronOp, MaskedKronSystem};
+use lkgp::linalg::gemm::{matmul, matmul_nt};
+use lkgp::linalg::Matrix;
+use lkgp::par::with_threads;
+use lkgp::util::rng::Rng;
+use lkgp::util::testing::{prop_check, Gen};
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn gemm_bit_identical_across_thread_counts() {
+    let mut rng = Rng::new(1);
+    // sizes straddle the MC=64 block boundary and the 1x4 nt blocking
+    let a = Matrix::from_vec(130, 70, rng.normals(130 * 70));
+    let b = Matrix::from_vec(70, 65, rng.normals(70 * 65));
+    let bt = b.transpose();
+    let want = with_threads(1, || (matmul(&a, &b), matmul_nt(&a, &bt)));
+    for t in [2usize, 3, 8] {
+        let got = with_threads(t, || (matmul(&a, &b), matmul_nt(&a, &bt)));
+        assert_eq!(bits(&want.0.data), bits(&got.0.data), "matmul differs at t={t}");
+        assert_eq!(bits(&want.1.data), bits(&got.1.data), "matmul_nt differs at t={t}");
+    }
+}
+
+#[test]
+fn prop_kron_apply_bit_identical_across_thread_counts() {
+    prop_check("kron-thread-invariance", 7151, 10, |g: &mut Gen| {
+        let (p, q, bsz) = (g.size(1, 24), g.size(1, 12), g.size(1, 6));
+        let op = KronOp::new(
+            Matrix::from_vec(p, p, g.spd(p)),
+            Matrix::from_vec(q, q, g.spd(q)),
+        );
+        let mask = g.mask(p * q, 0.3);
+        let sys = MaskedKronSystem::new(op.clone(), mask, 0.21);
+        let v = Matrix::from_vec(bsz, p * q, g.vec_normal(bsz * p * q));
+        let base = with_threads(1, || {
+            (op.apply_batch(&v), sys.apply_batch(&v), sys.diag(), sys.kernel_col(0))
+        });
+        for t in [2usize, 5] {
+            let got = with_threads(t, || {
+                (op.apply_batch(&v), sys.apply_batch(&v), sys.diag(), sys.kernel_col(0))
+            });
+            if bits(&base.0.data) != bits(&got.0.data) {
+                return Err(format!("KronOp::apply_batch differs at t={t}"));
+            }
+            if bits(&base.1.data) != bits(&got.1.data) {
+                return Err(format!("MaskedKronSystem::apply_batch differs at t={t}"));
+            }
+            if bits(&base.2) != bits(&got.2) {
+                return Err(format!("diag differs at t={t}"));
+            }
+            if bits(&base.3) != bits(&got.3) {
+                return Err(format!("kernel_col differs at t={t}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn full_fit_posterior_bit_identical_across_thread_counts() {
+    let kernel = ProductGridKernel::new(2, "rbf", 8);
+    let data = well_specified(16, 8, 2, &kernel, 0.05, 0.3, 9);
+    let cfg = LkgpConfig {
+        train_iters: 4,
+        n_samples: 8,
+        probes: 4,
+        precond_rank: 20, // exercise the parallel pivoted-Cholesky path
+        seed: 3,
+        ..LkgpConfig::default()
+    };
+    let f1 = with_threads(1, || Lkgp::fit(&data, cfg.clone()).unwrap());
+    for t in [2usize, 4, 8] {
+        let ft = with_threads(t, || Lkgp::fit(&data, cfg.clone()).unwrap());
+        assert_eq!(
+            bits(&f1.posterior.mean),
+            bits(&ft.posterior.mean),
+            "posterior mean differs at t={t}"
+        );
+        assert_eq!(
+            bits(&f1.posterior.var),
+            bits(&ft.posterior.var),
+            "posterior var differs at t={t}"
+        );
+        assert_eq!(f1.loss_trace.len(), ft.loss_trace.len());
+        for (a, b) in f1.loss_trace.iter().zip(&ft.loss_trace) {
+            assert_eq!(a.to_bits(), b.to_bits(), "loss trace differs at t={t}");
+        }
+    }
+}
+
+#[test]
+fn dense_baseline_modes_bit_identical_across_thread_counts() {
+    use lkgp::gp::backend::MvmMode;
+    use lkgp::gp::lkgp::Backend;
+    let kernel = ProductGridKernel::new(2, "rbf", 6);
+    let data = well_specified(12, 6, 2, &kernel, 0.05, 0.3, 5);
+    for mode in [MvmMode::DenseMaterialized, MvmMode::DenseLazy { block_rows: 5 }] {
+        let cfg = LkgpConfig {
+            train_iters: 2,
+            n_samples: 4,
+            probes: 2,
+            seed: 1,
+            backend: Backend::Rust(mode.clone()),
+            ..LkgpConfig::default()
+        };
+        let f1 = with_threads(1, || Lkgp::fit(&data, cfg.clone()).unwrap());
+        let f4 = with_threads(4, || Lkgp::fit(&data, cfg.clone()).unwrap());
+        assert_eq!(
+            bits(&f1.posterior.mean),
+            bits(&f4.posterior.mean),
+            "{mode:?} posterior mean differs"
+        );
+        assert_eq!(
+            bits(&f1.posterior.var),
+            bits(&f4.posterior.var),
+            "{mode:?} posterior var differs"
+        );
+    }
+}
