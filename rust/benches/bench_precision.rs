@@ -1,0 +1,228 @@
+//! Bench: mixed-precision (f32) vs f64 across the inference hot path.
+//!
+//! Measures the batched masked Kronecker MVM, the blocked GEMM, a
+//! fixed-iteration preconditioned CG solve, and an end-to-end
+//! `Lkgp::fit` in both precisions, plus a Fig-3-style accuracy check
+//! (sim-SARCOS test RMSE: f32 must land within 1% of f64). Writes
+//! `BENCH_precision.json` (machine-readable: per-measurement table +
+//! speedup/accuracy summary) and the usual results/bench CSV/JSON.
+
+use lkgp::data::sarcos::SarcosSim;
+use lkgp::gp::backend::Precision;
+use lkgp::gp::lkgp::{Lkgp, LkgpConfig};
+use lkgp::kernels::RbfArd;
+use lkgp::kron::{breakeven, KronOp, MaskedKronSystem};
+use lkgp::linalg::gemm::gemm_flops;
+use lkgp::linalg::{Matrix, Scalar};
+use lkgp::solvers::cg::{solve_cg, BatchedOp, CgOptions};
+use lkgp::solvers::precond::Preconditioner;
+use lkgp::util::bench::{black_box, Bencher};
+use lkgp::util::json::Json;
+use lkgp::util::rng::Rng;
+
+struct SysOp<'a, T: Scalar>(&'a MaskedKronSystem<T>);
+
+impl<'a, T: Scalar> BatchedOp<T> for SysOp<'a, T> {
+    fn dim(&self) -> usize {
+        self.0.dim()
+    }
+    fn apply_batch(&mut self, v: &Matrix<T>) -> Matrix<T> {
+        self.0.apply_batch(v)
+    }
+}
+
+fn cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+fn main() {
+    let mut b = Bencher::default();
+    let mut rng = Rng::new(0);
+    println!(
+        "# bench_precision — f32 vs f64 hot path (cores: {}, threads: {})\n",
+        cores(),
+        lkgp::par::num_threads()
+    );
+
+    // ---- batched masked Kron MVM (p=256, q=32 — the Fig-3 shape) ----
+    let (p, q) = (256usize, 32usize);
+    let n = p * q;
+    let kss64 = {
+        let a = Matrix::from_vec(p, 3, rng.normals(p * 3));
+        RbfArd::new(3).gram(&a, &a)
+    };
+    let ktt64 = {
+        let a = Matrix::from_vec(q, 1, rng.normals(q));
+        RbfArd::new(1).gram(&a, &a)
+    };
+    let mask: Vec<f64> = (0..n).map(|i| if i % 5 == 0 { 0.0 } else { 1.0 }).collect();
+    let sys64 = MaskedKronSystem::new(
+        KronOp::new(kss64.clone(), ktt64.clone()),
+        mask.clone(),
+        0.1,
+    );
+    let sys32: MaskedKronSystem<f32> = MaskedKronSystem::new(
+        KronOp::new(kss64.cast(), ktt64.cast()),
+        mask.iter().map(|&m| m as f32).collect(),
+        0.1f32,
+    );
+    let batch = 8usize;
+    let v64 = Matrix::from_vec(batch, n, rng.normals(batch * n));
+    let v32: Matrix<f32> = v64.cast();
+    let mvm_flops = batch as f64 * breakeven::kron_mvm_flops(p, q);
+    let t_mvm64 = b
+        .bench_with_flops(
+            &format!("kron_mvm p={p} q={q} batch={batch} f64"),
+            Some(mvm_flops),
+            || {
+                black_box(sys64.apply_batch(&v64));
+            },
+        )
+        .median_ns;
+    let t_mvm32 = b
+        .bench_with_flops(
+            &format!("kron_mvm p={p} q={q} batch={batch} f32"),
+            Some(mvm_flops),
+            || {
+                black_box(sys32.apply_batch(&v32));
+            },
+        )
+        .median_ns;
+    let mvm_speedup = t_mvm64 / t_mvm32;
+    println!("-> MVM f32 speedup: {mvm_speedup:.2}x (acceptance: >= 1.5x)\n");
+
+    // ---- blocked GEMM ----
+    let (gm, gk, gn) = (384usize, 384, 384);
+    let ga64 = Matrix::from_vec(gm, gk, rng.normals(gm * gk));
+    let gb64 = Matrix::from_vec(gk, gn, rng.normals(gk * gn));
+    let (ga32, gb32): (Matrix<f32>, Matrix<f32>) = (ga64.cast(), gb64.cast());
+    let t_gemm64 = b
+        .bench_with_flops(
+            &format!("gemm {gm}x{gk}x{gn} f64"),
+            Some(gemm_flops(gm, gk, gn)),
+            || {
+                black_box(ga64.matmul(&gb64));
+            },
+        )
+        .median_ns;
+    let t_gemm32 = b
+        .bench_with_flops(
+            &format!("gemm {gm}x{gk}x{gn} f32"),
+            Some(gemm_flops(gm, gk, gn)),
+            || {
+                black_box(ga32.matmul(&gb32));
+            },
+        )
+        .median_ns;
+    let gemm_speedup = t_gemm64 / t_gemm32;
+    println!("-> GEMM f32 speedup: {gemm_speedup:.2}x\n");
+
+    // ---- fixed-iteration preconditioned CG on the masked system ----
+    // tol=0 never triggers the early exit, so both precisions do exactly
+    // `cg_iters` MVMs — a like-for-like throughput comparison.
+    let cg_iters = 20usize;
+    let rhs_rows = 4usize;
+    let rhs64 = Matrix::from_vec(rhs_rows, n, rng.normals(rhs_rows * n));
+    let rhs32: Matrix<f32> = rhs64.cast();
+    let diag = sys64.diag();
+    let pre64: Preconditioner<f64> = Preconditioner::jacobi(&diag);
+    let pre32: Preconditioner<f32> = Preconditioner::jacobi(&diag);
+    let cg_opts = CgOptions { max_iters: cg_iters, tol: 0.0 };
+    let t_cg64 = b
+        .bench(&format!("cg {cg_iters}it rhs={rhs_rows} f64"), || {
+            black_box(solve_cg(&mut SysOp(&sys64), &rhs64, &pre64, &cg_opts))
+        })
+        .median_ns;
+    let t_cg32 = b
+        .bench(&format!("cg {cg_iters}it rhs={rhs_rows} f32"), || {
+            black_box(solve_cg(&mut SysOp(&sys32), &rhs32, &pre32, &cg_opts))
+        })
+        .median_ns;
+    let cg_speedup = t_cg64 / t_cg32;
+    println!("-> CG f32 speedup: {cg_speedup:.2}x\n");
+
+    // ---- end-to-end fit + Fig-3-style accuracy (sim-SARCOS) ----
+    let data = SarcosSim::new(96, 0.3, 0).generate();
+    let mk_cfg = |precision| LkgpConfig {
+        train_iters: 6,
+        // gentle Adam steps keep the f32/f64 hyperparameter trajectories
+        // glued, so the RMSE comparison isolates precision effects
+        lr: 0.02,
+        n_samples: 16,
+        probes: 4,
+        cg_tol: 1e-3,
+        cg_max_iters: 200,
+        seed: 11,
+        precision,
+        ..LkgpConfig::default()
+    };
+    let time_fit = |cfg: &LkgpConfig| {
+        let _ = Lkgp::fit(&data, cfg.clone()).unwrap(); // warm-up
+        let mut best = f64::INFINITY;
+        let mut last = None;
+        for _ in 0..2 {
+            let t0 = std::time::Instant::now();
+            let fit = Lkgp::fit(&data, cfg.clone()).unwrap();
+            best = best.min(t0.elapsed().as_secs_f64());
+            last = Some(fit);
+        }
+        (best, last.unwrap())
+    };
+    let (secs64, fit64) = time_fit(&mk_cfg(Precision::F64));
+    let (secs32, fit32) = time_fit(&mk_cfg(Precision::F32));
+    let fit_speedup = secs64 / secs32;
+    let (rmse64, nll64) = fit64.posterior.test_metrics(&data);
+    let (rmse32, nll32) = fit32.posterior.test_metrics(&data);
+    let rmse_rel_diff = (rmse32 - rmse64).abs() / rmse64.max(1e-12);
+    println!(
+        "fit/e2e sim-SARCOS p=96: f64 {secs64:.3}s  f32 {secs32:.3}s  \
+         speedup {fit_speedup:.2}x"
+    );
+    println!(
+        "accuracy: test RMSE f64 {rmse64:.4} vs f32 {rmse32:.4} \
+         (rel diff {:.3}%, acceptance <= 1%); NLL {nll64:.3} vs {nll32:.3}",
+        100.0 * rmse_rel_diff
+    );
+    println!(
+        "kernel bytes: f64 {} vs f32 {} (factored Kron form)",
+        fit64.kernel_bytes, fit32.kernel_bytes
+    );
+
+    // machine-readable summary (the acceptance artifacts)
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("bench_precision".to_string())),
+        ("cores", Json::Num(cores() as f64)),
+        ("threads", Json::Num(lkgp::par::num_threads() as f64)),
+        ("micro", b.to_json()),
+        (
+            "speedups_f32_over_f64",
+            Json::obj(vec![
+                ("mvm", Json::Num(mvm_speedup)),
+                ("mvm_ge_1p5x", Json::Bool(mvm_speedup >= 1.5)),
+                ("gemm", Json::Num(gemm_speedup)),
+                ("cg", Json::Num(cg_speedup)),
+                ("fit", Json::Num(fit_speedup)),
+            ]),
+        ),
+        (
+            "fig3_accuracy",
+            Json::obj(vec![
+                ("dataset", Json::Str("sim-SARCOS p=96 q=7 missing=0.3".to_string())),
+                ("test_rmse_f64", Json::Num(rmse64)),
+                ("test_rmse_f32", Json::Num(rmse32)),
+                ("rmse_rel_diff", Json::Num(rmse_rel_diff)),
+                ("within_1pct", Json::Bool(rmse_rel_diff <= 0.01)),
+                ("test_nll_f64", Json::Num(nll64)),
+                ("test_nll_f32", Json::Num(nll32)),
+                ("fit_secs_f64", Json::Num(secs64)),
+                ("fit_secs_f32", Json::Num(secs32)),
+                ("kernel_bytes_f64", Json::Num(fit64.kernel_bytes as f64)),
+                ("kernel_bytes_f32", Json::Num(fit32.kernel_bytes as f64)),
+            ]),
+        ),
+    ]);
+    let _ = std::fs::write("BENCH_precision.json", format!("{doc}\n"));
+    b.save_csv("bench_precision");
+    b.save_json("bench_precision");
+    println!("\nwrote BENCH_precision.json + results/bench/bench_precision.{{csv,json}}");
+}

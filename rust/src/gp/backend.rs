@@ -1,24 +1,30 @@
 //! Compute backends for the LKGP model.
 //!
-//! `KronBackend` abstracts the five operations inference needs; two
+//! `KronBackend<T>` abstracts the five operations inference needs,
+//! generic over the compute precision `T` (f32 | f64); two
 //! implementations:
 //!
-//! * `RustKronBackend` — pure-rust kernels + Kronecker algebra. Also
-//!   hosts the *dense baseline* MVM modes (materialized / lazy) so the
-//!   Fig-2/Fig-3 comparisons change exactly one thing: the MVM.
+//! * `RustKronBackend<T>` — pure-rust kernels + Kronecker algebra in
+//!   either precision. Also hosts the *dense baseline* MVM modes
+//!   (materialized / lazy) so the Fig-2/Fig-3 comparisons change exactly
+//!   one thing: the MVM.
 //! * `PjrtKronBackend` — the production three-layer path: all five ops
-//!   run as AOT-compiled Pallas/JAX artifacts on the PJRT CPU client.
+//!   run as AOT-compiled Pallas/JAX artifacts on the PJRT CPU client
+//!   (always f32 on-device; implements `KronBackend<f64>` at the host
+//!   boundary).
 //!
-//! An integration test (rust/tests/) asserts the two backends agree.
+//! An integration test (rust/tests/) asserts the two backends agree;
+//! rust/tests/numerics.rs pins the accuracy contract of each precision.
 
 use anyhow::{bail, Context, Result};
 
 use crate::kernels::ProductGridKernel;
 use crate::kron::lazy::LazyGramOp;
 use crate::kron::{KronOp, MaskedKronSystem};
-use crate::linalg::{cholesky, Matrix};
+use crate::linalg::{cholesky, Matrix, Scalar};
 use crate::runtime::{Runtime, TensorF32};
 use crate::solvers::cg::BatchedOp;
+use crate::util::convert;
 
 use super::grad::{mll_surrogate_grads, standard_pairs};
 
@@ -35,9 +41,43 @@ pub enum MvmMode {
     DenseLazy { block_rows: usize },
 }
 
-/// Operations LKGP inference needs from a backend. All vectors live in
-/// the padded p*q grid space; masking conventions follow kron::.
-pub trait KronBackend {
+/// Floating-point precision of the iterative inference hot path
+/// (`LkgpConfig::precision`).
+///
+/// Policy: **compute in the selected precision, accumulate in f64**.
+/// Under `F32`, the Gram factors, every Kronecker/dense MVM, the CG
+/// iterates, the preconditioner, and the pathwise samples are stored and
+/// multiplied in f32 — roughly 2x the memory bandwidth and SIMD width of
+/// f64 — while the numerically sensitive reductions (CG dot products and
+/// residual norms, the data-fit term, hyperparameter gradients, pathwise
+/// moment accumulation, and the small-factor Choleskys) stay in f64.
+/// Conversions to f32 go through the crate's single rounding point
+/// (`util::convert`). The public [`super::Posterior`] is always f64.
+///
+/// Choose `F32` when fit/predict time or kernel memory is the
+/// bottleneck and a relative posterior error around 1e-3 (versus ~1e-7
+/// solver-tolerance-limited error for `F64`) is acceptable — e.g. the
+/// paper's Fig-2/Fig-3 scaling regimes, where the dominant cost is the
+/// MVM. Keep the default `F64` for small problems or when posteriors
+/// feed downstream analyses that are sensitive at the 1e-3 level.
+/// Thread-count bit-invariance holds in both precisions
+/// (rust/tests/par_invariance.rs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Double precision everywhere (default).
+    #[default]
+    F64,
+    /// f32 compute with f64 accumulation (see type-level docs).
+    F32,
+}
+
+/// Operations LKGP inference needs from a backend, generic over the
+/// compute precision `T`. All vectors live in the padded p*q grid
+/// space; masking conventions follow kron::. Hyperparameters, data, and
+/// gradients stay f64 at this boundary regardless of `T` — only the
+/// iterative hot path (MVMs, CG iterates, preconditioner columns)
+/// switches precision.
+pub trait KronBackend<T: Scalar = f64> {
     fn dim(&self) -> usize;
     /// number of Hutchinson probes the gradient path expects
     fn probes(&self) -> usize;
@@ -46,18 +86,22 @@ pub trait KronBackend {
     /// install hyperparameters; recomputes Gram state
     fn set_hypers(&mut self, theta: &[f64], log_sigma2: f64) -> Result<()>;
     /// v -> M (K (x) K) M v + sigma2 v, batched rows
-    fn system_mvm(&mut self, v: &Matrix<f64>) -> Result<Matrix<f64>>;
+    fn system_mvm(&mut self, v: &Matrix<T>) -> Result<Matrix<T>>;
     /// v -> (K (x) K) v (unmasked cross-covariance apply)
-    fn kron_apply(&mut self, v: &Matrix<f64>) -> Result<Matrix<f64>>;
+    fn kron_apply(&mut self, v: &Matrix<T>) -> Result<Matrix<T>>;
     /// z -> (L_S (x) L_T) z prior sample
-    fn prior_sample(&mut self, z: &Matrix<f64>) -> Result<Matrix<f64>>;
+    fn prior_sample(&mut self, z: &Matrix<T>) -> Result<Matrix<T>>;
     /// gradient of the Hutchinson MLL surrogate: [d theta.., d log_s2]
-    fn mll_grads(&mut self, alpha: &[f64], w: &Matrix<f64>, z: &Matrix<f64>)
+    /// (always accumulated and returned in f64)
+    fn mll_grads(&mut self, alpha: &[T], w: &Matrix<T>, z: &Matrix<T>)
         -> Result<Vec<f64>>;
-    /// diagonal of the system matrix (Jacobi preconditioner)
+    /// diagonal of the system matrix (Jacobi preconditioner), widened
+    /// to f64. The values are computed in `T`, so near-ties in greedy
+    /// pivot selection can still order differently between precisions;
+    /// within a precision the sequence is deterministic.
     fn system_diag(&self) -> Vec<f64>;
     /// one column of M (K (x) K) M (pivoted-Cholesky preconditioner)
-    fn kernel_col(&self, idx: usize) -> Vec<f64>;
+    fn kernel_col(&self, idx: usize) -> Vec<T>;
     /// bytes held by the kernel representation (Fig-2/3 memory axis)
     fn kernel_bytes(&self) -> u64;
     /// kernel evaluations performed since set_hypers (Fig-2 axis)
@@ -72,12 +116,12 @@ pub trait KronBackend {
 /// reports it so `solve_cg` stops at its next check, and the caller
 /// surfaces the error through [`SystemOp::take_err`] after the solve —
 /// see `gp/lkgp.rs`.
-pub struct SystemOp<'a, B: KronBackend> {
+pub struct SystemOp<'a, B> {
     be: &'a mut B,
     err: Option<anyhow::Error>,
 }
 
-impl<'a, B: KronBackend> SystemOp<'a, B> {
+impl<'a, B> SystemOp<'a, B> {
     pub fn new(be: &'a mut B) -> Self {
         SystemOp { be, err: None }
     }
@@ -92,11 +136,11 @@ impl<'a, B: KronBackend> SystemOp<'a, B> {
     }
 }
 
-impl<'a, B: KronBackend> BatchedOp<f64> for SystemOp<'a, B> {
+impl<'a, T: Scalar, B: KronBackend<T>> BatchedOp<T> for SystemOp<'a, B> {
     fn dim(&self) -> usize {
         self.be.dim()
     }
-    fn apply_batch(&mut self, v: &Matrix<f64>) -> Matrix<f64> {
+    fn apply_batch(&mut self, v: &Matrix<T>) -> Matrix<T> {
         if self.err.is_some() {
             return Matrix::zeros(v.rows, v.cols);
         }
@@ -114,10 +158,10 @@ impl<'a, B: KronBackend> BatchedOp<f64> for SystemOp<'a, B> {
 }
 
 // ---------------------------------------------------------------------
-// Rust-native backend
+// Rust-native backend (precision-generic)
 // ---------------------------------------------------------------------
 
-pub struct RustKronBackend {
+pub struct RustKronBackend<T: Scalar = f64> {
     pub kernel: ProductGridKernel,
     pub mode: MvmMode,
     probes: usize,
@@ -125,14 +169,15 @@ pub struct RustKronBackend {
     t: Vec<f64>,
     mask: Vec<f64>,
     log_sigma2: f64,
-    sys: Option<MaskedKronSystem<f64>>,
-    /// dense baseline state
+    sys: Option<MaskedKronSystem<T>>,
+    /// dense baseline state (f32 regardless of `T`: that is what the
+    /// standard iterative baseline stores on the GPU)
     dense: Option<Matrix<f32>>,
     obs_idx: Vec<usize>,
     kernel_evals: u64,
 }
 
-impl RustKronBackend {
+impl<T: Scalar> RustKronBackend<T> {
     pub fn new(ds: usize, time_family: &str, q: usize, probes: usize) -> Self {
         RustKronBackend {
             kernel: ProductGridKernel::new(ds, time_family, q),
@@ -154,18 +199,18 @@ impl RustKronBackend {
         self
     }
 
-    fn sys(&self) -> &MaskedKronSystem<f64> {
+    fn sys(&self) -> &MaskedKronSystem<T> {
         self.sys.as_ref().expect("set_hypers not called")
     }
 
     /// gather padded grid vector -> observed coords
-    fn gather(&self, v: &[f64]) -> Vec<f64> {
+    fn gather(&self, v: &[T]) -> Vec<T> {
         self.obs_idx.iter().map(|&i| v[i]).collect()
     }
 
     /// scatter observed -> padded grid vector
-    fn scatter(&self, v: &[f64]) -> Vec<f64> {
-        let mut out = vec![0.0; self.dim()];
+    fn scatter(&self, v: &[T]) -> Vec<T> {
+        let mut out = vec![T::ZERO; self.dim()];
         for (val, &i) in v.iter().zip(&self.obs_idx) {
             out[i] = *val;
         }
@@ -173,7 +218,7 @@ impl RustKronBackend {
     }
 }
 
-impl KronBackend for RustKronBackend {
+impl<T: Scalar> KronBackend<T> for RustKronBackend<T> {
     fn dim(&self) -> usize {
         self.s.rows * self.t.len()
     }
@@ -196,14 +241,17 @@ impl KronBackend for RustKronBackend {
     fn set_hypers(&mut self, theta: &[f64], log_sigma2: f64) -> Result<()> {
         self.kernel.set_theta(theta);
         self.log_sigma2 = log_sigma2;
-        let kss = self.kernel.gram_s(&self.s);
-        let ktt = self.kernel.gram_t(&self.t);
+        // Gram factors in the compute precision: the O(p^2 d) spatial
+        // Gram runs natively in T (kernels::gram_s_in)
+        let kss: Matrix<T> = self.kernel.gram_s_in(&self.s);
+        let ktt: Matrix<T> = self.kernel.gram_t_in(&self.t);
         let (p, q) = (kss.rows, ktt.rows);
         self.kernel_evals = (p * p + q * q) as u64;
+        let mask_t: Vec<T> = self.mask.iter().map(|&m| T::from_f64(m)).collect();
         self.sys = Some(MaskedKronSystem::new(
             KronOp::new(kss, ktt),
-            self.mask.clone(),
-            log_sigma2.exp(),
+            mask_t,
+            T::from_f64(log_sigma2.exp()),
         ));
         self.dense = None;
         if self.mode == MvmMode::DenseMaterialized {
@@ -219,7 +267,9 @@ impl KronBackend for RustKronBackend {
                 let (sa, ta) = (ia / q, ia % q);
                 for (x, &ib) in row.iter_mut().zip(obs.iter()) {
                     let (sb, tb) = (ib / q, ib % q);
-                    *x = (sys.op.kss[(sa, sb)] * sys.op.ktt[(ta, tb)]) as f32;
+                    *x = convert::f32_of(
+                        (sys.op.kss[(sa, sb)] * sys.op.ktt[(ta, tb)]).to_f64(),
+                    );
                 }
             });
             self.kernel_evals = (n * n) as u64;
@@ -228,31 +278,32 @@ impl KronBackend for RustKronBackend {
         Ok(())
     }
 
-    fn system_mvm(&mut self, v: &Matrix<f64>) -> Result<Matrix<f64>> {
+    fn system_mvm(&mut self, v: &Matrix<T>) -> Result<Matrix<T>> {
         match &self.mode {
             MvmMode::Kron => Ok(self.sys().apply_batch(v)),
             MvmMode::DenseMaterialized => {
                 let dense = self.dense.as_ref().context("dense gram")?;
-                let s2 = self.log_sigma2.exp();
+                let s2 = T::from_f64(self.log_sigma2.exp());
                 let obs = &self.obs_idx;
                 let mut out = Matrix::zeros(v.rows, v.cols);
                 // batch rows are independent systems: one worker per row
                 // (gather -> f32 dense MVM -> scatter -> +sigma2 v)
                 crate::par::par_chunks_mut(&mut out.data, v.cols.max(1), |b, orow| {
                     let vrow = v.row(b);
-                    let vo32: Vec<f32> = obs.iter().map(|&i| vrow[i] as f32).collect();
+                    let vo32: Vec<f32> =
+                        obs.iter().map(|&i| convert::f32_of(vrow[i].to_f64())).collect();
                     for (i, &io) in obs.iter().enumerate() {
                         let row = dense.row(i);
                         let mut sum = 0.0f32;
                         for (k, x) in row.iter().zip(&vo32) {
                             sum += k * x;
                         }
-                        orow[io] = sum as f64;
+                        orow[io] = T::from_f64(sum as f64);
                     }
                     // sigma2 acts on all padded coords (same convention
                     // as the kron system operator)
                     for (o, vi) in orow.iter_mut().zip(vrow) {
-                        *o += s2 * vi;
+                        *o += s2 * *vi;
                     }
                 });
                 Ok(out)
@@ -265,10 +316,10 @@ impl KronBackend for RustKronBackend {
                 let obs = &self.obs_idx;
                 let entry = |i: usize, j: usize| -> f64 {
                     let (ia, ib) = (obs[i], obs[j]);
-                    kss[(ia / q, ib / q)] * ktt[(ia % q, ib % q)]
+                    (kss[(ia / q, ib / q)] * ktt[(ia % q, ib % q)]).to_f64()
                 };
                 let op = LazyGramOp::new(n, *block_rows, entry, 0.0);
-                let s2 = self.log_sigma2.exp();
+                let s2 = T::from_f64(self.log_sigma2.exp());
                 let mut out = Matrix::zeros(v.rows, v.cols);
                 let mut vo = Matrix::zeros(v.rows, n);
                 for b in 0..v.rows {
@@ -281,7 +332,7 @@ impl KronBackend for RustKronBackend {
                 for b in 0..v.rows {
                     let mut padded = self.scatter(r.row(b));
                     for (o, vi) in padded.iter_mut().zip(v.row(b)) {
-                        *o += s2 * vi;
+                        *o += s2 * *vi;
                     }
                     out.row_mut(b).copy_from_slice(&padded);
                 }
@@ -290,46 +341,61 @@ impl KronBackend for RustKronBackend {
         }
     }
 
-    fn kron_apply(&mut self, v: &Matrix<f64>) -> Result<Matrix<f64>> {
+    fn kron_apply(&mut self, v: &Matrix<T>) -> Result<Matrix<T>> {
         Ok(self.sys().op.apply_batch(v))
     }
 
-    fn prior_sample(&mut self, z: &Matrix<f64>) -> Result<Matrix<f64>> {
+    fn prior_sample(&mut self, z: &Matrix<T>) -> Result<Matrix<T>> {
         let sys = self.sys();
         let (p, q) = (sys.op.p(), sys.op.q());
-        let mut kss_j = sys.op.kss.clone();
+        // Cholesky of the small factors runs in f64 for stability (f64
+        // accumulation policy); the O(b pq (p+q)) factor application
+        // then runs in the compute precision.
+        let mut kss_j: Matrix<f64> = sys.op.kss.cast();
         kss_j.add_diag(1e-4 * kss_j.trace() / p as f64);
-        let mut ktt_j = sys.op.ktt.clone();
+        let mut ktt_j: Matrix<f64> = sys.op.ktt.cast();
         ktt_j.add_diag(1e-4 * ktt_j.trace() / q as f64);
-        let ls = cholesky(&kss_j).context("K_SS cholesky")?.l;
-        let lt = cholesky(&ktt_j).context("K_TT cholesky")?.l;
+        let ls: Matrix<T> = cholesky(&kss_j).context("K_SS cholesky")?.l.cast();
+        let lt: Matrix<T> = cholesky(&ktt_j).context("K_TT cholesky")?.l.cast();
         Ok(KronOp::new(ls, lt).apply_batch(z))
     }
 
     fn mll_grads(
         &mut self,
-        alpha: &[f64],
-        w: &Matrix<f64>,
-        z: &Matrix<f64>,
+        alpha: &[T],
+        w: &Matrix<T>,
+        z: &Matrix<T>,
     ) -> Result<Vec<f64>> {
+        // Gradients always accumulate in f64: the contraction against
+        // dA/dtheta spans O(p^2) terms of mixed sign, where f32
+        // cancellation would feed noise straight into Adam. The casts
+        // below copy O(p^2 + q^2 + k pq) values once per Adam iteration
+        // (identity copies when T = f64) — a factor ~(p+q) x CG-iters
+        // below the solve cost of the same iteration, so not worth a
+        // borrow-when-f64 specialization.
         let sys = self.sys();
-        let pairs = standard_pairs(alpha, w, z);
+        let kss64: Matrix<f64> = sys.op.kss.cast();
+        let ktt64: Matrix<f64> = sys.op.ktt.cast();
+        let alpha64: Vec<f64> = alpha.iter().map(|a| a.to_f64()).collect();
+        let w64: Matrix<f64> = w.cast();
+        let z64: Matrix<f64> = z.cast();
+        let pairs = standard_pairs(&alpha64, &w64, &z64);
         Ok(mll_surrogate_grads(
             &self.kernel,
             &self.s,
             &self.t,
-            &sys.op.kss,
-            &sys.op.ktt,
+            &kss64,
+            &ktt64,
             self.log_sigma2,
             &pairs,
         ))
     }
 
     fn system_diag(&self) -> Vec<f64> {
-        self.sys().diag()
+        self.sys().diag().iter().map(|d| d.to_f64()).collect()
     }
 
-    fn kernel_col(&self, idx: usize) -> Vec<f64> {
+    fn kernel_col(&self, idx: usize) -> Vec<T> {
         self.sys().kernel_col(idx)
     }
 
@@ -337,13 +403,15 @@ impl KronBackend for RustKronBackend {
         match &self.mode {
             MvmMode::Kron => {
                 let (p, q) = (self.s.rows, self.t.len());
-                ((p * p + q * q) * 8) as u64
+                ((p * p + q * q) * std::mem::size_of::<T>()) as u64
             }
             MvmMode::DenseMaterialized => {
                 let n = self.obs_idx.len();
                 (n * n * 4) as u64
             }
             MvmMode::DenseLazy { block_rows } => {
+                // the lazy row block is materialized in f64 regardless
+                // of the compute precision (see kron::lazy)
                 (self.obs_idx.len() * block_rows * 8) as u64
             }
         }
@@ -426,7 +494,7 @@ impl PjrtKronBackend {
             let mut chunk = vec![0.0f32; b * pq];
             for r in 0..take {
                 for (c, x) in v.row(row + r).iter().enumerate() {
-                    chunk[r * pq + c] = *x as f32;
+                    chunk[r * pq + c] = convert::f32_of(*x);
                 }
             }
             let mut inputs = fixed.to_vec();
@@ -458,7 +526,7 @@ impl PjrtKronBackend {
     }
 }
 
-impl KronBackend for PjrtKronBackend {
+impl KronBackend<f64> for PjrtKronBackend {
     fn dim(&self) -> usize {
         self.p * self.q
     }
@@ -480,9 +548,9 @@ impl KronBackend for PjrtKronBackend {
                 self.q
             );
         }
-        self.s32 = s.data.iter().map(|&x| x as f32).collect();
-        self.t32 = t.iter().map(|&x| x as f32).collect();
-        self.mask32 = mask.iter().map(|&x| x as f32).collect();
+        self.s32 = convert::f32_vec(&s.data);
+        self.t32 = convert::f32_vec(t);
+        self.mask32 = convert::f32_vec(mask);
         self.fresh = false;
         Ok(())
     }
@@ -491,7 +559,7 @@ impl KronBackend for PjrtKronBackend {
         if theta.len() != self.n_theta {
             bail!("theta len {} != {}", theta.len(), self.n_theta);
         }
-        self.theta32 = theta.iter().map(|&x| x as f32).collect();
+        self.theta32 = convert::f32_vec(theta);
         self.log_sigma2 = log_sigma2;
         let out = self.rt.exec_f32(
             &self.config,
@@ -515,7 +583,7 @@ impl KronBackend for PjrtKronBackend {
             kss,
             ktt,
             TensorF32::vec1(self.mask32.clone()),
-            TensorF32::scalar(self.log_sigma2.exp() as f32),
+            TensorF32::scalar(convert::f32_of(self.log_sigma2.exp())),
         ];
         self.exec_batched("kron_mvm", &fixed, v)
     }
@@ -532,7 +600,7 @@ impl KronBackend for PjrtKronBackend {
         // op; the artifact's job is the O(b pq (p+q)) factor application
         // — see python/compile/model.py::build_prior_sample).
         let to_f64 = |v: &[f32], n: usize| -> Matrix<f64> {
-            Matrix::from_vec(n, n, v.iter().map(|&x| x as f64).collect())
+            Matrix::from_vec(n, n, crate::util::convert::f64_vec(v))
         };
         let chol_jittered = |mut m: Matrix<f64>| -> Result<Matrix<f64>> {
             let n = m.rows;
@@ -567,7 +635,7 @@ impl KronBackend for PjrtKronBackend {
                 TensorF32::new(vec![self.p, self.ds], self.s32.clone()),
                 TensorF32::new(vec![self.q, 1], self.t32.clone()),
                 TensorF32::vec1(self.theta32.clone()),
-                TensorF32::scalar(self.log_sigma2 as f32),
+                TensorF32::scalar(convert::f32_of(self.log_sigma2)),
                 TensorF32::vec1(self.mask32.clone()),
                 TensorF32::from_f64(vec![pq], alpha),
                 TensorF32::from_f64(vec![k, pq], &w.data),
@@ -620,7 +688,7 @@ mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
-    fn toy_backend(mode: MvmMode) -> RustKronBackend {
+    fn toy_backend_in<T: Scalar>(mode: MvmMode) -> RustKronBackend<T> {
         let mut rng = Rng::new(7);
         let (p, q, ds) = (8, 5, 2);
         let s = Matrix::from_vec(p, ds, rng.normals(p * ds));
@@ -629,10 +697,14 @@ mod tests {
         for i in (0..p * q).step_by(3) {
             mask[i] = 0.0;
         }
-        let mut be = RustKronBackend::new(ds, "rbf", q, 4).with_mode(mode);
+        let mut be = RustKronBackend::<T>::new(ds, "rbf", q, 4).with_mode(mode);
         be.set_data(&s, &t, &mask).unwrap();
         be.set_hypers(&vec![0.0; be.kernel.n_theta()], -1.5).unwrap();
         be
+    }
+
+    fn toy_backend(mode: MvmMode) -> RustKronBackend {
+        toy_backend_in::<f64>(mode)
     }
 
     #[test]
@@ -655,6 +727,46 @@ mod tests {
         for i in 0..a.data.len() {
             assert!((a.data[i] - b.data[i]).abs() < 1e-3, "dense idx {i}");
             assert!((a.data[i] - c.data[i]).abs() < 1e-6, "lazy idx {i}");
+        }
+    }
+
+    #[test]
+    fn f32_backend_mvm_close_to_f64() {
+        let mut rng = Rng::new(13);
+        let mut be64 = toy_backend(MvmMode::Kron);
+        let mut be32 = toy_backend_in::<f32>(MvmMode::Kron);
+        let v64 = Matrix::from_vec(2, be64.dim(), rng.normals(2 * be64.dim()));
+        let v32: Matrix<f32> = v64.cast();
+        let a = be64.system_mvm(&v64).unwrap();
+        let b = be32.system_mvm(&v32).unwrap();
+        let scale = a.max_abs().max(1.0);
+        for i in 0..a.data.len() {
+            let diff = (a.data[i] - b.data[i] as f64).abs();
+            assert!(diff < 1e-4 * scale, "idx {i}: {} vs {}", a.data[i], b.data[i]);
+        }
+        // precision switch halves the factored-kernel footprint
+        assert_eq!(be32.kernel_bytes() * 2, be64.kernel_bytes());
+    }
+
+    #[test]
+    fn f32_backend_dense_modes_agree_with_kron() {
+        let mut rng = Rng::new(17);
+        let mut kron = toy_backend_in::<f32>(MvmMode::Kron);
+        let mut dense = toy_backend_in::<f32>(MvmMode::DenseMaterialized);
+        let mut lazy = toy_backend_in::<f32>(MvmMode::DenseLazy { block_rows: 3 });
+        let v64 = Matrix::from_vec(2, kron.dim(), rng.normals(2 * kron.dim()));
+        let mut vm: Matrix<f32> = v64.cast();
+        for b in 0..2 {
+            for (x, m) in vm.row_mut(b).iter_mut().zip(&kron.mask) {
+                *x *= *m as f32;
+            }
+        }
+        let a = kron.system_mvm(&vm).unwrap();
+        let b = dense.system_mvm(&vm).unwrap();
+        let c = lazy.system_mvm(&vm).unwrap();
+        for i in 0..a.data.len() {
+            assert!((a.data[i] - b.data[i]).abs() < 1e-2, "dense idx {i}");
+            assert!((a.data[i] - c.data[i]).abs() < 1e-2, "lazy idx {i}");
         }
     }
 

@@ -1,5 +1,6 @@
 //! The Latent Kronecker GP model: training (iterative MLL maximization)
-//! and prediction (pathwise conditioning), generic over compute backend.
+//! and prediction (pathwise conditioning), generic over compute backend
+//! and compute precision.
 //!
 //! Training (paper Appendix C): Adam on [theta, log_sigma2], gradients
 //! from the Hutchinson surrogate with CG solves batched across
@@ -12,18 +13,26 @@
 //! with f ~ prior via Kronecker Cholesky factors. The predictive mean
 //! uses the exact alpha solve; variances come from `n_samples` pathwise
 //! samples plus observation noise.
+//!
+//! Mixed precision: `LkgpConfig::precision` selects the scalar type of
+//! the whole iterative hot path (see [`Precision`]). The generic
+//! [`fit_with_backend`] body computes in `T` but keeps every sensitive
+//! reduction — data-fit term, gradients, pathwise moment accumulation —
+//! in f64, and the returned [`Posterior`] is always f64.
 
 use anyhow::{Context, Result};
 
 use crate::data::GridDataset;
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, Scalar};
 use crate::runtime::Runtime;
 use crate::solvers::cg::{solve_cg, CgOptions, CgStats};
 use crate::solvers::precond::Preconditioner;
 use crate::util::rng::Rng;
 use crate::util::timer::Profile;
 
-use super::backend::{KronBackend, MvmMode, PjrtKronBackend, RustKronBackend, SystemOp};
+use super::backend::{
+    KronBackend, MvmMode, PjrtKronBackend, Precision, RustKronBackend, SystemOp,
+};
 use super::Posterior;
 
 /// Which backend executes the five LKGP operations.
@@ -51,6 +60,10 @@ pub struct LkgpConfig {
     pub precond_rank: usize,
     pub seed: u64,
     pub backend: Backend,
+    /// compute precision of the iterative hot path (Rust backend only;
+    /// PJRT artifacts always execute in f32 on-device) — see
+    /// [`Precision`] for the f32-compute / f64-accumulate policy
+    pub precision: Precision,
     /// initial log observation-noise variance
     pub init_log_sigma2: f64,
 }
@@ -67,6 +80,7 @@ impl Default for LkgpConfig {
             precond_rank: 0,
             seed: 0,
             backend: Backend::Rust(MvmMode::Kron),
+            precision: Precision::F64,
             init_log_sigma2: (0.1f64).ln(),
         }
     }
@@ -93,17 +107,31 @@ pub struct Lkgp;
 impl Lkgp {
     pub fn fit(data: &GridDataset, cfg: LkgpConfig) -> Result<LkgpFit> {
         match &cfg.backend {
-            Backend::Rust(mode) => {
-                let mut be = RustKronBackend::new(
-                    data.s.cols,
-                    &data.time_family,
-                    data.q(),
-                    cfg.probes,
-                )
-                .with_mode(mode.clone());
-                fit_with_backend(data, &cfg, &mut be)
-            }
+            Backend::Rust(mode) => match cfg.precision {
+                Precision::F64 => {
+                    let mut be = RustKronBackend::<f64>::new(
+                        data.s.cols,
+                        &data.time_family,
+                        data.q(),
+                        cfg.probes,
+                    )
+                    .with_mode(mode.clone());
+                    fit_with_backend(data, &cfg, &mut be)
+                }
+                Precision::F32 => {
+                    let mut be = RustKronBackend::<f32>::new(
+                        data.s.cols,
+                        &data.time_family,
+                        data.q(),
+                        cfg.probes,
+                    )
+                    .with_mode(mode.clone());
+                    fit_with_backend(data, &cfg, &mut be)
+                }
+            },
             Backend::Pjrt { config } => {
+                // PJRT artifacts compute in f32 on-device regardless of
+                // `cfg.precision`; the host boundary stays f64.
                 let rt = Runtime::load_default().context("loading artifacts")?;
                 let mut be = PjrtKronBackend::new(rt, config)?;
                 fit_with_backend(data, &cfg, &mut be)
@@ -112,8 +140,10 @@ impl Lkgp {
     }
 
     /// Fit with a caller-provided backend (used by experiments that
-    /// share a PJRT runtime across fits).
-    pub fn fit_backend<B: KronBackend>(
+    /// share a PJRT runtime across fits). The compute precision is the
+    /// backend's `T`, not `cfg.precision` — the caller chose it when
+    /// instantiating the backend.
+    pub fn fit_backend<T: Scalar, B: KronBackend<T>>(
         data: &GridDataset,
         cfg: &LkgpConfig,
         be: &mut B,
@@ -122,16 +152,24 @@ impl Lkgp {
     }
 }
 
-fn build_precond<B: KronBackend>(be: &B, rank: usize, sigma2: f64) -> Preconditioner<f64> {
+fn build_precond<T: Scalar, B: KronBackend<T>>(
+    be: &B,
+    rank: usize,
+    sigma2: f64,
+) -> Preconditioner<T> {
     if rank == 0 {
         Preconditioner::jacobi(&be.system_diag())
     } else {
+        // greedy pivot selection runs on an f64 diagonal (widened from
+        // the T-precision Gram, so near-ties can still order differently
+        // between precisions); within a precision it is deterministic
+        // and thread-count invariant. The factor columns are in T.
         let diag: Vec<f64> = be.system_diag().iter().map(|d| d - sigma2).collect();
         Preconditioner::pivoted_from_columns(diag, |j| be.kernel_col(j), rank, sigma2)
     }
 }
 
-fn fit_with_backend<B: KronBackend>(
+fn fit_with_backend<T: Scalar, B: KronBackend<T>>(
     data: &GridDataset,
     cfg: &LkgpConfig,
     be: &mut B,
@@ -162,24 +200,26 @@ fn fit_with_backend<B: KronBackend>(
     // the backend dictates the probe count (static on PJRT artifacts)
     let n_probes = be.probes();
     let z_probes = {
-        let mut z = Matrix::zeros(n_probes, pq);
+        let mut z = Matrix::<T>::zeros(n_probes, pq);
         for i in 0..n_probes {
-            let row: Vec<f64> = rng
+            // drawn in f64, rounded once at the precision boundary
+            let row: Vec<T> = rng
                 .rademacher_f32(pq)
                 .iter()
                 .zip(&mask)
-                .map(|(r, m)| *r as f64 * m)
+                .map(|(r, m)| T::from_f64(*r as f64 * m))
                 .collect();
             z.row_mut(i).copy_from_slice(&row);
         }
         z
     };
+    let y_t: Vec<T> = y.iter().map(|&v| T::from_f64(v)).collect();
 
     let cg_opts = CgOptions { max_iters: cfg.cg_max_iters, tol: cfg.cg_tol };
     let mut loss_trace = Vec::with_capacity(cfg.train_iters);
     let mut cg_iters_total = 0;
     let mut mvm_total = 0;
-    let mut alpha = vec![0.0; pq];
+    let mut alpha = vec![T::ZERO; pq];
 
     for it in 0..cfg.train_iters + 1 {
         let theta = &params[..n_theta];
@@ -188,13 +228,14 @@ fn fit_with_backend<B: KronBackend>(
         kernel.set_theta(theta);
 
         // batched solve: [y | probes]
-        let mut rhs = Matrix::zeros(1 + n_probes, pq);
-        rhs.row_mut(0).copy_from_slice(&y);
+        let mut rhs = Matrix::<T>::zeros(1 + n_probes, pq);
+        rhs.row_mut(0).copy_from_slice(&y_t);
         for i in 0..n_probes {
             rhs.row_mut(1 + i).copy_from_slice(z_probes.row(i));
         }
-        let pre = prof.time("precond", || build_precond(be, cfg.precond_rank, log_s2.exp()));
-        let (sol, stats) = prof.time("cg_solve", || -> Result<(Matrix<f64>, CgStats)> {
+        let pre: Preconditioner<T> =
+            prof.time("precond", || build_precond(be, cfg.precond_rank, log_s2.exp()));
+        let (sol, stats) = prof.time("cg_solve", || -> Result<(Matrix<T>, CgStats)> {
             let mut op = SystemOp::new(be);
             let out = solve_cg(&mut op, &rhs, &pre, &cg_opts);
             op.take_err()?;
@@ -203,15 +244,16 @@ fn fit_with_backend<B: KronBackend>(
         cg_iters_total += stats.iters;
         mvm_total += stats.mvm_count;
         alpha.copy_from_slice(sol.row(0));
-        let fit_term = 0.5
-            * y.iter().zip(&alpha).map(|(a, b)| a * b).sum::<f64>();
+        // data-fit term accumulates in f64 in both precisions
+        let fit_term =
+            0.5 * y.iter().zip(&alpha).map(|(a, b)| a * b.to_f64()).sum::<f64>();
         loss_trace.push(fit_term);
 
         if it == cfg.train_iters {
             break; // final solve only (alpha for prediction)
         }
         let w = {
-            let mut w = Matrix::zeros(n_probes, pq);
+            let mut w = Matrix::<T>::zeros(n_probes, pq);
             for i in 0..n_probes {
                 w.row_mut(i).copy_from_slice(sol.row(1 + i));
             }
@@ -227,9 +269,9 @@ fn fit_with_backend<B: KronBackend>(
     let sigma2 = params[n_theta].exp();
     // exact predictive mean: mu = (K (x) K) M alpha
     let masked_alpha = {
-        let mut a = Matrix::zeros(1, pq);
+        let mut a = Matrix::<T>::zeros(1, pq);
         for ((o, a0), m) in a.row_mut(0).iter_mut().zip(&alpha).zip(&mask) {
-            *o = a0 * m;
+            *o = *a0 * T::from_f64(*m);
         }
         a
     };
@@ -237,32 +279,37 @@ fn fit_with_backend<B: KronBackend>(
 
     // pathwise samples for predictive variance
     let nsamp = cfg.n_samples.max(2);
-    let mut var_acc = vec![0.0; pq];
-    let mut mean_acc = vec![0.0; pq];
+    let mut var_acc = vec![0.0f64; pq];
+    let mut mean_acc = vec![0.0f64; pq];
     let chunk = 16usize;
-    let pre = build_precond(be, cfg.precond_rank, sigma2);
+    let pre: Preconditioner<T> = build_precond(be, cfg.precond_rank, sigma2);
     let mut done = 0;
     while done < nsamp {
         let b = chunk.min(nsamp - done);
-        let z = Matrix::from_vec(b, pq, rng.normals(b * pq));
+        let z = Matrix::<T>::from_vec(
+            b,
+            pq,
+            rng.normals(b * pq).iter().map(|&x| T::from_f64(x)).collect(),
+        );
         let f_prior = prof.time("prior_sample", || be.prior_sample(&z))?;
         // rhs = M (y - f - eps). Per-row noise streams are forked from
         // the master rng *sequentially*, then rows are assembled in
         // parallel from the independent streams — deterministic for any
-        // thread count.
+        // thread count. Each element is formed in f64 and rounded once
+        // at the precision boundary.
         let row_rngs: Vec<Rng> = (0..b).map(|r| rng.fork(r as u64)).collect();
         let sigma = sigma2.sqrt();
-        let mut rhs = Matrix::zeros(b, pq);
+        let mut rhs = Matrix::<T>::zeros(b, pq);
         prof.time("rhs_assemble", || {
             crate::par::par_chunks_mut(&mut rhs.data, pq, |r, row| {
                 let mut noise = row_rngs[r].clone();
                 for (c, x) in row.iter_mut().enumerate() {
                     let eps = sigma * noise.normal();
-                    *x = mask[c] * (y[c] - f_prior[(r, c)] - eps);
+                    *x = T::from_f64(mask[c] * (y[c] - f_prior[(r, c)].to_f64() - eps));
                 }
             });
         });
-        let (v, stats) = prof.time("cg_sample", || -> Result<(Matrix<f64>, CgStats)> {
+        let (v, stats) = prof.time("cg_sample", || -> Result<(Matrix<T>, CgStats)> {
             let mut op = SystemOp::new(be);
             let out = solve_cg(&mut op, &rhs, &pre, &cg_opts);
             op.take_err()?;
@@ -273,13 +320,14 @@ fn fit_with_backend<B: KronBackend>(
         let mut vm = v;
         crate::par::par_chunks_mut_cheap(&mut vm.data, pq, |_, row| {
             for (x, m) in row.iter_mut().zip(&mask) {
-                *x *= *m;
+                *x *= T::from_f64(*m);
             }
         });
         let kv = prof.time("predict_apply", || be.kron_apply(&vm))?;
         // accumulate pathwise moments per grid cell in parallel; the
-        // per-cell reduction over sample rows runs in a fixed order, so
-        // the posterior is bit-identical for any thread count
+        // per-cell reduction over sample rows runs in a fixed order and
+        // in f64 (in both precisions), so the posterior is bit-identical
+        // for any thread count
         prof.time("var_accum", || {
             let block = 1024usize;
             crate::par::par_zip_mut(&mut mean_acc, &mut var_acc, block, |ci, mseg, vseg| {
@@ -289,7 +337,7 @@ fn fit_with_backend<B: KronBackend>(
                     let mut msum = 0.0;
                     let mut vsum = 0.0;
                     for r in 0..b {
-                        let f = f_prior[(r, c)] + kv[(r, c)];
+                        let f = f_prior[(r, c)].to_f64() + kv[(r, c)].to_f64();
                         msum += f;
                         vsum += f * f;
                     }
@@ -308,7 +356,7 @@ fn fit_with_backend<B: KronBackend>(
             (var_acc[c] / nsamp as f64 - m_samp * m_samp).max(1e-10) * nsamp as f64
                 / (nsamp - 1) as f64;
         // raw scale: mean from exact solve, variance from samples + noise
-        mean[c] = mean_std[(0, c)] * y_std + y_mean;
+        mean[c] = mean_std[(0, c)].to_f64() * y_std + y_mean;
         var[c] = (v_samp + sigma2) * y_std * y_std;
     }
     let predict_secs = t_pred.elapsed().as_secs_f64();
@@ -397,6 +445,47 @@ mod tests {
             );
         }
         assert!(fit_k.kernel_bytes < fit_d.kernel_bytes);
+    }
+
+    #[test]
+    fn f32_precision_matches_f64_posterior() {
+        // The mixed-precision contract: an f32 fit with the same seed
+        // reproduces the f64 posterior to well under the CG tolerance,
+        // and its test RMSE lands within ~1% (the Fig-3 check runs at
+        // scale in bench_precision.rs).
+        let kernel = ProductGridKernel::new(2, "rbf", 8);
+        let data = well_specified(20, 8, 2, &kernel, 0.01, 0.25, 13);
+        // gentle Adam steps keep the two trajectories glued so this
+        // compares numerics, not optimizer bifurcation
+        let cfg64 = LkgpConfig { seed: 5, train_iters: 10, lr: 0.02, ..quick_cfg() };
+        let cfg32 = LkgpConfig { precision: Precision::F32, ..cfg64.clone() };
+        let fit64 = Lkgp::fit(&data, cfg64).unwrap();
+        let fit32 = Lkgp::fit(&data, cfg32).unwrap();
+        let scale = fit64
+            .posterior
+            .mean
+            .iter()
+            .map(|x| x.abs())
+            .fold(0.0, f64::max)
+            .max(1e-6);
+        for i in 0..fit64.posterior.mean.len() {
+            assert!(
+                (fit64.posterior.mean[i] - fit32.posterior.mean[i]).abs()
+                    < 0.05 * scale + 0.02,
+                "mean mismatch at {i}: {} vs {}",
+                fit64.posterior.mean[i],
+                fit32.posterior.mean[i]
+            );
+            assert!(fit32.posterior.var[i].is_finite() && fit32.posterior.var[i] > 0.0);
+        }
+        let (r64, _) = fit64.posterior.test_metrics(&data);
+        let (r32, _) = fit32.posterior.test_metrics(&data);
+        assert!(
+            (r64 - r32).abs() <= 0.02 * r64.max(1e-9),
+            "f32 test rmse {r32} vs f64 {r64}"
+        );
+        // the f32 factored kernel is half the size
+        assert_eq!(fit32.kernel_bytes * 2, fit64.kernel_bytes);
     }
 
     #[test]

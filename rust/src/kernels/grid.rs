@@ -3,7 +3,7 @@
 //! `k_X((s,t), (s',t')) = k_S(s, s') * k_T(t, t')`, with a shared flat
 //! hyperparameter vector matching the AOT artifacts' `theta` ABI.
 
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, Scalar};
 
 use super::rbf::RbfArd;
 use super::time::TimeKernel;
@@ -41,7 +41,7 @@ impl ProductGridKernel {
 
     /// theta as f32 for the PJRT boundary.
     pub fn theta_f32(&self) -> Vec<f32> {
-        self.theta().iter().map(|&x| x as f32).collect()
+        crate::util::convert::f32_vec(&self.theta())
     }
 
     /// K_SS over spatial points (rows of `s`).
@@ -49,9 +49,23 @@ impl ProductGridKernel {
         self.spatial.gram(s, s)
     }
 
+    /// K_SS in the requested compute precision: the O(p^2 d) spatial
+    /// Gram runs natively in `T` (see [`RbfArd::gram_in`]).
+    pub fn gram_s_in<T: Scalar>(&self, s: &Matrix<f64>) -> Matrix<T> {
+        self.spatial.gram_in(s, s)
+    }
+
     /// K_TT over time coordinates.
     pub fn gram_t(&self, t: &[f64]) -> Matrix<f64> {
         self.time.gram(t)
+    }
+
+    /// K_TT in the requested compute precision. The time Gram is only
+    /// O(q^2) with q small (genericity inside `TimeKernel` would be
+    /// disproportionate), so it is computed in f64 and rounded once at
+    /// the precision boundary.
+    pub fn gram_t_in<T: Scalar>(&self, t: &[f64]) -> Matrix<T> {
+        self.time.gram(t).cast()
     }
 
     /// Full product-kernel evaluation between two grid points.

@@ -1,7 +1,7 @@
 //! ARD squared-exponential kernel with outputscale.
 
 use crate::linalg::gemm::matmul_nt;
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, Scalar};
 
 /// k(x, y) = exp(log_os) * exp(-0.5 * sum_d (x_d - y_d)^2 / ls_d^2)
 #[derive(Clone, Debug)]
@@ -33,30 +33,53 @@ impl RbfArd {
     /// ||x-y||^2 = x.x + y.y - 2 x.y^T, so the O(n m d) inner work is a
     /// single matmul_nt — the same schedule as the L1 Pallas RBF kernel.
     pub fn gram(&self, xs: &Matrix<f64>, ys: &Matrix<f64>) -> Matrix<f64> {
+        self.gram_in::<f64>(xs, ys)
+    }
+
+    /// Precision-generic Gram builder (the `Precision::F32` compute
+    /// path). Inputs are lengthscale-scaled in f64 and rounded to `T`
+    /// exactly once; the O(n m d) GEMM and the distance/exp post-pass
+    /// then run natively in `T`, so the f32 instantiation gets the full
+    /// SIMD-width/bandwidth benefit. `gram_in::<f64>` is bit-identical
+    /// to the original f64-only implementation.
+    pub fn gram_in<T: Scalar>(&self, xs: &Matrix<f64>, ys: &Matrix<f64>) -> Matrix<T> {
         assert_eq!(xs.cols, self.dim());
         assert_eq!(ys.cols, self.dim());
         let scale: Vec<f64> = self.log_ls.iter().map(|l| (-l).exp()).collect();
-        let scaled = |m: &Matrix<f64>| {
-            let mut s = m.clone();
-            for i in 0..s.rows {
-                for (v, sc) in s.row_mut(i).iter_mut().zip(&scale) {
-                    *v *= sc;
+        let scaled = |m: &Matrix<f64>| -> Matrix<T> {
+            let mut s = Matrix::<T>::zeros(m.rows, m.cols);
+            for i in 0..m.rows {
+                for ((v, x), sc) in s.row_mut(i).iter_mut().zip(m.row(i)).zip(&scale) {
+                    *v = T::from_f64(x * sc);
                 }
             }
             s
         };
         let (xs_s, ys_s) = (scaled(xs), scaled(ys));
-        let sqn = |m: &Matrix<f64>| -> Vec<f64> {
-            (0..m.rows).map(|i| m.row(i).iter().map(|v| v * v).sum()).collect()
+        let sqn = |m: &Matrix<T>| -> Vec<T> {
+            (0..m.rows)
+                .map(|i| {
+                    let mut acc = T::ZERO;
+                    for v in m.row(i) {
+                        acc += *v * *v;
+                    }
+                    acc
+                })
+                .collect()
         };
         let (xn, yn) = (sqn(&xs_s), sqn(&ys_s));
         let mut k = matmul_nt(&xs_s, &ys_s);
-        let os = self.log_os.exp();
+        let os = T::from_f64(self.log_os.exp());
+        let neg_half = T::from_f64(-0.5);
+        let two = T::from_f64(2.0);
         for i in 0..k.rows {
             let xi = xn[i];
             for (j, v) in k.row_mut(i).iter_mut().enumerate() {
-                let d2 = (xi + yn[j] - 2.0 * *v).max(0.0);
-                *v = os * (-0.5 * d2).exp();
+                let mut d2 = xi + yn[j] - two * *v;
+                if d2 < T::ZERO {
+                    d2 = T::ZERO;
+                }
+                *v = os * (neg_half * d2).exp();
             }
         }
         k
@@ -108,6 +131,23 @@ mod tests {
                 }
             }
             assert_close(&gram.data, &want, 1e-9)
+        });
+    }
+
+    #[test]
+    fn prop_gram_f32_close_to_f64() {
+        prop_check("rbf-gram-f32", 43, 10, |g| {
+            let d = g.size(1, 4);
+            let (m, n) = (g.size(1, 12), g.size(1, 12));
+            let mut k = RbfArd::new(d);
+            k.log_ls = (0..d).map(|_| g.f64_in(-0.5, 0.5)).collect();
+            k.log_os = g.f64_in(-0.5, 0.5);
+            let xs = Matrix::from_vec(m, d, g.vec_normal(m * d));
+            let ys = Matrix::from_vec(n, d, g.vec_normal(n * d));
+            let g64 = k.gram(&xs, &ys);
+            let g32 = k.gram_in::<f32>(&xs, &ys);
+            let wide: Vec<f64> = g32.data.iter().map(|&x| x as f64).collect();
+            assert_close(&wide, &g64.data, 1e-5)
         });
     }
 

@@ -20,6 +20,23 @@
 //! multithreaded through the [`par`] worker-pool subsystem
 //! (`LKGP_THREADS`, default = available cores) with bit-identical
 //! results for any thread count.
+//!
+//! ## Mixed precision
+//!
+//! The iterative hot path runs in either f64 (default) or f32, selected
+//! by `LkgpConfig::precision` (see [`gp::backend::Precision`]); the CLI
+//! flag is `lkgp train --f32`. The policy is *compute in f32,
+//! accumulate in f64*: Gram factors, Kronecker/dense MVMs, CG iterates,
+//! preconditioner columns, and pathwise samples are stored and
+//! multiplied in f32 (~2x memory bandwidth and SIMD width), while CG
+//! dot products and residual norms, the data-fit term, hyperparameter
+//! gradients, pathwise moment accumulation, and the small-factor
+//! Choleskys stay in f64. f64 -> f32 narrowing goes through the single
+//! rounding point in [`util::convert`], the public posterior is always
+//! f64, and thread-count bit-invariance holds in both precisions
+//! (rust/tests/par_invariance.rs); the accuracy contract per precision
+//! is pinned by rust/tests/numerics.rs and measured by
+//! `cargo bench --bench bench_precision` (BENCH_precision.json).
 
 pub mod baselines;
 pub mod coordinator;

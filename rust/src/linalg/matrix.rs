@@ -24,6 +24,9 @@ pub trait Scalar:
 {
     const ZERO: Self;
     const ONE: Self;
+    /// `"f32"` / `"f64"` — for diagnostics, bench labels, and the
+    /// precision-aware test tolerances in `util::testing`.
+    const NAME: &'static str;
     fn sqrt(self) -> Self;
     fn abs(self) -> Self;
     fn ln(self) -> Self;
@@ -37,6 +40,7 @@ macro_rules! impl_scalar {
         impl Scalar for $t {
             const ZERO: Self = 0.0;
             const ONE: Self = 1.0;
+            const NAME: &'static str = stringify!($t);
             #[inline]
             fn sqrt(self) -> Self {
                 self.sqrt()

@@ -26,7 +26,8 @@ const USAGE: &str = "usage: lkgp <info|train|experiment> [flags]
   lkgp info
   lkgp train --data <climate|climate-precip|lcbench|sarcos|synthetic>
              [--p N] [--q N] [--missing R] [--seed S]
-             [--backend rust|<artifact-config>] [--dense] [--iters N]
+             [--backend rust|<artifact-config>] [--dense] [--f32]
+             [--iters N]
   lkgp experiment <fig2|fig3|fig4|fig5|table1|table2|ablations|all>
              [--scale quick|paper] [--seeds N] [--ratios a,b,..]
              [--backend rust|<artifact-config>]";
@@ -116,12 +117,24 @@ fn cmd_train(args: &Args) -> i32 {
         }
         cfg => Backend::Pjrt { config: cfg.to_string() },
     };
+    let precision = if args.bool("f32") {
+        if matches!(backend, Backend::Pjrt { .. }) {
+            eprintln!(
+                "note: --f32 has no effect on the PJRT backend \
+                 (artifacts already execute in f32 on-device)"
+            );
+        }
+        lkgp::gp::backend::Precision::F32
+    } else {
+        lkgp::gp::backend::Precision::F64
+    };
     let cfg = LkgpConfig {
         train_iters: args.usize("iters", 20),
         n_samples: args.usize("samples", 32),
         precond_rank: args.usize("precond-rank", 0),
         seed: args.u64("seed", 0),
         backend,
+        precision,
         ..LkgpConfig::default()
     };
     if let Err(e) = args.finish() {

@@ -152,8 +152,11 @@ impl TensorF32 {
         TensorF32 { shape: vec![data.len()], data }
     }
 
+    /// Narrow f64 host data through the crate's single rounding point
+    /// (`util::convert`) — the same conversion the mixed-precision
+    /// compute path uses.
     pub fn from_f64(shape: Vec<usize>, data: &[f64]) -> Self {
-        TensorF32::new(shape, data.iter().map(|&x| x as f32).collect())
+        TensorF32::new(shape, crate::util::convert::f32_vec(data))
     }
 
     fn to_literal(&self) -> Result<xla::Literal> {

@@ -1,0 +1,48 @@
+//! The crate's single f64 -> f32 rounding point.
+//!
+//! Every boundary that narrows f64 values to f32 — the PJRT tensor
+//! boundary (`runtime::TensorF32`), the dense-baseline f32 Gram gather
+//! in `gp::backend`, and the mixed-precision (`Precision::F32`) compute
+//! path — goes through these helpers so the rounding behaviour (IEEE
+//! round-to-nearest-even, the semantics of Rust's `as f32`) is defined
+//! in exactly one place. If the narrowing policy ever changes (e.g.
+//! stochastic rounding experiments), it changes here for every layer at
+//! once.
+
+/// Narrow one f64 to f32 (IEEE round-to-nearest-even).
+#[inline]
+pub fn f32_of(x: f64) -> f32 {
+    x as f32
+}
+
+/// Narrow a slice of f64 to a fresh f32 vector.
+pub fn f32_vec(xs: &[f64]) -> Vec<f32> {
+    xs.iter().map(|&x| f32_of(x)).collect()
+}
+
+/// Widen a slice of f32 to a fresh f64 vector (exact; every f32 is
+/// representable as f64).
+pub fn f64_vec(xs: &[f32]) -> Vec<f64> {
+    xs.iter().map(|&x| x as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_is_exact_for_f32_values() {
+        let xs = vec![0.5f32, -1.25, 3.0e7, f32::MIN_POSITIVE];
+        let wide = f64_vec(&xs);
+        let back = f32_vec(&wide);
+        assert_eq!(xs, back);
+    }
+
+    #[test]
+    fn narrowing_matches_as_cast() {
+        for &x in &[0.1f64, -1.0 / 3.0, 1e300, -1e-300, 0.0] {
+            assert_eq!(f32_of(x).to_bits(), (x as f32).to_bits());
+        }
+        assert_eq!(f32_vec(&[0.1, 0.2]), vec![0.1f64 as f32, 0.2f64 as f32]);
+    }
+}

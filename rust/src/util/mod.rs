@@ -9,6 +9,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod convert;
 pub mod json;
 pub mod mem;
 pub mod rng;

@@ -5,6 +5,8 @@
 //! the case can be replayed deterministically. `Gen` wraps the RNG with
 //! generators for the shapes/values the numeric property tests need.
 
+use crate::linalg::Scalar;
+
 use super::rng::Rng;
 
 /// Value generators for property tests.
@@ -77,6 +79,44 @@ where
     }
 }
 
+/// Pick a tolerance by compute precision: `tol_f64` when `T` is f64,
+/// `tol_f32` when `T` is f32. The precision-aware numeric tests
+/// (rust/tests/numerics.rs) state both bounds at the call site so the
+/// accuracy contract of each precision is explicit.
+pub fn prec_tol<T: Scalar>(tol_f64: f64, tol_f32: f64) -> f64 {
+    if T::NAME == "f32" {
+        tol_f32
+    } else {
+        tol_f64
+    }
+}
+
+/// Precision-aware [`assert_close`]: compares a `T`-valued result
+/// against an f64 reference with a per-precision tolerance
+/// (absolute + relative, like `assert_close`).
+pub fn assert_close_prec<T: Scalar>(
+    got: &[T],
+    want: &[f64],
+    tol_f64: f64,
+    tol_f32: f64,
+) -> Result<(), String> {
+    let tol = prec_tol::<T>(tol_f64, tol_f32);
+    if got.len() != want.len() {
+        return Err(format!("length mismatch {} vs {}", got.len(), want.len()));
+    }
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let g = g.to_f64();
+        let scale = 1.0f64.max(w.abs());
+        if (g - w).abs() > tol * scale {
+            return Err(format!(
+                "index {i}: got {g}, want {w} ({} tol {tol})",
+                T::NAME
+            ));
+        }
+    }
+    Ok(())
+}
+
 /// Assert two slices are elementwise close (absolute + relative).
 pub fn assert_close(got: &[f64], want: &[f64], tol: f64) -> Result<(), String> {
     if got.len() != want.len() {
@@ -126,6 +166,20 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn prec_tol_selects_by_scalar() {
+        assert_eq!(prec_tol::<f64>(1e-9, 1e-4), 1e-9);
+        assert_eq!(prec_tol::<f32>(1e-9, 1e-4), 1e-4);
+    }
+
+    #[test]
+    fn assert_close_prec_uses_precision_tolerance() {
+        // 1e-5 off: fails the f64 bound, passes the f32 bound
+        let want = [1.0f64];
+        assert!(assert_close_prec::<f64>(&[1.0 + 1e-5], &want, 1e-9, 1e-3).is_err());
+        assert!(assert_close_prec::<f32>(&[1.0 + 1e-5], &want, 1e-9, 1e-3).is_ok());
     }
 
     #[test]

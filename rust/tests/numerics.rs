@@ -1,0 +1,338 @@
+//! Precision-aware numerics harness: every property runs in **both**
+//! compute precisions with per-precision tolerances stated at the call
+//! site (`util::testing::assert_close_prec`). The f64 bounds pin the
+//! solver-tolerance-limited regime; the f32 bounds document the
+//! accuracy contract of the `Precision::F32` hot path (compute in f32,
+//! accumulate in f64 — see `gp::backend::Precision`).
+//!
+//! Also hosts the golden posterior regression: a fixed-seed
+//! quickstart-sized fit whose f64 posterior must match checked-in bits
+//! exactly (thread-count invariance makes this deterministic on a given
+//! toolchain/libm) and whose f32 posterior must stay within the
+//! documented tolerance of the same golden values.
+
+use std::path::{Path, PathBuf};
+
+use lkgp::data::synthetic::well_specified;
+use lkgp::data::GridDataset;
+use lkgp::gp::backend::Precision;
+use lkgp::gp::lkgp::{Lkgp, LkgpConfig};
+use lkgp::kernels::ProductGridKernel;
+use lkgp::kron::{KronOp, MaskedKronSystem};
+use lkgp::linalg::{cholesky, Matrix, Scalar};
+use lkgp::solvers::cg::{solve_cg, CgOptions, DenseOp};
+use lkgp::solvers::precond::Preconditioner;
+use lkgp::util::json::Json;
+use lkgp::util::testing::{assert_close_prec, prec_tol, prop_check};
+
+// ---------------------------------------------------------------------
+// Kron MVM vs dense reference
+// ---------------------------------------------------------------------
+
+fn kron_mvm_matches_dense<T: Scalar>() {
+    prop_check(&format!("kron-mvm-dense-{}", T::NAME), 3101, 12, |g| {
+        let (p, q, b) = (g.size(1, 9), g.size(1, 9), g.size(1, 3));
+        let kss64 = Matrix::from_vec(p, p, g.spd(p));
+        let ktt64 = Matrix::from_vec(q, q, g.spd(q));
+        let v64 = Matrix::from_vec(b, p * q, g.vec_normal(b * p * q));
+        let op: KronOp<T> = KronOp::new(kss64.cast(), ktt64.cast());
+        let v: Matrix<T> = v64.cast();
+        let got = op.apply_batch(&v);
+        // reference: unrounded f64 dense Kronecker product
+        let dense = KronOp::new(kss64, ktt64).dense();
+        let mut want = Vec::with_capacity(b * p * q);
+        for bi in 0..b {
+            want.extend(dense.matvec(v64.row(bi)));
+        }
+        assert_close_prec(&got.data, &want, 1e-8, 1e-3)
+    });
+}
+
+#[test]
+fn prop_kron_mvm_matches_dense_f64() {
+    kron_mvm_matches_dense::<f64>();
+}
+
+#[test]
+fn prop_kron_mvm_matches_dense_f32() {
+    kron_mvm_matches_dense::<f32>();
+}
+
+// ---------------------------------------------------------------------
+// Masked projection identity: P (K_SS (x) K_TT) P^T == gathered Gram
+// ---------------------------------------------------------------------
+
+fn masked_projection_identity<T: Scalar>() {
+    prop_check(&format!("masked-projection-{}", T::NAME), 3307, 8, |g| {
+        let (p, q) = (g.size(1, 7), g.size(1, 7));
+        let n = p * q;
+        let kss64 = Matrix::from_vec(p, p, g.spd(p));
+        let ktt64 = Matrix::from_vec(q, q, g.spd(q));
+        let mask = g.mask(n, 0.4);
+        let mask_t: Vec<T> = mask.iter().map(|&m| T::from_f64(m)).collect();
+        // sigma2 = 0 so the operator is exactly M (K (x) K) M
+        let sys: MaskedKronSystem<T> =
+            MaskedKronSystem::new(KronOp::new(kss64.cast(), ktt64.cast()), mask_t, T::ZERO);
+        let dense = KronOp::new(kss64, ktt64).dense();
+        let obs: Vec<usize> = (0..n).filter(|&i| mask[i] != 0.0).collect();
+        for &cidx in &obs {
+            let mut e = Matrix::<T>::zeros(1, n);
+            e[(0, cidx)] = T::ONE;
+            let col = sys.apply_batch(&e);
+            // observed rows reproduce the gathered dense Gram column
+            let got: Vec<T> = obs.iter().map(|&r| col[(0, r)]).collect();
+            let want: Vec<f64> = obs.iter().map(|&r| dense[(r, cidx)]).collect();
+            assert_close_prec(&got, &want, 1e-8, 1e-3)?;
+            // missing rows stay exactly zero (projection, not damping)
+            for i in 0..n {
+                if mask[i] == 0.0 && col[(0, i)].to_f64() != 0.0 {
+                    return Err(format!("leaked into missing coord {i}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_masked_projection_identity_f64() {
+    masked_projection_identity::<f64>();
+}
+
+#[test]
+fn prop_masked_projection_identity_f32() {
+    masked_projection_identity::<f32>();
+}
+
+// ---------------------------------------------------------------------
+// CG residual bound (verified independently in f64)
+// ---------------------------------------------------------------------
+
+fn cg_solution_meets_residual_bound<T: Scalar>() {
+    prop_check(&format!("cg-residual-{}", T::NAME), 3511, 10, |g| {
+        let n = g.size(2, 24);
+        let a64 = Matrix::from_vec(n, n, g.spd(n));
+        let a: Matrix<T> = a64.cast();
+        let b64 = Matrix::from_vec(2, n, g.vec_normal(2 * n));
+        let b: Matrix<T> = b64.cast();
+        let tol = prec_tol::<T>(1e-8, 1e-4);
+        let (x, stats) = solve_cg(
+            &mut DenseOp(&a),
+            &b,
+            &Preconditioner::Identity,
+            &CgOptions { max_iters: 30 * n, tol },
+        );
+        if !stats.converged {
+            return Err(format!("not converged: {:?}", stats.rel_residuals));
+        }
+        // verify the claimed residual with an independent f64 recompute
+        // on the same (rounded) operator — CG's recursive residual must
+        // not have drifted past a small multiple of the tolerance
+        let a_check: Matrix<f64> = a.cast();
+        for sys in 0..2 {
+            let xr: Vec<f64> = x.row(sys).iter().map(|v| v.to_f64()).collect();
+            let ax = a_check.matvec(&xr);
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for (got, want) in ax.iter().zip(b64.row(sys)) {
+                num += (got - want) * (got - want);
+                den += want * want;
+            }
+            let rel = num.sqrt() / den.sqrt().max(1e-300);
+            if rel > 10.0 * tol {
+                return Err(format!("system {sys}: true residual {rel} > 10*{tol}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cg_residual_bound_f64() {
+    cg_solution_meets_residual_bound::<f64>();
+}
+
+#[test]
+fn prop_cg_residual_bound_f32() {
+    cg_solution_meets_residual_bound::<f32>();
+}
+
+// ---------------------------------------------------------------------
+// Pivoted-Cholesky preconditioner: SPD + Woodbury-apply consistency
+// ---------------------------------------------------------------------
+
+fn precond_spd_and_woodbury_consistent<T: Scalar>() {
+    prop_check(&format!("precond-woodbury-{}", T::NAME), 3709, 8, |g| {
+        let n = g.size(2, 16);
+        let a64 = Matrix::from_vec(n, n, g.spd(n));
+        let a: Matrix<T> = a64.cast();
+        let sigma2 = g.f64_in(0.2, 1.5);
+        let diag: Vec<f64> = (0..n).map(|i| a64[(i, i)]).collect();
+        // full-rank lazy pivoted Cholesky => M = A + sigma2 I (+ rounding)
+        let pre =
+            Preconditioner::<T>::pivoted_from_columns(diag, |j| a.col(j), n, sigma2);
+        let rhs64 = Matrix::from_vec(2, n, g.vec_normal(2 * n));
+        let rhs: Matrix<T> = rhs64.cast();
+        let got = pre.apply_batch(&rhs);
+        // f64 reference inverse of the unrounded M
+        let mut m = a64.clone();
+        m.add_diag(sigma2);
+        let ch = cholesky(&m).ok_or("M not PD")?;
+        for sys in 0..2 {
+            let want = ch.solve(rhs64.row(sys));
+            assert_close_prec(got.row(sys), &want, 1e-5, 2e-2)?;
+        }
+        // SPD of the Woodbury apply, accumulated in f64:
+        // z^T M^{-1} z > 0 and u^T M^{-1} v == v^T M^{-1} u
+        let quad = |u: &[T], mv: &[T]| -> f64 {
+            u.iter().zip(mv).map(|(a, b)| a.to_f64() * b.to_f64()).sum()
+        };
+        let z_quad = quad(rhs.row(0), got.row(0));
+        if z_quad <= 0.0 {
+            return Err(format!("z^T M^-1 z = {z_quad} not positive"));
+        }
+        let asym = quad(rhs.row(0), got.row(1)) - quad(rhs.row(1), got.row(0));
+        let scale = z_quad.abs().max(1.0);
+        if asym.abs() > prec_tol::<T>(1e-8, 1e-3) * scale {
+            return Err(format!("Woodbury apply not symmetric: {asym}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_precond_spd_woodbury_f64() {
+    precond_spd_and_woodbury_consistent::<f64>();
+}
+
+#[test]
+fn prop_precond_spd_woodbury_f32() {
+    precond_spd_and_woodbury_consistent::<f32>();
+}
+
+// ---------------------------------------------------------------------
+// Golden posterior regression
+// ---------------------------------------------------------------------
+
+fn golden_data() -> GridDataset {
+    let kernel = ProductGridKernel::new(2, "rbf", 8);
+    well_specified(24, 8, 2, &kernel, 0.01, 0.3, 42)
+}
+
+fn golden_cfg(precision: Precision) -> LkgpConfig {
+    LkgpConfig {
+        train_iters: 8,
+        // gentle steps keep the f32/f64 Adam trajectories glued, so the
+        // cross-precision comparison measures numerics, not optimizer
+        // bifurcation on near-zero gradient components
+        lr: 0.02,
+        n_samples: 16,
+        probes: 4,
+        cg_tol: 1e-3,
+        cg_max_iters: 200,
+        precond_rank: 16, // exercise the pivoted-Cholesky path
+        seed: 42,
+        precision,
+        ..LkgpConfig::default()
+    }
+}
+
+fn golden_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden/posterior_f64.json")
+}
+
+fn bits_hex(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|x| Json::Str(format!("{:016x}", x.to_bits()))).collect())
+}
+
+fn read_bits(doc: &Json, key: &str) -> Vec<f64> {
+    doc.get(key)
+        .unwrap_or_else(|| panic!("golden file missing key {key:?}"))
+        .as_arr()
+        .expect("golden key not an array")
+        .iter()
+        .map(|j| {
+            let s = j.as_str().expect("golden entry not a hex string");
+            f64::from_bits(u64::from_str_radix(s, 16).expect("bad hex"))
+        })
+        .collect()
+}
+
+/// Fixed-seed quickstart-sized fit vs checked-in golden posterior.
+///
+/// * f64: **exact bit match**. Everything on the path is deterministic
+///   and thread-count invariant, so any drift means a numerics change —
+///   rebless deliberately with `LKGP_BLESS=1 cargo test golden` after
+///   auditing it. (The golden bits are tied to the build's libm; a
+///   toolchain/platform change may also require reblessing.)
+/// * f32: every posterior-mean cell within 5% of the f64 golden
+///   posterior's max-|mean| scale (+0.02 absolute slack), and every
+///   variance within 25% relative — the documented accuracy contract
+///   of `Precision::F32` at CG tolerance 1e-3.
+///
+/// On the very first run (no golden file yet) the test writes the file
+/// and validates against it, so a fresh checkout self-bootstraps; the
+/// blessed file is meant to be committed.
+#[test]
+fn golden_posterior_regression() {
+    let data = golden_data();
+    let fit = Lkgp::fit(&data, golden_cfg(Precision::F64)).unwrap();
+    let path = golden_path();
+    let bless_requested =
+        std::env::var("LKGP_BLESS").map(|v| v == "1").unwrap_or(false);
+    if bless_requested || !path.exists() {
+        let doc = Json::obj(vec![
+            (
+                "config",
+                Json::Str(
+                    "well_specified(p=24,q=8,ds=2,rbf,s2=0.01,miss=0.3,seed=42); \
+                     train_iters=8 n_samples=16 probes=4 cg_tol=1e-3 precond_rank=16 seed=42"
+                        .to_string(),
+                ),
+            ),
+            ("mean_bits", bits_hex(&fit.posterior.mean)),
+            ("var_bits", bits_hex(&fit.posterior.var)),
+        ]);
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, format!("{doc}\n")).unwrap();
+        eprintln!("blessed golden posterior at {path:?}");
+    }
+    let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let want_mean = read_bits(&doc, "mean_bits");
+    let want_var = read_bits(&doc, "var_bits");
+    assert_eq!(fit.posterior.mean.len(), want_mean.len(), "golden shape drift");
+    for i in 0..want_mean.len() {
+        assert_eq!(
+            fit.posterior.mean[i].to_bits(),
+            want_mean[i].to_bits(),
+            "f64 posterior mean[{i}] drifted: {} vs golden {}",
+            fit.posterior.mean[i],
+            want_mean[i]
+        );
+        assert_eq!(
+            fit.posterior.var[i].to_bits(),
+            want_var[i].to_bits(),
+            "f64 posterior var[{i}] drifted: {} vs golden {}",
+            fit.posterior.var[i],
+            want_var[i]
+        );
+    }
+
+    // f32 within documented tolerance of the same golden values
+    let fit32 = Lkgp::fit(&data, golden_cfg(Precision::F32)).unwrap();
+    let scale = want_mean.iter().map(|x| x.abs()).fold(0.0, f64::max).max(1e-6);
+    for i in 0..want_mean.len() {
+        let dm = (fit32.posterior.mean[i] - want_mean[i]).abs();
+        assert!(
+            dm < 0.05 * scale + 0.02,
+            "f32 mean[{i}] off golden by {dm} (scale {scale})"
+        );
+        let dv = (fit32.posterior.var[i] - want_var[i]).abs();
+        assert!(
+            dv < 0.25 * want_var[i].abs() + 1e-8,
+            "f32 var[{i}] {} vs golden {}",
+            fit32.posterior.var[i],
+            want_var[i]
+        );
+    }
+}

@@ -1,12 +1,14 @@
 //! Thread-count invariance: every parallel kernel in the inference hot
-//! path must produce *bit-identical* results for any `LKGP_THREADS`.
-//! The `crate::par` helpers guarantee this by construction (chunk
-//! boundaries depend only on the problem shape; each output element is
-//! written by exactly one worker with a fixed sequential reduction
-//! order) — these tests assert it end-to-end, from the GEMM primitives
-//! up through a full `Lkgp::fit` posterior.
+//! path must produce *bit-identical* results for any `LKGP_THREADS`,
+//! in **both compute precisions**. The `crate::par` helpers guarantee
+//! this by construction (chunk boundaries depend only on the problem
+//! shape; each output element is written by exactly one worker with a
+//! fixed sequential reduction order) — these tests assert it
+//! end-to-end, from the GEMM primitives up through a full `Lkgp::fit`
+//! posterior, for f64 and for the `Precision::F32` path.
 
 use lkgp::data::synthetic::well_specified;
+use lkgp::gp::backend::Precision;
 use lkgp::gp::lkgp::{Lkgp, LkgpConfig};
 use lkgp::kernels::ProductGridKernel;
 use lkgp::kron::{KronOp, MaskedKronSystem};
@@ -17,6 +19,10 @@ use lkgp::util::rng::Rng;
 use lkgp::util::testing::{prop_check, Gen};
 
 fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn bits32(v: &[f32]) -> Vec<u32> {
     v.iter().map(|x| x.to_bits()).collect()
 }
 
@@ -68,6 +74,97 @@ fn prop_kron_apply_bit_identical_across_thread_counts() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn f32_gemm_bit_identical_across_thread_counts() {
+    let mut rng = Rng::new(21);
+    // same shapes as the f64 test: straddle the MC=64 block boundary
+    // and the 1x4 nt blocking
+    let a: Matrix<f32> = Matrix::from_vec(130, 70, rng.normals(130 * 70)).cast();
+    let b: Matrix<f32> = Matrix::from_vec(70, 65, rng.normals(70 * 65)).cast();
+    let bt = b.transpose();
+    let want = with_threads(1, || (matmul(&a, &b), matmul_nt(&a, &bt)));
+    for t in [2usize, 3, 8] {
+        let got = with_threads(t, || (matmul(&a, &b), matmul_nt(&a, &bt)));
+        assert_eq!(bits32(&want.0.data), bits32(&got.0.data), "f32 matmul differs at t={t}");
+        assert_eq!(
+            bits32(&want.1.data),
+            bits32(&got.1.data),
+            "f32 matmul_nt differs at t={t}"
+        );
+    }
+}
+
+#[test]
+fn prop_f32_kron_apply_bit_identical_across_thread_counts() {
+    prop_check("kron-thread-invariance-f32", 7253, 8, |g: &mut Gen| {
+        let (p, q, bsz) = (g.size(1, 24), g.size(1, 12), g.size(1, 6));
+        let op: KronOp<f32> = KronOp::new(
+            Matrix::from_vec(p, p, g.spd(p)).cast(),
+            Matrix::from_vec(q, q, g.spd(q)).cast(),
+        );
+        let mask: Vec<f32> = g.mask(p * q, 0.3).iter().map(|&m| m as f32).collect();
+        let sys = MaskedKronSystem::new(op.clone(), mask, 0.21f32);
+        let v: Matrix<f32> =
+            Matrix::from_vec(bsz, p * q, g.vec_normal(bsz * p * q)).cast();
+        let base = with_threads(1, || {
+            (op.apply_batch(&v), sys.apply_batch(&v), sys.diag(), sys.kernel_col(0))
+        });
+        for t in [2usize, 5] {
+            let got = with_threads(t, || {
+                (op.apply_batch(&v), sys.apply_batch(&v), sys.diag(), sys.kernel_col(0))
+            });
+            if bits32(&base.0.data) != bits32(&got.0.data) {
+                return Err(format!("f32 KronOp::apply_batch differs at t={t}"));
+            }
+            if bits32(&base.1.data) != bits32(&got.1.data) {
+                return Err(format!("f32 MaskedKronSystem::apply_batch differs at t={t}"));
+            }
+            if bits32(&base.2) != bits32(&got.2) {
+                return Err(format!("f32 diag differs at t={t}"));
+            }
+            if bits32(&base.3) != bits32(&got.3) {
+                return Err(format!("f32 kernel_col differs at t={t}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn f32_fit_posterior_bit_identical_across_thread_counts() {
+    // The acceptance bar for the mixed-precision path: a full f32 fit —
+    // f32 GEMM, f32 apply_batch, parallel pivoted-Cholesky, pathwise
+    // accumulation — is bit-identical at 1/2/4/8 worker threads.
+    let kernel = ProductGridKernel::new(2, "rbf", 8);
+    let data = well_specified(16, 8, 2, &kernel, 0.05, 0.3, 9);
+    let cfg = LkgpConfig {
+        train_iters: 4,
+        n_samples: 8,
+        probes: 4,
+        precond_rank: 20,
+        seed: 3,
+        precision: Precision::F32,
+        ..LkgpConfig::default()
+    };
+    let f1 = with_threads(1, || Lkgp::fit(&data, cfg.clone()).unwrap());
+    for t in [2usize, 4, 8] {
+        let ft = with_threads(t, || Lkgp::fit(&data, cfg.clone()).unwrap());
+        assert_eq!(
+            bits(&f1.posterior.mean),
+            bits(&ft.posterior.mean),
+            "f32 posterior mean differs at t={t}"
+        );
+        assert_eq!(
+            bits(&f1.posterior.var),
+            bits(&ft.posterior.var),
+            "f32 posterior var differs at t={t}"
+        );
+        for (a, b) in f1.loss_trace.iter().zip(&ft.loss_trace) {
+            assert_eq!(a.to_bits(), b.to_bits(), "f32 loss trace differs at t={t}");
+        }
+    }
 }
 
 #[test]
