@@ -1,17 +1,26 @@
-//! Bench: parallel scaling of the compute subsystem (`lkgp::par`).
+//! Bench: parallel scaling of the compute subsystem (`lkgp::par`) and
+//! the register-tiled GEMM microkernel.
 //!
-//! Measures the batched Kronecker MVM, the blocked GEMM, and an
-//! end-to-end `Lkgp::fit` on a p=256, q=32 synthetic workload at
-//! 1/2/4/8 worker threads, asserts the MVM outputs and the fit
-//! posterior are bit-identical across thread counts, and writes
-//! `BENCH_par.json` (the machine-readable perf-trajectory seed) plus
-//! the usual results/bench CSV/JSON.
+//! Measures the batched Kronecker MVM, the tiled GEMM at 1/2/4/8 worker
+//! threads, the microkernel against the retained scalar baseline
+//! (`matmul_nt_ref`, single-threaded so the comparison isolates the
+//! register tile from parallel scaling), and an end-to-end `Lkgp::fit`;
+//! asserts the MVM outputs and the fit posterior are bit-identical
+//! across thread counts, and writes `BENCH_par.json` with the
+//! `gemm_microkernel` acceptance fields the `bench-smoke` CI job gates
+//! on (`tiled_ge_1p5x`, `tiled_f32_ge_2x`, `gemm_gflops_ok`).
+//!
+//! `LKGP_BENCH_SMOKE=1` shrinks problem sizes and sample counts for CI;
+//! the acceptance ratios are size-stable, so the gate fields stay
+//! meaningful. `LKGP_GEMM_GFLOPS_MIN` (default 1.0) sets the absolute
+//! GFLOP/s floor — deliberately conservative, since shared CI runners
+//! vary; the ratio fields are the real regression signal.
 
 use lkgp::data::synthetic::well_specified;
 use lkgp::gp::lkgp::{Lkgp, LkgpConfig};
 use lkgp::kernels::{ProductGridKernel, RbfArd};
 use lkgp::kron::{breakeven, KronOp, MaskedKronSystem};
-use lkgp::linalg::gemm::gemm_flops;
+use lkgp::linalg::gemm::{gemm_flops, matmul_nt, matmul_nt_ref};
 use lkgp::linalg::Matrix;
 use lkgp::par;
 use lkgp::util::bench::{black_box, Bencher};
@@ -25,12 +34,17 @@ fn cores() -> usize {
 }
 
 fn main() {
-    let mut b = Bencher::default();
+    let smoke = std::env::var("LKGP_BENCH_SMOKE").ok().as_deref() == Some("1");
+    let mut b = if smoke { Bencher::quick() } else { Bencher::default() };
     let mut rng = Rng::new(0);
-    println!("# bench_par — thread scaling (cores available: {})\n", cores());
+    println!(
+        "# bench_par — thread scaling + GEMM microkernel (cores: {}, smoke: {})\n",
+        cores(),
+        smoke
+    );
 
     // ---- batched Kron MVM (p=256, q=32 — the Fig-3 shape) ----
-    let (p, q) = (256usize, 32usize);
+    let (p, q) = if smoke { (128usize, 16usize) } else { (256usize, 32usize) };
     let n = p * q;
     let kss = {
         let a = Matrix::from_vec(p, 3, rng.normals(p * 3));
@@ -63,8 +77,9 @@ fn main() {
     }
     println!();
 
-    // ---- blocked GEMM ----
-    let (gm, gk, gn) = (384usize, 384, 384);
+    // ---- tiled GEMM thread scaling ----
+    let gdim = if smoke { 256usize } else { 384usize };
+    let (gm, gk, gn) = (gdim, gdim, gdim);
     let ga = Matrix::from_vec(gm, gk, rng.normals(gm * gk));
     let gb = Matrix::from_vec(gk, gn, rng.normals(gk * gn));
     for &t in &THREADS {
@@ -80,11 +95,72 @@ fn main() {
     }
     println!();
 
-    // ---- end-to-end fit (p=256, q=32 synthetic workload) ----
-    let kernel = ProductGridKernel::new(2, "rbf", q);
-    let data = well_specified(p, q, 2, &kernel, 0.05, 0.25, 7);
+    // ---- GEMM microkernel vs scalar baseline (single-threaded) ----
+    // Largest dense shape in this bench, A @ B^T form in both paths so
+    // the only difference is the register tile + packing. These four
+    // measurements feed hard CI gates, so they get more samples than
+    // the surrounding sections even in smoke mode, and the acceptance
+    // ratios are computed from p10 (near-best) times — far less
+    // sensitive to noisy-neighbor bursts on shared runners than the
+    // median of a handful of samples.
+    let fl = gemm_flops(gdim, gdim, gdim);
+    let gbt = gb.transpose(); // gdim x gdim, row-major "B" for the nt form
+    let (ga32, gbt32): (Matrix<f32>, Matrix<f32>) = (ga.cast(), gbt.cast());
+    let saved = (b.sample_target, b.samples);
+    b.sample_target = saved.0.max(std::time::Duration::from_millis(120));
+    b.samples = saved.1.max(7);
+    let (t_ref64, t_tile64, t_ref32, t_tile32) = par::with_threads(1, || {
+        let t_ref64 = b
+            .bench_with_flops(&format!("gemm_nt {gdim}^3 f64 scalar-ref t=1"), Some(fl), || {
+                black_box(matmul_nt_ref(&ga, &gbt));
+            })
+            .p10_ns;
+        let t_tile64 = b
+            .bench_with_flops(&format!("gemm_nt {gdim}^3 f64 tiled t=1"), Some(fl), || {
+                black_box(matmul_nt(&ga, &gbt));
+            })
+            .p10_ns;
+        let t_ref32 = b
+            .bench_with_flops(&format!("gemm_nt {gdim}^3 f32 scalar-ref t=1"), Some(fl), || {
+                black_box(matmul_nt_ref(&ga32, &gbt32));
+            })
+            .p10_ns;
+        let t_tile32 = b
+            .bench_with_flops(&format!("gemm_nt {gdim}^3 f32 tiled t=1"), Some(fl), || {
+                black_box(matmul_nt(&ga32, &gbt32));
+            })
+            .p10_ns;
+        (t_ref64, t_tile64, t_ref32, t_tile32)
+    });
+    b.sample_target = saved.0;
+    b.samples = saved.1;
+    let gfl = |ns: f64| fl / ns; // flops per ns == GFLOP/s
+    let speedup64 = t_ref64 / t_tile64;
+    let speedup32 = t_ref32 / t_tile32;
+    let gflops_min: f64 = std::env::var("LKGP_GEMM_GFLOPS_MIN")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let gflops_ok = gfl(t_tile64) >= gflops_min && gfl(t_tile32) >= gflops_min;
+    println!(
+        "-> microkernel f64: {:.2} GFLOP/s tiled vs {:.2} scalar ({speedup64:.2}x, \
+         acceptance >= 1.5x)",
+        gfl(t_tile64),
+        gfl(t_ref64)
+    );
+    println!(
+        "-> microkernel f32: {:.2} GFLOP/s tiled vs {:.2} scalar ({speedup32:.2}x, \
+         acceptance >= 2x)\n",
+        gfl(t_tile32),
+        gfl(t_ref32)
+    );
+
+    // ---- end-to-end fit (synthetic workload) ----
+    let (fp, fq) = if smoke { (96usize, 16usize) } else { (256usize, 32usize) };
+    let kernel = ProductGridKernel::new(2, "rbf", fq);
+    let data = well_specified(fp, fq, 2, &kernel, 0.05, 0.25, 7);
     let cfg = LkgpConfig {
-        train_iters: 3,
+        train_iters: if smoke { 2 } else { 3 },
         n_samples: 16,
         probes: 4,
         cg_max_iters: 100,
@@ -125,11 +201,11 @@ fn main() {
         assert!(identical, "fit posterior not bit-identical at t={t}");
         let speedup = fit_base / secs;
         println!(
-            "fit/e2e p={p} q={q} threads={t}: {secs:.3}s  speedup {speedup:.2}x  \
+            "fit/e2e p={fp} q={fq} threads={t}: {secs:.3}s  speedup {speedup:.2}x  \
              bit-identical: {identical}"
         );
         fit_rows.push(Json::obj(vec![
-            ("name", Json::Str(format!("fit/e2e p={p} q={q}"))),
+            ("name", Json::Str(format!("fit/e2e p={fp} q={fq}"))),
             ("threads", Json::Num(t as f64)),
             ("secs", Json::Num(secs)),
             ("speedup_vs_1", Json::Num(speedup)),
@@ -137,11 +213,28 @@ fn main() {
         ]));
     }
 
-    // machine-readable perf trajectory seed
+    // machine-readable perf trajectory seed + CI acceptance fields
     let doc = Json::obj(vec![
         ("bench", Json::Str("bench_par".to_string())),
         ("cores", Json::Num(cores() as f64)),
+        ("smoke", Json::Bool(smoke)),
         ("micro", b.to_json()),
+        (
+            "gemm_microkernel",
+            Json::obj(vec![
+                ("shape", Json::Str(format!("{gdim}x{gdim}x{gdim}"))),
+                ("f64_scalar_gflops", Json::Num(gfl(t_ref64))),
+                ("f64_tiled_gflops", Json::Num(gfl(t_tile64))),
+                ("f64_speedup", Json::Num(speedup64)),
+                ("tiled_ge_1p5x", Json::Bool(speedup64 >= 1.5)),
+                ("f32_scalar_gflops", Json::Num(gfl(t_ref32))),
+                ("f32_tiled_gflops", Json::Num(gfl(t_tile32))),
+                ("f32_speedup", Json::Num(speedup32)),
+                ("tiled_f32_ge_2x", Json::Bool(speedup32 >= 2.0)),
+                ("gemm_gflops_min", Json::Num(gflops_min)),
+                ("gemm_gflops_ok", Json::Bool(gflops_ok)),
+            ]),
+        ),
         ("fit", Json::Arr(fit_rows)),
     ]);
     let _ = std::fs::write("BENCH_par.json", format!("{doc}\n"));

@@ -87,7 +87,10 @@ impl ProductGridKernel {
 
     /// Dense n x n kernel matrix over an arbitrary list of (row, col)
     /// grid observations — what the *dense baseline* materializes. Each
-    /// observation is (spatial index, time index) into the grids.
+    /// observation is (spatial index, time index) into the grids. Rows
+    /// are filled in parallel over the `crate::par` pool above the
+    /// cheap-sweep threshold (each cell is an independent product, so
+    /// the result is bit-identical for any thread count).
     pub fn dense_gram(
         &self,
         s: &Matrix<f64>,
@@ -96,11 +99,15 @@ impl ProductGridKernel {
     ) -> Matrix<f64> {
         let kss = self.gram_s(s);
         let ktt = self.gram_t(t);
-        Matrix::from_fn(obs.len(), obs.len(), |a, b| {
+        let n = obs.len();
+        let mut k = Matrix::zeros(n, n);
+        crate::par::par_chunks_mut_cheap(&mut k.data, n.max(1), |a, row| {
             let (ia, ja) = obs[a];
-            let (ib, jb) = obs[b];
-            kss[(ia, ib)] * ktt[(ja, jb)]
-        })
+            for (v, &(ib, jb)) in row.iter_mut().zip(obs) {
+                *v = kss[(ia, ib)] * ktt[(ja, jb)];
+            }
+        });
+        k
     }
 }
 

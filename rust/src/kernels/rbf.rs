@@ -2,6 +2,7 @@
 
 use crate::linalg::gemm::matmul_nt;
 use crate::linalg::{Matrix, Scalar};
+use crate::par;
 
 /// k(x, y) = exp(log_os) * exp(-0.5 * sum_d (x_d - y_d)^2 / ls_d^2)
 #[derive(Clone, Debug)]
@@ -72,16 +73,21 @@ impl RbfArd {
         let os = T::from_f64(self.log_os.exp());
         let neg_half = T::from_f64(-0.5);
         let two = T::from_f64(2.0);
-        for i in 0..k.rows {
+        // distance/exp post-pass, one Gram row per chunk: parallel over
+        // the `par::` pool above the cheap-sweep threshold, sequential
+        // below it — bit-identical either way (each cell's arithmetic
+        // is independent and order-free across cells).
+        let cols = k.cols;
+        par::par_chunks_mut_cheap(&mut k.data, cols.max(1), |i, row| {
             let xi = xn[i];
-            for (j, v) in k.row_mut(i).iter_mut().enumerate() {
-                let mut d2 = xi + yn[j] - two * *v;
+            for (v, yj) in row.iter_mut().zip(&yn) {
+                let mut d2 = xi + *yj - two * *v;
                 if d2 < T::ZERO {
                     d2 = T::ZERO;
                 }
                 *v = os * (neg_half * d2).exp();
             }
-        }
+        });
         k
     }
 

@@ -61,7 +61,7 @@ impl<T: Scalar> KronOp<T> {
         let mut out = Matrix::zeros(v.rows, p * q);
         crate::par::par_chunks_mut(&mut out.data, p * q, |b, orow| {
             let vb = Matrix { rows: p, cols: q, data: v.row(b).to_vec() };
-            // T1 = V @ K_TT^T  (p x q), via dot-product form
+            // T1 = V @ K_TT^T  (p x q), tiled nt kernel, no transpose
             let t1 = matmul_nt(&vb, &self.ktt);
             // out_b = K_SS @ T1 (p x q)
             let mut ob = Matrix { rows: p, cols: q, data: vec![T::ZERO; p * q] };

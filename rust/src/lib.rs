@@ -21,6 +21,38 @@
 //! (`LKGP_THREADS`, default = available cores) with bit-identical
 //! results for any thread count.
 //!
+//! ## GEMM microkernel
+//!
+//! Every dense product in the hot path (`linalg::gemm::matmul_acc` /
+//! `matmul_nt` — behind the Kron MVM halves, the RBF Gram trick, CG's
+//! dense baseline, and the MLL gradient contractions) runs a
+//! register-tiled microkernel over packed panels:
+//!
+//! * **Tiling** (`linalg::gemm::Tiling`, chosen per [`linalg::Scalar`]):
+//!   MR x NR register tiles — 4x4 for f64, 4x8 for f32, so the NR axis
+//!   is exactly one AVX2 vector (f64x4 / f32x8) — inside MC = 64 row
+//!   blocks and KC = 256 deep k-panels.
+//! * **Packing**: B is packed once per call into panel-major NR-wide
+//!   strips (`bp[k * NR + j]`), reading either orientation (B or B^T)
+//!   into the same layout; each row block packs its A rows into MR-lane
+//!   panels (`ap[k * MR + i]`). The microkernel therefore streams two
+//!   contiguous buffers regardless of the caller's memory layout, and
+//!   ragged edges are zero-padded — padding adds discarded lanes, never
+//!   terms, so edge cells match full-tile arithmetic bit for bit.
+//! * **FMA lanes**: on x86-64 with AVX2+FMA (runtime-detected, stable
+//!   `std::arch`) each tile cell is one `vfmadd` chain; elsewhere a
+//!   portable mul+add tile with the identical loop structure runs.
+//! * **Fixed reduction order**: ascending k within a panel, panels in
+//!   ascending k0, block boundaries a function of shape alone — never
+//!   of the thread count. That is what keeps parallel results
+//!   bit-identical for any `LKGP_THREADS` (the `par_invariance`
+//!   guarantee) while still permitting FMA contraction inside a chain.
+//!
+//! `cargo bench --bench bench_par` measures the tile against the
+//! retained scalar baseline (`matmul_nt_ref`) and writes the
+//! `gemm_microkernel` acceptance fields of BENCH_par.json that the
+//! `bench-smoke` CI job gates on.
+//!
 //! ## Mixed precision
 //!
 //! The iterative hot path runs in either f64 (default) or f32, selected

@@ -1,26 +1,94 @@
-//! Blocked, multithreaded GEMM for row-major matrices.
+//! Register-tiled, packed, multithreaded GEMM for row-major matrices.
 //!
-//! Cache-blocked i-k-j kernels whose innermost loops are contiguous
-//! fused multiply-adds over the output row (LLVM auto-vectorizes them),
-//! parallelized over disjoint output row blocks via `crate::par`. Block
-//! boundaries depend only on the matrix shape and `MC` — never on the
-//! thread count — and each block is written by exactly one worker with
-//! a fixed k-order, so results are bit-identical for any
-//! `LKGP_THREADS`. This is the dense-baseline hot path the Fig-2/Fig-3
-//! comparisons run on, so it gets its own module + perf tests.
+//! The innermost compute layer of the crate. Both public entry points
+//! (`matmul_acc` for C += A @ B and `matmul_nt` for C = A @ B^T) run the
+//! same three-level schedule:
+//!
+//! 1. **Pack** B once per call into panel-major strips ([`pack_b`]):
+//!    for each KC-deep k-panel, NR-wide column strips laid out so the
+//!    microkernel reads one contiguous NR-vector per k step.
+//! 2. **Block** C into row blocks (MC rows, shrunk for short C so the
+//!    pool still fans out) — the parallel work unit, distributed over
+//!    the `crate::par` pool. Each block packs its own A rows into
+//!    MR-lane panels ([`gemm_block`]).
+//! 3. **Microkernel**: an MR x NR register tile (4x4 for f64, 4x8 for
+//!    f32) of explicit FMA lanes over the packed panels — AVX2+FMA
+//!    `_mm256_fmadd_pd/ps` when the CPU has them (runtime-detected,
+//!    stable Rust), otherwise a portable mul+add tile with the same
+//!    loop structure ([`Scalar::gemm_microkernel`]).
+//!
+//! **Bit-invariance contract.** Every C cell is produced by a fixed
+//! reduction order: ascending k within a panel (one FMA chain per tile
+//! cell), panels accumulated in ascending k0, and block/strip/tile
+//! boundaries depend only on the matrix shape and the [`Tiling`]
+//! constants — never on the thread count. Each block is written by
+//! exactly one worker, so results are bit-identical for any
+//! `LKGP_THREADS` in both precisions (asserted end-to-end by
+//! rust/tests/par_invariance.rs). The FMA and portable kernels round
+//! differently (fused vs two-step), so bits are fixed per *machine*,
+//! not across CPU families — same contract as libm already imposes on
+//! the golden posterior.
+//!
+//! Ragged edges are handled by zero-padding the packed panels in the
+//! M/N directions only: padding adds discarded output lanes, never
+//! extra terms to a valid cell's reduction chain, so edge tiles are
+//! bit-identical to what a full tile would produce for those cells.
+//!
+//! The pre-microkernel scalar kernels survive in two roles: products
+//! below [`SMALL_GEMM_FLOPS`] dispatch to them outright (packing and
+//! panel allocations would rival the multiply itself — a shape-only
+//! decision, so bit-invariance is unaffected), and [`matmul_nt_ref`]
+//! is the baseline the `bench-smoke` CI job measures the tile against
+//! (BENCH_par.json `gemm_microkernel` acceptance fields).
 
 use super::matrix::{Matrix, Scalar};
 use crate::par;
 
-/// Cache block sizes (rows of A, inner depth).
+/// Cache block sizes: C rows per parallel block, packed k-panel depth.
 const MC: usize = 64;
 const KC: usize = 256;
 
 /// Below this many FLOPs a GEMM runs sequentially: thread spawn/join
 /// costs tens of microseconds, which only pays off once the product is
-/// a few hundred thousand FLOPs. Sequential and parallel paths are
-/// bit-identical, so this is purely a scheduling decision.
+/// a few hundred thousand FLOPs. Sequential and parallel paths walk the
+/// same blocks in the same order, so this is purely a scheduling
+/// decision.
 const PAR_MIN_FLOPS: f64 = 2.5e5;
+
+/// Below this many FLOPs the packing overhead (B re-pack + panel/tile
+/// allocations per call) can rival the multiply itself, so tiny
+/// products take the allocation-free scalar kernels instead — e.g. the
+/// per-column `kernel_col` Grams in pivoted Cholesky and the q x q
+/// half of a small Kron MVM row. The dispatch depends only on the
+/// shape, so thread-count bit-invariance is unaffected.
+const SMALL_GEMM_FLOPS: f64 = 2.0e4;
+
+/// GEMM blocking parameters for one scalar type.
+///
+/// `mr`/`nr` are the register microtile dimensions (per-scalar: the NR
+/// axis is one SIMD vector — f64x4 or f32x8 on AVX2); `mc`/`kc` are the
+/// cache blocks shared by both precisions. All four shape the packed
+/// layouts, so they are compile-time constants surfaced through
+/// [`Scalar`]; this struct is the runtime view the drivers and benches
+/// work with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tiling {
+    /// Microtile rows: A lanes broadcast against each B vector.
+    pub mr: usize,
+    /// Microtile cols: the SIMD width of one packed B row vector.
+    pub nr: usize,
+    /// C rows per cache block — the parallel work unit.
+    pub mc: usize,
+    /// Depth of one packed k-panel.
+    pub kc: usize,
+}
+
+impl Tiling {
+    /// The tiling the GEMM drivers use for scalar type `T`.
+    pub fn of<T: Scalar>() -> Tiling {
+        Tiling { mr: T::MR, nr: T::NR, mc: MC, kc: KC }
+    }
+}
 
 /// C = A @ B.
 pub fn matmul<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>) -> Matrix<T> {
@@ -34,129 +102,384 @@ pub fn matmul<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>) -> Matrix<T> {
 pub fn matmul_acc<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, c: &mut Matrix<T>) {
     assert_eq!(a.cols, b.rows, "inner dims {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
     assert_eq!((c.rows, c.cols), (a.rows, b.cols));
-    let n = b.cols;
     if c.data.is_empty() {
         return;
     }
-    if gemm_flops(a.rows, a.cols, n) < PAR_MIN_FLOPS {
-        for (ib, cblock) in c.data.chunks_mut(MC * n).enumerate() {
-            matmul_block_acc(a, b, ib * MC, cblock);
-        }
+    if gemm_flops(a.rows, a.cols, b.cols) < SMALL_GEMM_FLOPS {
+        matmul_acc_small(a, b, c);
         return;
     }
-    par::par_chunks_mut(&mut c.data, MC * n, |ib, cblock| {
-        matmul_block_acc(a, b, ib * MC, cblock);
-    });
+    gemm_driver(a, b, false, c);
 }
 
-/// One MC-row block of `matmul_acc`: C[i0.., :] += A[i0.., :] @ B, with
-/// 2x register blocking over A rows — each B row loaded from cache
-/// feeds two output rows (perf pass: +20-30% on the K_SS @ T1 half of
-/// the Kron MVM).
-fn matmul_block_acc<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, i0: usize, cblock: &mut [T]) {
-    let (k, n) = (a.cols, b.cols);
-    let rows = cblock.len() / n;
-    let i1 = i0 + rows;
-    for k0 in (0..k).step_by(KC) {
-        let k1 = (k0 + KC).min(k);
-        let mut i = i0;
-        while i + 1 < i1 {
-            let li = i - i0;
-            let (c_lo, c_hi) = cblock.split_at_mut((li + 1) * n);
-            let crow0 = &mut c_lo[li * n..];
-            let crow1 = &mut c_hi[..n];
-            let arow0 = &a.data[i * k..(i + 1) * k];
-            let arow1 = &a.data[(i + 1) * k..(i + 2) * k];
-            for kk in k0..k1 {
-                let (a0, a1) = (arow0[kk], arow1[kk]);
-                if a0 == T::ZERO && a1 == T::ZERO {
-                    continue;
-                }
-                let brow = &b.data[kk * n..(kk + 1) * n];
-                for ((c0, c1), bv) in
-                    crow0.iter_mut().zip(crow1.iter_mut()).zip(brow)
-                {
-                    *c0 += a0 * *bv;
-                    *c1 += a1 * *bv;
-                }
+/// Allocation-free scalar kernel for tiny C += A @ B (the pre-tiling
+/// i-k-j axpy form, sequential).
+fn matmul_acc_small<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, c: &mut Matrix<T>) {
+    let n = b.cols;
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == T::ZERO {
+                continue;
             }
-            i += 2;
-        }
-        while i < i1 {
-            let li = i - i0;
-            let arow = &a.data[i * k..(i + 1) * k];
-            let crow = &mut cblock[li * n..(li + 1) * n];
-            for kk in k0..k1 {
-                let aik = arow[kk];
-                if aik == T::ZERO {
-                    continue;
-                }
-                let brow = &b.data[kk * n..(kk + 1) * n];
-                // contiguous axpy over the output row — vectorizes
-                for (cv, bv) in crow.iter_mut().zip(brow) {
-                    *cv += aik * *bv;
-                }
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += aik * *bv;
             }
-            i += 1;
         }
     }
 }
 
-/// C = A @ B^T without materializing the transpose (dot-product form,
-/// both operand rows contiguous), register-blocked 1x4 over B rows and
-/// parallelized over output rows. Used by kernel Gram construction and
-/// the V @ K_TT^T half of the Kron MVM.
+/// C = A @ B^T without materializing the transpose: the packing step
+/// reads B row-wise (contiguous) and emits the same panel layout the
+/// normal orientation uses, so both products share one microkernel.
+/// Used by kernel Gram construction and the V @ K_TT^T half of the
+/// Kron MVM.
 pub fn matmul_nt<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>) -> Matrix<T> {
     assert_eq!(a.cols, b.cols, "inner dims for A B^T");
-    let (m, n) = (a.rows, b.rows);
-    let mut c = Matrix::zeros(m, n);
-    if m == 0 || n == 0 {
+    if gemm_flops(a.rows, a.cols, b.rows) < SMALL_GEMM_FLOPS {
+        // tiny product: the pack-free dot-product kernel wins
+        return matmul_nt_ref(a, b);
+    }
+    let mut c = Matrix::zeros(a.rows, b.rows);
+    if c.data.is_empty() {
         return c;
     }
-    if gemm_flops(m, a.cols, n) < PAR_MIN_FLOPS {
-        for (i, crow) in c.data.chunks_mut(n).enumerate() {
-            matmul_nt_row(a, b, i, crow);
-        }
-        return c;
-    }
-    par::par_chunks_mut(&mut c.data, n, |i, crow| {
-        matmul_nt_row(a, b, i, crow);
-    });
+    gemm_driver(a, b, true, &mut c);
     c
 }
 
-/// One output row of `matmul_nt`: four dot products march down the A
-/// row together, so each A element loaded from registers feeds four
-/// outputs. Per-output accumulation runs in fixed ascending k-order, so
-/// the result matches the scalar dot product bit-for-bit.
-fn matmul_nt_row<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, i: usize, crow: &mut [T]) {
-    let arow = a.row(i);
-    let n = b.rows;
-    let mut j = 0;
-    while j + 4 <= n {
-        let (b0, b1, b2, b3) = (b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3));
-        let (mut s0, mut s1, mut s2, mut s3) = (T::ZERO, T::ZERO, T::ZERO, T::ZERO);
-        for (idx, x) in arow.iter().enumerate() {
-            s0 += *x * b0[idx];
-            s1 += *x * b1[idx];
-            s2 += *x * b2[idx];
-            s3 += *x * b3[idx];
+/// Shared driver behind `matmul_acc` / `matmul_nt`: pack B, then walk
+/// MC-row blocks of C — in parallel when the product is big enough.
+/// Block boundaries depend only on the shape and `Tiling::mc`, and the
+/// sequential path walks the identical blocks in the identical order,
+/// so the output bits never depend on the thread count.
+fn gemm_driver<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, b_transposed: bool, c: &mut Matrix<T>) {
+    let tl = Tiling::of::<T>();
+    let ndim = c.cols;
+    let bpack = pack_b(b, b_transposed, &tl);
+    // Row-block granularity: MC rows per block, shrunk (to a multiple
+    // of MR, aiming for >= 8 blocks) when C is short so that
+    // short-and-wide products — e.g. a CG probe batch against a large
+    // dense Gram, rows << MC — still fan out across the pool. The rule
+    // is a function of the shape alone, and each C cell's reduction
+    // chain is independent of how rows are grouped into blocks/strips,
+    // so the choice cannot affect output bits.
+    let per = (c.rows + 7) / 8;
+    let block_rows = ((per.clamp(tl.mr, tl.mc) + tl.mr - 1) / tl.mr) * tl.mr;
+    let block_elems = block_rows * ndim;
+    if gemm_flops(c.rows, a.cols, ndim) < PAR_MIN_FLOPS {
+        for (ib, cblock) in c.data.chunks_mut(block_elems).enumerate() {
+            gemm_block(a, &bpack, ib * block_rows, cblock, ndim, &tl);
         }
-        crow[j] = s0;
-        crow[j + 1] = s1;
-        crow[j + 2] = s2;
-        crow[j + 3] = s3;
-        j += 4;
+        return;
     }
-    while j < n {
-        let brow = b.row(j);
-        let mut acc = T::ZERO;
-        for (x, y) in arow.iter().zip(brow) {
-            acc += *x * *y;
+    let bp = &bpack;
+    par::par_chunks_mut(&mut c.data, block_elems, |ib, cblock| {
+        gemm_block(a, bp, ib * block_rows, cblock, ndim, &tl);
+    });
+}
+
+/// Pack the logical B' (kdim x ndim, where B' = B or B^T) into
+/// panel-major strips: for each KC-deep k-panel (ascending k0), for
+/// each NR-wide column strip (ascending j0), a contiguous `kcp * nr`
+/// run with `packed[kk * nr + jj] = B'[k0 + kk][j0 + jj]`, zero-padded
+/// in j past `ndim`. The microkernel then loads one contiguous
+/// NR-vector per k step regardless of the original orientation.
+fn pack_b<T: Scalar>(b: &Matrix<T>, b_transposed: bool, tl: &Tiling) -> Vec<T> {
+    let (kdim, ndim) = if b_transposed { (b.cols, b.rows) } else { (b.rows, b.cols) };
+    let nr = tl.nr;
+    let nstrips = (ndim + nr - 1) / nr;
+    let mut out = vec![T::ZERO; kdim * nstrips * nr];
+    let mut off = 0usize;
+    let mut k0 = 0usize;
+    while k0 < kdim {
+        let kcp = tl.kc.min(kdim - k0);
+        for js in 0..nstrips {
+            let j0 = js * nr;
+            let jn = nr.min(ndim - j0);
+            if b_transposed {
+                // B'[k][j] = b[j][k]: read b rows contiguously, write
+                // one strided lane per source row
+                for jj in 0..jn {
+                    let src = &b.data[(j0 + jj) * b.cols + k0..(j0 + jj) * b.cols + k0 + kcp];
+                    for (kk, &v) in src.iter().enumerate() {
+                        out[off + kk * nr + jj] = v;
+                    }
+                }
+            } else {
+                for kk in 0..kcp {
+                    let src = &b.data[(k0 + kk) * b.cols + j0..(k0 + kk) * b.cols + j0 + jn];
+                    out[off + kk * nr..off + kk * nr + jn].copy_from_slice(src);
+                }
+            }
+            off += kcp * nr;
         }
-        crow[j] = acc;
-        j += 1;
+        k0 += kcp;
     }
+    out
+}
+
+/// One MC-row block of the tiled GEMM: C[i0.., :] += A[i0.., :] @ B'.
+/// Packs the block's A rows into MR-lane panels (zero-padded past the
+/// block edge — padding only adds discarded lanes, never terms), then
+/// sweeps the microtile grid over the shared packed B. The work done
+/// for a block is a pure function of (shape, i0), so distributing
+/// blocks over workers cannot change any output bit.
+fn gemm_block<T: Scalar>(
+    a: &Matrix<T>,
+    bpack: &[T],
+    i0: usize,
+    cblock: &mut [T],
+    ndim: usize,
+    tl: &Tiling,
+) {
+    let kdim = a.cols;
+    if kdim == 0 {
+        return;
+    }
+    let (mr, nr) = (tl.mr, tl.nr);
+    let rows = cblock.len() / ndim;
+    let astrips = (rows + mr - 1) / mr;
+    let nstrips = (ndim + nr - 1) / nr;
+    let padded_n = nstrips * nr;
+    // A panel buffer, reused across k-panels with a *constant* per-strip
+    // stride (sized for the deepest panel): valid lanes are overwritten
+    // every panel at the same positions, so the zero-pad lanes (rows
+    // past the block edge) stay zero from this allocation even when the
+    // last panel is shorter than KC.
+    let astride = mr * tl.kc.min(kdim);
+    let mut apanel = vec![T::ZERO; astrips * astride];
+    let mut acc = vec![T::ZERO; mr * nr];
+    let mut k0 = 0usize;
+    while k0 < kdim {
+        let kcp = tl.kc.min(kdim - k0);
+        // pack A[i0.., k0..k0+kcp] into MR-lane strips:
+        // apanel[strip][kk * mr + lane] = A[i0 + strip*mr + lane][k0 + kk]
+        for s in 0..astrips {
+            let base = s * astride;
+            let ilo = s * mr;
+            let ihi = rows.min(ilo + mr);
+            for i in ilo..ihi {
+                let lane = i - ilo;
+                let arow = &a.data[(i0 + i) * kdim + k0..(i0 + i) * kdim + k0 + kcp];
+                for (kk, &v) in arow.iter().enumerate() {
+                    apanel[base + kk * mr + lane] = v;
+                }
+            }
+        }
+        // microtile grid: B strip (<= KC*NR elements) stays L1-hot
+        // across all A strips of the block
+        for js in 0..nstrips {
+            let boff = k0 * padded_n + js * kcp * nr;
+            let bpan = &bpack[boff..boff + kcp * nr];
+            let j0 = js * nr;
+            let jn = nr.min(ndim - j0);
+            for s in 0..astrips {
+                let apan = &apanel[s * astride..s * astride + kcp * mr];
+                T::gemm_microkernel(kcp, apan, bpan, &mut acc);
+                let ilo = s * mr;
+                let ihi = rows.min(ilo + mr);
+                for i in ilo..ihi {
+                    let crow = &mut cblock[i * ndim + j0..i * ndim + j0 + jn];
+                    let trow = &acc[(i - ilo) * nr..(i - ilo) * nr + jn];
+                    for (cv, tv) in crow.iter_mut().zip(trow) {
+                        *cv += *tv;
+                    }
+                }
+            }
+        }
+        k0 += kcp;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Microkernels
+// ---------------------------------------------------------------------
+
+/// Portable MR x NR microtile: same packed layout and ascending-k
+/// reduction order as the FMA kernels, plain mul+add lanes (LLVM
+/// vectorizes the NR-wide inner loop for the baseline target).
+/// `mul_add` is deliberately NOT used here: without the `fma` target
+/// feature it lowers to the correctly-rounded libm call, which is far
+/// slower than a mul+add pair.
+fn micro_portable<T: Scalar, const MR: usize, const NR: usize>(
+    kc: usize,
+    ap: &[T],
+    bp: &[T],
+    acc: &mut [T],
+) {
+    let mut tile = [[T::ZERO; NR]; MR];
+    for k in 0..kc {
+        let av = &ap[k * MR..k * MR + MR];
+        let bv = &bp[k * NR..k * NR + NR];
+        for (trow, ai) in tile.iter_mut().zip(av.iter()) {
+            for (t, bj) in trow.iter_mut().zip(bv.iter()) {
+                *t += *ai * *bj;
+            }
+        }
+    }
+    for (row, trow) in tile.iter().enumerate() {
+        acc[row * NR..row * NR + NR].copy_from_slice(trow);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! AVX2+FMA register tiles (stable `std::arch`, runtime-dispatched).
+    //! Each accumulator register holds one microtile row; per k step a
+    //! single NR-wide B vector is loaded and each broadcast A lane is
+    //! fused into its row — one `vfmadd` chain per tile cell, ascending
+    //! k, matching the portable kernel's reduction order exactly (up to
+    //! the fused rounding).
+
+    use std::arch::x86_64::*;
+
+    /// 4x4 f64 microtile over packed panels (`ap`: kc x 4, `bp`: kc x 4).
+    ///
+    /// # Safety
+    /// Caller must have verified `avx2` and `fma` CPU support and that
+    /// `ap.len() >= kc * 4`, `bp.len() >= kc * 4`, `acc.len() >= 16`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn kernel_f64_4x4(kc: usize, ap: &[f64], bp: &[f64], acc: &mut [f64]) {
+        let mut c0 = _mm256_setzero_pd();
+        let mut c1 = _mm256_setzero_pd();
+        let mut c2 = _mm256_setzero_pd();
+        let mut c3 = _mm256_setzero_pd();
+        let mut a = ap.as_ptr();
+        let mut b = bp.as_ptr();
+        for _ in 0..kc {
+            let bv = _mm256_loadu_pd(b);
+            c0 = _mm256_fmadd_pd(_mm256_set1_pd(*a), bv, c0);
+            c1 = _mm256_fmadd_pd(_mm256_set1_pd(*a.add(1)), bv, c1);
+            c2 = _mm256_fmadd_pd(_mm256_set1_pd(*a.add(2)), bv, c2);
+            c3 = _mm256_fmadd_pd(_mm256_set1_pd(*a.add(3)), bv, c3);
+            a = a.add(4);
+            b = b.add(4);
+        }
+        _mm256_storeu_pd(acc.as_mut_ptr(), c0);
+        _mm256_storeu_pd(acc.as_mut_ptr().add(4), c1);
+        _mm256_storeu_pd(acc.as_mut_ptr().add(8), c2);
+        _mm256_storeu_pd(acc.as_mut_ptr().add(12), c3);
+    }
+
+    /// 4x8 f32 microtile over packed panels (`ap`: kc x 4, `bp`: kc x 8).
+    ///
+    /// # Safety
+    /// Caller must have verified `avx2` and `fma` CPU support and that
+    /// `ap.len() >= kc * 4`, `bp.len() >= kc * 8`, `acc.len() >= 32`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn kernel_f32_4x8(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [f32]) {
+        let mut c0 = _mm256_setzero_ps();
+        let mut c1 = _mm256_setzero_ps();
+        let mut c2 = _mm256_setzero_ps();
+        let mut c3 = _mm256_setzero_ps();
+        let mut a = ap.as_ptr();
+        let mut b = bp.as_ptr();
+        for _ in 0..kc {
+            let bv = _mm256_loadu_ps(b);
+            c0 = _mm256_fmadd_ps(_mm256_set1_ps(*a), bv, c0);
+            c1 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(1)), bv, c1);
+            c2 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(2)), bv, c2);
+            c3 = _mm256_fmadd_ps(_mm256_set1_ps(*a.add(3)), bv, c3);
+            a = a.add(4);
+            b = b.add(8);
+        }
+        _mm256_storeu_ps(acc.as_mut_ptr(), c0);
+        _mm256_storeu_ps(acc.as_mut_ptr().add(8), c1);
+        _mm256_storeu_ps(acc.as_mut_ptr().add(16), c2);
+        _mm256_storeu_ps(acc.as_mut_ptr().add(24), c3);
+    }
+}
+
+/// Cached runtime check for the AVX2+FMA kernels. Constant per process,
+/// so the dispatch can never differ between pool workers.
+#[cfg(target_arch = "x86_64")]
+fn fma_available() -> bool {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    // 0 = unknown, 1 = available, 2 = unavailable
+    static STATE: AtomicU8 = AtomicU8::new(0);
+    match STATE.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            let ok = std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma");
+            STATE.store(if ok { 1 } else { 2 }, Ordering::Relaxed);
+            ok
+        }
+    }
+}
+
+/// f64 4x4 microkernel entry point (see [`Scalar::gemm_microkernel`]).
+pub(crate) fn microkernel_f64(kc: usize, ap: &[f64], bp: &[f64], acc: &mut [f64]) {
+    assert!(ap.len() >= kc * 4 && bp.len() >= kc * 4 && acc.len() >= 16);
+    #[cfg(target_arch = "x86_64")]
+    if fma_available() {
+        // SAFETY: CPU support verified at runtime; lengths checked above
+        // cover every lane the kernel touches.
+        unsafe { x86::kernel_f64_4x4(kc, ap, bp, acc) };
+        return;
+    }
+    micro_portable::<f64, 4, 4>(kc, ap, bp, acc);
+}
+
+/// f32 4x8 microkernel entry point (see [`Scalar::gemm_microkernel`]).
+pub(crate) fn microkernel_f32(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [f32]) {
+    assert!(ap.len() >= kc * 4 && bp.len() >= kc * 8 && acc.len() >= 32);
+    #[cfg(target_arch = "x86_64")]
+    if fma_available() {
+        // SAFETY: CPU support verified at runtime; lengths checked above
+        // cover every lane the kernel touches.
+        unsafe { x86::kernel_f32_4x8(kc, ap, bp, acc) };
+        return;
+    }
+    micro_portable::<f32, 4, 8>(kc, ap, bp, acc);
+}
+
+// ---------------------------------------------------------------------
+// Scalar reference baseline
+// ---------------------------------------------------------------------
+
+/// Pre-microkernel scalar kernel for C = A @ B^T — the PR-1 1x4
+/// dot-product form, sequential. Kept (not dead code) as the baseline
+/// the `bench-smoke` CI job measures the register tile against
+/// (`gemm_microkernel.*` acceptance fields in BENCH_par.json) and as an
+/// independent oracle in the microkernel property tests.
+pub fn matmul_nt_ref<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>) -> Matrix<T> {
+    assert_eq!(a.cols, b.cols, "inner dims for A B^T");
+    let (m, n) = (a.rows, b.rows);
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        let mut j = 0;
+        while j + 4 <= n {
+            let (b0, b1, b2, b3) = (b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3));
+            let (mut s0, mut s1, mut s2, mut s3) = (T::ZERO, T::ZERO, T::ZERO, T::ZERO);
+            for (idx, x) in arow.iter().enumerate() {
+                s0 += *x * b0[idx];
+                s1 += *x * b1[idx];
+                s2 += *x * b2[idx];
+                s3 += *x * b3[idx];
+            }
+            crow[j] = s0;
+            crow[j + 1] = s1;
+            crow[j + 2] = s2;
+            crow[j + 3] = s3;
+            j += 4;
+        }
+        while j < n {
+            let brow = b.row(j);
+            let mut acc = T::ZERO;
+            for (x, y) in arow.iter().zip(brow) {
+                acc += *x * *y;
+            }
+            crow[j] = acc;
+            j += 1;
+        }
+    }
+    c
 }
 
 /// FLOP count of an (m x k) @ (k x n) product, for throughput reports.
@@ -167,6 +490,7 @@ pub fn gemm_flops(m: usize, k: usize, n: usize) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::par::with_threads;
     use crate::util::testing::{assert_close, prop_check};
 
     fn naive<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>) -> Matrix<T> {
@@ -204,9 +528,141 @@ mod tests {
     }
 
     #[test]
+    fn prop_nt_matches_scalar_ref() {
+        // tiled vs the pre-microkernel 1x4 kernel — independent oracle
+        prop_check("gemm-nt-vs-ref", 23, 15, |g| {
+            let (m, k, n) = (g.size(1, 30), g.size(1, 30), g.size(1, 30));
+            let a = Matrix::from_vec(m, k, g.vec_normal(m * k));
+            let b = Matrix::from_vec(n, k, g.vec_normal(n * k));
+            assert_close(&matmul_nt(&a, &b).data, &matmul_nt_ref(&a, &b).data, 1e-10)
+        });
+    }
+
+    /// Exhaustive ragged-shape sweep against the naive triple loop.
+    /// Data is small-integer-valued, so every partial sum (|s| <= a few
+    /// hundred) is exactly representable in f32 and f64 and FMA rounding
+    /// is exact — every path must match naive *bit for bit*, which pins
+    /// the remainder/edge-tile logic precisely. The tiled driver is
+    /// invoked directly (these shapes are below the small-product
+    /// dispatch threshold), and the public entry points are swept too
+    /// so the scalar dispatch stays covered.
+    fn ragged_sweep_exact<T: Scalar>() {
+        for m in 1..=9usize {
+            for k in 0..=9usize {
+                for n in 1..=9usize {
+                    let a = Matrix::<T>::from_fn(m, k, |i, j| {
+                        T::from_f64(((i * 7 + j * 3) % 5) as f64 - 2.0)
+                    });
+                    let b = Matrix::<T>::from_fn(k, n, |i, j| {
+                        T::from_f64(((i + j * 11) % 7) as f64 - 3.0)
+                    });
+                    let bt = b.transpose();
+                    let want = naive(&a, &b);
+                    // public entry points (scalar small-product path here)
+                    assert!(
+                        a.matmul(&b).data == want.data,
+                        "{} matmul {m}x{k}x{n} != naive",
+                        T::NAME
+                    );
+                    assert!(
+                        matmul_nt(&a, &bt).data == want.data,
+                        "{} matmul_nt {m}x{k}x{n} != naive",
+                        T::NAME
+                    );
+                    // tiled driver directly — the microkernel edge cases
+                    let mut ct = Matrix::<T>::zeros(m, n);
+                    gemm_driver(&a, &b, false, &mut ct);
+                    assert!(
+                        ct.data == want.data,
+                        "{} tiled normal {m}x{k}x{n} != naive",
+                        T::NAME
+                    );
+                    let mut cnt = Matrix::<T>::zeros(m, n);
+                    gemm_driver(&a, &bt, true, &mut cnt);
+                    assert!(
+                        cnt.data == want.data,
+                        "{} tiled nt {m}x{k}x{n} != naive",
+                        T::NAME
+                    );
+                    // tiled accumulate into a non-zero C
+                    let mut cacc =
+                        Matrix::<T>::from_fn(m, n, |i, j| T::from_f64((i + 2 * j) as f64));
+                    gemm_driver(&a, &b, false, &mut cacc);
+                    for i in 0..m {
+                        for j in 0..n {
+                            let w = want[(i, j)] + T::from_f64((i + 2 * j) as f64);
+                            assert!(
+                                cacc[(i, j)] == w,
+                                "{} tiled acc {m}x{k}x{n} at ({i},{j})",
+                                T::NAME
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_shapes_exact_f64() {
+        ragged_sweep_exact::<f64>();
+    }
+
+    #[test]
+    fn ragged_shapes_exact_f32() {
+        // n up to 9 covers the f32 NR=8 strip plus a 1-wide remainder
+        ragged_sweep_exact::<f32>();
+    }
+
+    /// Tiled output is bit-identical for any thread count, including
+    /// shapes with remainder tiles in every direction.
+    fn tiled_thread_invariance<T: Scalar>(bits: impl Fn(&[T]) -> Vec<u64>) {
+        let cases = [(130usize, 70usize, 65usize), (67, 17, 9), (5, 3, 2)];
+        for &(m, k, n) in &cases {
+            let a = Matrix::<T>::from_fn(m, k, |i, j| {
+                T::from_f64(((i * 13 + j * 5) % 11) as f64 * 0.37 - 1.5)
+            });
+            let b = Matrix::<T>::from_fn(n, k, |i, j| {
+                T::from_f64(((i * 3 + j * 7) % 13) as f64 * 0.21 - 1.1)
+            });
+            let bk = b.transpose(); // k x n for matmul
+            let want = with_threads(1, || (a.matmul(&bk), matmul_nt(&a, &b)));
+            for t in [2usize, 3, 8] {
+                let got = with_threads(t, || (a.matmul(&bk), matmul_nt(&a, &b)));
+                assert_eq!(
+                    bits(&want.0.data),
+                    bits(&got.0.data),
+                    "{} matmul {m}x{k}x{n} differs at t={t}",
+                    T::NAME
+                );
+                assert_eq!(
+                    bits(&want.1.data),
+                    bits(&got.1.data),
+                    "{} matmul_nt {m}x{k}x{n} differs at t={t}",
+                    T::NAME
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_bit_identical_across_threads_f64() {
+        tiled_thread_invariance::<f64>(|v| v.iter().map(|x| x.to_bits()).collect());
+    }
+
+    #[test]
+    fn tiled_bit_identical_across_threads_f32() {
+        tiled_thread_invariance::<f32>(|v| v.iter().map(|x| x.to_bits() as u64).collect());
+    }
+
+    #[test]
     fn blocked_handles_sizes_spanning_blocks() {
-        // sizes straddling MC/KC boundaries
-        for &(m, k, n) in &[(1, 1, 1), (64, 256, 64), (65, 257, 3), (130, 300, 70)] {
+        // sizes straddling MC/KC boundaries; (70, 300, 10) pins the
+        // A-panel reuse across a short last k-panel with a ragged
+        // (padded) row strip in the tail block
+        for &(m, k, n) in
+            &[(1, 1, 1), (64, 256, 64), (65, 257, 3), (130, 300, 70), (70, 300, 10)]
+        {
             let a = Matrix::from_fn(m, k, |i, j| ((i * 7 + j * 3) % 5) as f64 - 2.0);
             let b = Matrix::from_fn(k, n, |i, j| ((i + j * 11) % 7) as f64 - 3.0);
             let got = a.matmul(&b);
@@ -227,6 +683,26 @@ mod tests {
                 assert!((c[(i, j)] - want).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn empty_dims_are_safe() {
+        let a = Matrix::<f64>::zeros(0, 5);
+        let b = Matrix::<f64>::zeros(5, 3);
+        assert_eq!(a.matmul(&b).data.len(), 0);
+        let a = Matrix::<f64>::zeros(4, 0);
+        let b = Matrix::<f64>::zeros(3, 0);
+        let c = matmul_nt(&a, &b); // inner dim 0
+        assert_eq!(c.rows, 4);
+        assert!(c.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn tiling_matches_scalar_consts() {
+        let t64 = Tiling::of::<f64>();
+        assert_eq!((t64.mr, t64.nr), (4, 4));
+        let t32 = Tiling::of::<f32>();
+        assert_eq!((t32.mr, t32.nr), (4, 8));
     }
 
     #[test]

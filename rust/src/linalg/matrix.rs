@@ -27,6 +27,18 @@ pub trait Scalar:
     /// `"f32"` / `"f64"` — for diagnostics, bench labels, and the
     /// precision-aware test tolerances in `util::testing`.
     const NAME: &'static str;
+    /// GEMM microtile rows: A lanes broadcast per k step (see
+    /// `linalg::gemm::Tiling`).
+    const MR: usize;
+    /// GEMM microtile cols — one SIMD vector of packed B (f64x4 /
+    /// f32x8 on AVX2).
+    const NR: usize;
+    /// Register-tiled GEMM microkernel for this scalar: overwrite `acc`
+    /// (`MR * NR`, row-major) with the product of packed panels `ap`
+    /// (`kc x MR`, lane-major) and `bp` (`kc x NR`), accumulating each
+    /// cell in fixed ascending-k order. Packing layout and dispatch
+    /// (AVX2+FMA vs portable) live in `linalg::gemm`.
+    fn gemm_microkernel(kc: usize, ap: &[Self], bp: &[Self], acc: &mut [Self]);
     fn sqrt(self) -> Self;
     fn abs(self) -> Self;
     fn ln(self) -> Self;
@@ -36,11 +48,17 @@ pub trait Scalar:
 }
 
 macro_rules! impl_scalar {
-    ($t:ty) => {
+    ($t:ty, $nr:expr, $kern:path) => {
         impl Scalar for $t {
             const ZERO: Self = 0.0;
             const ONE: Self = 1.0;
             const NAME: &'static str = stringify!($t);
+            const MR: usize = 4;
+            const NR: usize = $nr;
+            #[inline]
+            fn gemm_microkernel(kc: usize, ap: &[Self], bp: &[Self], acc: &mut [Self]) {
+                $kern(kc, ap, bp, acc)
+            }
             #[inline]
             fn sqrt(self) -> Self {
                 self.sqrt()
@@ -69,8 +87,8 @@ macro_rules! impl_scalar {
     };
 }
 
-impl_scalar!(f32);
-impl_scalar!(f64);
+impl_scalar!(f32, 8, crate::linalg::gemm::microkernel_f32);
+impl_scalar!(f64, 4, crate::linalg::gemm::microkernel_f64);
 
 /// Dense row-major matrix.
 #[derive(Clone, PartialEq)]

@@ -20,6 +20,11 @@
 //! (e.g. a batched Kron MVM parallelized over batch rows calling the
 //! parallel GEMM per row) while letting single-row calls still fan out
 //! at the inner level.
+//!
+//! The heaviest client is the register-tiled GEMM (`linalg::gemm`),
+//! which dispatches MC-row blocks of C through [`par_chunks_mut`]; the
+//! kernel Gram distance/exp post-pass and the dense-baseline Gram
+//! assembly ride the same pool via [`par_chunks_mut_cheap`].
 
 use std::cell::Cell;
 use std::ops::Range;

@@ -272,7 +272,10 @@ fn read_bits(doc: &Json, key: &str) -> Vec<f64> {
 ///
 /// On the very first run (no golden file yet) the test writes the file
 /// and validates against it, so a fresh checkout self-bootstraps; the
-/// blessed file is meant to be committed.
+/// blessed file is meant to be committed. CI enforces that: the
+/// `build-test` job's "Golden posterior guard" step fails if the file
+/// is absent, uncommitted, or was silently re-blessed during the test
+/// run (see rust/tests/golden/README.md).
 #[test]
 fn golden_posterior_regression() {
     let data = golden_data();

@@ -12,7 +12,7 @@ use lkgp::gp::backend::Precision;
 use lkgp::gp::lkgp::{Lkgp, LkgpConfig};
 use lkgp::kernels::ProductGridKernel;
 use lkgp::kron::{KronOp, MaskedKronSystem};
-use lkgp::linalg::gemm::{matmul, matmul_nt};
+use lkgp::linalg::gemm::{matmul, matmul_acc, matmul_nt};
 use lkgp::linalg::Matrix;
 use lkgp::par::with_threads;
 use lkgp::util::rng::Rng;
@@ -29,15 +29,27 @@ fn bits32(v: &[f32]) -> Vec<u32> {
 #[test]
 fn gemm_bit_identical_across_thread_counts() {
     let mut rng = Rng::new(1);
-    // sizes straddle the MC=64 block boundary and the 1x4 nt blocking
-    let a = Matrix::from_vec(130, 70, rng.normals(130 * 70));
-    let b = Matrix::from_vec(70, 65, rng.normals(70 * 65));
-    let bt = b.transpose();
-    let want = with_threads(1, || (matmul(&a, &b), matmul_nt(&a, &bt)));
-    for t in [2usize, 3, 8] {
-        let got = with_threads(t, || (matmul(&a, &b), matmul_nt(&a, &bt)));
-        assert_eq!(bits(&want.0.data), bits(&got.0.data), "matmul differs at t={t}");
-        assert_eq!(bits(&want.1.data), bits(&got.1.data), "matmul_nt differs at t={t}");
+    // sizes straddle the MC=64 block boundary and leave ragged
+    // remainder microtiles in every direction (mr=4, nr=4 for f64)
+    for (m, k, n) in [(130usize, 70usize, 65usize), (67, 33, 21)] {
+        let a = Matrix::from_vec(m, k, rng.normals(m * k));
+        let b = Matrix::from_vec(k, n, rng.normals(k * n));
+        let bt = b.transpose();
+        let want = with_threads(1, || {
+            let mut c = Matrix::zeros(m, n);
+            matmul_acc(&a, &b, &mut c);
+            (matmul(&a, &b), matmul_nt(&a, &bt), c)
+        });
+        for t in [2usize, 3, 8] {
+            let got = with_threads(t, || {
+                let mut c = Matrix::zeros(m, n);
+                matmul_acc(&a, &b, &mut c);
+                (matmul(&a, &b), matmul_nt(&a, &bt), c)
+            });
+            assert_eq!(bits(&want.0.data), bits(&got.0.data), "matmul {m}x{k}x{n} t={t}");
+            assert_eq!(bits(&want.1.data), bits(&got.1.data), "matmul_nt {m}x{k}x{n} t={t}");
+            assert_eq!(bits(&want.2.data), bits(&got.2.data), "matmul_acc {m}x{k}x{n} t={t}");
+        }
     }
 }
 
@@ -79,20 +91,39 @@ fn prop_kron_apply_bit_identical_across_thread_counts() {
 #[test]
 fn f32_gemm_bit_identical_across_thread_counts() {
     let mut rng = Rng::new(21);
-    // same shapes as the f64 test: straddle the MC=64 block boundary
-    // and the 1x4 nt blocking
-    let a: Matrix<f32> = Matrix::from_vec(130, 70, rng.normals(130 * 70)).cast();
-    let b: Matrix<f32> = Matrix::from_vec(70, 65, rng.normals(70 * 65)).cast();
-    let bt = b.transpose();
-    let want = with_threads(1, || (matmul(&a, &b), matmul_nt(&a, &bt)));
-    for t in [2usize, 3, 8] {
-        let got = with_threads(t, || (matmul(&a, &b), matmul_nt(&a, &bt)));
-        assert_eq!(bits32(&want.0.data), bits32(&got.0.data), "f32 matmul differs at t={t}");
-        assert_eq!(
-            bits32(&want.1.data),
-            bits32(&got.1.data),
-            "f32 matmul_nt differs at t={t}"
-        );
+    // shapes straddle the MC=64 block boundary and the f32 microtile
+    // (mr=4, nr=8): 65 = 8*8+1 and 21 = 2*8+5 leave ragged strips
+    for (m, k, n) in [(130usize, 70usize, 65usize), (67, 33, 21)] {
+        let a: Matrix<f32> = Matrix::from_vec(m, k, rng.normals(m * k)).cast();
+        let b: Matrix<f32> = Matrix::from_vec(k, n, rng.normals(k * n)).cast();
+        let bt = b.transpose();
+        let want = with_threads(1, || {
+            let mut c = Matrix::<f32>::zeros(m, n);
+            matmul_acc(&a, &b, &mut c);
+            (matmul(&a, &b), matmul_nt(&a, &bt), c)
+        });
+        for t in [2usize, 3, 8] {
+            let got = with_threads(t, || {
+                let mut c = Matrix::<f32>::zeros(m, n);
+                matmul_acc(&a, &b, &mut c);
+                (matmul(&a, &b), matmul_nt(&a, &bt), c)
+            });
+            assert_eq!(
+                bits32(&want.0.data),
+                bits32(&got.0.data),
+                "f32 matmul {m}x{k}x{n} t={t}"
+            );
+            assert_eq!(
+                bits32(&want.1.data),
+                bits32(&got.1.data),
+                "f32 matmul_nt {m}x{k}x{n} t={t}"
+            );
+            assert_eq!(
+                bits32(&want.2.data),
+                bits32(&got.2.data),
+                "f32 matmul_acc {m}x{k}x{n} t={t}"
+            );
+        }
     }
 }
 

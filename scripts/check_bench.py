@@ -1,0 +1,101 @@
+#!/usr/bin/env python3
+"""Benchmark-regression gate for the bench-smoke CI job.
+
+Reads the machine-readable bench artifacts (BENCH_par.json,
+BENCH_precision.json) and exits non-zero if any acceptance field
+regressed:
+
+  BENCH_par.json
+    gemm_microkernel.tiled_ge_1p5x   tiled f64 GEMM >= 1.5x scalar matmul_nt
+    gemm_microkernel.tiled_f32_ge_2x tiled f32 GEMM >= 2x scalar matmul_nt
+    gemm_microkernel.gemm_gflops_ok  tiled GFLOP/s above the emitted floor
+    fit[*].bit_identical             posterior bit-identical per thread count
+
+  BENCH_precision.json
+    speedups_f32_over_f64.mvm_ge_1p5x  f32 Kron MVM >= 1.5x f64
+    fig3_accuracy.within_1pct          f32 test RMSE within 1% of f64
+
+Usage: check_bench.py BENCH_par.json BENCH_precision.json
+"""
+
+import json
+import sys
+
+GATES = {
+    "BENCH_par.json": [
+        (("gemm_microkernel", "tiled_ge_1p5x"), "tiled f64 GEMM >= 1.5x scalar matmul_nt"),
+        (("gemm_microkernel", "tiled_f32_ge_2x"), "tiled f32 GEMM >= 2x scalar matmul_nt"),
+        (("gemm_microkernel", "gemm_gflops_ok"), "tiled GEMM above gemm_gflops_min floor"),
+    ],
+    "BENCH_precision.json": [
+        (("speedups_f32_over_f64", "mvm_ge_1p5x"), "f32 Kron MVM >= 1.5x f64"),
+        (("fig3_accuracy", "within_1pct"), "f32 test RMSE within 1% of f64"),
+    ],
+}
+
+
+def lookup(doc, path):
+    cur = doc
+    for key in path:
+        if not isinstance(cur, dict) or key not in cur:
+            return None
+        cur = cur[key]
+    return cur
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__)
+        return 2
+    failures = []
+    for fname in argv[1:]:
+        base = fname.split("/")[-1]
+        try:
+            with open(fname) as f:
+                doc = json.load(f)
+        except (OSError, ValueError) as e:
+            failures.append(f"{fname}: unreadable bench artifact ({e})")
+            continue
+        gates = GATES.get(base)
+        if gates is None:
+            failures.append(
+                f"{fname}: no acceptance gates registered for basename {base!r} "
+                "— refusing to pass an unchecked artifact"
+            )
+            continue
+        for path, desc in gates:
+            val = lookup(doc, path)
+            dotted = ".".join(path)
+            if val is None:
+                failures.append(f"{fname}: missing acceptance field {dotted} ({desc})")
+            elif val is not True:
+                failures.append(f"{fname}: {dotted} = {val!r} — REGRESSED: {desc}")
+            else:
+                print(f"ok   {fname}: {dotted} ({desc})")
+        if base == "BENCH_par.json":
+            fit_rows = doc.get("fit")
+            if not isinstance(fit_rows, list) or not fit_rows:
+                failures.append(
+                    f"{fname}: 'fit' rows missing or empty — the per-thread "
+                    "bit_identical gate did not run"
+                )
+                fit_rows = []
+            for row in fit_rows:
+                if row.get("bit_identical") is not True:
+                    failures.append(
+                        f"{fname}: fit row threads={row.get('threads')} "
+                        "not bit-identical"
+                    )
+                else:
+                    print(f"ok   {fname}: fit threads={row.get('threads')} bit-identical")
+    if failures:
+        print()
+        for msg in failures:
+            print(f"FAIL {msg}", file=sys.stderr)
+        return 1
+    print("\nall bench acceptance fields green")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
