@@ -4,11 +4,14 @@
 //! Measures the batched Kronecker MVM, the tiled GEMM at 1/2/4/8 worker
 //! threads, the microkernel against the retained scalar baseline
 //! (`matmul_nt_ref`, single-threaded so the comparison isolates the
-//! register tile from parallel scaling), and an end-to-end `Lkgp::fit`;
-//! asserts the MVM outputs and the fit posterior are bit-identical
-//! across thread counts, and writes `BENCH_par.json` with the
-//! `gemm_microkernel` acceptance fields the `bench-smoke` CI job gates
-//! on (`tiled_ge_1p5x`, `tiled_f32_ge_2x`, `gemm_gflops_ok`).
+//! register tile from parallel scaling), the persistent-pool region
+//! dispatch against the scoped-spawn baseline it replaced (plus the
+//! steal-mode chunk counters), and an end-to-end `Lkgp::fit`; asserts
+//! the MVM outputs and the fit posterior are bit-identical across
+//! thread counts, and writes `BENCH_par.json` with the
+//! `gemm_microkernel` and `pool` acceptance fields the `bench-smoke`
+//! CI job gates on (`tiled_ge_1p5x`, `tiled_f32_ge_2x`,
+//! `gemm_gflops_ok`, `region_speedup_ge_1x`).
 //!
 //! `LKGP_BENCH_SMOKE=1` shrinks problem sizes and sample counts for CI;
 //! the acceptance ratios are size-stable, so the gate fields stay
@@ -155,6 +158,58 @@ fn main() {
         gfl(t_ref32)
     );
 
+    // ---- region dispatch: persistent pool vs scoped spawn ----
+    // The cost an iterative solver pays per small parallel region. The
+    // pool path measures a full empty region (publish + claims + wait);
+    // the baseline is what the PR-1 design paid per region: spawning
+    // and joining the same number of scoped helper threads.
+    let dt = cores().clamp(2, 4);
+    let (pool_ns, spawn_ns, steal_ratio) = par::with_threads(dt, || {
+        par::par_rows("bench.warmup", dt, |_r| {}); // start + park workers
+        let pool_ns = b
+            .bench(&format!("region_dispatch pool w={dt} (empty)"), || {
+                par::par_rows("bench.dispatch", dt, |_r| {});
+            })
+            .median_ns;
+        let spawn_ns = b
+            .bench(&format!("region_dispatch scoped-spawn w={dt} (empty)"), || {
+                std::thread::scope(|s| {
+                    for _ in 1..dt {
+                        s.spawn(|| {});
+                    }
+                });
+            })
+            .median_ns;
+        // ragged steal-mode workload (chunk cost grows with index) to
+        // exercise the shared-cursor assignment and read its counters
+        let s0 = par::pool_stats();
+        let mut buf = vec![0.0f64; 64 * 256];
+        for _ in 0..10 {
+            par::par_chunks_mut_steal("bench.steal", &mut buf, 256, |ci, chunk| {
+                for (off, x) in chunk.iter_mut().enumerate() {
+                    let mut acc = 0.0;
+                    for k in 0..=ci {
+                        acc += ((off + k) as f64).sqrt();
+                    }
+                    *x = acc;
+                }
+            });
+        }
+        black_box(&buf);
+        let s1 = par::pool_stats();
+        let d_chunks = (s1.steal_chunks - s0.steal_chunks).max(1);
+        let ratio = (s1.stolen_chunks - s0.stolen_chunks) as f64 / d_chunks as f64;
+        (pool_ns, spawn_ns, ratio)
+    });
+    let dispatch_speedup = spawn_ns / pool_ns;
+    println!(
+        "-> pool dispatch: {:.2} µs/region vs {:.2} µs scoped spawn \
+         ({dispatch_speedup:.1}x, acceptance >= 1x, target >= 10x; \
+         steal_ratio {steal_ratio:.2})\n",
+        pool_ns / 1e3,
+        spawn_ns / 1e3
+    );
+
     // ---- end-to-end fit (synthetic workload) ----
     let (fp, fq) = if smoke { (96usize, 16usize) } else { (256usize, 32usize) };
     let kernel = ProductGridKernel::new(2, "rbf", fq);
@@ -233,6 +288,20 @@ fn main() {
                 ("tiled_f32_ge_2x", Json::Bool(speedup32 >= 2.0)),
                 ("gemm_gflops_min", Json::Num(gflops_min)),
                 ("gemm_gflops_ok", Json::Bool(gflops_ok)),
+            ]),
+        ),
+        (
+            "pool",
+            Json::obj(vec![
+                ("threads", Json::Num(dt as f64)),
+                ("dispatch_ns", Json::Num(pool_ns)),
+                ("spawn_ns", Json::Num(spawn_ns)),
+                ("dispatch_speedup", Json::Num(dispatch_speedup)),
+                ("region_speedup_ge_1x", Json::Bool(dispatch_speedup >= 1.0)),
+                ("dispatch_ge_10x", Json::Bool(dispatch_speedup >= 10.0)),
+                ("steal_ratio", Json::Num(steal_ratio)),
+                ("cheap_sweep_min", Json::Num(par::cheap_sweep_min() as f64)),
+                ("workers_live", Json::Num(par::pool_stats().workers_live as f64)),
             ]),
         ),
         ("fit", Json::Arr(fit_rows)),

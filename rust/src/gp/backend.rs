@@ -262,7 +262,7 @@ impl<T: Scalar> KronBackend<T> for RustKronBackend<T> {
             let q = sys.op.q();
             let mut dense = Matrix::<f32>::zeros(n, n);
             let obs = &self.obs_idx;
-            crate::par::par_chunks_mut(&mut dense.data, n.max(1), |a, row| {
+            crate::par::par_chunks_mut("backend.dense_gram", &mut dense.data, n.max(1), |a, row| {
                 let ia = obs[a];
                 let (sa, ta) = (ia / q, ia % q);
                 for (x, &ib) in row.iter_mut().zip(obs.iter()) {
@@ -288,7 +288,8 @@ impl<T: Scalar> KronBackend<T> for RustKronBackend<T> {
                 let mut out = Matrix::zeros(v.rows, v.cols);
                 // batch rows are independent systems: one worker per row
                 // (gather -> f32 dense MVM -> scatter -> +sigma2 v)
-                crate::par::par_chunks_mut(&mut out.data, v.cols.max(1), |b, orow| {
+                let cols = v.cols.max(1);
+                crate::par::par_chunks_mut("backend.dense_mvm", &mut out.data, cols, |b, orow| {
                     let vrow = v.row(b);
                     let vo32: Vec<f32> =
                         obs.iter().map(|&i| convert::f32_of(vrow[i].to_f64())).collect();

@@ -301,7 +301,7 @@ fn fit_with_backend<T: Scalar, B: KronBackend<T>>(
         let sigma = sigma2.sqrt();
         let mut rhs = Matrix::<T>::zeros(b, pq);
         prof.time("rhs_assemble", || {
-            crate::par::par_chunks_mut(&mut rhs.data, pq, |r, row| {
+            crate::par::par_chunks_mut("lkgp.rhs_assemble", &mut rhs.data, pq, |r, row| {
                 let mut noise = row_rngs[r].clone();
                 for (c, x) in row.iter_mut().enumerate() {
                     let eps = sigma * noise.normal();
@@ -318,7 +318,7 @@ fn fit_with_backend<T: Scalar, B: KronBackend<T>>(
         mvm_total += stats.mvm_count;
         // f_post = f_prior + (K (x) K) M v
         let mut vm = v;
-        crate::par::par_chunks_mut_cheap(&mut vm.data, pq, |_, row| {
+        crate::par::par_chunks_mut_cheap("lkgp.mask_v", &mut vm.data, pq, |_, row| {
             for (x, m) in row.iter_mut().zip(&mask) {
                 *x *= T::from_f64(*m);
             }
@@ -330,7 +330,7 @@ fn fit_with_backend<T: Scalar, B: KronBackend<T>>(
         // for any thread count
         prof.time("var_accum", || {
             let block = 1024usize;
-            crate::par::par_zip_mut(&mut mean_acc, &mut var_acc, block, |ci, mseg, vseg| {
+            let accum = |ci: usize, mseg: &mut [f64], vseg: &mut [f64]| {
                 let base = ci * block;
                 for (off, (ma, va)) in mseg.iter_mut().zip(vseg.iter_mut()).enumerate() {
                     let c = base + off;
@@ -344,7 +344,8 @@ fn fit_with_backend<T: Scalar, B: KronBackend<T>>(
                     *ma += msum;
                     *va += vsum;
                 }
-            });
+            };
+            crate::par::par_zip_mut("lkgp.var_accum", &mut mean_acc, &mut var_acc, block, accum);
         });
         done += b;
     }

@@ -101,7 +101,7 @@ impl ProductGridKernel {
         let ktt = self.gram_t(t);
         let n = obs.len();
         let mut k = Matrix::zeros(n, n);
-        crate::par::par_chunks_mut_cheap(&mut k.data, n.max(1), |a, row| {
+        crate::par::par_chunks_mut_cheap("grid.dense_gram", &mut k.data, n.max(1), |a, row| {
             let (ia, ja) = obs[a];
             for (v, &(ib, jb)) in row.iter_mut().zip(obs) {
                 *v = kss[(ia, ib)] * ktt[(ja, jb)];

@@ -78,7 +78,7 @@ impl RbfArd {
         // below it — bit-identical either way (each cell's arithmetic
         // is independent and order-free across cells).
         let cols = k.cols;
-        par::par_chunks_mut_cheap(&mut k.data, cols.max(1), |i, row| {
+        par::par_chunks_mut_cheap("rbf.gram_post", &mut k.data, cols.max(1), |i, row| {
             let xi = xn[i];
             for (v, yj) in row.iter_mut().zip(&yn) {
                 let mut d2 = xi + *yj - two * *v;

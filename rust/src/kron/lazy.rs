@@ -40,8 +40,12 @@ impl<F: Fn(usize, usize) -> f64 + Sync> LazyGramOp<F> {
         for i0 in (0..n).step_by(self.block_rows) {
             let i1 = (i0 + self.block_rows).min(n);
             let rows = i1 - i0;
-            // materialize rows [i0, i1), one kernel row per task
-            crate::par::par_chunks_mut(&mut block[..rows * n], n, |r, brow| {
+            // materialize rows [i0, i1), one kernel row per task — the
+            // stealing schedule absorbs entry oracles whose cost varies
+            // across rows (each row is still written by exactly one
+            // worker, so bits are schedule-independent)
+            let live = &mut block[..rows * n];
+            crate::par::par_chunks_mut_steal("lazy_gram.rows", live, n, |r, brow| {
                 let i = i0 + r;
                 for (j, x) in brow.iter_mut().enumerate() {
                     *x = (self.entry)(i, j);
@@ -50,7 +54,7 @@ impl<F: Fn(usize, usize) -> f64 + Sync> LazyGramOp<F> {
             evals += (rows * n) as u64;
             // partial MVM: each batch row owns its output row
             let block_ref = &block;
-            crate::par::par_chunks_mut(&mut out.data, n, |b, orow| {
+            crate::par::par_chunks_mut("lazy_gram.mvm", &mut out.data, n, |b, orow| {
                 let vrow = v.row(b);
                 for i in i0..i1 {
                     let krow = &block_ref[(i - i0) * n..(i - i0 + 1) * n];

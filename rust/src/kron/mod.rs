@@ -59,7 +59,7 @@ impl<T: Scalar> KronOp<T> {
         let (p, q) = (self.p(), self.q());
         assert_eq!(v.cols, p * q, "grid vector length");
         let mut out = Matrix::zeros(v.rows, p * q);
-        crate::par::par_chunks_mut(&mut out.data, p * q, |b, orow| {
+        crate::par::par_chunks_mut("kron.apply_batch", &mut out.data, p * q, |b, orow| {
             let vb = Matrix { rows: p, cols: q, data: v.row(b).to_vec() };
             // T1 = V @ K_TT^T  (p x q), tiled nt kernel, no transpose
             let t1 = matmul_nt(&vb, &self.ktt);
@@ -137,13 +137,13 @@ impl<T: Scalar> MaskedKronSystem<T> {
     pub fn apply_batch(&self, v: &Matrix<T>) -> Matrix<T> {
         let cols = v.cols;
         let mut masked = v.clone();
-        crate::par::par_chunks_mut_cheap(&mut masked.data, cols.max(1), |_, row| {
+        crate::par::par_chunks_mut_cheap("kron.mask_in", &mut masked.data, cols.max(1), |_, row| {
             for (x, m) in row.iter_mut().zip(&self.mask) {
                 *x *= *m;
             }
         });
         let mut kv = self.op.apply_batch(&masked);
-        crate::par::par_chunks_mut_cheap(&mut kv.data, cols.max(1), |b, row| {
+        crate::par::par_chunks_mut_cheap("kron.mask_noise", &mut kv.data, cols.max(1), |b, row| {
             let vrow = v.row(b);
             for (idx, ((x, m), v0)) in
                 row.iter_mut().zip(&self.mask).zip(vrow).enumerate()
@@ -160,7 +160,7 @@ impl<T: Scalar> MaskedKronSystem<T> {
     pub fn diag(&self) -> Vec<T> {
         let (p, q) = (self.op.p(), self.op.q());
         let mut d = vec![T::ZERO; p * q];
-        crate::par::par_chunks_mut_cheap(&mut d, q.max(1), |j, seg| {
+        crate::par::par_chunks_mut_cheap("kron.diag", &mut d, q.max(1), |j, seg| {
             let ds = self.op.kss[(j, j)];
             for (k, out) in seg.iter_mut().enumerate() {
                 let idx = j * q + k;
@@ -178,7 +178,7 @@ impl<T: Scalar> MaskedKronSystem<T> {
         let (j0, k0) = (idx / q, idx % q);
         let mcol = self.mask[idx];
         let mut col = vec![T::ZERO; p * q];
-        crate::par::par_chunks_mut_cheap(&mut col, q.max(1), |j, seg| {
+        crate::par::par_chunks_mut_cheap("kron.kernel_col", &mut col, q.max(1), |j, seg| {
             let ks = self.op.kss[(j, j0)];
             for (k, out) in seg.iter_mut().enumerate() {
                 let v = ks * self.op.ktt[(k, k0)];

@@ -21,6 +21,43 @@
 //! (`LKGP_THREADS`, default = available cores) with bit-identical
 //! results for any thread count.
 //!
+//! ## Worker pool & scheduling
+//!
+//! [`par`] is a **persistent pool + deterministic region scheduler**,
+//! not a spawn-per-region design: long-lived workers start lazily on
+//! the first parallel region, park on a condvar when idle (with a
+//! short spin window so the back-to-back regions of a CG iteration
+//! skip the futex wait), and serve every subsequent region — dispatch
+//! costs ~a microsecond where scoped spawn/join cost tens. The
+//! dispatch model: a region is published as a claim-slot job, the
+//! submitting thread always participates as worker 0, pool workers
+//! claim the remaining slots, and any slot left unclaimed is executed
+//! inline by the submitter — so completion never depends on worker
+//! availability and a pool shutdown (`par::shutdown_pool`) can never
+//! deadlock an in-flight region. Nested regions collapse onto the
+//! worker that issued them.
+//!
+//! **Determinism contract.** Work is split into chunks whose
+//! boundaries depend only on the problem shape; each chunk's content
+//! is a pure function of its index and each chunk is executed by
+//! exactly one worker with a fixed internal reduction order, so every
+//! parallel output is bit-identical for any `LKGP_THREADS` ∈ {1, 2,
+//! 4, 8, ...}. Two schedules exist: *block* (contiguous chunk runs per
+//! worker — uniform work, best locality) and *steal* (workers pull the
+//! lowest unclaimed chunk index from a shared cursor). The stealing
+//! mode is legal exactly when chunk content does not depend on which
+//! worker runs it or in what order chunks complete — true for every
+//! region in this crate — and is used where chunk cost is ragged:
+//! pivoted-Cholesky row sweeps (rows thin out as pivots are consumed),
+//! GEMM row blocks with a short tail, lazy kernel-row materialization.
+//! Worker panics are caught per chunk and rethrown on the submitting
+//! thread as a structured [`par::RegionPanic`] (region name + chunk
+//! index); the pool is never poisoned. The cheap-sweep sequential
+//! fallback threshold dropped 8x versus the spawn era
+//! (`par::CHEAP_SWEEP_MIN`, override with `LKGP_CHEAP_SWEEP_MIN`);
+//! `cargo bench --bench bench_par` measures dispatch-vs-spawn latency
+//! and the steal ratio into the `pool` section of BENCH_par.json.
+//!
 //! ## GEMM microkernel
 //!
 //! Every dense product in the hot path (`linalg::gemm::matmul_acc` /

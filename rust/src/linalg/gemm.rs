@@ -48,12 +48,13 @@ use crate::par;
 const MC: usize = 64;
 const KC: usize = 256;
 
-/// Below this many FLOPs a GEMM runs sequentially: thread spawn/join
-/// costs tens of microseconds, which only pays off once the product is
-/// a few hundred thousand FLOPs. Sequential and parallel paths walk the
-/// same blocks in the same order, so this is purely a scheduling
-/// decision.
-const PAR_MIN_FLOPS: f64 = 2.5e5;
+/// Below this many FLOPs a GEMM runs sequentially. Re-tuned for the
+/// persistent pool: a region dispatch costs ~a microsecond (a condvar
+/// wake at worst) where the old scoped spawn/join cost tens, so the
+/// fan-out break-even dropped 4x from the PR-1 value of 2.5e5.
+/// Sequential and parallel paths walk the same blocks in the same
+/// order, so this is purely a scheduling decision.
+const PAR_MIN_FLOPS: f64 = 6.4e4;
 
 /// Below this many FLOPs the packing overhead (B re-pack + panel/tile
 /// allocations per call) can rival the multiply itself, so tiny
@@ -175,8 +176,14 @@ fn gemm_driver<T: Scalar>(a: &Matrix<T>, b: &Matrix<T>, b_transposed: bool, c: &
         }
         return;
     }
+    // Stealing schedule: row blocks are near-uniform except the ragged
+    // last block (short rows, short last k-panel), and with short-C
+    // shrinking the block count need not divide the worker count — the
+    // shared-cursor assignment keeps every worker busy to the end.
+    // Chunk content is a pure function of the block index, so the
+    // schedule cannot affect output bits.
     let bp = &bpack;
-    par::par_chunks_mut(&mut c.data, block_elems, |ib, cblock| {
+    par::par_chunks_mut_steal("gemm.row_blocks", &mut c.data, block_elems, |ib, cblock| {
         gemm_block(a, bp, ib * block_rows, cblock, ndim, &tl);
     });
 }

@@ -1,19 +1,27 @@
 //! Dependency-free data-parallel compute subsystem.
 //!
-//! A scoped worker pool (`std::thread::scope`) behind a global
-//! [`Parallelism`] configuration: the thread count comes from the
-//! `LKGP_THREADS` environment variable (read once, at first use),
-//! defaulting to the number of available cores; [`set_threads`]
-//! overrides it process-wide and [`with_threads`] overrides it for one
-//! scope on the calling thread.
+//! A **persistent worker pool** ([`pool`]) behind a deterministic
+//! region scheduler ([`region`]): long-lived workers are spawned lazily
+//! on first use (`LKGP_THREADS`-sized, default = available cores), park
+//! on a condvar when idle, and are reused by every subsequent parallel
+//! region — dispatching a region costs ~a condvar wake instead of the
+//! tens of microseconds of `std::thread::scope` spawn/join the PR-1
+//! design paid. [`set_threads`] overrides the width process-wide,
+//! [`with_threads`] per scope on the calling thread, [`shutdown_pool`]
+//! joins the workers (the next region restarts them transparently).
 //!
 //! Every helper splits work over *disjoint* output chunks whose
 //! boundaries depend only on the problem shape (never on the thread
-//! count), and each chunk is written by exactly one worker with a fixed
-//! sequential reduction order. Parallel results are therefore
+//! count), and each chunk is executed by exactly one worker with a
+//! fixed sequential reduction order. Parallel results are therefore
 //! **bit-identical for any thread count** — the invariant the whole
 //! inference hot path relies on, asserted end-to-end by
-//! `rust/tests/par_invariance.rs`.
+//! `rust/tests/par_invariance.rs`. This holds under both chunk
+//! schedules: [`Schedule::Block`] assigns contiguous chunk runs per
+//! worker, [`Schedule::Steal`] lets workers pull chunk indices from a
+//! shared cursor (for ragged workloads — pivoted-Cholesky columns,
+//! short last GEMM panels) — writer *identity* varies, chunk content
+//! never does.
 //!
 //! Nested parallel regions collapse: work spawned from inside a pool
 //! worker runs inline on that worker. This prevents oversubscription
@@ -21,10 +29,20 @@
 //! parallel GEMM per row) while letting single-row calls still fan out
 //! at the inner level.
 //!
+//! A panic inside any task is caught per chunk, cancels the region's
+//! remaining chunks, and is rethrown on the submitting thread as a
+//! structured [`RegionPanic`] (region name + chunk index). The pool is
+//! never poisoned and never deadlocks: subsequent regions run normally.
+//!
 //! The heaviest client is the register-tiled GEMM (`linalg::gemm`),
-//! which dispatches MC-row blocks of C through [`par_chunks_mut`]; the
-//! kernel Gram distance/exp post-pass and the dense-baseline Gram
+//! which dispatches MC-row blocks of C through [`par_chunks_mut_steal`];
+//! the kernel Gram distance/exp post-pass and the dense-baseline Gram
 //! assembly ride the same pool via [`par_chunks_mut_cheap`].
+
+pub mod pool;
+pub mod region;
+
+pub use region::{RegionPanic, Schedule};
 
 use std::cell::Cell;
 use std::ops::Range;
@@ -86,7 +104,9 @@ pub fn num_threads() -> usize {
     n
 }
 
-/// Set the process-wide thread count (overrides `LKGP_THREADS`).
+/// Set the process-wide thread count (overrides `LKGP_THREADS`). The
+/// persistent pool grows on demand; shrinking the count simply leaves
+/// the extra workers parked.
 pub fn set_threads(n: usize) {
     GLOBAL_THREADS.store(n.max(1), Ordering::Relaxed);
 }
@@ -111,14 +131,52 @@ pub fn with_threads<T>(n: usize, f: impl FnOnce() -> T) -> T {
     f()
 }
 
-/// RAII marker: the current thread is a pool worker, so nested parallel
-/// regions must run inline.
-struct PoolGuard {
+/// Join all persistent pool workers and reset the pool; the next
+/// parallel region lazily restarts it. Safe to call at any time —
+/// regions racing a shutdown complete by running their chunks on the
+/// submitting thread — but intended for tests and orderly teardown.
+pub fn shutdown_pool() {
+    pool::shutdown();
+}
+
+/// Cumulative scheduler/pool counters (process-wide, monotone).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Parallel regions executed (including inline-collapsed ones).
+    pub regions: u64,
+    /// Regions that actually fanned out over the pool.
+    pub fanned_regions: u64,
+    /// Chunks executed under [`Schedule::Steal`].
+    pub steal_chunks: u64,
+    /// Steal-mode chunks executed by a worker other than the chunk's
+    /// block-mode "home" worker — the work-stealing/balancing signal.
+    pub stolen_chunks: u64,
+    /// Pool worker threads ever spawned (across shutdown/re-init).
+    pub workers_spawned: u64,
+    /// Pool worker threads currently alive.
+    pub workers_live: usize,
+}
+
+/// Snapshot of the cumulative [`PoolStats`] counters.
+pub fn pool_stats() -> PoolStats {
+    PoolStats {
+        regions: region::REGIONS.load(Ordering::Relaxed),
+        fanned_regions: region::FANNED_REGIONS.load(Ordering::Relaxed),
+        steal_chunks: region::STEAL_CHUNKS.load(Ordering::Relaxed),
+        stolen_chunks: region::STOLEN_CHUNKS.load(Ordering::Relaxed),
+        workers_spawned: pool::workers_spawned(),
+        workers_live: pool::workers_live(),
+    }
+}
+
+/// RAII marker: the current thread is executing a region task, so
+/// nested parallel regions must run inline.
+pub(crate) struct PoolGuard {
     prev: bool,
 }
 
 impl PoolGuard {
-    fn enter() -> Self {
+    pub(crate) fn enter() -> Self {
         let prev = IN_POOL.with(|c| {
             let p = c.get();
             c.set(true);
@@ -135,93 +193,111 @@ impl Drop for PoolGuard {
     }
 }
 
+/// Mark the current thread as a permanent pool worker (regions issued
+/// from it always collapse inline).
+pub(crate) fn mark_pool_worker() {
+    IN_POOL.with(|c| c.set(true));
+}
+
+/// True while the current thread is a pool worker or executing a
+/// region task (nested regions collapse; a pool shutdown from here
+/// must not try to join the current thread).
+pub(crate) fn in_pool_worker() -> bool {
+    IN_POOL.with(|c| c.get())
+}
+
 /// Worker count for a region with `work_items` independent items:
 /// 1 inside an existing pool worker (no nesting), otherwise
 /// `min(num_threads(), work_items)`.
-fn pool_width(work_items: usize) -> usize {
-    if work_items <= 1 || IN_POOL.with(|c| c.get()) {
+pub(crate) fn effective_width(work_items: usize) -> usize {
+    if work_items <= 1 || in_pool_worker() {
         1
     } else {
         num_threads().min(work_items)
     }
 }
 
-/// Run `f(worker)` on `nt` workers; worker 0 runs on the calling thread.
-fn run_pool<F: Fn(usize) + Sync>(nt: usize, f: F) {
-    if nt <= 1 {
-        f(0);
-        return;
-    }
-    std::thread::scope(|s| {
-        for w in 1..nt {
-            let fr = &f;
-            s.spawn(move || {
-                let _in_pool = PoolGuard::enter();
-                fr(w);
-            });
-        }
-        let _in_pool = PoolGuard::enter();
-        f(0);
-    });
-}
-
 /// Split `0..n` into one contiguous range per worker and run `f` on each
 /// range in parallel. The range boundaries depend on the thread count,
 /// so `f` must compute each index independently (no cross-index
-/// accumulation) for results to stay thread-count invariant.
-pub fn par_rows<F>(n: usize, f: F)
+/// accumulation) for results to stay thread-count invariant. `name`
+/// tags the region in panic reports.
+pub fn par_rows<F>(name: &'static str, n: usize, f: F)
 where
     F: Fn(Range<usize>) + Sync,
 {
-    let nt = pool_width(n);
-    if nt <= 1 {
-        if n > 0 {
-            f(0..n);
-        }
+    if n == 0 {
         return;
     }
+    let nt = effective_width(n);
     let per = (n + nt - 1) / nt;
-    run_pool(nt, |w| {
+    region::run_chunked(name, nt, Schedule::Block, &|w| {
         let lo = w * per;
-        let hi = ((w + 1) * per).min(n);
+        let hi = n.min(lo + per);
         if lo < hi {
             f(lo..hi);
         }
     });
 }
 
-/// Below this many total elements, a cheap elementwise sweep is not
-/// worth spawning for: thread spawn/join costs tens of microseconds
-/// while the sweep costs nanoseconds per element. Only used by
-/// [`par_chunks_mut_cheap`]; heavy per-element work (dot products, RNG
+/// Default sequential-fallback threshold (total elements) for
+/// [`par_chunks_mut_cheap`]: below this, a cheap elementwise sweep is
+/// not worth a region dispatch. The persistent pool dispatches in ~a
+/// microsecond where the old scoped-spawn design paid tens, so this
+/// dropped 8x from [`CHEAP_SWEEP_MIN_SPAWN`] (the PR-1 value, kept as
+/// the documented `LKGP_CHEAP_SWEEP_MIN` fallback for platforms where
+/// pool wakeups are slow). Heavy per-element work (dot products, RNG
 /// draws, GEMM blocks) should use [`par_chunks_mut`] directly.
-pub const CHEAP_SWEEP_MIN: usize = 1 << 14;
+pub const CHEAP_SWEEP_MIN: usize = 1 << 11;
 
-/// Split `data` into contiguous segments of `per` whole chunks each,
-/// tagged with the index of their first chunk. Shared by
-/// [`par_chunks_mut`] / [`par_zip_mut`] so the chunk->segment mapping
-/// cannot diverge between them.
-fn split_segments<T>(data: &mut [T], chunk_len: usize, per: usize) -> Vec<(usize, &mut [T])> {
-    let seg_elems = per * chunk_len;
-    let mut segments = Vec::new();
-    let mut rest = data;
-    let mut chunk0 = 0usize;
-    while !rest.is_empty() {
-        let take = seg_elems.min(rest.len());
-        let (seg, tail) = std::mem::take(&mut rest).split_at_mut(take);
-        segments.push((chunk0, seg));
-        rest = tail;
-        chunk0 += per;
+/// The scoped-spawn-era threshold (PR 1-3): the value to restore via
+/// `LKGP_CHEAP_SWEEP_MIN=16384` if persistent-pool dispatch ever
+/// regresses to spawn/join cost on some platform.
+pub const CHEAP_SWEEP_MIN_SPAWN: usize = 1 << 14;
+
+/// Cached effective cheap-sweep threshold: `LKGP_CHEAP_SWEEP_MIN` (read
+/// once) or [`CHEAP_SWEEP_MIN`]. Purely a scheduling decision — the
+/// sequential and parallel paths are bit-identical.
+pub fn cheap_sweep_min() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let v = CACHED.load(Ordering::Relaxed);
+    if v != 0 {
+        return v;
     }
-    segments
+    let n = std::env::var("LKGP_CHEAP_SWEEP_MIN")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(CHEAP_SWEEP_MIN);
+    CACHED.store(n, Ordering::Relaxed);
+    n
 }
 
-/// Process disjoint `chunk_len`-sized chunks of `data` in parallel:
-/// `f(chunk_index, chunk)`. Chunk boundaries depend only on `chunk_len`
-/// (the tail chunk may be short) and each chunk is written by exactly
-/// one worker, so output bits never depend on the thread count.
-pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, f: F)
+/// Pointer wrapper that lets region tasks carve disjoint chunks out of
+/// one `&mut [T]` from different workers.
+struct SendPtr<T>(*mut T);
+
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+fn chunks_impl<T, F>(name: &'static str, schedule: Schedule, data: &mut [T], chunk_len: usize, f: F)
 where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    chunks_run(name, Some(schedule), data, chunk_len, f);
+}
+
+/// Shared body of the chunked helpers: `schedule` of `None` forces the
+/// sequential path (the cheap-sweep fallback), keeping the exact panic
+/// surface of the pooled paths either way.
+fn chunks_run<T, F>(
+    name: &'static str,
+    schedule: Option<Schedule>,
+    data: &mut [T],
+    chunk_len: usize,
+    f: F,
+) where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
 {
@@ -229,65 +305,33 @@ where
         return;
     }
     assert!(chunk_len > 0, "chunk_len must be positive");
-    let n_chunks = (data.len() + chunk_len - 1) / chunk_len;
-    let nt = pool_width(n_chunks);
-    if nt <= 1 {
-        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
-            f(i, chunk);
-        }
-        return;
+    let len = data.len();
+    let n_chunks = (len + chunk_len - 1) / chunk_len;
+    let base = SendPtr(data.as_mut_ptr());
+    let task = move |c: usize| {
+        let lo = c * chunk_len;
+        let hi = len.min(lo + chunk_len);
+        // SAFETY: the scheduler executes each chunk index at most once,
+        // so these ranges are disjoint across concurrent tasks; `data`
+        // outlives the region because the region entry points block
+        // until every chunk has finished.
+        let chunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(lo), hi - lo) };
+        f(c, chunk);
+    };
+    match schedule {
+        Some(s) => region::run_chunked(name, n_chunks, s, &task),
+        None => region::run_sequential(name, n_chunks, &task),
     }
-    // contiguous blocks of whole chunks per worker
-    let per = (n_chunks + nt - 1) / nt;
-    let segments = split_segments(data, chunk_len, per);
-    std::thread::scope(|s| {
-        let fr = &f;
-        let mut iter = segments.into_iter();
-        let head = iter.next();
-        for (c0, seg) in iter {
-            s.spawn(move || {
-                let _in_pool = PoolGuard::enter();
-                for (i, chunk) in seg.chunks_mut(chunk_len).enumerate() {
-                    fr(c0 + i, chunk);
-                }
-            });
-        }
-        if let Some((c0, seg)) = head {
-            let _in_pool = PoolGuard::enter();
-            for (i, chunk) in seg.chunks_mut(chunk_len).enumerate() {
-                fr(c0 + i, chunk);
-            }
-        }
-    });
 }
 
-/// Like [`par_chunks_mut`] but stays sequential below
-/// [`CHEAP_SWEEP_MIN`] total elements — for cheap elementwise sweeps
-/// (mask multiplies, diagonal fills) where thread spawn/join would
-/// dominate the work. The sequential and parallel paths are bit-exact
-/// identical, so this is purely a scheduling decision.
-pub fn par_chunks_mut_cheap<T, F>(data: &mut [T], chunk_len: usize, f: F)
-where
-    T: Send,
-    F: Fn(usize, &mut [T]) + Sync,
-{
-    if data.len() < CHEAP_SWEEP_MIN {
-        if data.is_empty() {
-            return;
-        }
-        assert!(chunk_len > 0, "chunk_len must be positive");
-        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
-            f(i, chunk);
-        }
-        return;
-    }
-    par_chunks_mut(data, chunk_len, f);
-}
-
-/// Like [`par_chunks_mut`] over two equal-length slices split at the
-/// same chunk boundaries: `f(chunk_index, a_chunk, b_chunk)`.
-pub fn par_zip_mut<A, B, F>(a: &mut [A], b: &mut [B], chunk_len: usize, f: F)
-where
+fn zip_impl<A, B, F>(
+    name: &'static str,
+    schedule: Schedule,
+    a: &mut [A],
+    b: &mut [B],
+    chunk_len: usize,
+    f: F,
+) where
     A: Send,
     B: Send,
     F: Fn(usize, &mut [A], &mut [B]) + Sync,
@@ -297,50 +341,95 @@ where
         return;
     }
     assert!(chunk_len > 0, "chunk_len must be positive");
-    let n_chunks = (a.len() + chunk_len - 1) / chunk_len;
-    let nt = pool_width(n_chunks);
-    if nt <= 1 {
-        for (i, (ca, cb)) in a.chunks_mut(chunk_len).zip(b.chunks_mut(chunk_len)).enumerate() {
-            f(i, ca, cb);
-        }
+    let len = a.len();
+    let n_chunks = (len + chunk_len - 1) / chunk_len;
+    let base_a = SendPtr(a.as_mut_ptr());
+    let base_b = SendPtr(b.as_mut_ptr());
+    region::run_chunked(name, n_chunks, schedule, &move |c| {
+        let lo = c * chunk_len;
+        let hi = len.min(lo + chunk_len);
+        // SAFETY: as in `chunks_impl` — disjoint chunk ranges, each
+        // executed at most once, both borrows outlive the region.
+        let ca = unsafe { std::slice::from_raw_parts_mut(base_a.0.add(lo), hi - lo) };
+        let cb = unsafe { std::slice::from_raw_parts_mut(base_b.0.add(lo), hi - lo) };
+        f(c, ca, cb);
+    });
+}
+
+/// Process disjoint `chunk_len`-sized chunks of `data` in parallel:
+/// `f(chunk_index, chunk)`. Chunk boundaries depend only on `chunk_len`
+/// (the tail chunk may be short) and each chunk is written by exactly
+/// one worker, so output bits never depend on the thread count.
+/// Contiguous block assignment ([`Schedule::Block`]).
+pub fn par_chunks_mut<T, F>(name: &'static str, data: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    chunks_impl(name, Schedule::Block, data, chunk_len, f);
+}
+
+/// [`par_chunks_mut`] under the work-stealing schedule
+/// ([`Schedule::Steal`]) — for ragged chunks whose cost varies. Output
+/// bits are identical to the block schedule at any thread count.
+pub fn par_chunks_mut_steal<T, F>(name: &'static str, data: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    chunks_impl(name, Schedule::Steal, data, chunk_len, f);
+}
+
+/// Like [`par_chunks_mut`] but stays sequential below
+/// [`cheap_sweep_min`] total elements — for cheap elementwise sweeps
+/// (mask multiplies, diagonal fills) where even a pool dispatch would
+/// dominate the work. The sequential and parallel paths are bit-exact
+/// identical (and share the [`RegionPanic`] surface), so this is
+/// purely a scheduling decision.
+pub fn par_chunks_mut_cheap<T, F>(name: &'static str, data: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.len() < cheap_sweep_min() {
+        chunks_run(name, None, data, chunk_len, f);
         return;
     }
-    let per = (n_chunks + nt - 1) / nt;
-    let seg_a = split_segments(a, chunk_len, per);
-    let seg_b = split_segments(b, chunk_len, per);
-    let segments: Vec<(usize, &mut [A], &mut [B])> = seg_a
-        .into_iter()
-        .zip(seg_b)
-        .map(|((c0, sa), (_, sb))| (c0, sa, sb))
-        .collect();
-    std::thread::scope(|s| {
-        let fr = &f;
-        let mut iter = segments.into_iter();
-        let head = iter.next();
-        for (c0, sa, sb) in iter {
-            s.spawn(move || {
-                let _in_pool = PoolGuard::enter();
-                for (i, (ca, cb)) in
-                    sa.chunks_mut(chunk_len).zip(sb.chunks_mut(chunk_len)).enumerate()
-                {
-                    fr(c0 + i, ca, cb);
-                }
-            });
-        }
-        if let Some((c0, sa, sb)) = head {
-            let _in_pool = PoolGuard::enter();
-            for (i, (ca, cb)) in
-                sa.chunks_mut(chunk_len).zip(sb.chunks_mut(chunk_len)).enumerate()
-            {
-                fr(c0 + i, ca, cb);
-            }
-        }
-    });
+    par_chunks_mut(name, data, chunk_len, f);
+}
+
+/// Like [`par_chunks_mut`] over two equal-length slices split at the
+/// same chunk boundaries: `f(chunk_index, a_chunk, b_chunk)`.
+pub fn par_zip_mut<A, B, F>(name: &'static str, a: &mut [A], b: &mut [B], chunk_len: usize, f: F)
+where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &mut [A], &mut [B]) + Sync,
+{
+    zip_impl(name, Schedule::Block, a, b, chunk_len, f);
+}
+
+/// [`par_zip_mut`] under the work-stealing schedule — the ragged
+/// pivoted-Cholesky row sweep runs here. Bit-identical to the block
+/// schedule at any thread count.
+pub fn par_zip_mut_steal<A, B, F>(
+    name: &'static str,
+    a: &mut [A],
+    b: &mut [B],
+    chunk_len: usize,
+    f: F,
+) where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &mut [A], &mut [B]) + Sync,
+{
+    zip_impl(name, Schedule::Steal, a, b, chunk_len, f);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
@@ -361,7 +450,7 @@ mod tests {
             with_threads(t, || {
                 let n = 103;
                 let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
-                par_rows(n, |range| {
+                par_rows("test.rows", n, |range| {
                     for i in range {
                         hits[i].fetch_add(1, Ordering::Relaxed);
                     }
@@ -372,28 +461,30 @@ mod tests {
     }
 
     #[test]
-    fn par_chunks_mut_indices_and_values() {
+    fn par_chunks_mut_indices_and_values_both_schedules() {
         for &t in &[1usize, 2, 8] {
-            with_threads(t, || {
-                let mut data = vec![0usize; 25];
-                par_chunks_mut(&mut data, 4, |ci, chunk| {
-                    for (off, x) in chunk.iter_mut().enumerate() {
-                        *x = ci * 4 + off;
-                    }
+            for sched in [Schedule::Block, Schedule::Steal] {
+                with_threads(t, || {
+                    let mut data = vec![0usize; 25];
+                    chunks_impl("test.chunks", sched, &mut data, 4, |ci, chunk| {
+                        for (off, x) in chunk.iter_mut().enumerate() {
+                            *x = ci * 4 + off;
+                        }
+                    });
+                    let want: Vec<usize> = (0..25).collect();
+                    assert_eq!(data, want, "schedule {sched:?} t={t}");
                 });
-                let want: Vec<usize> = (0..25).collect();
-                assert_eq!(data, want);
-            });
+            }
         }
     }
 
     #[test]
     fn par_chunks_mut_handles_empty_and_tail() {
         let mut empty: Vec<u8> = vec![];
-        par_chunks_mut(&mut empty, 4, |_, _| panic!("no chunks expected"));
+        par_chunks_mut("test.empty", &mut empty, 4, |_, _| panic!("no chunks expected"));
         with_threads(4, || {
             let mut data = vec![0u8; 5]; // 2 chunks, short tail
-            par_chunks_mut(&mut data, 3, |ci, chunk| {
+            par_chunks_mut("test.tail", &mut data, 3, |ci, chunk| {
                 for x in chunk.iter_mut() {
                     *x = ci as u8 + 1;
                 }
@@ -404,16 +495,16 @@ mod tests {
 
     #[test]
     fn cheap_variant_matches_parallel_below_and_above_threshold() {
-        for &len in &[100usize, CHEAP_SWEEP_MIN + 5] {
+        for &len in &[100usize, cheap_sweep_min() + 5] {
             with_threads(4, || {
                 let mut a = vec![0usize; len];
                 let mut b = vec![0usize; len];
-                par_chunks_mut_cheap(&mut a, 7, |ci, chunk| {
+                par_chunks_mut_cheap("test.cheap", &mut a, 7, |ci, chunk| {
                     for (off, x) in chunk.iter_mut().enumerate() {
                         *x = ci * 7 + off;
                     }
                 });
-                par_chunks_mut(&mut b, 7, |ci, chunk| {
+                par_chunks_mut("test.full", &mut b, 7, |ci, chunk| {
                     for (off, x) in chunk.iter_mut().enumerate() {
                         *x = ci * 7 + off;
                     }
@@ -424,36 +515,186 @@ mod tests {
     }
 
     #[test]
-    fn par_zip_mut_splits_consistently() {
+    fn par_zip_mut_splits_consistently_both_schedules() {
         for &t in &[1usize, 4] {
-            with_threads(t, || {
-                let mut a = vec![0u32; 17];
-                let mut b = vec![0u32; 17];
-                par_zip_mut(&mut a, &mut b, 3, |ci, ca, cb| {
-                    for (off, (x, y)) in ca.iter_mut().zip(cb.iter_mut()).enumerate() {
-                        *x = (ci * 3 + off) as u32;
-                        *y = *x * 2;
+            for sched in [Schedule::Block, Schedule::Steal] {
+                with_threads(t, || {
+                    let mut a = vec![0u32; 17];
+                    let mut b = vec![0u32; 17];
+                    zip_impl("test.zip", sched, &mut a, &mut b, 3, |ci, ca, cb| {
+                        for (off, (x, y)) in ca.iter_mut().zip(cb.iter_mut()).enumerate() {
+                            *x = (ci * 3 + off) as u32;
+                            *y = *x * 2;
+                        }
+                    });
+                    for i in 0..17 {
+                        assert_eq!(a[i], i as u32);
+                        assert_eq!(b[i], 2 * i as u32);
                     }
                 });
-                for i in 0..17 {
-                    assert_eq!(a[i], i as u32);
-                    assert_eq!(b[i], 2 * i as u32);
-                }
-            });
+            }
+        }
+    }
+
+    #[test]
+    fn steal_bits_match_block_bits() {
+        // float content with a fixed per-chunk reduction order must be
+        // bit-identical under both schedules at any width
+        let run = |sched: Schedule, t: usize| -> Vec<u64> {
+            with_threads(t, || {
+                let mut data = vec![0.0f64; 4096];
+                chunks_impl("test.bits", sched, &mut data, 37, |ci, chunk| {
+                    for (off, x) in chunk.iter_mut().enumerate() {
+                        let mut acc = 0.0f64;
+                        for k in 0..(ci % 13) + 1 {
+                            acc += ((ci * 37 + off + k) as f64).sin() * 0.1;
+                        }
+                        *x = acc;
+                    }
+                });
+                data.iter().map(|x| x.to_bits()).collect()
+            })
+        };
+        let want = run(Schedule::Block, 1);
+        for t in [2usize, 4, 8] {
+            assert_eq!(want, run(Schedule::Block, t), "block t={t}");
+            assert_eq!(want, run(Schedule::Steal, t), "steal t={t}");
         }
     }
 
     #[test]
     fn nested_regions_run_inline() {
         with_threads(4, || {
-            par_rows(4, |range| {
+            par_rows("test.outer", 4, |range| {
                 for _ in range {
                     // inside a worker the nested width must collapse to 1
-                    assert_eq!(super::pool_width(128), 1);
+                    assert_eq!(super::effective_width(128), 1);
                 }
             });
             // back outside the pool, width is restored
-            assert_eq!(super::pool_width(128), 4);
+            assert_eq!(super::effective_width(128), 4);
         });
+    }
+
+    #[test]
+    fn nested_region_calls_complete_and_cover() {
+        // a region body that itself issues regions (the Kron-MVM-
+        // calls-GEMM pattern): inner calls collapse inline, every
+        // element still written exactly once, no deadlock
+        with_threads(4, || {
+            let mut data = vec![0usize; 64 * 16];
+            par_chunks_mut("test.nested_outer", &mut data, 16, |ci, chunk| {
+                par_chunks_mut("test.nested_inner", chunk, 4, |cj, sub| {
+                    for (off, x) in sub.iter_mut().enumerate() {
+                        *x = ci * 16 + cj * 4 + off;
+                    }
+                });
+            });
+            let want: Vec<usize> = (0..64 * 16).collect();
+            assert_eq!(data, want);
+        });
+    }
+
+    #[test]
+    fn panic_is_structured_and_pool_survives() {
+        for sched in [Schedule::Block, Schedule::Steal] {
+            for &t in &[1usize, 4] {
+                let err = with_threads(t, || {
+                    catch_unwind(AssertUnwindSafe(|| {
+                        let mut data = vec![0u8; 40];
+                        chunks_impl("test.boom", sched, &mut data, 4, |ci, _chunk| {
+                            if ci == 3 {
+                                panic!("task exploded");
+                            }
+                        });
+                    }))
+                    .expect_err("region must rethrow the task panic")
+                });
+                let rp = err.downcast::<RegionPanic>().expect("payload must be RegionPanic");
+                assert_eq!(rp.region, "test.boom");
+                assert_eq!(rp.chunk, 3);
+                assert!(rp.payload.contains("task exploded"), "payload: {}", rp.payload);
+                assert!(format!("{rp}").contains("'test.boom'"));
+                // the pool is not poisoned: the next region works
+                with_threads(t, || {
+                    let mut data = vec![0usize; 100];
+                    par_chunks_mut("test.after_boom", &mut data, 7, |ci, chunk| {
+                        for (off, x) in chunk.iter_mut().enumerate() {
+                            *x = ci * 7 + off;
+                        }
+                    });
+                    let want: Vec<usize> = (0..100).collect();
+                    assert_eq!(data, want);
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn cheap_sequential_panic_is_structured_too() {
+        // the below-threshold fallback must surface the same RegionPanic
+        // as the pooled paths, so the payload a caller catches never
+        // depends on the (env-tunable) threshold
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            let mut data = vec![0u8; 40]; // well below cheap_sweep_min
+            par_chunks_mut_cheap("test.cheap_boom", &mut data, 4, |ci, _chunk| {
+                if ci == 2 {
+                    panic!("cheap task exploded");
+                }
+            });
+        }))
+        .expect_err("cheap fallback must rethrow as RegionPanic");
+        let rp = err.downcast::<RegionPanic>().expect("payload must be RegionPanic");
+        assert_eq!(rp.region, "test.cheap_boom");
+        assert_eq!(rp.chunk, 2);
+    }
+
+    #[test]
+    fn shutdown_and_reinit_roundtrip() {
+        for round in 0..3 {
+            shutdown_pool();
+            with_threads(3, || {
+                let mut data = vec![0usize; 256];
+                par_chunks_mut_steal("test.reinit", &mut data, 8, |ci, chunk| {
+                    for (off, x) in chunk.iter_mut().enumerate() {
+                        *x = ci * 8 + off;
+                    }
+                });
+                let want: Vec<usize> = (0..256).collect();
+                assert_eq!(data, want, "round {round}");
+            });
+        }
+    }
+
+    #[test]
+    fn oversubscribed_width_completes() {
+        // far more workers than cores: regions must still cover every
+        // chunk exactly once and terminate promptly
+        with_threads(4 * detected_cores().max(2), || {
+            let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+            par_rows("test.oversub", 1000, |range| {
+                for i in range {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        });
+    }
+
+    #[test]
+    fn pool_stats_accumulate() {
+        let before = pool_stats();
+        with_threads(4, || {
+            let mut data = vec![0u64; 512];
+            par_chunks_mut_steal("test.stats", &mut data, 8, |ci, chunk| {
+                for x in chunk.iter_mut() {
+                    *x = ci as u64;
+                }
+            });
+        });
+        let after = pool_stats();
+        assert!(after.regions > before.regions);
+        assert!(after.steal_chunks >= before.steal_chunks + 64);
+        assert!(after.stolen_chunks >= before.stolen_chunks);
     }
 }

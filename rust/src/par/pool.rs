@@ -1,0 +1,293 @@
+//! Persistent worker pool: long-lived parked workers behind the region
+//! scheduler in [`super::region`].
+//!
+//! Workers are spawned lazily the first time a region needs them, grow
+//! on demand up to the widest region ever requested, park on a condvar
+//! when idle (after a short spin window, so back-to-back regions — the
+//! CG iteration pattern — skip the futex round-trip entirely), and are
+//! joined by [`shutdown`]. This replaces the PR-1 scoped-spawn design,
+//! whose per-region `std::thread::scope` spawn/join cost tens of
+//! microseconds and forced large sequential-fallback thresholds.
+//!
+//! A region is published as a [`Job`] with `helpers` claim slots; each
+//! slot grants exactly one execution of the region body with a distinct
+//! worker id in `1..=helpers`. The submitting thread always executes
+//! slot 0 itself and, once its own share is done, *self-serves* any
+//! slots no pool worker has picked up yet. Progress therefore never
+//! depends on pool threads being awake, idle, or even existing — a
+//! region racing [`shutdown`] simply degrades to sequential execution
+//! instead of deadlocking, and concurrent regions from independent
+//! threads (the `cargo test` harness) drain through the same queue.
+//!
+//! Memory safety: `Job::task` borrows a closure on the submitting
+//! thread's stack with its lifetime erased. [`submit_and_run`] only
+//! returns once `done == helpers`, i.e. after every claim's execution
+//! has finished, so the borrow outlives every dereference; jobs left in
+//! the queue after that are claim-exhausted and are discarded by the
+//! next worker that sees them without touching `task`.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Spin iterations a worker burns watching for a new job before parking
+/// on the condvar. Keeps back-to-back region dispatch in the
+/// sub-microsecond range without pinning a CPU when the pool is idle.
+const IDLE_SPIN: usize = 2_000;
+
+/// Lock that survives poisoning: the pool mutexes only guard counters
+/// and queue links that stay consistent across a caught task panic, and
+/// pool bookkeeping must keep working after one (regions surface panics
+/// as structured errors instead of poisoning the scheduler).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One published parallel region.
+pub(crate) struct Job {
+    /// Region body, invoked as `task(worker_id)`. Borrowed from the
+    /// submitting thread's stack — see the module docs for the lifetime
+    /// argument behind the `'static` erasure.
+    task: &'static (dyn Fn(usize) + Sync),
+    /// Number of claim slots (worker ids `1..=helpers`); the submitting
+    /// thread runs id 0 without a claim.
+    helpers: usize,
+    /// Claims handed out so far. Monotone and may overshoot `helpers`:
+    /// executors that draw a slot `> helpers` simply back off.
+    claims: AtomicUsize,
+    /// Executed claims; the submitting thread blocks until this reaches
+    /// `helpers`.
+    done: Mutex<usize>,
+    done_cv: Condvar,
+}
+
+impl Job {
+    /// Draw the next claim slot, or `None` when all are taken.
+    fn claim(&self) -> Option<usize> {
+        let c = self.claims.fetch_add(1, Ordering::Relaxed);
+        (c < self.helpers).then_some(c + 1)
+    }
+
+    fn exhausted(&self) -> bool {
+        self.claims.load(Ordering::Relaxed) >= self.helpers
+    }
+
+    /// Run claim slot `wid` and mark it done. The region body already
+    /// catches per-chunk panics; this outer net guarantees a missed
+    /// unwind can never leave `done` short of `helpers`, which would
+    /// deadlock the submitting thread.
+    fn run_claim(&self, wid: usize) {
+        let _ = catch_unwind(AssertUnwindSafe(|| (self.task)(wid)));
+        let mut d = lock(&self.done);
+        *d += 1;
+        if *d == self.helpers {
+            self.done_cv.notify_all();
+        }
+    }
+}
+
+struct Queue {
+    jobs: VecDeque<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<Queue>,
+    work_cv: Condvar,
+    /// Bumped on every publish (and on shutdown); the worker spin
+    /// window watches it so freshly idle workers catch the next region
+    /// without a condvar wait.
+    seq: AtomicU64,
+}
+
+pub(crate) struct Pool {
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+static POOL: Mutex<Option<Arc<Pool>>> = Mutex::new(None);
+static WORKERS_SPAWNED: AtomicU64 = AtomicU64::new(0);
+static WORKERS_LIVE: AtomicUsize = AtomicUsize::new(0);
+
+/// Total pool worker threads ever spawned (across shutdown/re-init).
+pub(crate) fn workers_spawned() -> u64 {
+    WORKERS_SPAWNED.load(Ordering::Relaxed)
+}
+
+/// Pool worker threads currently alive (parked or running).
+pub(crate) fn workers_live() -> usize {
+    WORKERS_LIVE.load(Ordering::Relaxed)
+}
+
+fn pool() -> Arc<Pool> {
+    let mut g = lock(&POOL);
+    g.get_or_insert_with(|| {
+        Arc::new(Pool {
+            shared: Arc::new(Shared {
+                queue: Mutex::new(Queue { jobs: VecDeque::new(), shutdown: false }),
+                work_cv: Condvar::new(),
+                seq: AtomicU64::new(0),
+            }),
+            handles: Mutex::new(Vec::new()),
+        })
+    })
+    .clone()
+}
+
+impl Pool {
+    /// Grow the pool to at least `want` workers. Spawn failure is not
+    /// fatal: `submit_and_run` self-serves whatever workers cannot take.
+    fn ensure_workers(&self, want: usize) {
+        let mut h = lock(&self.handles);
+        while h.len() < want {
+            let shared = self.shared.clone();
+            let name = format!("lkgp-par-{}", h.len() + 1);
+            match std::thread::Builder::new().name(name).spawn(move || worker_loop(shared)) {
+                Ok(handle) => {
+                    WORKERS_SPAWNED.fetch_add(1, Ordering::Relaxed);
+                    h.push(handle);
+                }
+                Err(_) => break,
+            }
+        }
+    }
+}
+
+/// Pop the next claim from the queue front, discarding jobs whose
+/// claims were already exhausted (e.g. fully self-served by their
+/// submitter before any worker woke up).
+fn next_claim(q: &mut Queue) -> Option<(Arc<Job>, usize)> {
+    while let Some(front) = q.jobs.front() {
+        if let Some(wid) = front.claim() {
+            let job = front.clone();
+            if job.exhausted() {
+                q.jobs.pop_front();
+            }
+            return Some((job, wid));
+        }
+        q.jobs.pop_front();
+    }
+    None
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    // nested regions issued from inside a task collapse to inline runs
+    super::mark_pool_worker();
+    WORKERS_LIVE.fetch_add(1, Ordering::Relaxed);
+    let mut q = lock(&shared.queue);
+    loop {
+        // drain claimable work before honoring shutdown, so a shutdown
+        // never strands a published region mid-flight
+        if let Some((job, wid)) = next_claim(&mut q) {
+            drop(q);
+            job.run_claim(wid);
+            q = lock(&shared.queue);
+            continue;
+        }
+        if q.shutdown {
+            break;
+        }
+        let seen = shared.seq.load(Ordering::Acquire);
+        drop(q);
+        let mut woke = false;
+        for _ in 0..IDLE_SPIN {
+            if shared.seq.load(Ordering::Acquire) != seen {
+                woke = true;
+                break;
+            }
+            std::hint::spin_loop();
+        }
+        q = lock(&shared.queue);
+        if !woke && q.jobs.is_empty() && !q.shutdown {
+            q = shared.work_cv.wait(q).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+    drop(q);
+    WORKERS_LIVE.fetch_sub(1, Ordering::Relaxed);
+}
+
+/// Publish a region with `helpers` claim slots and run it to
+/// completion: the calling thread executes slot 0, pool workers (and,
+/// for any slot still unclaimed once the caller is free, the caller
+/// itself) execute slots `1..=helpers`. Returns only after every slot
+/// has finished executing.
+pub(crate) fn submit_and_run(helpers: usize, body: &(dyn Fn(usize) + Sync)) {
+    if helpers == 0 {
+        body(0);
+        return;
+    }
+    let pool = pool();
+    pool.ensure_workers(helpers);
+    // SAFETY: pure lifetime erasure on a fat reference. The job only
+    // dereferences `task` between a successful claim and the matching
+    // `done` increment, and this function blocks below until
+    // `done == helpers` — after which no dereference can happen — so
+    // the borrow outlives every use.
+    let task = unsafe {
+        std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(body)
+    };
+    let job = Arc::new(Job {
+        task,
+        helpers,
+        claims: AtomicUsize::new(0),
+        done: Mutex::new(0),
+        done_cv: Condvar::new(),
+    });
+    {
+        let mut q = lock(&pool.shared.queue);
+        q.jobs.push_back(job.clone());
+    }
+    pool.shared.seq.fetch_add(1, Ordering::Release);
+    // wake at most `helpers` workers, not the whole herd: a lost
+    // notify_one is harmless because parking workers re-check the queue
+    // under the lock first, and spinners watch `seq`
+    for _ in 0..helpers {
+        pool.shared.work_cv.notify_one();
+    }
+    // slot 0: the submitting thread is always a region worker. The
+    // region body never unwinds by contract (per-chunk catch_unwind in
+    // region.rs), but a catch here makes the memory-safety argument
+    // unconditional: the done-wait below always runs before this frame
+    // — which `task` borrows from — can be popped.
+    let unwind = catch_unwind(AssertUnwindSafe(|| body(0)));
+    // self-serve whatever no pool worker has claimed yet: completion
+    // never depends on worker availability, so dispatch cannot deadlock
+    while let Some(wid) = job.claim() {
+        job.run_claim(wid);
+    }
+    let mut d = lock(&job.done);
+    while *d < job.helpers {
+        d = job.done_cv.wait(d).unwrap_or_else(|e| e.into_inner());
+    }
+    drop(d);
+    if let Err(p) = unwind {
+        std::panic::resume_unwind(p);
+    }
+}
+
+/// Join every pool worker and reset the global pool to its
+/// lazily-initialized state; the next region transparently restarts
+/// it. In-flight regions finish first: workers drain the queue before
+/// honoring the flag, and submitters self-serve any slots workers no
+/// longer pick up, so shutdown can never deadlock a region. When
+/// called from inside a region task on a pool worker, joining would
+/// self-deadlock — the handles are detached instead and the workers
+/// exit on their own after draining.
+pub(crate) fn shutdown() {
+    let pool = lock(&POOL).take();
+    let Some(pool) = pool else { return };
+    {
+        let mut q = lock(&pool.shared.queue);
+        q.shutdown = true;
+    }
+    pool.shared.seq.fetch_add(1, Ordering::Release);
+    pool.shared.work_cv.notify_all();
+    let handles = std::mem::take(&mut *lock(&pool.handles));
+    if super::in_pool_worker() {
+        return; // dropping the handles detaches the exiting workers
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+}

@@ -1,0 +1,202 @@
+//! Deterministic region scheduler on top of the persistent pool.
+//!
+//! A *region* is one blocking parallel construct: `n_chunks` disjoint
+//! work items, each identified by its chunk index, executed exactly
+//! once while the submitting thread waits. Two chunk-assignment
+//! policies are offered (see [`Schedule`]); both preserve the crate's
+//! determinism contract — every chunk's *content* is a pure function of
+//! its index, each chunk is executed by exactly one worker, and chunk
+//! boundaries never depend on the thread count — so output bits are
+//! identical for any `LKGP_THREADS` under either policy.
+//!
+//! Panics inside a task are caught per chunk ([`catch_unwind`]),
+//! sibling chunks are cancelled at the next chunk boundary, and the
+//! first panic is rethrown on the submitting thread as a structured
+//! [`RegionPanic`] carrying the region name and chunk index. The pool
+//! itself is never poisoned: subsequent regions run normally.
+
+use std::any::Any;
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::pool;
+
+/// Chunk-assignment policy for one parallel region.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// Contiguous runs of chunks per worker (`ceil(n_chunks / width)`
+    /// each, in index order). Zero coordination after dispatch and the
+    /// best cache locality — the default for uniform workloads like
+    /// GEMM row blocks and batched MVM rows.
+    Block,
+    /// Dynamic self-scheduling: every worker repeatedly takes the
+    /// lowest unclaimed chunk index from a shared cursor. Chunks whose
+    /// cost varies (pivoted-Cholesky row sweeps that thin out as pivots
+    /// are consumed, short last GEMM panels, lazy kernel rows) no
+    /// longer gate the region on the unluckiest worker. Legal whenever
+    /// chunk content is a pure function of the chunk index — writer
+    /// *identity* varies run to run, but each chunk is still written
+    /// exactly once, so output bits are unaffected.
+    Steal,
+}
+
+/// Structured panic payload rethrown on the submitting thread when a
+/// task inside a parallel region panics. Catch with
+/// `std::panic::catch_unwind` and downcast to recover the fields.
+#[derive(Debug)]
+pub struct RegionPanic {
+    /// Name of the region whose task panicked.
+    pub region: &'static str,
+    /// Chunk index the panicking task was executing.
+    pub chunk: usize,
+    /// Stringified payload of the original panic (best effort).
+    pub payload: String,
+}
+
+impl fmt::Display for RegionPanic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "parallel region '{}' panicked in chunk {}: {}",
+            self.region, self.chunk, self.payload
+        )
+    }
+}
+
+impl std::error::Error for RegionPanic {}
+
+// Cumulative scheduler counters, surfaced through `super::pool_stats`.
+pub(super) static REGIONS: AtomicU64 = AtomicU64::new(0);
+pub(super) static FANNED_REGIONS: AtomicU64 = AtomicU64::new(0);
+pub(super) static STEAL_CHUNKS: AtomicU64 = AtomicU64::new(0);
+pub(super) static STOLEN_CHUNKS: AtomicU64 = AtomicU64::new(0);
+
+fn payload_string(p: Box<dyn Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// Shared per-region state: the steal cursor, the cancellation flag,
+/// and the first caught panic.
+struct RegionState {
+    name: &'static str,
+    /// Chunks per worker under [`Schedule::Block`]; also defines the
+    /// "home" worker of a chunk for the steal-ratio bookkeeping.
+    per: usize,
+    next: AtomicUsize,
+    poisoned: AtomicBool,
+    panic_slot: Mutex<Option<(usize, String)>>,
+}
+
+impl RegionState {
+    fn run_one(&self, c: usize, task: &(dyn Fn(usize) + Sync)) {
+        if let Err(p) = catch_unwind(AssertUnwindSafe(|| task(c))) {
+            self.poisoned.store(true, Ordering::Relaxed);
+            let msg = payload_string(p);
+            let mut slot = self.panic_slot.lock().unwrap_or_else(|e| e.into_inner());
+            if slot.is_none() {
+                *slot = Some((c, msg));
+            }
+        }
+    }
+
+    /// Rethrow the first caught panic (if any) as a [`RegionPanic`].
+    fn rethrow(&self) {
+        let got = self.panic_slot.lock().unwrap_or_else(|e| e.into_inner()).take();
+        if let Some((chunk, payload)) = got {
+            std::panic::panic_any(RegionPanic { region: self.name, chunk, payload });
+        }
+    }
+}
+
+/// Run `task(c)` for every chunk in `0..n_chunks` sequentially on the
+/// calling thread, with the exact panic surface of the pooled paths
+/// (first panic cancels the rest and rethrows as [`RegionPanic`]).
+/// Used for regions that collapse inline and for the cheap-sweep
+/// sequential fallback, so the payload a caller catches never depends
+/// on which path a threshold picked.
+pub(crate) fn run_sequential(name: &'static str, n_chunks: usize, task: &(dyn Fn(usize) + Sync)) {
+    if n_chunks == 0 {
+        return;
+    }
+    REGIONS.fetch_add(1, Ordering::Relaxed);
+    let state = RegionState {
+        name,
+        per: n_chunks,
+        next: AtomicUsize::new(0),
+        poisoned: AtomicBool::new(false),
+        panic_slot: Mutex::new(None),
+    };
+    for c in 0..n_chunks {
+        if state.poisoned.load(Ordering::Relaxed) {
+            break;
+        }
+        state.run_one(c, task);
+    }
+    state.rethrow();
+}
+
+/// Execute `task(chunk)` exactly once for every chunk in `0..n_chunks`,
+/// fanned out over the persistent pool under `schedule`, blocking until
+/// the region completes. Width is `min(num_threads(), n_chunks)`, or 1
+/// inside an existing pool worker (nested regions collapse).
+pub(crate) fn run_chunked(
+    name: &'static str,
+    n_chunks: usize,
+    schedule: Schedule,
+    task: &(dyn Fn(usize) + Sync),
+) {
+    if n_chunks == 0 {
+        return;
+    }
+    let nt = super::effective_width(n_chunks);
+    if nt <= 1 {
+        run_sequential(name, n_chunks, task);
+        return;
+    }
+    REGIONS.fetch_add(1, Ordering::Relaxed);
+    FANNED_REGIONS.fetch_add(1, Ordering::Relaxed);
+    let state = RegionState {
+        name,
+        per: (n_chunks + nt - 1) / nt,
+        next: AtomicUsize::new(0),
+        poisoned: AtomicBool::new(false),
+        panic_slot: Mutex::new(None),
+    };
+    let st = &state;
+    let body = |wid: usize| {
+        let _inline = super::PoolGuard::enter();
+        match schedule {
+            Schedule::Block => {
+                let lo = wid * st.per;
+                let hi = n_chunks.min(lo + st.per);
+                for c in lo..hi {
+                    if st.poisoned.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    st.run_one(c, task);
+                }
+            }
+            Schedule::Steal => loop {
+                let c = st.next.fetch_add(1, Ordering::Relaxed);
+                if c >= n_chunks || st.poisoned.load(Ordering::Relaxed) {
+                    break;
+                }
+                STEAL_CHUNKS.fetch_add(1, Ordering::Relaxed);
+                if c / st.per != wid {
+                    STOLEN_CHUNKS.fetch_add(1, Ordering::Relaxed);
+                }
+                st.run_one(c, task);
+            },
+        }
+    };
+    pool::submit_and_run(nt - 1, &body);
+    state.rethrow();
+}

@@ -41,17 +41,24 @@ impl<T: Scalar> Preconditioner<T> {
     ///
     /// Pivot selection is inherently sequential, but each column update
     /// sweeps n rows; those rows are split across the `crate::par`
-    /// worker pool (disjoint row blocks, fixed per-row reduction order,
-    /// so the factor is bit-identical for any thread count). The
-    /// `col` oracle itself typically parallelizes internally too (e.g.
-    /// `MaskedKronSystem::kernel_col`).
+    /// worker pool under the **stealing schedule** — rows whose pivots
+    /// were already consumed short-circuit, so chunk cost is ragged and
+    /// the shared-cursor assignment keeps workers balanced. Each row
+    /// block is still written by exactly one worker with a fixed
+    /// per-row reduction order, so the factor is bit-identical for any
+    /// thread count. The `col` oracle itself typically parallelizes
+    /// internally too (e.g. `MaskedKronSystem::kernel_col`).
     pub fn pivoted_from_columns(
         diag_no_noise: Vec<f64>,
         col: impl Fn(usize) -> Vec<T>,
         rank: usize,
         sigma2: f64,
     ) -> Self {
-        const ROW_BLOCK: usize = 256;
+        // 128 rows per chunk (down from the spawn-era 256): cheaper
+        // pool dispatch makes finer stealing granularity a net win for
+        // the ragged later columns. Chunk boundaries are shape-only, so
+        // the choice cannot affect output bits.
+        const ROW_BLOCK: usize = 128;
         let n = diag_no_noise.len();
         let rank = rank.min(n);
         let mut d = diag_no_noise;
@@ -102,13 +109,20 @@ impl<T: Scalar> Preconditioner<T> {
                         *dv = (*dv - v * v).max(0.0);
                     }
                 };
-                // early columns do ~n*k flops — below spawn cost, run
-                // inline (one whole-slice "chunk 0" is bit-identical to
-                // the chunked parallel sweep)
-                if n * (k + 1) < 1 << 17 {
+                // early columns do ~n*k flops — below the persistent
+                // pool's dispatch break-even (re-tuned 8x down from the
+                // spawn-era 1<<17), run inline: one whole-slice
+                // "chunk 0" is bit-identical to the chunked sweep
+                if n * (k + 1) < 1 << 14 {
                     update(0, &mut newcol, &mut d);
                 } else {
-                    crate::par::par_zip_mut(&mut newcol, &mut d, ROW_BLOCK, &update);
+                    crate::par::par_zip_mut_steal(
+                        "precond.pivchol_col",
+                        &mut newcol,
+                        &mut d,
+                        ROW_BLOCK,
+                        &update,
+                    );
                 }
             }
             for (i, cv) in newcol.iter().enumerate() {
@@ -136,18 +150,24 @@ impl<T: Scalar> Preconditioner<T> {
             Preconditioner::Jacobi { inv_diag } => {
                 let mut out = r.clone();
                 let cols = out.cols;
-                crate::par::par_chunks_mut_cheap(&mut out.data, cols.max(1), |_, row| {
-                    for (x, d) in row.iter_mut().zip(inv_diag) {
-                        *x *= *d;
-                    }
-                });
+                crate::par::par_chunks_mut_cheap(
+                    "precond.jacobi",
+                    &mut out.data,
+                    cols.max(1),
+                    |_, row| {
+                        for (x, d) in row.iter_mut().zip(inv_diag) {
+                            *x *= *d;
+                        }
+                    },
+                );
                 out
             }
             Preconditioner::LowRankPlusNoise { l, sigma2, cap_chol } => {
                 let mut out = Matrix::zeros(r.rows, r.cols);
                 let inv_s2 = T::ONE / *sigma2;
                 let cols = r.cols;
-                crate::par::par_chunks_mut(&mut out.data, cols.max(1), |b, orow| {
+                let row_len = cols.max(1);
+                crate::par::par_chunks_mut("precond.woodbury", &mut out.data, row_len, |b, orow| {
                     let rb = r.row(b);
                     let lt_r = l.matvec_t(rb); // r-dim
                     let sol = cap_chol.solve(&lt_r);

@@ -14,7 +14,8 @@ use lkgp::kernels::ProductGridKernel;
 use lkgp::kron::{KronOp, MaskedKronSystem};
 use lkgp::linalg::gemm::{matmul, matmul_acc, matmul_nt};
 use lkgp::linalg::Matrix;
-use lkgp::par::with_threads;
+use lkgp::par::{self, with_threads, RegionPanic};
+use lkgp::solvers::precond::Preconditioner;
 use lkgp::util::rng::Rng;
 use lkgp::util::testing::{prop_check, Gen};
 
@@ -228,6 +229,143 @@ fn full_fit_posterior_bit_identical_across_thread_counts() {
             assert_eq!(a.to_bits(), b.to_bits(), "loss trace differs at t={t}");
         }
     }
+}
+
+#[test]
+fn pivoted_cholesky_steal_bit_identical_across_thread_counts() {
+    // The ragged work-stealing schedule on the production
+    // lazy-pivoted-Cholesky path: later columns sweep n rows whose cost
+    // thins out as pivots are consumed, and n*(k+1) crosses the
+    // parallel threshold mid-factorization — factor and apply must be
+    // bit-identical at 1/2/4/8 worker threads anyway.
+    let mut g = Gen { rng: Rng::new(97) };
+    let (p, q) = (64usize, 8usize);
+    let n = p * q;
+    let op = KronOp::new(
+        Matrix::from_vec(p, p, g.spd(p)),
+        Matrix::from_vec(q, q, g.spd(q)),
+    );
+    let sys = MaskedKronSystem::new(op, g.mask(n, 0.25), 0.1);
+    let diag: Vec<f64> = (0..n).map(|i| sys.kernel_col(i)[i]).collect();
+    let rhs = Matrix::from_vec(2, n, g.vec_normal(2 * n));
+    let build = |t: usize| {
+        with_threads(t, || {
+            let pre = Preconditioner::<f64>::pivoted_from_columns(
+                diag.clone(),
+                |j| sys.kernel_col(j),
+                48,
+                0.1,
+            );
+            let out = pre.apply_batch(&rhs);
+            let l = match &pre {
+                Preconditioner::LowRankPlusNoise { l, .. } => l.data.clone(),
+                _ => unreachable!("pivoted_from_columns builds the low-rank form"),
+            };
+            (bits(&l), bits(&out.data))
+        })
+    };
+    let want = build(1);
+    for t in [2usize, 4, 8] {
+        let got = build(t);
+        assert_eq!(want.0, got.0, "pivoted-Cholesky factor differs at t={t}");
+        assert_eq!(want.1, got.1, "preconditioner apply differs at t={t}");
+    }
+}
+
+#[test]
+fn oversubscribed_threads_bit_identical() {
+    // LKGP_THREADS far above the core count: the pool must complete
+    // promptly and produce the same bits as a single worker
+    let mut rng = Rng::new(33);
+    let (m, k, n) = (130usize, 70usize, 65usize);
+    let a = Matrix::from_vec(m, k, rng.normals(m * k));
+    let b = Matrix::from_vec(k, n, rng.normals(k * n));
+    let want = with_threads(1, || matmul(&a, &b));
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let over = 4 * cores + 3;
+    let got = with_threads(over, || matmul(&a, &b));
+    assert_eq!(bits(&want.data), bits(&got.data), "gemm differs at t={over}");
+}
+
+#[test]
+fn pool_shutdown_reinit_roundtrip_full_fit() {
+    // shutdown_pool joins every worker; the next region must lazily
+    // restart the pool and reproduce the exact posterior
+    let kernel = ProductGridKernel::new(2, "rbf", 8);
+    let data = well_specified(16, 8, 2, &kernel, 0.05, 0.3, 9);
+    let cfg = LkgpConfig {
+        train_iters: 2,
+        n_samples: 4,
+        probes: 2,
+        precond_rank: 20,
+        seed: 3,
+        ..LkgpConfig::default()
+    };
+    let f1 = with_threads(4, || Lkgp::fit(&data, cfg.clone()).unwrap());
+    for round in 0..2 {
+        par::shutdown_pool();
+        let f2 = with_threads(4, || Lkgp::fit(&data, cfg.clone()).unwrap());
+        assert_eq!(
+            bits(&f1.posterior.mean),
+            bits(&f2.posterior.mean),
+            "posterior mean differs after shutdown round {round}"
+        );
+        assert_eq!(
+            bits(&f1.posterior.var),
+            bits(&f2.posterior.var),
+            "posterior var differs after shutdown round {round}"
+        );
+    }
+}
+
+#[test]
+fn region_panic_is_structured_and_pool_survives() {
+    // a panicking task must surface as a RegionPanic (region name +
+    // chunk index) on the caller — no deadlock — and leave the pool
+    // fully usable for subsequent regions
+    let err = with_threads(4, || {
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut buf = vec![0.0f64; 64];
+            par::par_chunks_mut("invariance.boom", &mut buf, 8, |ci, _chunk| {
+                if ci == 5 {
+                    panic!("deliberate test panic");
+                }
+            });
+        }))
+        .expect_err("the region panic must propagate to the caller")
+    });
+    let rp = err.downcast::<RegionPanic>().expect("payload must be a RegionPanic");
+    assert_eq!(rp.region, "invariance.boom");
+    assert_eq!(rp.chunk, 5);
+    assert!(rp.payload.contains("deliberate test panic"));
+    // the pool is not poisoned: a fanned-out GEMM still matches t=1
+    let mut rng = Rng::new(5);
+    let (m, k, n) = (67usize, 33, 21);
+    let a = Matrix::from_vec(m, k, rng.normals(m * k));
+    let b = Matrix::from_vec(k, n, rng.normals(k * n));
+    let want = with_threads(1, || matmul(&a, &b));
+    let got = with_threads(4, || matmul(&a, &b));
+    assert_eq!(bits(&want.data), bits(&got.data), "gemm differs after a region panic");
+}
+
+#[test]
+fn nested_regions_collapse_on_pool() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    with_threads(4, || {
+        let hits: Vec<AtomicUsize> = (0..256).map(|_| AtomicUsize::new(0)).collect();
+        par::par_rows("invariance.outer", 4, |range| {
+            for w in range {
+                // the inner region must run inline on this worker —
+                // every index still covered exactly once, no deadlock
+                par::par_rows("invariance.inner", 64, |inner| {
+                    for i in inner {
+                        hits[w * 64 + i].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    });
 }
 
 #[test]

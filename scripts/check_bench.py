@@ -9,11 +9,26 @@ regressed:
     gemm_microkernel.tiled_ge_1p5x   tiled f64 GEMM >= 1.5x scalar matmul_nt
     gemm_microkernel.tiled_f32_ge_2x tiled f32 GEMM >= 2x scalar matmul_nt
     gemm_microkernel.gemm_gflops_ok  tiled GFLOP/s above the emitted floor
+    pool.region_speedup_ge_1x        persistent-pool region dispatch no
+                                     slower than the scoped-spawn baseline
+                                     (>= 10x is the design target; the 1x
+                                     gate absorbs noisy shared runners and
+                                     pool.dispatch_speedup carries the
+                                     measured ratio)
     fit[*].bit_identical             posterior bit-identical per thread count
+
+  also required to be present and numeric in BENCH_par.json:
+    pool.dispatch_ns                 empty-region latency on the pool
+    pool.steal_ratio                 fraction of steal-mode chunks run by a
+                                     non-home worker (work-stealing signal)
 
   BENCH_precision.json
     speedups_f32_over_f64.mvm_ge_1p5x  f32 Kron MVM >= 1.5x f64
     fig3_accuracy.within_1pct          f32 test RMSE within 1% of f64
+
+A referenced key that is absent is reported as a named error listing the
+keys that *are* available at the deepest resolvable level, so a renamed
+bench field fails loudly instead of looking like a regression.
 
 Usage: check_bench.py BENCH_par.json BENCH_precision.json
 """
@@ -26,6 +41,7 @@ GATES = {
         (("gemm_microkernel", "tiled_ge_1p5x"), "tiled f64 GEMM >= 1.5x scalar matmul_nt"),
         (("gemm_microkernel", "tiled_f32_ge_2x"), "tiled f32 GEMM >= 2x scalar matmul_nt"),
         (("gemm_microkernel", "gemm_gflops_ok"), "tiled GEMM above gemm_gflops_min floor"),
+        (("pool", "region_speedup_ge_1x"), "pool region dispatch >= scoped-spawn baseline"),
     ],
     "BENCH_precision.json": [
         (("speedups_f32_over_f64", "mvm_ge_1p5x"), "f32 Kron MVM >= 1.5x f64"),
@@ -33,14 +49,31 @@ GATES = {
     ],
 }
 
+# numeric metrics that must exist (informational gauges the perf
+# trajectory tracks; their absence means the bench section did not run)
+REQUIRED_NUMBERS = {
+    "BENCH_par.json": [
+        (("pool", "dispatch_ns"), "persistent-pool empty-region latency"),
+        (("pool", "steal_ratio"), "steal-mode chunk migration ratio"),
+    ],
+}
+
 
 def lookup(doc, path):
+    """Resolve a key path. Returns (value, None) on success, or
+    (None, error) naming the missing key and listing the keys available
+    at the deepest level that did resolve."""
     cur = doc
-    for key in path:
-        if not isinstance(cur, dict) or key not in cur:
-            return None
+    for depth, key in enumerate(path):
+        if not isinstance(cur, dict):
+            where = ".".join(path[:depth]) or "<root>"
+            return None, f"'{where}' is not an object (cannot contain {key!r})"
+        if key not in cur:
+            where = ".".join(path[:depth]) or "<root>"
+            avail = ", ".join(sorted(cur.keys())) or "<none>"
+            return None, f"missing key {key!r} under '{where}' — available keys: {avail}"
         cur = cur[key]
-    return cur
+    return cur, None
 
 
 def main(argv):
@@ -64,14 +97,25 @@ def main(argv):
             )
             continue
         for path, desc in gates:
-            val = lookup(doc, path)
+            val, err = lookup(doc, path)
             dotted = ".".join(path)
-            if val is None:
-                failures.append(f"{fname}: missing acceptance field {dotted} ({desc})")
+            if err is not None:
+                failures.append(f"{fname}: acceptance field {dotted} ({desc}): {err}")
             elif val is not True:
                 failures.append(f"{fname}: {dotted} = {val!r} — REGRESSED: {desc}")
             else:
                 print(f"ok   {fname}: {dotted} ({desc})")
+        for path, desc in REQUIRED_NUMBERS.get(base, []):
+            val, err = lookup(doc, path)
+            dotted = ".".join(path)
+            if err is not None:
+                failures.append(f"{fname}: required metric {dotted} ({desc}): {err}")
+            elif not isinstance(val, (int, float)) or isinstance(val, bool):
+                failures.append(
+                    f"{fname}: required metric {dotted} ({desc}) is {val!r}, not a number"
+                )
+            else:
+                print(f"ok   {fname}: {dotted} = {val:.6g} ({desc})")
         if base == "BENCH_par.json":
             fit_rows = doc.get("fit")
             if not isinstance(fit_rows, list) or not fit_rows:
