@@ -12,6 +12,11 @@
 //! results/e2e_climate.md and summarized in EXPERIMENTS.md.
 //!
 //! Run: cargo run --release --example climate_e2e [train_iters]
+//!
+//! Expected output: per-iteration loss logging, then held-out RMSE/NLL
+//! on the missing cells and a results/e2e_climate.md append. Without
+//! `make artifacts` the example exits early with an "artifacts
+//! unavailable" message — that is the expected offline behavior.
 
 use lkgp::data::climate::ClimateSim;
 use lkgp::gp::backend::PjrtKronBackend;

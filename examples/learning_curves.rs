@@ -4,6 +4,12 @@
 //! the early-stopping decision problem.
 //!
 //! Run: cargo run --release --example learning_curves
+//!
+//! Expected output: the censored-dataset summary, extrapolation
+//! RMSE/NLL on the withheld curve tails, and an early-stopping check
+//! reporting where the truly best censored curve lands in the
+//! predicted final-value ranking (it should place near the top of the
+//! ~115 censored curves). Runs in under a minute in release.
 
 use lkgp::data::lcbench::LcBenchSim;
 use lkgp::gp::lkgp::{Lkgp, LkgpConfig};

@@ -7,6 +7,11 @@
 //!    train/test metrics.
 //!
 //! Run: cargo run --release --example quickstart
+//!
+//! Expected output: a max projection error around 1e-16 (the latent
+//! Kronecker structure is exact, not approximate), test RMSE well below
+//! the data std with a finite NLL, and the analytic break-even missing
+//! ratios of Prop. 3.1 for three (p, q) shapes. Runs in seconds.
 
 use lkgp::data::synthetic::well_specified;
 use lkgp::gp::lkgp::{Lkgp, LkgpConfig};

@@ -6,6 +6,12 @@
 //! missing ratio, verifying: identical predictions, different cost.
 //!
 //! Run: cargo run --release --example robot_inverse_dynamics
+//!
+//! Expected output: a side-by-side LKGP vs dense-iterative table with
+//! near-identical test RMSE/NLL (prediction gap around 1e-2 RMSE or
+//! less, limited by CG tolerance), while LKGP reports far fewer kernel
+//! bytes — the Fig-3 "same predictions, different cost" claim. Runs in
+//! a minute or two in release.
 
 use lkgp::data::sarcos::SarcosSim;
 use lkgp::gp::backend::MvmMode;

@@ -1,0 +1,92 @@
+//! Train-once / serve-many end to end: fit an LKGP, checkpoint the
+//! pathwise state to disk, reload it in a fresh engine, and serve
+//! batched predictions — demonstrating that the served posterior is
+//! bit-identical to the in-memory fit (paper Sec. 3.3: after pathwise
+//! conditioning, prediction is only cheap MVMs).
+//!
+//! Run: cargo run --release --example save_predict
+//!
+//! Expected output: dataset + fit summary, the checkpoint size on disk,
+//! a "bit-identical: true" integrity line after reload, per-batch serve
+//! latencies for a ragged query mix, and a predictive-mean row for a
+//! brand-new spatial point (off-grid query). Exits non-zero if any
+//! round-trip check fails.
+
+use lkgp::data::synthetic::well_specified;
+use lkgp::gp::lkgp::{Lkgp, LkgpConfig};
+use lkgp::kernels::ProductGridKernel;
+use lkgp::linalg::Matrix;
+use lkgp::model::TrainedModel;
+use lkgp::serve::{BatchRequest, ServeEngine};
+
+fn main() -> anyhow::Result<()> {
+    println!("=== 1. Train once (the expensive phase) ===\n");
+    let kernel = ProductGridKernel::new(2, "rbf", 12);
+    let data = well_specified(48, 12, 2, &kernel, 0.02, 0.3, 1);
+    println!(
+        "dataset: p={} q={} observed {}/{} ({}% missing)",
+        data.p(),
+        data.q(),
+        data.n_observed(),
+        data.grid_len(),
+        (100.0 * data.missing_ratio()).round()
+    );
+    let fit = Lkgp::fit(
+        &data,
+        LkgpConfig { train_iters: 15, capture_pathwise: true, ..LkgpConfig::default() },
+    )?;
+    let (test_rmse, test_nll) = fit.posterior.test_metrics(&data);
+    println!("fit: test rmse {test_rmse:.4}, nll {test_nll:.4}, {:.2}s train", fit.train_secs);
+
+    println!("\n=== 2. Checkpoint the pathwise state ===\n");
+    let model = fit.model.as_ref().expect("capture_pathwise was set");
+    let path = std::env::temp_dir().join("lkgp_save_predict_example.ckpt");
+    let bytes = model.save(&path)?;
+    println!(
+        "wrote {} ({:.1} KiB: hypers + grid metadata + representer \
+         weights + {} pathwise samples)",
+        path.display(), bytes as f64 / 1024.0, model.n_samples
+    );
+
+    println!("\n=== 3. Serve from the checkpoint (the cheap phase) ===\n");
+    // one decode: load, then hand the model to the engine
+    let engine = ServeEngine::from_model(TrainedModel::load(&path)?)?;
+    println!("posterior reconstructed in {:.3}s (MVMs only, no CG)", engine.reconstruct_secs());
+    let rep = engine.verify();
+    println!("bit-identical to stored posterior: {}", rep.bit_identical);
+    let mut exact = rep.bit_identical;
+    for (a, b) in fit.posterior.mean.iter().zip(&engine.posterior().mean) {
+        exact &= a.to_bits() == b.to_bits();
+    }
+    for (a, b) in fit.posterior.mean.iter().zip(&engine.reconstructed().mean) {
+        exact &= a.to_bits() == b.to_bits();
+    }
+    anyhow::ensure!(exact, "round-trip was not bit-identical");
+
+    // ragged batch mix, coalesced into one steal-scheduled sweep
+    let pq = data.grid_len();
+    let batches = vec![
+        BatchRequest { cells: (0..pq).collect() },
+        BatchRequest { cells: (0..pq).step_by(7).collect() },
+        BatchRequest { cells: vec![0, pq - 1] },
+    ];
+    let t0 = std::time::Instant::now();
+    let res = engine.predict_batch(&batches)?;
+    let dt = t0.elapsed().as_secs_f64();
+    let served: usize = res.iter().map(|r| r.mean.len()).sum();
+    println!(
+        "served {} predictions across {} ragged batches in {:.2} us \
+         ({:.0} predictions/s)",
+        served, batches.len(), dt * 1e6, served as f64 / dt.max(1e-12)
+    );
+
+    println!("\n=== 4. New-user query (off-grid spatial point) ===\n");
+    let s_star = Matrix::from_vec(1, 2, vec![0.1, -0.4]);
+    let mu = engine.predict_new_points(&s_star)?;
+    let row: Vec<f64> = mu.row(0).iter().map(|x| (x * 1000.0).round() / 1000.0).collect();
+    println!("predictive mean across the {} time steps: {row:?}", data.q());
+
+    std::fs::remove_file(&path).ok();
+    println!("\nround trip OK — the fit/serve boundary is lossless.");
+    Ok(())
+}

@@ -22,15 +22,20 @@ use crate::linalg::Matrix;
 use super::common::{fd_adam, flatten, init_hypers, kernel_from};
 use super::{BaselineFit, BaselineModel};
 
+/// Computation-aware GP (Wenger et al. 2024) baseline configuration.
 pub struct CaGp {
     /// number of actions (projection dimension)
     pub m: usize,
+    /// Hyperparameter-training iterations.
     pub train_iters: usize,
+    /// Adam learning rate.
     pub lr: f64,
+    /// RNG seed.
     pub seed: u64,
 }
 
 impl CaGp {
+    /// Baseline with the default learning rate.
     pub fn new(m: usize, train_iters: usize, seed: u64) -> Self {
         CaGp { m, train_iters, lr: 0.1, seed }
     }

@@ -10,14 +10,19 @@ use crate::util::rng::Rng;
 
 /// Observed data flattened to (X, y): x_i = [s_j.., t_k], y standardized.
 pub struct FlatData {
+    /// Observed feature rows `[s.., t]` (n x (d_s + 1)).
     pub x: Matrix<f64>,
+    /// Standardized observed targets.
     pub y: Vec<f64>,
     /// all grid cells as feature rows (prediction targets)
     pub x_grid: Matrix<f64>,
+    /// Mean of the observed targets (standardization state).
     pub y_mean: f64,
+    /// Std of the observed targets (standardization state).
     pub y_std: f64,
 }
 
+/// Flatten a grid dataset into the baseline feature view.
 pub fn flatten(data: &GridDataset) -> FlatData {
     let (p, q) = (data.p(), data.q());
     let d = data.s.cols + 1;

@@ -36,12 +36,18 @@ use crate::gp::Posterior;
 
 /// Uniform interface so experiment runners can iterate over models.
 pub trait BaselineModel {
+    /// Model name for tables/reports.
     fn name(&self) -> &'static str;
+    /// Fit on the observed cells and predict the full grid.
     fn fit_predict(&mut self, data: &GridDataset) -> crate::Result<BaselineFit>;
 }
 
+/// Result of one baseline fit.
 pub struct BaselineFit {
+    /// Full-grid predictive posterior (raw target scale).
     pub posterior: Posterior,
+    /// Wall-clock seconds of fitting + prediction.
     pub train_secs: f64,
+    /// Fitted hyperparameters (model-specific layout).
     pub hypers: Vec<f64>,
 }

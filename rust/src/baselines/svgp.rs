@@ -21,16 +21,20 @@ use crate::util::rng::Rng;
 use super::common::{fd_adam, flatten, init_hypers, kernel_from, random_rows};
 use super::{BaselineFit, BaselineModel};
 
+/// SVGP (collapsed-ELBO) baseline configuration.
 pub struct Svgp {
     /// number of inducing points
     pub m: usize,
     /// finite-difference Adam iterations on the collapsed ELBO
     pub train_iters: usize,
+    /// Adam learning rate.
     pub lr: f64,
+    /// RNG seed.
     pub seed: u64,
 }
 
 impl Svgp {
+    /// Baseline with the default learning rate.
     pub fn new(m: usize, train_iters: usize, seed: u64) -> Self {
         Svgp { m, train_iters, lr: 0.1, seed }
     }

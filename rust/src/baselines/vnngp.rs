@@ -24,17 +24,22 @@ use super::common::{fd_adam, flatten, init_hypers, kernel_from};
 use super::nn::knn;
 use super::{BaselineFit, BaselineModel};
 
+/// VNNGP (nearest-neighbour variational GP) baseline configuration.
 pub struct Vnngp {
     /// nearest neighbours retained
     pub k: usize,
+    /// Hyperparameter-training iterations.
     pub train_iters: usize,
     /// subsample size for hyper training
     pub batch: usize,
+    /// Adam learning rate.
     pub lr: f64,
+    /// RNG seed.
     pub seed: u64,
 }
 
 impl Vnngp {
+    /// Baseline with the default batch size and learning rate.
     pub fn new(k: usize, train_iters: usize, seed: u64) -> Self {
         Vnngp { k, train_iters, batch: 64, lr: 0.1, seed }
     }

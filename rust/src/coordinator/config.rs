@@ -8,6 +8,7 @@
 
 use crate::util::cli::Args;
 
+/// Per-experiment problem sizes and iteration budgets.
 #[derive(Clone, Debug)]
 pub struct ExperimentScale {
     /// Fig 2: grid sizes n = p*q with p = q = sqrt(n)
@@ -16,26 +17,36 @@ pub struct ExperimentScale {
     pub fig2_dense_cap: usize,
     /// Fig 3: spatial points (q = 7 tasks fixed by the problem)
     pub fig3_p: usize,
+    /// Fig 3: missing-ratio sweep.
     pub fig3_ratios: Vec<f64>,
+    /// Fig 3: seeds per configuration.
     pub fig3_seeds: u64,
     /// Table 1 / Fig 4: learning curves per dataset, epochs
     pub table1_p: usize,
+    /// Table 1 / Fig 4: epochs per curve.
     pub table1_q: usize,
+    /// Table 1: seeds per configuration.
     pub table1_seeds: u64,
     /// Table 2: stations x days
     pub table2_p: usize,
+    /// Table 2: days.
     pub table2_q: usize,
+    /// Table 2: missing-ratio sweep.
     pub table2_ratios: Vec<f64>,
+    /// Table 2: seeds per configuration.
     pub table2_seeds: u64,
     /// model-fit iteration budgets
     pub gp_train_iters: usize,
+    /// Training-iteration budget of the variational baselines.
     pub baseline_train_iters: usize,
+    /// Pathwise samples per fit.
     pub n_samples: usize,
     /// LKGP backend: "rust" or a PJRT artifact config name
     pub backend: String,
 }
 
 impl ExperimentScale {
+    /// Sub-minute sizes for local iteration and CI.
     pub fn quick() -> Self {
         ExperimentScale {
             fig2_sizes: vec![64, 256, 1024, 4096, 16384],
@@ -57,6 +68,7 @@ impl ExperimentScale {
         }
     }
 
+    /// The scaled-shape defaults behind EXPERIMENTS.md.
     pub fn paper() -> Self {
         ExperimentScale {
             fig2_sizes: vec![256, 1024, 4096, 16384, 65536, 262144],

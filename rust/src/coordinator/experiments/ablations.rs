@@ -54,6 +54,7 @@ fn test_system(p: usize, q: usize, s2: f64, seed: u64) -> (MaskedKronSystem<f64>
     (sys, rhs)
 }
 
+/// Run the ablation sweeps at the given scale.
 pub fn run(_scale: &ExperimentScale) {
     println!("== Ablations over design choices ==\n");
 

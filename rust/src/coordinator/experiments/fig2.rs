@@ -19,6 +19,7 @@ use crate::util::rng::Rng;
 use crate::util::table::Table;
 use crate::util::timer::Stopwatch;
 
+/// Regenerate the Figure-2 cost-scaling study.
 pub fn run(scale: &ExperimentScale) {
     println!("== Figure 2: kernel-eval / MVM scaling (dense vs latent Kronecker) ==\n");
     let mut table = Table::new(

@@ -16,6 +16,7 @@ use crate::kron::breakeven;
 use crate::util::stats::mean;
 use crate::util::table::Table;
 
+/// Regenerate the Figure-3 missing-ratio comparison.
 pub fn run(scale: &ExperimentScale) {
     let (p, q) = (scale.fig3_p, 7);
     println!("== Figure 3: simulated SARCOS (p={p}, q={q}) — LKGP vs dense iterative ==\n");

@@ -33,6 +33,7 @@ fn pick_rows(data: &GridDataset) -> Vec<usize> {
     vec![shortest, median, outlier]
 }
 
+/// Regenerate the Figure-4 learning-curve panels.
 pub fn run(scale: &ExperimentScale) {
     println!("== Figure 4: qualitative learning-curve extrapolation ==\n");
     let sim = LcBenchSim::new(scale.table1_p, scale.table1_q, 1003); // "Fashion"-like family

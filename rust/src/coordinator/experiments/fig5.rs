@@ -7,6 +7,7 @@ use crate::coordinator::{report, ExperimentScale};
 use crate::data::climate::{ClimateSim, ClimateVariant};
 use crate::util::table::Table;
 
+/// Regenerate the Figure-5 climate comparison.
 pub fn run(scale: &ExperimentScale) {
     println!("== Figure 5: climate dataset illustration ==\n");
     let mut table = Table::new(

@@ -10,16 +10,24 @@ use crate::gp::lkgp::{Backend, Lkgp, LkgpConfig};
 use crate::gp::backend::MvmMode;
 use crate::gp::Posterior;
 
+/// One model's metrics on one dataset.
 #[derive(Clone, Debug)]
 pub struct ModelResult {
+    /// Model name.
     pub model: String,
+    /// RMSE on observed cells.
     pub train_rmse: f64,
+    /// RMSE on withheld cells.
     pub test_rmse: f64,
+    /// Mean Gaussian NLL on observed cells.
     pub train_nll: f64,
+    /// Mean Gaussian NLL on withheld cells.
     pub test_nll: f64,
+    /// Fit + predict wall-clock seconds.
     pub secs: f64,
 }
 
+/// The LKGP configuration all table/figure experiments share.
 pub fn lkgp_config(scale: &ExperimentScale, seed: u64) -> LkgpConfig {
     let backend = if scale.backend == "rust" {
         Backend::Rust(MvmMode::Kron)

@@ -8,6 +8,7 @@ use crate::data::lcbench::table1_datasets;
 use crate::util::stats::{mean, ranks};
 use crate::util::table::Table;
 
+/// Regenerate Table 1 (learning-curve prediction).
 pub fn run(scale: &ExperimentScale) {
     println!(
         "== Table 1: learning-curve prediction (sim-LCBench, p={}, q={}) ==\n",

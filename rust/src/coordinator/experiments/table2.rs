@@ -6,6 +6,7 @@ use crate::coordinator::{report, ExperimentScale};
 use crate::data::climate::{ClimateSim, ClimateVariant};
 use crate::util::table::Table;
 
+/// Regenerate Table 2 (climate datasets).
 pub fn run(scale: &ExperimentScale) {
     println!(
         "== Table 2: sim-climate (p={}, q={}) with missing ratios {:?} ==\n",

@@ -5,6 +5,8 @@ use std::path::PathBuf;
 
 use crate::util::table::Table;
 
+/// Directory experiment outputs are written to (`LKGP_RESULTS` or the
+/// repo-root `results/`).
 pub fn results_dir() -> PathBuf {
     let dir = std::env::var("LKGP_RESULTS").map(PathBuf::from).unwrap_or_else(|_| {
         // anchor at the repo root if we can find it

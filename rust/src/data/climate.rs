@@ -17,23 +17,30 @@ use super::grid::GridDataset;
 /// Which Table-2 variant to generate.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ClimateVariant {
+    /// Smooth seasonal temperature fields.
     Temperature,
+    /// Noisy, intermittent precipitation fields.
     Precipitation,
 }
 
+/// Simulator configuration for the climate workloads.
 pub struct ClimateSim {
     /// number of spatial stations
     pub p: usize,
     /// number of days
     pub q: usize,
+    /// Which field to generate.
     pub variant: ClimateVariant,
+    /// Fraction of grid cells withheld as test targets.
     pub missing_ratio: f64,
+    /// Generation seed.
     pub seed: u64,
     /// random Fourier features for the latent field
     pub n_features: usize,
 }
 
 impl ClimateSim {
+    /// Simulator with the default feature count.
     pub fn new(
         p: usize,
         q: usize,
@@ -44,14 +51,17 @@ impl ClimateSim {
         ClimateSim { p, q, variant, missing_ratio, seed, n_features: 96 }
     }
 
+    /// Generate the temperature variant in one call.
     pub fn default_temperature(p: usize, q: usize, missing_ratio: f64, seed: u64) -> GridDataset {
         Self::new(p, q, ClimateVariant::Temperature, missing_ratio, seed).generate()
     }
 
+    /// Generate the precipitation variant in one call.
     pub fn default_precipitation(p: usize, q: usize, missing_ratio: f64, seed: u64) -> GridDataset {
         Self::new(p, q, ClimateVariant::Precipitation, missing_ratio, seed).generate()
     }
 
+    /// Generate the dataset (deterministic per configuration).
     pub fn generate(&self) -> GridDataset {
         let mut rng = Rng::new(self.seed ^ 0xC11A7E);
         // station locations in a Nordic-like box (lat 55..71, lon 4..31),

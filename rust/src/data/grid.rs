@@ -26,22 +26,27 @@ pub struct GridDataset {
 }
 
 impl GridDataset {
+    /// Number of spatial points p.
     pub fn p(&self) -> usize {
         self.s.rows
     }
 
+    /// Number of time steps / tasks q.
     pub fn q(&self) -> usize {
         self.t.len()
     }
 
+    /// Grid size p*q.
     pub fn grid_len(&self) -> usize {
         self.p() * self.q()
     }
 
+    /// Number of observed (training) cells.
     pub fn n_observed(&self) -> usize {
         self.mask.iter().filter(|&&m| m).count()
     }
 
+    /// Fraction of cells withheld (the test set).
     pub fn missing_ratio(&self) -> f64 {
         1.0 - self.n_observed() as f64 / self.grid_len() as f64
     }

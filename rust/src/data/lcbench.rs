@@ -27,10 +27,12 @@ pub struct LcBenchSim {
     pub full_fraction: f64,
     /// fraction of divergent outlier curves
     pub outlier_fraction: f64,
+    /// Generation seed.
     pub seed: u64,
 }
 
 impl LcBenchSim {
+    /// Simulator with default censoring/outlier fractions.
     pub fn new(p: usize, q: usize, seed: u64) -> Self {
         LcBenchSim { p, q, full_fraction: 0.1, outlier_fraction: 0.02, seed }
     }
@@ -41,6 +43,7 @@ impl LcBenchSim {
          "max_units", "dropout"]
     }
 
+    /// Generate the dataset (deterministic per configuration).
     pub fn generate(&self) -> GridDataset {
         let mut rng = Rng::new(self.seed ^ 0x1CBE7C);
         // dataset-level difficulty parameters

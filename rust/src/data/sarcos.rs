@@ -206,14 +206,18 @@ impl ArmModel {
 
 /// Simulated-SARCOS generator: p joint states x 7 torque tasks.
 pub struct SarcosSim {
+    /// Number of joint states (spatial points).
     pub p: usize,
+    /// Fraction of torque readings withheld as test targets.
     pub missing_ratio: f64,
+    /// Generation seed.
     pub seed: u64,
     /// output observation noise (fraction of per-task std)
     pub noise_frac: f64,
 }
 
 impl SarcosSim {
+    /// Simulator with the default noise fraction.
     pub fn new(p: usize, missing_ratio: f64, seed: u64) -> Self {
         SarcosSim { p, missing_ratio, seed, noise_frac: 0.05 }
     }

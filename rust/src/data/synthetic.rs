@@ -17,10 +17,13 @@ use super::grid::GridDataset;
 /// q x dt "time" inputs, all standard normal (matching the paper's
 /// ten-dimensional synthetic setup with ds = dt = 5).
 pub struct SyntheticInputs {
+    /// Spatial inputs (p x 5, standard normal).
     pub s: Matrix<f64>,
+    /// Multi-dimensional "time" inputs (q x 5, standard normal).
     pub t_multi: Matrix<f64>,
 }
 
+/// Draw the Fig-2 input set for a (p, q) factorization.
 pub fn fig2_inputs(p: usize, q: usize, seed: u64) -> SyntheticInputs {
     let mut rng = Rng::new(seed ^ 0xF162);
     SyntheticInputs {

@@ -38,7 +38,10 @@ pub enum MvmMode {
     DenseMaterialized,
     /// Lazy dense: kernel entries recomputed every MVM (O(n^2 d) time,
     /// O(n * block) memory) — the out-of-memory regime of Fig. 2.
-    DenseLazy { block_rows: usize },
+    DenseLazy {
+        /// Kernel rows materialized at a time.
+        block_rows: usize,
+    },
 }
 
 /// Floating-point precision of the iterative inference hot path
@@ -78,6 +81,7 @@ pub enum Precision {
 /// iterative hot path (MVMs, CG iterates, preconditioner columns)
 /// switches precision.
 pub trait KronBackend<T: Scalar = f64> {
+    /// Padded grid dimension p*q.
     fn dim(&self) -> usize;
     /// number of Hutchinson probes the gradient path expects
     fn probes(&self) -> usize;
@@ -122,6 +126,7 @@ pub struct SystemOp<'a, B> {
 }
 
 impl<'a, B> SystemOp<'a, B> {
+    /// Wrap a backend for the duration of one CG solve.
     pub fn new(be: &'a mut B) -> Self {
         SystemOp { be, err: None }
     }
@@ -161,8 +166,12 @@ impl<'a, T: Scalar, B: KronBackend<T>> BatchedOp<T> for SystemOp<'a, B> {
 // Rust-native backend (precision-generic)
 // ---------------------------------------------------------------------
 
+/// Pure-rust backend: kernels + Kronecker algebra in precision `T`,
+/// plus the dense-baseline MVM modes (see [`MvmMode`]).
 pub struct RustKronBackend<T: Scalar = f64> {
+    /// The product kernel (hyperparameters installed by `set_hypers`).
     pub kernel: ProductGridKernel,
+    /// Which MVM implementation `system_mvm` runs.
     pub mode: MvmMode,
     probes: usize,
     s: Matrix<f64>,
@@ -178,6 +187,8 @@ pub struct RustKronBackend<T: Scalar = f64> {
 }
 
 impl<T: Scalar> RustKronBackend<T> {
+    /// Backend over `ds` spatial dims and a q-point time grid of the
+    /// named family; `probes` Hutchinson probes for the gradient path.
     pub fn new(ds: usize, time_family: &str, q: usize, probes: usize) -> Self {
         RustKronBackend {
             kernel: ProductGridKernel::new(ds, time_family, q),
@@ -194,6 +205,7 @@ impl<T: Scalar> RustKronBackend<T> {
         }
     }
 
+    /// Select the MVM mode (builder style).
     pub fn with_mode(mut self, mode: MvmMode) -> Self {
         self.mode = mode;
         self
@@ -427,8 +439,11 @@ impl<T: Scalar> KronBackend<T> for RustKronBackend<T> {
 // PJRT backend (the three-layer production path)
 // ---------------------------------------------------------------------
 
+/// The production three-layer backend: all five LKGP operations run as
+/// AOT-compiled Pallas/JAX artifacts on the PJRT CPU client.
 pub struct PjrtKronBackend {
     rt: Runtime,
+    /// Artifact configuration name this backend executes.
     pub config: String,
     p: usize,
     q: usize,
@@ -473,6 +488,7 @@ impl PjrtKronBackend {
         })
     }
 
+    /// The PJRT runtime (shared across fits by the experiment harness).
     pub fn runtime(&self) -> &Runtime {
         &self.rt
     }

@@ -19,8 +19,11 @@ use crate::linalg::Matrix;
 
 /// A (u, v, coefficient) quadratic-form pair of the surrogate.
 pub struct Pair<'a> {
+    /// Left masked grid vector u.
     pub u: &'a [f64],
+    /// Right masked grid vector v.
     pub v: &'a [f64],
+    /// Weight of this pair's contribution to the surrogate.
     pub coef: f64,
 }
 

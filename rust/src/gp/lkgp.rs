@@ -16,7 +16,7 @@
 //!
 //! Mixed precision: `LkgpConfig::precision` selects the scalar type of
 //! the whole iterative hot path (see [`Precision`]). The generic
-//! [`fit_with_backend`] body computes in `T` but keeps every sensitive
+//! `fit_with_backend` body computes in `T` but keeps every sensitive
 //! reduction — data-fit term, gradients, pathwise moment accumulation —
 //! in f64, and the returned [`Posterior`] is always f64.
 
@@ -42,15 +42,22 @@ pub enum Backend {
     /// (Kron = LKGP, DenseMaterialized/DenseLazy = iterative baselines).
     Rust(MvmMode),
     /// AOT artifacts on the PJRT CPU client (named artifact config).
-    Pjrt { config: String },
+    Pjrt {
+        /// Artifact configuration name from the manifest.
+        config: String,
+    },
 }
 
+/// Configuration of one LKGP fit (training + pathwise prediction).
 #[derive(Clone, Debug)]
 pub struct LkgpConfig {
     /// Adam iterations on the marginal likelihood
     pub train_iters: usize,
+    /// Adam learning rate
     pub lr: f64,
+    /// CG relative-residual tolerance
     pub cg_tol: f64,
+    /// CG iteration cap per solve
     pub cg_max_iters: usize,
     /// Hutchinson probes (must equal the artifact's static count on PJRT)
     pub probes: usize,
@@ -58,7 +65,9 @@ pub struct LkgpConfig {
     pub n_samples: usize,
     /// pivoted-Cholesky preconditioner rank (0 = Jacobi)
     pub precond_rank: usize,
+    /// RNG seed for probes, pathwise samples, and observation noise
     pub seed: u64,
+    /// compute backend executing the five LKGP operations
     pub backend: Backend,
     /// compute precision of the iterative hot path (Rust backend only;
     /// PJRT artifacts always execute in f32 on-device) — see
@@ -66,6 +75,14 @@ pub struct LkgpConfig {
     pub precision: Precision,
     /// initial log observation-noise variance
     pub init_log_sigma2: f64,
+    /// Capture the pathwise-conditioning state (representer weights,
+    /// masked sample coefficients, prior sample values) into
+    /// [`LkgpFit::model`] so the fit can be checkpointed with
+    /// [`crate::model::TrainedModel::save`] and served by
+    /// [`crate::serve::ServeEngine`]. Costs two extra
+    /// `n_samples x (p q)` matrices of resident memory; off by default
+    /// so experiments and benches pay nothing.
+    pub capture_pathwise: bool,
 }
 
 impl Default for LkgpConfig {
@@ -82,29 +99,44 @@ impl Default for LkgpConfig {
             backend: Backend::Rust(MvmMode::Kron),
             precision: Precision::F64,
             init_log_sigma2: (0.1f64).ln(),
+            capture_pathwise: false,
         }
     }
 }
 
 /// Result of a fit: posterior + hyperparameters + cost accounting.
 pub struct LkgpFit {
+    /// Full-grid predictive posterior in raw target scale.
     pub posterior: Posterior,
+    /// Fitted kernel hyperparameters (flat layout, see `kernels`).
     pub theta: Vec<f64>,
+    /// Fitted log observation-noise variance.
     pub log_sigma2: f64,
     /// 0.5 y^T alpha per training iteration (data-fit part of the NLL)
     pub loss_trace: Vec<f64>,
+    /// Wall-clock seconds spent in hyperparameter training.
     pub train_secs: f64,
+    /// Wall-clock seconds spent in pathwise prediction.
     pub predict_secs: f64,
+    /// Total CG iterations across all solves.
     pub cg_iters_total: usize,
+    /// Total system MVMs across all solves.
     pub mvm_total: usize,
+    /// Bytes held by the kernel representation (Fig-2/3 memory axis).
     pub kernel_bytes: u64,
+    /// Per-phase wall-clock profile.
     pub profile: Profile,
+    /// Serializable train-once/serve-many state, captured when
+    /// [`LkgpConfig::capture_pathwise`] is set (`None` otherwise).
+    /// Checkpoint it with [`crate::model::TrainedModel::save`].
+    pub model: Option<crate::model::TrainedModel>,
 }
 
 /// Train + predict an LKGP (or iterative-baseline) model on a dataset.
 pub struct Lkgp;
 
 impl Lkgp {
+    /// Fit on `data` with the backend/precision selected by `cfg`.
     pub fn fit(data: &GridDataset, cfg: LkgpConfig) -> Result<LkgpFit> {
         match &cfg.backend {
             Backend::Rust(mode) => match cfg.precision {
@@ -281,7 +313,16 @@ fn fit_with_backend<T: Scalar, B: KronBackend<T>>(
     let nsamp = cfg.n_samples.max(2);
     let mut var_acc = vec![0.0f64; pq];
     let mut mean_acc = vec![0.0f64; pq];
-    let chunk = 16usize;
+    let chunk = PATHWISE_CHUNK;
+    // optional train-once/serve-many capture: the masked sample
+    // coefficients and prior sample values, row-aligned with the chunk
+    // loop below so serve-time reconstruction replays the exact same
+    // accumulation (see crate::serve)
+    let mut capture: Option<(Matrix<T>, Matrix<T>)> = if cfg.capture_pathwise {
+        Some((Matrix::zeros(nsamp, pq), Matrix::zeros(nsamp, pq)))
+    } else {
+        None
+    };
     let pre: Preconditioner<T> = build_precond(be, cfg.precond_rank, sigma2);
     let mut done = 0;
     while done < nsamp {
@@ -323,47 +364,52 @@ fn fit_with_backend<T: Scalar, B: KronBackend<T>>(
                 *x *= T::from_f64(*m);
             }
         });
+        if let Some((vm_all, fp_all)) = capture.as_mut() {
+            for r in 0..b {
+                vm_all.row_mut(done + r).copy_from_slice(vm.row(r));
+                fp_all.row_mut(done + r).copy_from_slice(f_prior.row(r));
+            }
+        }
         let kv = prof.time("predict_apply", || be.kron_apply(&vm))?;
         // accumulate pathwise moments per grid cell in parallel; the
         // per-cell reduction over sample rows runs in a fixed order and
         // in f64 (in both precisions), so the posterior is bit-identical
         // for any thread count
         prof.time("var_accum", || {
-            let block = 1024usize;
-            let accum = |ci: usize, mseg: &mut [f64], vseg: &mut [f64]| {
-                let base = ci * block;
-                for (off, (ma, va)) in mseg.iter_mut().zip(vseg.iter_mut()).enumerate() {
-                    let c = base + off;
-                    let mut msum = 0.0;
-                    let mut vsum = 0.0;
-                    for r in 0..b {
-                        let f = f_prior[(r, c)].to_f64() + kv[(r, c)].to_f64();
-                        msum += f;
-                        vsum += f * f;
-                    }
-                    *ma += msum;
-                    *va += vsum;
-                }
-            };
-            crate::par::par_zip_mut("lkgp.var_accum", &mut mean_acc, &mut var_acc, block, accum);
+            accumulate_pathwise_moments(&f_prior, &kv, &mut mean_acc, &mut var_acc);
         });
         done += b;
     }
-    let mut mean = vec![0.0; pq];
-    let mut var = vec![0.0; pq];
-    for c in 0..pq {
-        let m_samp = mean_acc[c] / nsamp as f64;
-        let v_samp =
-            (var_acc[c] / nsamp as f64 - m_samp * m_samp).max(1e-10) * nsamp as f64
-                / (nsamp - 1) as f64;
-        // raw scale: mean from exact solve, variance from samples + noise
-        mean[c] = mean_std[(0, c)].to_f64() * y_std + y_mean;
-        var[c] = (v_samp + sigma2) * y_std * y_std;
-    }
+    // raw scale: mean from exact solve, variance from samples + noise
+    let mean_std64: Vec<f64> = mean_std.row(0).iter().map(|x| x.to_f64()).collect();
+    let posterior =
+        finalize_posterior(&mean_std64, &mean_acc, &var_acc, nsamp, sigma2, y_mean, y_std);
     let predict_secs = t_pred.elapsed().as_secs_f64();
 
+    let model = capture.map(|(vm_all, fp_all)| crate::model::TrainedModel {
+        name: data.name.clone(),
+        time_family: data.time_family.clone(),
+        precision: match T::NAME {
+            "f32" => Precision::F32,
+            _ => Precision::F64,
+        },
+        ds: data.s.cols,
+        s: data.s.clone(),
+        t: data.t.clone(),
+        mask: mask.clone(),
+        theta: params[..n_theta].to_vec(),
+        log_sigma2: params[n_theta],
+        y_mean,
+        y_std,
+        n_samples: nsamp,
+        masked_alpha: masked_alpha.row(0).iter().map(|x| x.to_f64()).collect(),
+        vm: vm_all.cast(),
+        f_prior: fp_all.cast(),
+        posterior: posterior.clone(),
+    });
+
     Ok(LkgpFit {
-        posterior: Posterior { mean, var },
+        posterior,
         theta: params[..n_theta].to_vec(),
         log_sigma2: params[n_theta],
         loss_trace,
@@ -373,7 +419,75 @@ fn fit_with_backend<T: Scalar, B: KronBackend<T>>(
         mvm_total,
         kernel_bytes: be.kernel_bytes(),
         profile: prof,
+        model,
     })
+}
+
+/// Pathwise samples are drawn and accumulated in chunks of this many
+/// rows. Shared by training and serve-time reconstruction
+/// (`crate::serve`) so the per-cell moment accumulation order — and
+/// therefore every posterior bit — is identical in both paths.
+pub(crate) const PATHWISE_CHUNK: usize = 16;
+
+/// Accumulate pathwise first/second moments per grid cell:
+/// `mean_acc[c] += sum_r f(r, c)` and `var_acc[c] += sum_r f(r, c)^2`
+/// with `f = f_prior + kv` widened to f64. The per-cell reduction over
+/// sample rows runs in a fixed ascending order and in f64 (in both
+/// precisions), so the result is bit-identical for any thread count and
+/// for any caller that presents the same row chunks in the same order.
+pub(crate) fn accumulate_pathwise_moments<T: Scalar>(
+    f_prior: &Matrix<T>,
+    kv: &Matrix<T>,
+    mean_acc: &mut [f64],
+    var_acc: &mut [f64],
+) {
+    let b = f_prior.rows;
+    debug_assert_eq!(kv.rows, b);
+    debug_assert_eq!(f_prior.cols, kv.cols);
+    let block = 1024usize;
+    let accum = |ci: usize, mseg: &mut [f64], vseg: &mut [f64]| {
+        let base = ci * block;
+        for (off, (ma, va)) in mseg.iter_mut().zip(vseg.iter_mut()).enumerate() {
+            let c = base + off;
+            let mut msum = 0.0;
+            let mut vsum = 0.0;
+            for r in 0..b {
+                let f = f_prior[(r, c)].to_f64() + kv[(r, c)].to_f64();
+                msum += f;
+                vsum += f * f;
+            }
+            *ma += msum;
+            *va += vsum;
+        }
+    };
+    crate::par::par_zip_mut("lkgp.var_accum", mean_acc, var_acc, block, accum);
+}
+
+/// Convert accumulated pathwise moments + the exact standardized mean
+/// into the raw-scale [`Posterior`]: mean from the exact alpha solve,
+/// variance from the sample moments plus observation noise. Pure
+/// sequential f64 arithmetic — bit-identical wherever the inputs are.
+pub(crate) fn finalize_posterior(
+    mean_std: &[f64],
+    mean_acc: &[f64],
+    var_acc: &[f64],
+    nsamp: usize,
+    sigma2: f64,
+    y_mean: f64,
+    y_std: f64,
+) -> Posterior {
+    let pq = mean_std.len();
+    let mut mean = vec![0.0; pq];
+    let mut var = vec![0.0; pq];
+    for c in 0..pq {
+        let m_samp = mean_acc[c] / nsamp as f64;
+        let v_samp =
+            (var_acc[c] / nsamp as f64 - m_samp * m_samp).max(1e-10) * nsamp as f64
+                / (nsamp - 1) as f64;
+        mean[c] = mean_std[c] * y_std + y_mean;
+        var[c] = (v_samp + sigma2) * y_std * y_std;
+    }
+    Posterior { mean, var }
 }
 
 #[cfg(test)]

@@ -11,11 +11,15 @@ use super::time::TimeKernel;
 /// Product kernel k_S (ARD-SE over s) x k_T (time family over t).
 #[derive(Clone, Debug)]
 pub struct ProductGridKernel {
+    /// Spatial factor k_S (ARD squared exponential).
     pub spatial: RbfArd,
+    /// Time/task factor k_T.
     pub time: TimeKernel,
 }
 
 impl ProductGridKernel {
+    /// Product kernel over `ds` spatial dimensions and a q-point time
+    /// grid of the named family.
     pub fn new(ds: usize, time_family: &str, q: usize) -> Self {
         ProductGridKernel { spatial: RbfArd::new(ds), time: TimeKernel::new(time_family, q) }
     }
@@ -32,6 +36,7 @@ impl ProductGridKernel {
         p
     }
 
+    /// Install the flat theta vector (asserts the length).
     pub fn set_theta(&mut self, theta: &[f64]) {
         assert_eq!(theta.len(), self.n_theta(), "theta length");
         let ns = self.spatial.dim() + 1;

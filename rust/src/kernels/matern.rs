@@ -4,26 +4,35 @@
 
 use crate::linalg::Matrix;
 
+/// Smoothness order of the Matérn family.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum MaternNu {
+    /// nu = 1/2 (exponential kernel, continuous but not differentiable).
     Half,
+    /// nu = 3/2 (once differentiable).
     ThreeHalves,
+    /// nu = 5/2 (twice differentiable).
     FiveHalves,
 }
 
 /// Isotropic Matérn kernel with ARD lengthscales and outputscale.
 #[derive(Clone, Debug)]
 pub struct MaternArd {
+    /// Smoothness order.
     pub nu: MaternNu,
+    /// Per-dimension log lengthscales (ARD).
     pub log_ls: Vec<f64>,
+    /// Log outputscale.
     pub log_os: f64,
 }
 
 impl MaternArd {
+    /// Unit-parameter kernel over `d` input dimensions.
     pub fn new(nu: MaternNu, d: usize) -> Self {
         MaternArd { nu, log_ls: vec![0.0; d], log_os: 0.0 }
     }
 
+    /// Input dimension d.
     pub fn dim(&self) -> usize {
         self.log_ls.len()
     }
@@ -38,6 +47,7 @@ impl MaternArd {
         r2.sqrt()
     }
 
+    /// Kernel value k(x, y).
     pub fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
         let r = self.scaled_r(x, y);
         let core = match self.nu {
@@ -54,6 +64,7 @@ impl MaternArd {
         self.log_os.exp() * core
     }
 
+    /// Cross-Gram matrix over rows of `xs` and `ys`.
     pub fn gram(&self, xs: &Matrix<f64>, ys: &Matrix<f64>) -> Matrix<f64> {
         Matrix::from_fn(xs.rows, ys.rows, |i, j| self.eval(xs.row(i), ys.row(j)))
     }

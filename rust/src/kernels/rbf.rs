@@ -7,19 +7,24 @@ use crate::par;
 /// k(x, y) = exp(log_os) * exp(-0.5 * sum_d (x_d - y_d)^2 / ls_d^2)
 #[derive(Clone, Debug)]
 pub struct RbfArd {
+    /// Per-dimension log lengthscales (ARD).
     pub log_ls: Vec<f64>,
+    /// Log outputscale.
     pub log_os: f64,
 }
 
 impl RbfArd {
+    /// Unit-parameter kernel over `d` input dimensions.
     pub fn new(d: usize) -> Self {
         RbfArd { log_ls: vec![0.0; d], log_os: 0.0 }
     }
 
+    /// Input dimension d.
     pub fn dim(&self) -> usize {
         self.log_ls.len()
     }
 
+    /// Kernel value k(x, y).
     pub fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
         debug_assert_eq!(x.len(), self.dim());
         let mut d2 = 0.0;
@@ -100,12 +105,14 @@ impl RbfArd {
         k
     }
 
+    /// Flat hyperparameters `[log_ls.., log_os]`.
     pub fn params(&self) -> Vec<f64> {
         let mut p = self.log_ls.clone();
         p.push(self.log_os);
         p
     }
 
+    /// Install flat hyperparameters `[log_ls.., log_os]`.
     pub fn set_params(&mut self, p: &[f64]) {
         let d = self.dim();
         assert_eq!(p.len(), d + 1);

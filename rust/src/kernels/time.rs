@@ -10,16 +10,33 @@ use crate::linalg::Matrix;
 #[derive(Clone, Debug)]
 pub enum TimeKernel {
     /// Squared exponential on t: params [log_ls_t].
-    Rbf { log_ls: f64 },
+    Rbf {
+        /// Log lengthscale on t.
+        log_ls: f64,
+    },
     /// SE * periodic (seasonal trends): [log_ls_t, log_ls_per, log_period].
-    RbfPeriodic { log_ls: f64, log_ls_per: f64, log_period: f64 },
+    RbfPeriodic {
+        /// Log lengthscale of the SE envelope.
+        log_ls: f64,
+        /// Log lengthscale inside the periodic term.
+        log_ls_per: f64,
+        /// Log period.
+        log_period: f64,
+    },
     /// Full-rank ICM task kernel B = L L^T over q tasks:
     /// [q*(q+1)/2 packed row-major lower-triangular entries of L,
     /// exp() applied to diagonal entries for positivity].
-    Icm { q: usize, tril: Vec<f64> },
+    Icm {
+        /// Number of tasks.
+        q: usize,
+        /// Packed lower-triangular entries of L (row-major).
+        tril: Vec<f64>,
+    },
 }
 
 impl TimeKernel {
+    /// Construct a unit-parameter kernel of the named family
+    /// (`"rbf"` | `"rbf_periodic"` | `"icm"`); panics on other names.
     pub fn new(family: &str, q: usize) -> Self {
         match family {
             "rbf" => TimeKernel::Rbf { log_ls: 0.0 },
@@ -31,6 +48,7 @@ impl TimeKernel {
         }
     }
 
+    /// Family name as accepted by [`TimeKernel::new`].
     pub fn family(&self) -> &'static str {
         match self {
             TimeKernel::Rbf { .. } => "rbf",
@@ -39,6 +57,7 @@ impl TimeKernel {
         }
     }
 
+    /// Number of hyperparameters in this family's flat packing.
     pub fn n_params(&self) -> usize {
         match self {
             TimeKernel::Rbf { .. } => 1,
@@ -47,6 +66,7 @@ impl TimeKernel {
         }
     }
 
+    /// Flat hyperparameter vector (family-specific packing).
     pub fn params(&self) -> Vec<f64> {
         match self {
             TimeKernel::Rbf { log_ls } => vec![*log_ls],
@@ -57,6 +77,7 @@ impl TimeKernel {
         }
     }
 
+    /// Install a flat hyperparameter vector (asserts the length).
     pub fn set_params(&mut self, p: &[f64]) {
         assert_eq!(p.len(), self.n_params());
         match self {

@@ -39,6 +39,7 @@ pub fn dense_kernel_evals(n: usize) -> f64 {
     (n as f64) * (n as f64)
 }
 
+/// Kernel evaluations to build the factored p x p and q x q Grams.
 pub fn kron_kernel_evals(p: usize, q: usize) -> f64 {
     (p * p) as f64 + (q * q) as f64
 }

@@ -11,13 +11,18 @@ use crate::linalg::{Matrix, Scalar};
 /// Row-block lazily evaluated symmetric operator: entries come from an
 /// entry oracle `f(i, j)`; only `block_rows x n` values are live at once.
 pub struct LazyGramOp<F> {
+    /// System dimension n.
     pub n: usize,
+    /// Rows materialized per block (memory = `block_rows * n` f64s).
     pub block_rows: usize,
+    /// Entry oracle returning K_ij.
     pub entry: F,
+    /// Noise variance added on the diagonal.
     pub sigma2: f64,
 }
 
 impl<F: Fn(usize, usize) -> f64 + Sync> LazyGramOp<F> {
+    /// Lazy operator over an entry oracle (`block_rows` clamped to >= 1).
     pub fn new(n: usize, block_rows: usize, entry: F, sigma2: f64) -> Self {
         LazyGramOp { n, block_rows: block_rows.max(1), entry, sigma2 }
     }

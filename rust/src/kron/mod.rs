@@ -18,25 +18,31 @@ use crate::linalg::{Matrix, Scalar};
 /// Kronecker product operator K_SS (x) K_TT held in factored form.
 #[derive(Clone, Debug)]
 pub struct KronOp<T: Scalar = f64> {
+    /// Spatial Gram factor K_SS (p x p).
     pub kss: Matrix<T>,
+    /// Time/task Gram factor K_TT (q x q).
     pub ktt: Matrix<T>,
 }
 
 impl<T: Scalar> KronOp<T> {
+    /// Factored operator from square Gram factors (asserts shapes).
     pub fn new(kss: Matrix<T>, ktt: Matrix<T>) -> Self {
         assert_eq!(kss.rows, kss.cols);
         assert_eq!(ktt.rows, ktt.cols);
         KronOp { kss, ktt }
     }
 
+    /// Number of spatial points p.
     pub fn p(&self) -> usize {
         self.kss.rows
     }
 
+    /// Number of time steps / tasks q.
     pub fn q(&self) -> usize {
         self.ktt.rows
     }
 
+    /// Grid dimension p*q.
     pub fn dim(&self) -> usize {
         self.p() * self.q()
     }
@@ -87,14 +93,18 @@ impl<T: Scalar> KronOp<T> {
 /// the paper's Sec. 5 future-work item).
 #[derive(Clone, Debug)]
 pub struct MaskedKronSystem<T: Scalar = f64> {
+    /// The latent Kronecker product in factored form.
     pub op: KronOp<T>,
+    /// Observation mask over the p*q grid (1 observed / 0 missing).
     pub mask: Vec<T>,
+    /// Homoskedastic observation-noise variance.
     pub sigma2: T,
     /// optional per-cell noise variances (overrides sigma2 where set)
     pub noise: Option<Vec<T>>,
 }
 
 impl<T: Scalar> MaskedKronSystem<T> {
+    /// System operator from a factored Kron product, a mask, and noise.
     pub fn new(op: KronOp<T>, mask: Vec<T>, sigma2: T) -> Self {
         assert_eq!(mask.len(), op.dim());
         MaskedKronSystem { op, mask, sigma2, noise: None }
@@ -127,6 +137,7 @@ impl<T: Scalar> MaskedKronSystem<T> {
         }
     }
 
+    /// Grid dimension p*q.
     pub fn dim(&self) -> usize {
         self.op.dim()
     }

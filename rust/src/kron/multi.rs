@@ -17,10 +17,13 @@ use crate::linalg::{Matrix, Scalar};
 /// Kronecker product of d square factors, held in factored form.
 #[derive(Clone, Debug)]
 pub struct MultiKronOp<T: Scalar = f64> {
+    /// The square Gram factors K_1, ..., K_d.
     pub factors: Vec<Matrix<T>>,
 }
 
 impl<T: Scalar> MultiKronOp<T> {
+    /// Factored operator from square factors (asserts shapes, requires
+    /// at least one factor).
     pub fn new(factors: Vec<Matrix<T>>) -> Self {
         assert!(!factors.is_empty());
         for f in &factors {
@@ -29,10 +32,12 @@ impl<T: Scalar> MultiKronOp<T> {
         MultiKronOp { factors }
     }
 
+    /// Per-factor dimensions (n_1, ..., n_d).
     pub fn dims(&self) -> Vec<usize> {
         self.factors.iter().map(|f| f.rows).collect()
     }
 
+    /// Total grid dimension N = prod n_j.
     pub fn dim(&self) -> usize {
         self.factors.iter().map(|f| f.rows).product()
     }
@@ -99,17 +104,22 @@ impl<T: Scalar> MultiKronOp<T> {
 
 /// Masked multi-factor system: M (K_1 (x) ... (x) K_d) M + sigma2 I.
 pub struct MultiMaskedSystem<T: Scalar = f64> {
+    /// The latent multi-factor Kronecker product.
     pub op: MultiKronOp<T>,
+    /// Observation mask over the full grid.
     pub mask: Vec<T>,
+    /// Observation-noise variance.
     pub sigma2: T,
 }
 
 impl<T: Scalar> MultiMaskedSystem<T> {
+    /// Masked system from a factored operator (asserts the mask length).
     pub fn new(op: MultiKronOp<T>, mask: Vec<T>, sigma2: T) -> Self {
         assert_eq!(mask.len(), op.dim());
         MultiMaskedSystem { op, mask, sigma2 }
     }
 
+    /// System MVM `M (K_1 (x) ... (x) K_d) M v + sigma2 v`.
     pub fn apply(&self, v: &[T]) -> Vec<T> {
         let masked: Vec<T> = v.iter().zip(&self.mask).map(|(x, m)| *x * *m).collect();
         let mut kv = self.op.apply(&masked);

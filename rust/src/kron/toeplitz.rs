@@ -61,6 +61,7 @@ pub fn fft_inplace(re: &mut [f64], im: &mut [f64], inverse: bool) {
 /// Symmetric Toeplitz operator defined by its first column, applied via
 /// circulant embedding: O(q log q) per MVM after an O(q log q) setup.
 pub struct ToeplitzOp {
+    /// Toeplitz dimension q (the time-grid length).
     pub q: usize,
     m: usize,
     /// FFT of the embedded circulant's first column
@@ -118,11 +119,14 @@ impl ToeplitzOp {
 /// out[b] = vec(K_SS @ unvec(v[b]) @ T^T) where T is Toeplitz-symmetric.
 /// Cost O(b (p^2 q + p q log q)) instead of O(b (p^2 q + p q^2)).
 pub struct KronToeplitzOp {
+    /// Spatial Gram factor K_SS (dense, p x p).
     pub kss: Matrix<f64>,
+    /// Toeplitz time factor applied via FFT.
     pub ktt: ToeplitzOp,
 }
 
 impl KronToeplitzOp {
+    /// Apply to a batch of grid vectors (rows of `v`, length p*q each).
     pub fn apply_batch(&self, v: &Matrix<f64>) -> Matrix<f64> {
         let (p, q) = (self.kss.rows, self.ktt.q);
         assert_eq!(v.cols, p * q);

@@ -106,6 +106,20 @@
 //! (rust/tests/par_invariance.rs); the accuracy contract per precision
 //! is pinned by rust/tests/numerics.rs and measured by
 //! `cargo bench --bench bench_precision` (BENCH_precision.json).
+//!
+//! ## Train once, serve many
+//!
+//! The expensive part of LKGP inference is the fit; after pathwise
+//! conditioning every prediction is a cheap Kronecker MVM. The
+//! [`model`] module captures that boundary as a versioned, endian-stable
+//! binary checkpoint (magic + header + f64/f32 tensor blobs + FNV-1a
+//! trailer, spec in docs/formats.md), and [`serve`] loads checkpoints
+//! into a [`serve::ServeEngine`] that reconstructs the posterior with
+//! MVMs only — **bit-identical** to the in-memory fit for rust-backend
+//! models — and answers coalesced query batches over the worker pool.
+//! CLI: `lkgp save` / `lkgp predict --checkpoint <path>`.
+
+#![warn(missing_docs)]
 
 pub mod baselines;
 pub mod coordinator;
@@ -114,9 +128,11 @@ pub mod gp;
 pub mod kernels;
 pub mod kron;
 pub mod linalg;
+pub mod model;
 pub mod optim;
 pub mod par;
 pub mod runtime;
+pub mod serve;
 pub mod solvers;
 pub mod util;
 

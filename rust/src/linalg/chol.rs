@@ -8,6 +8,7 @@ use super::matrix::{Matrix, Scalar};
 
 /// Lower-triangular Cholesky factor of an SPD matrix.
 pub struct Cholesky<T: Scalar> {
+    /// The lower-triangular factor L with A = L L^T.
     pub l: Matrix<T>,
 }
 

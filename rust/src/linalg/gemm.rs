@@ -4,13 +4,13 @@
 //! (`matmul_acc` for C += A @ B and `matmul_nt` for C = A @ B^T) run the
 //! same three-level schedule:
 //!
-//! 1. **Pack** B once per call into panel-major strips ([`pack_b`]):
+//! 1. **Pack** B once per call into panel-major strips (`pack_b`):
 //!    for each KC-deep k-panel, NR-wide column strips laid out so the
 //!    microkernel reads one contiguous NR-vector per k step.
 //! 2. **Block** C into row blocks (MC rows, shrunk for short C so the
 //!    pool still fans out) — the parallel work unit, distributed over
 //!    the `crate::par` pool. Each block packs its own A rows into
-//!    MR-lane panels ([`gemm_block`]).
+//!    MR-lane panels (`gemm_block`).
 //! 3. **Microkernel**: an MR x NR register tile (4x4 for f64, 4x8 for
 //!    f32) of explicit FMA lanes over the packed panels — AVX2+FMA
 //!    `_mm256_fmadd_pd/ps` when the CPU has them (runtime-detected,
@@ -35,7 +35,7 @@
 //! bit-identical to what a full tile would produce for those cells.
 //!
 //! The pre-microkernel scalar kernels survive in two roles: products
-//! below [`SMALL_GEMM_FLOPS`] dispatch to them outright (packing and
+//! below the `SMALL_GEMM_FLOPS` threshold dispatch to them outright (packing and
 //! panel allocations would rival the multiply itself — a shape-only
 //! decision, so bit-invariance is unaffected), and [`matmul_nt_ref`]
 //! is the baseline the `bench-smoke` CI job measures the tile against

@@ -22,7 +22,9 @@ pub trait Scalar:
     + std::ops::MulAssign
     + 'static
 {
+    /// Additive identity.
     const ZERO: Self;
+    /// Multiplicative identity.
     const ONE: Self;
     /// `"f32"` / `"f64"` — for diagnostics, bench labels, and the
     /// precision-aware test tolerances in `util::testing`.
@@ -39,11 +41,17 @@ pub trait Scalar:
     /// cell in fixed ascending-k order. Packing layout and dispatch
     /// (AVX2+FMA vs portable) live in `linalg::gemm`.
     fn gemm_microkernel(kc: usize, ap: &[Self], bp: &[Self], acc: &mut [Self]);
+    /// Square root.
     fn sqrt(self) -> Self;
+    /// Absolute value.
     fn abs(self) -> Self;
+    /// Natural logarithm.
     fn ln(self) -> Self;
+    /// Natural exponential.
     fn exp(self) -> Self;
+    /// Round an f64 into this precision (the narrowing point for f32).
     fn from_f64(x: f64) -> Self;
+    /// Widen to f64 (exact for both precisions).
     fn to_f64(self) -> f64;
 }
 
@@ -93,16 +101,21 @@ impl_scalar!(f64, 4, crate::linalg::gemm::microkernel_f64);
 /// Dense row-major matrix.
 #[derive(Clone, PartialEq)]
 pub struct Matrix<T: Scalar = f64> {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major storage, `data[i * cols + j]`.
     pub data: Vec<T>,
 }
 
 impl<T: Scalar> Matrix<T> {
+    /// All-zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Matrix { rows, cols, data: vec![T::ZERO; rows * cols] }
     }
 
+    /// Identity matrix.
     pub fn eye(n: usize) -> Self {
         let mut m = Self::zeros(n, n);
         for i in 0..n {
@@ -111,11 +124,13 @@ impl<T: Scalar> Matrix<T> {
         m
     }
 
+    /// Wrap a row-major buffer (asserts the length).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Self {
         assert_eq!(data.len(), rows * cols, "data length mismatch");
         Matrix { rows, cols, data }
     }
 
+    /// Fill from `f(i, j)` in row-major order.
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> T) -> Self {
         let mut data = Vec::with_capacity(rows * cols);
         for i in 0..rows {
@@ -126,20 +141,24 @@ impl<T: Scalar> Matrix<T> {
         Matrix { rows, cols, data }
     }
 
+    /// Row `i` as a slice.
     #[inline]
     pub fn row(&self, i: usize) -> &[T] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Row `i` as a mutable slice.
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [T] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Column `j`, copied out.
     pub fn col(&self, j: usize) -> Vec<T> {
         (0..self.rows).map(|i| self[(i, j)]).collect()
     }
 
+    /// Transposed copy.
     pub fn transpose(&self) -> Matrix<T> {
         let mut out = Matrix::zeros(self.cols, self.rows);
         for i in 0..self.rows {
@@ -184,12 +203,14 @@ impl<T: Scalar> Matrix<T> {
         out
     }
 
+    /// Multiply every element by `s` in place.
     pub fn scale(&mut self, s: T) {
         for x in &mut self.data {
             *x *= s;
         }
     }
 
+    /// Elementwise `self += other` (asserts matching shapes).
     pub fn add_assign(&mut self, other: &Matrix<T>) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         for (a, b) in self.data.iter_mut().zip(&other.data) {
@@ -205,10 +226,12 @@ impl<T: Scalar> Matrix<T> {
         }
     }
 
+    /// Main diagonal, copied out.
     pub fn diag(&self) -> Vec<T> {
         (0..self.rows.min(self.cols)).map(|i| self[(i, i)]).collect()
     }
 
+    /// Sum of the main diagonal.
     pub fn trace(&self) -> T {
         let mut t = T::ZERO;
         for i in 0..self.rows.min(self.cols) {
@@ -217,6 +240,7 @@ impl<T: Scalar> Matrix<T> {
         t
     }
 
+    /// Frobenius norm.
     pub fn frob_norm(&self) -> T {
         let mut s = T::ZERO;
         for x in &self.data {
@@ -239,6 +263,7 @@ impl<T: Scalar> Matrix<T> {
         Matrix::from_fn(rows.len(), cols.len(), |i, j| self[(rows[i], cols[j])])
     }
 
+    /// Largest absolute element, widened to f64.
     pub fn max_abs(&self) -> f64 {
         self.data.iter().map(|x| x.abs().to_f64()).fold(0.0, f64::max)
     }
@@ -280,6 +305,7 @@ impl<T: Scalar> fmt::Debug for Matrix<T> {
 
 // ---- vector helpers used across the crate ----
 
+/// Dot product of two equal-length slices (fixed ascending order).
 pub fn dot<T: Scalar>(a: &[T], b: &[T]) -> T {
     debug_assert_eq!(a.len(), b.len());
     let mut s = T::ZERO;
@@ -289,6 +315,7 @@ pub fn dot<T: Scalar>(a: &[T], b: &[T]) -> T {
     s
 }
 
+/// `y += alpha * x` elementwise.
 pub fn axpy<T: Scalar>(alpha: T, x: &[T], y: &mut [T]) {
     debug_assert_eq!(x.len(), y.len());
     for (xi, yi) in x.iter().zip(y.iter_mut()) {
@@ -296,6 +323,7 @@ pub fn axpy<T: Scalar>(alpha: T, x: &[T], y: &mut [T]) {
     }
 }
 
+/// Euclidean norm.
 pub fn norm2<T: Scalar>(x: &[T]) -> T {
     dot(x, x).sqrt()
 }

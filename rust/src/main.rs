@@ -1,11 +1,18 @@
 //! lkgp — Latent Kronecker GP coordinator CLI.
 //!
 //! Subcommands:
-//!   info                         artifact manifest + platform report
-//!   train  --data <set> ...      fit one model on one dataset, report
-//!   experiment <id> [--scale ..] regenerate a paper table/figure
-//!                                (fig2 | fig3 | fig4 | fig5 | table1 |
-//!                                 table2 | all)
+//!
+//! ```text
+//! info                         artifact manifest + platform report
+//! train  --data <set> ...      fit one model on one dataset, report
+//! save   --data <set> ...      fit, then checkpoint the pathwise
+//!                              state to --out (train-once half)
+//! predict --checkpoint <path>  load a checkpoint and serve
+//!                              predictions (serve-many half)
+//! experiment <id> [--scale ..] regenerate a paper table/figure
+//!                              (fig2 | fig3 | fig4 | fig5 | table1 |
+//!                               table2 | all)
+//! ```
 //!
 //! Python never runs here: the binary consumes artifacts/ produced once
 //! by `make artifacts`.
@@ -16,18 +23,22 @@ use lkgp::data::lcbench::LcBenchSim;
 use lkgp::data::sarcos::SarcosSim;
 use lkgp::data::synthetic::well_specified;
 use lkgp::data::GridDataset;
-use lkgp::gp::backend::MvmMode;
+use lkgp::gp::backend::{MvmMode, Precision};
 use lkgp::gp::lkgp::{Backend, Lkgp, LkgpConfig};
 use lkgp::kernels::ProductGridKernel;
 use lkgp::runtime::{Manifest, Runtime};
+use lkgp::serve::ServeEngine;
 use lkgp::util::cli::Args;
+use lkgp::util::json::Json;
 
-const USAGE: &str = "usage: lkgp <info|train|experiment> [flags]
+const USAGE: &str = "usage: lkgp <info|train|save|predict|experiment> [flags]
   lkgp info
   lkgp train --data <climate|climate-precip|lcbench|sarcos|synthetic>
              [--p N] [--q N] [--missing R] [--seed S]
              [--backend rust|<artifact-config>] [--dense] [--f32]
              [--iters N]
+  lkgp save  [same flags as train] [--out <path>=lkgp_model.ckpt]
+  lkgp predict --checkpoint <path> [--cells i,j,k] [--json <path>]
   lkgp experiment <fig2|fig3|fig4|fig5|table1|table2|ablations|all>
              [--scale quick|paper] [--seeds N] [--ratios a,b,..]
              [--backend rust|<artifact-config>]";
@@ -37,6 +48,8 @@ fn main() {
     let code = match args.subcommand.as_deref() {
         Some("info") => cmd_info(),
         Some("train") => cmd_train(&args),
+        Some("save") => cmd_save(&args),
+        Some("predict") => cmd_predict(&args),
         Some("experiment") => cmd_experiment(&args),
         _ => {
             eprintln!("{USAGE}");
@@ -105,8 +118,9 @@ fn load_dataset(args: &Args) -> GridDataset {
     }
 }
 
-fn cmd_train(args: &Args) -> i32 {
-    let data = load_dataset(args);
+/// Build the fit configuration shared by `train` and `save` from the
+/// common flag set.
+fn build_train_config(args: &Args, capture_pathwise: bool) -> LkgpConfig {
     let backend = match args.str("backend", "rust").as_str() {
         "rust" => {
             if args.bool("dense") {
@@ -124,23 +138,23 @@ fn cmd_train(args: &Args) -> i32 {
                  (artifacts already execute in f32 on-device)"
             );
         }
-        lkgp::gp::backend::Precision::F32
+        Precision::F32
     } else {
-        lkgp::gp::backend::Precision::F64
+        Precision::F64
     };
-    let cfg = LkgpConfig {
+    LkgpConfig {
         train_iters: args.usize("iters", 20),
         n_samples: args.usize("samples", 32),
         precond_rank: args.usize("precond-rank", 0),
         seed: args.u64("seed", 0),
         backend,
         precision,
+        capture_pathwise,
         ..LkgpConfig::default()
-    };
-    if let Err(e) = args.finish() {
-        eprintln!("{e}\n{USAGE}");
-        return 2;
     }
+}
+
+fn print_dataset(data: &GridDataset) {
     println!(
         "dataset {}: p={} q={} observed {} / {} (missing {:.1}%)",
         data.name,
@@ -150,6 +164,16 @@ fn cmd_train(args: &Args) -> i32 {
         data.grid_len(),
         100.0 * data.missing_ratio()
     );
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let data = load_dataset(args);
+    let cfg = build_train_config(args, false);
+    if let Err(e) = args.finish() {
+        eprintln!("{e}\n{USAGE}");
+        return 2;
+    }
+    print_dataset(&data);
     match Lkgp::fit(&data, cfg) {
         Ok(fit) => {
             let (train_rmse, train_nll) = fit.posterior.train_metrics(&data);
@@ -173,6 +197,154 @@ fn cmd_train(args: &Args) -> i32 {
 
 fn round3(xs: &[f64]) -> Vec<f64> {
     xs.iter().map(|x| (x * 1000.0).round() / 1000.0).collect()
+}
+
+/// `lkgp save`: fit with pathwise capture on, then write the versioned
+/// binary checkpoint — the train-once half of train-once/serve-many.
+fn cmd_save(args: &Args) -> i32 {
+    let data = load_dataset(args);
+    let cfg = build_train_config(args, true);
+    let out = args.str("out", "lkgp_model.ckpt");
+    if let Err(e) = args.finish() {
+        eprintln!("{e}\n{USAGE}");
+        return 2;
+    }
+    print_dataset(&data);
+    let fit = match Lkgp::fit(&data, cfg) {
+        Ok(fit) => fit,
+        Err(e) => {
+            eprintln!("fit failed: {e:#}");
+            return 1;
+        }
+    };
+    let model = fit.model.expect("capture_pathwise was set");
+    match model.save(&out) {
+        Ok(bytes) => {
+            let (test_rmse, test_nll) = fit.posterior.test_metrics(&data);
+            println!("fit : test rmse {test_rmse:.4} nll {test_nll:.4}");
+            println!(
+                "time: train {:.2}s predict {:.2}s | CG iters {}",
+                fit.train_secs, fit.predict_secs, fit.cg_iters_total
+            );
+            println!(
+                "checkpoint: {out} ({:.1} KiB, {} pathwise samples, {})",
+                bytes as f64 / 1024.0,
+                model.n_samples,
+                match model.precision {
+                    Precision::F64 => "f64",
+                    Precision::F32 => "f32 state tensors",
+                }
+            );
+            println!("serve it with: lkgp predict --checkpoint {out}");
+            0
+        }
+        Err(e) => {
+            eprintln!("save failed: {e:#}");
+            1
+        }
+    }
+}
+
+/// `lkgp predict`: load a checkpoint, reconstruct the posterior with
+/// cheap MVMs, verify it against the stored posterior, and serve the
+/// requested cells — the serve-many half.
+fn cmd_predict(args: &Args) -> i32 {
+    let Some(path) = args.str_opt("checkpoint") else {
+        eprintln!("--checkpoint <path> is required\n{USAGE}");
+        return 2;
+    };
+    // strict parsing: a typo in --cells must not silently degrade into
+    // a full-grid query
+    let cells: Vec<usize> = match args.usize_list("cells") {
+        Ok(None) => Vec::new(),
+        Ok(Some(v)) if v.is_empty() => {
+            eprintln!("--cells was given but contains no cell indices\n{USAGE}");
+            return 2;
+        }
+        Ok(Some(v)) => v,
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            return 2;
+        }
+    };
+    let json_out = args.str_opt("json");
+    if let Err(e) = args.finish() {
+        eprintln!("{e}\n{USAGE}");
+        return 2;
+    }
+    let engine = match ServeEngine::open(&path) {
+        Ok(engine) => engine,
+        Err(e) => {
+            eprintln!("cannot serve {path}: {e:#}");
+            return 1;
+        }
+    };
+    let m = engine.model();
+    println!(
+        "checkpoint {path}: model {:?} ({} x {} grid, ds={}, {} samples, {:?}, time kernel {})",
+        m.name, m.p(), m.q(), m.ds, m.n_samples, m.precision, m.time_family
+    );
+    println!("posterior reconstructed in {:.3}s (cheap MVMs only)", engine.reconstruct_secs());
+    let rep = engine.verify();
+    if rep.bit_identical {
+        println!("integrity: reconstruction is bit-identical to the stored posterior");
+    } else {
+        println!(
+            "integrity: reconstruction deviates from stored posterior \
+             (max |d mean| {:.3e}, max |d var| {:.3e}; expected for PJRT-trained checkpoints)",
+            rep.max_mean_diff, rep.max_var_diff
+        );
+    }
+    let query: Vec<usize> = if cells.is_empty() {
+        (0..m.grid_len()).collect()
+    } else {
+        cells.clone()
+    };
+    let t0 = std::time::Instant::now();
+    let res = match engine.predict_cells(&query) {
+        Ok(res) => res,
+        Err(e) => {
+            eprintln!("predict failed: {e:#}");
+            return 1;
+        }
+    };
+    let predict_secs = t0.elapsed().as_secs_f64();
+    if cells.is_empty() {
+        let n = res.mean.len() as f64;
+        let mean_avg = res.mean.iter().sum::<f64>() / n;
+        let var_avg = res.var.iter().sum::<f64>() / n;
+        println!(
+            "full grid ({} cells) served in {:.3}s: mean avg {mean_avg:.4}, var avg {var_avg:.4}",
+            res.mean.len(), predict_secs
+        );
+    } else {
+        println!("{} cells served in {:.6}s:", query.len(), predict_secs);
+        println!("{:>8} {:>5} {:>5} {:>12} {:>12}", "cell", "j", "k", "mean", "var");
+        for (i, &c) in query.iter().enumerate() {
+            println!(
+                "{c:>8} {:>5} {:>5} {:>12.5} {:>12.5}",
+                c / m.q(), c % m.q(), res.mean[i], res.var[i]
+            );
+        }
+    }
+    if let Some(json_path) = json_out {
+        let doc = Json::obj(vec![
+            ("checkpoint", Json::Str(path.clone())),
+            ("model", Json::Str(m.name.clone())),
+            ("p", Json::Num(m.p() as f64)),
+            ("q", Json::Num(m.q() as f64)),
+            ("bit_identical", Json::Bool(rep.bit_identical)),
+            ("cells", Json::arr_usize(&query)),
+            ("mean", Json::arr_f64(&res.mean)),
+            ("var", Json::arr_f64(&res.var)),
+        ]);
+        if let Err(e) = std::fs::write(&json_path, format!("{doc}\n")) {
+            eprintln!("cannot write {json_path}: {e}");
+            return 1;
+        }
+        println!("predictions written to {json_path}");
+    }
+    0
 }
 
 fn cmd_experiment(args: &Args) -> i32 {

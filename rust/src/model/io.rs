@@ -1,0 +1,659 @@
+//! Versioned, endian-stable binary checkpoint codec for
+//! [`TrainedModel`].
+//!
+//! Layout (byte-exact specification in `docs/formats.md`):
+//!
+//! ```text
+//! [0..8)    magic  b"LKGPCKPT"
+//! [8..12)   format version, u32 LE (currently 1)
+//! [12..16)  precision u8 (0 = f64, 1 = f32) + 3 reserved zero bytes
+//! [16..48)  p, q, ds, n_samples       — 4 x u64 LE
+//! [48..72)  log_sigma2, y_mean, y_std — 3 x f64 LE
+//! ...       time_family, name         — 2 x (u32 LE length + UTF-8)
+//! ...       theta                     — u32 LE count + count x f64 LE
+//! ...       tensor count u32 LE, then per tensor:
+//!             name (u32 LE length + UTF-8), dtype u8 (0 = f64, 1 = f32),
+//!             rows u64 LE, cols u64 LE, rows*cols scalars LE
+//! [len-8..) FNV-1a 64 checksum of every preceding byte, u64 LE
+//! ```
+//!
+//! Every multi-byte value is little-endian regardless of host
+//! byte order, so checkpoints move between machines. The iterative
+//! state tensors (`masked_alpha`, `vm`, `f_prior`) are stored in the
+//! fit's native compute precision — f32 checkpoints are half the size
+//! and the narrow/widen round trip is exact because the values
+//! originated as f32. Structural metadata and the fitted posterior are
+//! always f64.
+//!
+//! Decoding is total: corrupted, truncated, or wrong-version input is
+//! rejected with a typed [`CheckpointError`] (downcastable from the
+//! `anyhow` chain returned by [`TrainedModel::load`]), never a panic.
+
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::gp::backend::Precision;
+use crate::gp::Posterior;
+use crate::linalg::Matrix;
+use crate::util::convert;
+
+use super::TrainedModel;
+
+/// First 8 bytes of every checkpoint.
+pub const MAGIC: [u8; 8] = *b"LKGPCKPT";
+
+/// Current (and only) checkpoint format version.
+pub const VERSION: u32 = 1;
+
+/// FNV-1a 64-bit hash — the checkpoint's trailing checksum function.
+/// Exposed so external tooling (and the format tests) can produce and
+/// verify the integrity trailer documented in `docs/formats.md`.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Typed decode failure for checkpoint bytes. Every malformed input
+/// maps to one of these variants — decoding never panics.
+#[derive(Debug, PartialEq, Eq)]
+pub enum CheckpointError {
+    /// The first 8 bytes are not [`MAGIC`] — not a checkpoint file.
+    BadMagic {
+        /// The bytes actually found at offset 0.
+        found: [u8; 8],
+    },
+    /// The format version is not one this build can read.
+    UnsupportedVersion {
+        /// Version recorded in the file.
+        found: u32,
+        /// Version this build supports ([`VERSION`]).
+        supported: u32,
+    },
+    /// The input ended before a field could be read in full.
+    Truncated {
+        /// What was being read when the input ran out.
+        what: &'static str,
+        /// Bytes the field needed.
+        needed: usize,
+        /// Bytes actually available.
+        available: usize,
+    },
+    /// The trailing FNV-1a checksum does not match the content.
+    ChecksumMismatch {
+        /// Checksum stored in the trailer.
+        stored: u64,
+        /// Checksum computed over the content.
+        computed: u64,
+    },
+    /// A structurally valid field carries an invalid value
+    /// (bad UTF-8, unknown dtype, shape mismatch, ...).
+    BadField {
+        /// Field name.
+        what: &'static str,
+        /// Human-readable description of the problem.
+        detail: String,
+    },
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::BadMagic { found } => {
+                write!(f, "not an LKGP checkpoint (magic {found:?}, expected {MAGIC:?})")
+            }
+            CheckpointError::UnsupportedVersion { found, supported } => {
+                write!(f, "unsupported checkpoint version {found} (this build reads {supported})")
+            }
+            CheckpointError::Truncated { what, needed, available } => {
+                write!(f, "truncated checkpoint: {what} needs {needed} bytes, {available} left")
+            }
+            CheckpointError::ChecksumMismatch { stored, computed } => write!(
+                f,
+                "checkpoint checksum mismatch: trailer {stored:#018x}, content {computed:#018x}"
+            ),
+            CheckpointError::BadField { what, detail } => {
+                write!(f, "invalid checkpoint field {what:?}: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+// ---------------------------------------------------------------------
+// encoding
+// ---------------------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Tensor dtype tags (the `dtype` byte of a tensor record).
+const DTYPE_F64: u8 = 0;
+const DTYPE_F32: u8 = 1;
+
+fn put_tensor(out: &mut Vec<u8>, name: &str, rows: usize, cols: usize, data: &[f64], dtype: u8) {
+    // a real assert (not debug): a shape-desynced record would produce a
+    // checksum-valid but unreadable file, failing far from the cause
+    assert_eq!(data.len(), rows * cols, "tensor {name:?} shape mismatch");
+    put_str(out, name);
+    out.push(dtype);
+    put_u64(out, rows as u64);
+    put_u64(out, cols as u64);
+    match dtype {
+        DTYPE_F32 => {
+            for &x in data {
+                out.extend_from_slice(&convert::f32_of(x).to_le_bytes());
+            }
+        }
+        _ => {
+            for &x in data {
+                put_f64(out, x);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// decoding
+// ---------------------------------------------------------------------
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], CheckpointError> {
+        if n > self.b.len() - self.i {
+            return Err(CheckpointError::Truncated {
+                what,
+                needed: n,
+                available: self.b.len() - self.i,
+            });
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self, what: &'static str) -> Result<u32, CheckpointError> {
+        let s = self.take(4, what)?;
+        Ok(u32::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &'static str) -> Result<u64, CheckpointError> {
+        let s = self.take(8, what)?;
+        Ok(u64::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    fn f64(&mut self, what: &'static str) -> Result<f64, CheckpointError> {
+        let s = self.take(8, what)?;
+        Ok(f64::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    fn string(&mut self, what: &'static str) -> Result<String, CheckpointError> {
+        let n = self.u32(what)? as usize;
+        let s = self.take(n, what)?;
+        String::from_utf8(s.to_vec()).map_err(|e| CheckpointError::BadField {
+            what,
+            detail: format!("invalid UTF-8: {e}"),
+        })
+    }
+
+    fn byte_len(n: usize, width: usize, what: &'static str) -> Result<usize, CheckpointError> {
+        n.checked_mul(width).ok_or_else(|| CheckpointError::BadField {
+            what,
+            detail: format!("element count {n} overflows"),
+        })
+    }
+
+    fn f64_vec(&mut self, n: usize, what: &'static str) -> Result<Vec<f64>, CheckpointError> {
+        let bytes = self.take(Self::byte_len(n, 8, what)?, what)?;
+        Ok(bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn f32_vec_widened(
+        &mut self,
+        n: usize,
+        what: &'static str,
+    ) -> Result<Vec<f64>, CheckpointError> {
+        let bytes = self.take(Self::byte_len(n, 4, what)?, what)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()) as f64)
+            .collect())
+    }
+}
+
+/// One decoded tensor record (data widened to f64).
+struct Tensor {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+    dtype: u8,
+}
+
+fn expect_shape(
+    t: Tensor,
+    rows: usize,
+    cols: usize,
+    what: &'static str,
+) -> Result<Tensor, CheckpointError> {
+    if t.rows != rows || t.cols != cols {
+        return Err(CheckpointError::BadField {
+            what,
+            detail: format!("shape {}x{} != expected {rows}x{cols}", t.rows, t.cols),
+        });
+    }
+    Ok(t)
+}
+
+fn read_tensor(cur: &mut Cursor<'_>) -> Result<(String, Tensor), CheckpointError> {
+    let name = cur.string("tensor name")?;
+    let dtype = cur.take(1, "tensor dtype")?[0];
+    let rows = cur.u64("tensor rows")? as usize;
+    let cols = cur.u64("tensor cols")? as usize;
+    let n = rows.checked_mul(cols).ok_or_else(|| CheckpointError::BadField {
+        what: "tensor shape",
+        detail: format!("{name}: {rows} x {cols} overflows"),
+    })?;
+    let data = match dtype {
+        DTYPE_F64 => cur.f64_vec(n, "tensor data")?,
+        DTYPE_F32 => cur.f32_vec_widened(n, "tensor data")?,
+        other => {
+            return Err(CheckpointError::BadField {
+                what: "tensor dtype",
+                detail: format!("{name}: unknown dtype tag {other}"),
+            })
+        }
+    };
+    Ok((name, Tensor { rows, cols, data, dtype }))
+}
+
+impl TrainedModel {
+    /// Serialize to the versioned binary checkpoint format (including
+    /// the trailing checksum). The inverse of [`TrainedModel::from_bytes`].
+    /// Panics if the model's tensor shapes are internally inconsistent;
+    /// [`TrainedModel::save`] validates first and returns a typed error
+    /// instead.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let state_dtype = match self.precision {
+            Precision::F64 => DTYPE_F64,
+            Precision::F32 => DTYPE_F32,
+        };
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC);
+        put_u32(&mut out, VERSION);
+        out.push(state_dtype);
+        out.extend_from_slice(&[0u8; 3]);
+        put_u64(&mut out, self.p() as u64);
+        put_u64(&mut out, self.q() as u64);
+        put_u64(&mut out, self.ds as u64);
+        put_u64(&mut out, self.n_samples as u64);
+        put_f64(&mut out, self.log_sigma2);
+        put_f64(&mut out, self.y_mean);
+        put_f64(&mut out, self.y_std);
+        put_str(&mut out, &self.time_family);
+        put_str(&mut out, &self.name);
+        put_u32(&mut out, self.theta.len() as u32);
+        for &x in &self.theta {
+            put_f64(&mut out, x);
+        }
+        let pq = self.grid_len();
+        put_u32(&mut out, 8); // tensor count
+        put_tensor(&mut out, "s", self.p(), self.ds, &self.s.data, DTYPE_F64);
+        put_tensor(&mut out, "t", 1, self.q(), &self.t, DTYPE_F64);
+        put_tensor(&mut out, "mask", 1, pq, &self.mask, DTYPE_F64);
+        put_tensor(&mut out, "masked_alpha", 1, pq, &self.masked_alpha, state_dtype);
+        put_tensor(&mut out, "vm", self.n_samples, pq, &self.vm.data, state_dtype);
+        put_tensor(&mut out, "f_prior", self.n_samples, pq, &self.f_prior.data, state_dtype);
+        put_tensor(&mut out, "post_mean", 1, pq, &self.posterior.mean, DTYPE_F64);
+        put_tensor(&mut out, "post_var", 1, pq, &self.posterior.var, DTYPE_F64);
+        let sum = fnv64(&out);
+        put_u64(&mut out, sum);
+        out
+    }
+
+    /// Decode a checkpoint from bytes, verifying magic, version, and
+    /// checksum, and validating every shape. All failure modes return a
+    /// typed [`CheckpointError`].
+    pub fn from_bytes(bytes: &[u8]) -> Result<TrainedModel, CheckpointError> {
+        // smallest conceivable checkpoint: magic + version + trailer
+        if bytes.len() < MAGIC.len() + 4 + 8 {
+            return Err(CheckpointError::Truncated {
+                what: "file header",
+                needed: MAGIC.len() + 4 + 8,
+                available: bytes.len(),
+            });
+        }
+        if bytes[..8] != MAGIC {
+            let mut found = [0u8; 8];
+            found.copy_from_slice(&bytes[..8]);
+            return Err(CheckpointError::BadMagic { found });
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != VERSION {
+            return Err(CheckpointError::UnsupportedVersion { found: version, supported: VERSION });
+        }
+        let body = &bytes[..bytes.len() - 8];
+        let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        let computed = fnv64(body);
+        if stored != computed {
+            return Err(CheckpointError::ChecksumMismatch { stored, computed });
+        }
+
+        let mut cur = Cursor { b: body, i: 12 };
+        let prec_byte = cur.take(4, "precision")?[0];
+        let precision = match prec_byte {
+            DTYPE_F64 => Precision::F64,
+            DTYPE_F32 => Precision::F32,
+            other => {
+                return Err(CheckpointError::BadField {
+                    what: "precision",
+                    detail: format!("unknown precision tag {other}"),
+                })
+            }
+        };
+        let p = cur.u64("p")? as usize;
+        let q = cur.u64("q")? as usize;
+        let ds = cur.u64("ds")? as usize;
+        let n_samples = cur.u64("n_samples")? as usize;
+        let log_sigma2 = cur.f64("log_sigma2")?;
+        let y_mean = cur.f64("y_mean")?;
+        let y_std = cur.f64("y_std")?;
+        let time_family = cur.string("time_family")?;
+        let name = cur.string("name")?;
+        let n_theta = cur.u32("theta count")? as usize;
+        let theta = cur.f64_vec(n_theta, "theta")?;
+
+        let n_tensors = cur.u32("tensor count")? as usize;
+        // version 1 has exactly 8 tensors; checking before allocating
+        // keeps a crafted count from forcing a huge reservation
+        if n_tensors != 8 {
+            return Err(CheckpointError::BadField {
+                what: "tensor count",
+                detail: format!("{n_tensors} != 8 (version {VERSION})"),
+            });
+        }
+        let mut tensors: Vec<(String, Tensor)> = Vec::with_capacity(n_tensors);
+        for _ in 0..n_tensors {
+            tensors.push(read_tensor(&mut cur)?);
+        }
+        if cur.i != body.len() {
+            return Err(CheckpointError::BadField {
+                what: "trailer",
+                detail: format!("{} unparsed bytes before checksum", body.len() - cur.i),
+            });
+        }
+        let mut take = |want: &'static str| -> Result<Tensor, CheckpointError> {
+            let pos = tensors.iter().position(|(n, _)| n == want).ok_or_else(|| {
+                CheckpointError::BadField {
+                    what: "tensor directory",
+                    detail: format!("missing tensor {want:?}"),
+                }
+            })?;
+            Ok(tensors.remove(pos).1)
+        };
+        let pq = p.checked_mul(q).ok_or_else(|| CheckpointError::BadField {
+            what: "header",
+            detail: format!("p * q overflows ({p} x {q})"),
+        })?;
+        let s = expect_shape(take("s")?, p, ds, "s")?;
+        let t = expect_shape(take("t")?, 1, q, "t")?;
+        let mask = expect_shape(take("mask")?, 1, pq, "mask")?;
+        let masked_alpha = expect_shape(take("masked_alpha")?, 1, pq, "masked_alpha")?;
+        let vm = expect_shape(take("vm")?, n_samples, pq, "vm")?;
+        let f_prior = expect_shape(take("f_prior")?, n_samples, pq, "f_prior")?;
+        let post_mean = expect_shape(take("post_mean")?, 1, pq, "post_mean")?;
+        let post_var = expect_shape(take("post_var")?, 1, pq, "post_var")?;
+        if let Some((extra, _)) = tensors.first() {
+            return Err(CheckpointError::BadField {
+                what: "tensor directory",
+                detail: format!("unknown tensor {extra:?} (version {VERSION} reader)"),
+            });
+        }
+        let state_dtype = match precision {
+            Precision::F64 => DTYPE_F64,
+            Precision::F32 => DTYPE_F32,
+        };
+        let state_tensors = [(&masked_alpha, "masked_alpha"), (&vm, "vm"), (&f_prior, "f_prior")];
+        for (tensor, label) in state_tensors {
+            if tensor.dtype != state_dtype {
+                return Err(CheckpointError::BadField {
+                    what: "tensor dtype",
+                    detail: format!(
+                        "{label} stored as dtype {} but header precision implies {}",
+                        tensor.dtype, state_dtype
+                    ),
+                });
+            }
+        }
+
+        let model = TrainedModel {
+            name,
+            time_family,
+            precision,
+            ds,
+            s: Matrix::from_vec(p, ds, s.data),
+            t: t.data,
+            mask: mask.data,
+            theta,
+            log_sigma2,
+            y_mean,
+            y_std,
+            n_samples,
+            masked_alpha: masked_alpha.data,
+            vm: Matrix::from_vec(n_samples, pq, vm.data),
+            f_prior: Matrix::from_vec(n_samples, pq, f_prior.data),
+            posterior: Posterior { mean: post_mean.data, var: post_var.data },
+        };
+        model.validate()?;
+        Ok(model)
+    }
+
+    /// Write the checkpoint to `path`, returning the byte count. The
+    /// model is validated first, so an internally inconsistent one
+    /// fails with a typed [`CheckpointError`] instead of writing a
+    /// broken file. The write is crash-safe: bytes land in a sibling
+    /// temp file that is renamed over `path` only once complete, so an
+    /// interrupted save never destroys a previous good checkpoint.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<u64> {
+        let path = path.as_ref();
+        self.validate().map_err(anyhow::Error::new)?;
+        let bytes = self.to_bytes();
+        let mut tmp_name = path.as_os_str().to_owned();
+        tmp_name.push(format!(".tmp.{}", std::process::id()));
+        let tmp = std::path::PathBuf::from(tmp_name);
+        std::fs::write(&tmp, &bytes)
+            .with_context(|| format!("writing checkpoint temp file {}", tmp.display()))?;
+        if let Err(e) = std::fs::rename(&tmp, path) {
+            std::fs::remove_file(&tmp).ok();
+            return Err(anyhow::Error::new(e))
+                .with_context(|| format!("renaming checkpoint into place at {}", path.display()));
+        }
+        Ok(bytes.len() as u64)
+    }
+
+    /// Read a checkpoint from `path`. Format failures carry a typed
+    /// [`CheckpointError`] in the error chain (use
+    /// `err.downcast_ref::<CheckpointError>()` to inspect them).
+    pub fn load(path: impl AsRef<Path>) -> Result<TrainedModel> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        TrainedModel::from_bytes(&bytes)
+            .map_err(anyhow::Error::new)
+            .with_context(|| format!("decoding checkpoint {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny but fully consistent model for codec tests.
+    pub(crate) fn dummy_model(precision: Precision) -> TrainedModel {
+        let (p, q, ds, n) = (3usize, 2usize, 2usize, 2usize);
+        let pq = p * q;
+        let narrowed = |xs: Vec<f64>| -> Vec<f64> {
+            match precision {
+                Precision::F64 => xs,
+                Precision::F32 => xs.iter().map(|&x| convert::f32_of(x) as f64).collect(),
+            }
+        };
+        TrainedModel {
+            name: "dummy".into(),
+            time_family: "rbf".into(),
+            precision,
+            ds,
+            s: Matrix::from_vec(p, ds, (0..p * ds).map(|i| i as f64 * 0.25).collect()),
+            t: (0..q).map(|k| k as f64).collect(),
+            mask: (0..pq).map(|i| if i % 3 == 0 { 0.0 } else { 1.0 }).collect(),
+            theta: vec![0.1, -0.2, 0.3, 0.05],
+            log_sigma2: -1.5,
+            y_mean: 0.7,
+            y_std: 1.3,
+            n_samples: n,
+            masked_alpha: narrowed((0..pq).map(|i| (i as f64).sin()).collect()),
+            vm: Matrix::from_vec(n, pq, narrowed((0..n * pq).map(|i| (i as f64).cos()).collect())),
+            f_prior: Matrix::from_vec(
+                n,
+                pq,
+                narrowed((0..n * pq).map(|i| 0.01 * i as f64).collect()),
+            ),
+            posterior: Posterior {
+                mean: (0..pq).map(|i| i as f64 * 0.5).collect(),
+                var: (0..pq).map(|i| 1.0 + i as f64 * 0.1).collect(),
+            },
+        }
+    }
+
+    fn assert_models_bit_equal(a: &TrainedModel, b: &TrainedModel) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.time_family, b.time_family);
+        assert_eq!(a.precision, b.precision);
+        assert_eq!((a.p(), a.q(), a.ds, a.n_samples), (b.p(), b.q(), b.ds, b.n_samples));
+        let bits = |xs: &[f64]| -> Vec<u64> { xs.iter().map(|x| x.to_bits()).collect() };
+        assert_eq!(bits(&a.s.data), bits(&b.s.data));
+        assert_eq!(bits(&a.t), bits(&b.t));
+        assert_eq!(bits(&a.mask), bits(&b.mask));
+        assert_eq!(bits(&a.theta), bits(&b.theta));
+        assert_eq!(a.log_sigma2.to_bits(), b.log_sigma2.to_bits());
+        assert_eq!(a.y_mean.to_bits(), b.y_mean.to_bits());
+        assert_eq!(a.y_std.to_bits(), b.y_std.to_bits());
+        assert_eq!(bits(&a.masked_alpha), bits(&b.masked_alpha));
+        assert_eq!(bits(&a.vm.data), bits(&b.vm.data));
+        assert_eq!(bits(&a.f_prior.data), bits(&b.f_prior.data));
+        assert_eq!(bits(&a.posterior.mean), bits(&b.posterior.mean));
+        assert_eq!(bits(&a.posterior.var), bits(&b.posterior.var));
+    }
+
+    #[test]
+    fn roundtrip_f64_is_bit_exact() {
+        let m = dummy_model(Precision::F64);
+        let bytes = m.to_bytes();
+        let back = TrainedModel::from_bytes(&bytes).unwrap();
+        assert_models_bit_equal(&m, &back);
+    }
+
+    #[test]
+    fn roundtrip_f32_is_bit_exact_and_smaller() {
+        // values already representable in f32, so narrow-on-write /
+        // widen-on-read is lossless — and the state tensors shrink
+        let m32 = dummy_model(Precision::F32);
+        let m64 = dummy_model(Precision::F64);
+        let bytes = m32.to_bytes();
+        assert!(bytes.len() < m64.to_bytes().len());
+        let back = TrainedModel::from_bytes(&bytes).unwrap();
+        assert_models_bit_equal(&m32, &back);
+    }
+
+    #[test]
+    fn bad_magic_is_typed() {
+        let mut bytes = dummy_model(Precision::F64).to_bytes();
+        bytes[0] = b'X';
+        match TrainedModel::from_bytes(&bytes) {
+            Err(CheckpointError::BadMagic { found }) => assert_eq!(found[0], b'X'),
+            other => panic!("expected BadMagic, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wrong_version_is_typed() {
+        let mut bytes = dummy_model(Precision::F64).to_bytes();
+        bytes[8] = 99;
+        // version is checked before the checksum so an old reader gives
+        // the actionable error even for a well-formed newer file
+        let n = bytes.len();
+        let sum = fnv64(&bytes[..n - 8]);
+        bytes[n - 8..].copy_from_slice(&sum.to_le_bytes());
+        match TrainedModel::from_bytes(&bytes) {
+            Err(CheckpointError::UnsupportedVersion { found: 99, supported: VERSION }) => {}
+            other => panic!("expected UnsupportedVersion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn flipped_byte_fails_checksum() {
+        let mut bytes = dummy_model(Precision::F64).to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        match TrainedModel::from_bytes(&bytes) {
+            Err(CheckpointError::ChecksumMismatch { .. }) => {}
+            other => panic!("expected ChecksumMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncation_is_typed() {
+        let bytes = dummy_model(Precision::F64).to_bytes();
+        // below the minimum header size: reported as Truncated directly
+        match TrainedModel::from_bytes(&bytes[..10]) {
+            Err(CheckpointError::Truncated { what: "file header", .. }) => {}
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+        // mid-body truncation with a re-stamped checksum: the cursor
+        // runs out while reading a field
+        let cut = bytes.len() - 200;
+        let mut short = bytes[..cut].to_vec();
+        let sum = fnv64(&short);
+        short.extend_from_slice(&sum.to_le_bytes());
+        match TrainedModel::from_bytes(&short) {
+            Err(CheckpointError::Truncated { .. }) => {}
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shape_lies_are_rejected() {
+        let mut m = dummy_model(Precision::F64);
+        m.mask.pop();
+        assert!(matches!(m.validate(), Err(CheckpointError::BadField { what: "mask", .. })));
+        // save() validates before serializing: typed error, no file
+        let path =
+            std::env::temp_dir().join(format!("lkgp_io_badsave_{}.ckpt", std::process::id()));
+        let err = m.save(&path).unwrap_err();
+        assert!(err.downcast_ref::<CheckpointError>().is_some(), "{err:#}");
+        assert!(!path.exists());
+    }
+}

@@ -1,0 +1,172 @@
+//! Persisted model state — the train-once / serve-many boundary.
+//!
+//! The paper's pathwise conditioning (Sec. 3.3) concentrates all of the
+//! expensive work of LKGP inference in the *fit*: once the representer
+//! weights `alpha` and the pathwise sample coefficients are known,
+//! every prediction is a cheap Kronecker MVM. [`TrainedModel`] captures
+//! exactly that state — kernel hyperparameters, grid/mask metadata, the
+//! masked representer weights, and the pathwise sample state — so a
+//! model fitted in one process can be checkpointed to disk
+//! ([`TrainedModel::save`]) and served from another
+//! ([`crate::serve::ServeEngine`]) with **bit-identical** f64
+//! predictions.
+//!
+//! The on-disk format (module [`io`]) is a versioned, endian-stable
+//! binary layout documented in `docs/formats.md`: an 8-byte magic, a
+//! fixed header, length-prefixed strings, named f64/f32 tensor blobs,
+//! and a trailing FNV-1a checksum. Corrupted, truncated, or
+//! wrong-version files are rejected with a typed
+//! [`io::CheckpointError`], never a panic.
+//!
+//! Capture is opt-in: set
+//! [`LkgpConfig::capture_pathwise`](crate::gp::lkgp::LkgpConfig::capture_pathwise)
+//! and the fit returns the model in
+//! [`LkgpFit::model`](crate::gp::lkgp::LkgpFit::model):
+//!
+//! ```no_run
+//! use lkgp::gp::lkgp::{Lkgp, LkgpConfig};
+//! use lkgp::model::TrainedModel;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! # let data: lkgp::data::GridDataset = unimplemented!();
+//! let cfg = LkgpConfig { capture_pathwise: true, ..LkgpConfig::default() };
+//! let fit = Lkgp::fit(&data, cfg)?;
+//! fit.model.expect("capture was on").save("model.ckpt")?;
+//! let reloaded = TrainedModel::load("model.ckpt")?;
+//! assert_eq!(reloaded.posterior.mean, fit.posterior.mean);
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod io;
+
+use crate::gp::backend::Precision;
+use crate::gp::Posterior;
+use crate::kernels::ProductGridKernel;
+use crate::linalg::Matrix;
+
+/// Everything needed to reproduce (and serve) the predictions of a
+/// fitted LKGP without re-running training.
+///
+/// All tensors are held widened to f64 in memory; [`precision`]
+/// records the compute precision of the fit, and the checkpoint codec
+/// stores the iterative-state tensors (`masked_alpha`, `vm`,
+/// `f_prior`) in that native precision — the f64 <-> f32 round trip is
+/// exact for values that originated in f32, so narrowing on write
+/// loses nothing.
+///
+/// [`precision`]: TrainedModel::precision
+#[derive(Clone, Debug)]
+pub struct TrainedModel {
+    /// Dataset name the model was fitted on (reports only).
+    pub name: String,
+    /// Time-kernel family (`"rbf"` | `"rbf_periodic"` | `"icm"`).
+    pub time_family: String,
+    /// Compute precision of the fit's iterative hot path; serve-time
+    /// reconstruction replays MVMs in the same precision.
+    pub precision: Precision,
+    /// Spatial input dimension d_s.
+    pub ds: usize,
+    /// Spatial training inputs, p x d_s (standardized).
+    pub s: Matrix<f64>,
+    /// Time/task grid coordinates, length q.
+    pub t: Vec<f64>,
+    /// Observation mask over the p*q grid (1 observed / 0 missing).
+    pub mask: Vec<f64>,
+    /// Fitted kernel hyperparameters (flat layout, see `kernels`).
+    pub theta: Vec<f64>,
+    /// Fitted log observation-noise variance.
+    pub log_sigma2: f64,
+    /// Mean of the observed training targets (standardization state).
+    pub y_mean: f64,
+    /// Std of the observed training targets (standardization state).
+    pub y_std: f64,
+    /// Number of pathwise-conditioning samples the fit drew.
+    pub n_samples: usize,
+    /// Masked representer weights `M alpha`, length p*q: the predictive
+    /// mean is `(K_SS (x) K_TT) M alpha` — one MVM.
+    pub masked_alpha: Vec<f64>,
+    /// Masked pathwise sample coefficients, `n_samples x (p q)`: row r
+    /// is `M v_r` with `v_r = (P K P^T + s2 I)^{-1} (y - f_r - eps_r)`.
+    pub vm: Matrix<f64>,
+    /// Prior function samples on the grid, `n_samples x (p q)`: row r
+    /// is `f_r = (L_S (x) L_T) z_r`.
+    pub f_prior: Matrix<f64>,
+    /// The posterior the fit produced, stored for integrity checks:
+    /// serve-time reconstruction must reproduce it bit for bit (f64
+    /// fits on the rust backend).
+    pub posterior: Posterior,
+}
+
+impl TrainedModel {
+    /// Number of spatial points p.
+    pub fn p(&self) -> usize {
+        self.s.rows
+    }
+
+    /// Number of time steps / tasks q.
+    pub fn q(&self) -> usize {
+        self.t.len()
+    }
+
+    /// Grid size p*q.
+    pub fn grid_len(&self) -> usize {
+        self.p() * self.q()
+    }
+
+    /// Validate internal shape consistency (used after deserialization).
+    pub fn validate(&self) -> Result<(), io::CheckpointError> {
+        let pq = self.grid_len();
+        let check = |ok: bool, what: &'static str, detail: String| {
+            if ok {
+                Ok(())
+            } else {
+                Err(io::CheckpointError::BadField { what, detail })
+            }
+        };
+        check(
+            self.s.cols == self.ds,
+            "s",
+            format!("spatial matrix is {}x{}, expected ds {}", self.s.rows, self.s.cols, self.ds),
+        )?;
+        check(self.mask.len() == pq, "mask", format!("len {} != p*q {pq}", self.mask.len()))?;
+        check(
+            self.masked_alpha.len() == pq,
+            "masked_alpha",
+            format!("len {} != p*q {pq}", self.masked_alpha.len()),
+        )?;
+        check(
+            self.vm.rows == self.n_samples && self.vm.cols == pq,
+            "vm",
+            format!("{}x{} != {}x{pq}", self.vm.rows, self.vm.cols, self.n_samples),
+        )?;
+        check(
+            self.f_prior.rows == self.n_samples && self.f_prior.cols == pq,
+            "f_prior",
+            format!("{}x{} != {}x{pq}", self.f_prior.rows, self.f_prior.cols, self.n_samples),
+        )?;
+        check(
+            self.posterior.mean.len() == pq && self.posterior.var.len() == pq,
+            "posterior",
+            format!(
+                "mean/var lens {}/{} != p*q {pq}",
+                self.posterior.mean.len(), self.posterior.var.len()
+            ),
+        )?;
+        check(self.y_std > 0.0, "y_std", format!("{} must be positive", self.y_std))?;
+        check(self.n_samples >= 2, "n_samples", format!("{} < 2", self.n_samples))?;
+        check(
+            matches!(self.time_family.as_str(), "rbf" | "rbf_periodic" | "icm"),
+            "time_family",
+            format!("unknown family {:?}", self.time_family),
+        )?;
+        let kernel = ProductGridKernel::new(self.ds, &self.time_family, self.q());
+        let expect_theta = kernel.n_theta();
+        check(
+            self.theta.len() == expect_theta,
+            "theta",
+            format!("len {} != {expect_theta} for this kernel", self.theta.len()),
+        )?;
+        Ok(())
+    }
+}

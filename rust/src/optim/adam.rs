@@ -5,9 +5,13 @@
 /// Adam optimizer state over a flat parameter vector.
 #[derive(Clone, Debug)]
 pub struct Adam {
+    /// Learning rate.
     pub lr: f64,
+    /// First-moment decay.
     pub beta1: f64,
+    /// Second-moment decay.
     pub beta2: f64,
+    /// Denominator stabilizer.
     pub eps: f64,
     m: Vec<f64>,
     v: Vec<f64>,
@@ -15,10 +19,12 @@ pub struct Adam {
 }
 
 impl Adam {
+    /// Fresh optimizer state with standard (0.9, 0.999) decays.
     pub fn new(n_params: usize, lr: f64) -> Self {
         Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, m: vec![0.0; n_params], v: vec![0.0; n_params], t: 0 }
     }
 
+    /// Parameter-vector length this state was built for.
     pub fn dim(&self) -> usize {
         self.m.len()
     }

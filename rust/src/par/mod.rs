@@ -1,7 +1,7 @@
 //! Dependency-free data-parallel compute subsystem.
 //!
-//! A **persistent worker pool** ([`pool`]) behind a deterministic
-//! region scheduler ([`region`]): long-lived workers are spawned lazily
+//! A **persistent worker pool** (`pool`) behind a deterministic
+//! region scheduler (`region`): long-lived workers are spawned lazily
 //! on first use (`LKGP_THREADS`-sized, default = available cores), park
 //! on a condvar when idle, and are reused by every subsequent parallel
 //! region — dispatching a region costs ~a condvar wake instead of the
@@ -39,8 +39,8 @@
 //! the kernel Gram distance/exp post-pass and the dense-baseline Gram
 //! assembly ride the same pool via [`par_chunks_mut_cheap`].
 
-pub mod pool;
-pub mod region;
+mod pool;
+mod region;
 
 pub use region::{RegionPanic, Schedule};
 

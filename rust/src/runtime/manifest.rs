@@ -8,40 +8,60 @@ use anyhow::{bail, Context};
 
 use crate::util::json::Json;
 
+/// One declared input tensor of an artifact.
 #[derive(Clone, Debug)]
 pub struct ArtifactInput {
+    /// Input name (diagnostics only).
     pub name: String,
+    /// Static shape the artifact was compiled for.
     pub shape: Vec<usize>,
 }
 
 impl ArtifactInput {
+    /// Element count of the input (at least 1, scalars included).
     pub fn len(&self) -> usize {
         self.shape.iter().product::<usize>().max(1)
     }
 }
 
+/// One compiled artifact: its HLO file and declared inputs.
 #[derive(Clone, Debug)]
 pub struct ArtifactMeta {
+    /// Path of the `.hlo.txt` file.
     pub file: PathBuf,
+    /// Declared input tensors, in call order.
     pub inputs: Vec<ArtifactInput>,
 }
 
+/// One artifact configuration (a fixed problem shape).
 #[derive(Clone, Debug)]
 pub struct ConfigMeta {
+    /// Configuration name.
     pub name: String,
+    /// Spatial points the artifacts were compiled for.
     pub p: usize,
+    /// Time steps the artifacts were compiled for.
     pub q: usize,
+    /// Spatial input dimension.
     pub ds: usize,
+    /// Time-kernel family.
     pub kernel_t: String,
+    /// Static batch size of the batched artifacts.
     pub batch: usize,
+    /// Static Hutchinson probe count.
     pub probes: usize,
+    /// Hyperparameter-vector length.
     pub n_theta: usize,
+    /// Artifacts by operation name (`kron_mvm`, `kernels`, ...).
     pub artifacts: BTreeMap<String, ArtifactMeta>,
 }
 
+/// Parsed artifacts/manifest.json.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Directory the manifest (and artifact files) live in.
     pub dir: PathBuf,
+    /// Configurations by name.
     pub configs: BTreeMap<String, ConfigMeta>,
 }
 
@@ -107,6 +127,7 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_path_buf(), configs })
     }
 
+    /// Look up a configuration by name (error lists the known names).
     pub fn config(&self, name: &str) -> anyhow::Result<&ConfigMeta> {
         self.configs
             .get(name)

@@ -24,10 +24,12 @@ pub use manifest::{ArtifactMeta, ConfigMeta, Manifest};
 /// Handle to a compiled artifact set + the PJRT client.
 pub struct Runtime {
     client: xla::PjRtClient,
+    /// The parsed artifact manifest.
     pub manifest: Manifest,
     cache: HashMap<(String, String), xla::PjRtLoadedExecutable>,
     /// wall time spent inside PJRT execute (for the perf pass)
     pub exec_secs: f64,
+    /// Number of artifact executions performed.
     pub exec_calls: u64,
 }
 
@@ -44,6 +46,7 @@ impl Runtime {
         Self::load(&Manifest::default_dir())
     }
 
+    /// PJRT platform name (e.g. `"cpu"`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -134,20 +137,25 @@ impl Runtime {
 /// A shaped f32 tensor crossing the PJRT boundary.
 #[derive(Clone, Debug)]
 pub struct TensorF32 {
+    /// Tensor shape (empty = scalar).
     pub shape: Vec<usize>,
+    /// Row-major element data.
     pub data: Vec<f32>,
 }
 
 impl TensorF32 {
+    /// Shaped tensor (asserts the element count).
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(shape.iter().product::<usize>().max(1), data.len().max(1));
         TensorF32 { shape, data }
     }
 
+    /// Rank-0 scalar tensor.
     pub fn scalar(x: f32) -> Self {
         TensorF32 { shape: vec![], data: vec![x] }
     }
 
+    /// Rank-1 tensor over the data.
     pub fn vec1(data: Vec<f32>) -> Self {
         TensorF32 { shape: vec![data.len()], data }
     }

@@ -1,0 +1,430 @@
+//! Batched prediction service over checkpointed models — the light
+//! half of the train-once / serve-many split.
+//!
+//! [`ServeEngine`] loads a [`TrainedModel`] (from memory or from a
+//! `model::io` checkpoint file) and serves predictions without ever
+//! touching the training path:
+//!
+//! 1. **Reconstruction** (once, at engine construction): the Gram
+//!    factors are rebuilt from the checkpointed hyperparameters and the
+//!    full-grid posterior is recomputed from the pathwise state with
+//!    cheap Kronecker MVMs — exactly the paper's "predictions are MVMs"
+//!    claim (Sec. 3.3). The reconstruction replays the *same* code path
+//!    and chunk order as the fit (`gp::lkgp`), so for models fitted on
+//!    the rust backend it reproduces the fit's posterior
+//!    **bit-for-bit**, in both precisions, at any thread count —
+//!    asserted by [`ServeEngine::verify`]. Queries themselves are
+//!    served from the checkpoint's stored posterior, so served numbers
+//!    always equal the fit's output even for PJRT-trained checkpoints
+//!    where the rust replay only approximates the on-device f32 fit.
+//! 2. **Batched queries**: [`ServeEngine::predict_batch`] accepts many
+//!    independent query batches (ragged sizes welcome), coalesces them
+//!    into one flat, uniformly blocked work buffer, and fans the blocks
+//!    out over the `crate::par` worker pool under `Schedule::Steal` —
+//!    batch boundaries never affect a single output bit, so the
+//!    response is identical no matter how callers group their queries.
+//! 3. **New spatial points**: [`ServeEngine::predict_new_points`]
+//!    serves predictive means for spatial inputs that were never in the
+//!    training grid. The expensive half-product
+//!    `unvec(M alpha) K_TT^T` is computed once per engine and reused by
+//!    every query batch, so a batch of m new points costs two GEMMs
+//!    (`m x p` cross-Gram, `m x p @ p x q` contraction) — the
+//!    Gram-factor amortization that makes high query throughput cheap.
+//!
+//!
+//! ```no_run
+//! use lkgp::serve::{BatchRequest, ServeEngine};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let engine = ServeEngine::open("model.ckpt")?;
+//! assert!(engine.verify().bit_identical);
+//! let responses = engine.predict_batch(&[
+//!     BatchRequest { cells: vec![0, 1, 2] },
+//!     BatchRequest { cells: vec![41] },
+//! ])?;
+//! println!("mean at cell 41: {}", responses[1].mean[0]);
+//! # Ok(())
+//! # }
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::gp::backend::{KronBackend, MvmMode, Precision, RustKronBackend};
+use crate::gp::lkgp::{accumulate_pathwise_moments, finalize_posterior, PATHWISE_CHUNK};
+use crate::gp::Posterior;
+use crate::kernels::ProductGridKernel;
+use crate::linalg::gemm::matmul_nt;
+use crate::linalg::{Matrix, Scalar};
+use crate::model::TrainedModel;
+
+/// One independent batch of grid-cell queries. Cell indices use the
+/// grid layout `j*q + k` = (spatial point j, time step k) shared with
+/// `crate::kron`.
+#[derive(Clone, Debug)]
+pub struct BatchRequest {
+    /// Grid cells to predict (any order, duplicates allowed).
+    pub cells: Vec<usize>,
+}
+
+/// Predictions for one [`BatchRequest`], aligned with its `cells`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchResponse {
+    /// Predictive means in raw target scale.
+    pub mean: Vec<f64>,
+    /// Predictive variances (including observation noise).
+    pub var: Vec<f64>,
+}
+
+/// Outcome of comparing the reconstructed posterior against the one
+/// stored in the checkpoint (see [`ServeEngine::verify`]).
+#[derive(Clone, Copy, Debug)]
+pub struct VerifyReport {
+    /// True when every mean and variance bit matches the stored
+    /// posterior — the expected state for rust-backend checkpoints.
+    pub bit_identical: bool,
+    /// Largest absolute mean deviation.
+    pub max_mean_diff: f64,
+    /// Largest absolute variance deviation.
+    pub max_var_diff: f64,
+}
+
+/// Block length (in queries) of the coalesced prediction sweep: small
+/// enough that ragged batch mixes spread across workers, large enough
+/// that a block amortizes its dispatch. Purely a scheduling constant —
+/// output bits never depend on it.
+const SERVE_BLOCK: usize = 256;
+
+/// A loaded model plus everything reconstructed from it, ready to
+/// answer queries. Construction does all the heavy work; queries are
+/// cheap and `&self` (share one engine across threads freely).
+///
+/// Queries are answered from the checkpoint's stored posterior — the
+/// fit's exact output, authoritative by construction. The Kronecker-MVM
+/// reconstruction is the *integrity replay*: for rust-backend
+/// checkpoints it must reproduce the stored posterior bit for bit
+/// ([`ServeEngine::verify`]), and for PJRT-trained checkpoints it
+/// quantifies the rust-vs-artifact deviation without ever leaking it
+/// into served predictions.
+pub struct ServeEngine {
+    model: TrainedModel,
+    /// Posterior recomputed from the pathwise state via Kronecker MVMs.
+    reconstructed: Posterior,
+    /// `unvec(M alpha) @ K_TT^T` (p x q): the reusable half of the
+    /// predictive-mean product for new-point queries.
+    half_alpha: Matrix<f64>,
+    /// Product kernel at the checkpointed hyperparameters (cross-Gram
+    /// evaluation for new-point queries).
+    kernel: ProductGridKernel,
+    reconstruct_secs: f64,
+}
+
+impl ServeEngine {
+    /// Load a checkpoint file and build the engine (reconstructing the
+    /// posterior — the one-time serving cost).
+    pub fn open(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        Self::from_model(TrainedModel::load(path)?)
+    }
+
+    /// Build the engine from an in-memory model (e.g. straight from
+    /// `LkgpFit::model`), reconstructing the posterior.
+    pub fn from_model(model: TrainedModel) -> Result<Self> {
+        model.validate().map_err(anyhow::Error::new)?;
+        let t0 = std::time::Instant::now();
+        let reconstructed = match model.precision {
+            Precision::F64 => reconstruct::<f64>(&model)?,
+            Precision::F32 => reconstruct::<f32>(&model)?,
+        };
+        let mut kernel = ProductGridKernel::new(model.ds, &model.time_family, model.q());
+        kernel.set_theta(&model.theta);
+        let ktt = kernel.gram_t(&model.t);
+        let a = Matrix::from_vec(model.p(), model.q(), model.masked_alpha.clone());
+        let half_alpha = matmul_nt(&a, &ktt);
+        let reconstruct_secs = t0.elapsed().as_secs_f64();
+        Ok(ServeEngine { model, reconstructed, half_alpha, kernel, reconstruct_secs })
+    }
+
+    /// The underlying model state.
+    pub fn model(&self) -> &TrainedModel {
+        &self.model
+    }
+
+    /// The full-grid posterior queries are served from (raw target
+    /// scale): the checkpoint's stored fit posterior, which the MVM
+    /// reconstruction must reproduce bit for bit on rust-backend
+    /// checkpoints (see [`ServeEngine::verify`]).
+    pub fn posterior(&self) -> &Posterior {
+        &self.model.posterior
+    }
+
+    /// The posterior recomputed from the pathwise state via Kronecker
+    /// MVMs — the integrity replay compared by [`ServeEngine::verify`].
+    pub fn reconstructed(&self) -> &Posterior {
+        &self.reconstructed
+    }
+
+    /// Wall-clock seconds the posterior reconstruction took.
+    pub fn reconstruct_secs(&self) -> f64 {
+        self.reconstruct_secs
+    }
+
+    /// Compare the reconstructed posterior against the one stored in
+    /// the checkpoint. Rust-backend checkpoints must report
+    /// `bit_identical`; PJRT-trained checkpoints report the (small)
+    /// rust-vs-artifact deviation instead.
+    pub fn verify(&self) -> VerifyReport {
+        let stored = &self.model.posterior;
+        let recon = &self.reconstructed;
+        let mut bit_identical = true;
+        let mut max_mean_diff = 0.0f64;
+        let mut max_var_diff = 0.0f64;
+        for c in 0..stored.mean.len() {
+            if stored.mean[c].to_bits() != recon.mean[c].to_bits()
+                || stored.var[c].to_bits() != recon.var[c].to_bits()
+            {
+                bit_identical = false;
+            }
+            max_mean_diff = max_mean_diff.max((stored.mean[c] - recon.mean[c]).abs());
+            max_var_diff = max_var_diff.max((stored.var[c] - recon.var[c]).abs());
+        }
+        VerifyReport { bit_identical, max_mean_diff, max_var_diff }
+    }
+
+    /// Serve many independent query batches at once.
+    ///
+    /// All batches are coalesced into one flat work buffer, swept in
+    /// uniform fixed-size blocks over the `crate::par` pool
+    /// under the work-stealing schedule (ragged batch mixes balance
+    /// across workers), and scattered back per batch. Output bits are
+    /// independent of the thread count *and* of how queries were
+    /// grouped into batches. Out-of-range cells are rejected up front.
+    pub fn predict_batch(&self, batches: &[BatchRequest]) -> Result<Vec<BatchResponse>> {
+        let pq = self.model.grid_len();
+        let total: usize = batches.iter().map(|b| b.cells.len()).sum();
+        let mut flat: Vec<usize> = Vec::with_capacity(total);
+        for (bi, b) in batches.iter().enumerate() {
+            for &c in &b.cells {
+                if c >= pq {
+                    bail!("batch {bi}: cell index {c} out of range (grid has {pq} cells)");
+                }
+                flat.push(c);
+            }
+        }
+        let mut mean_out = vec![0.0f64; total];
+        let mut var_out = vec![0.0f64; total];
+        let (mean, var) = (&self.model.posterior.mean, &self.model.posterior.var);
+        let cells = &flat;
+        if total < crate::par::cheap_sweep_min() {
+            // small coalesced sweeps: a pool dispatch would dominate the
+            // gather itself; the sequential path writes identical bits
+            for (i, &cell) in flat.iter().enumerate() {
+                mean_out[i] = mean[cell];
+                var_out[i] = var[cell];
+            }
+        } else {
+            crate::par::par_zip_mut_steal(
+                "serve.predict_batch",
+                &mut mean_out,
+                &mut var_out,
+                SERVE_BLOCK,
+                |ci, ms, vs| {
+                    let base = ci * SERVE_BLOCK;
+                    for (off, (m, v)) in ms.iter_mut().zip(vs.iter_mut()).enumerate() {
+                        let cell = cells[base + off];
+                        *m = mean[cell];
+                        *v = var[cell];
+                    }
+                },
+            );
+        }
+        let mut out = Vec::with_capacity(batches.len());
+        let mut at = 0;
+        for b in batches {
+            let n = b.cells.len();
+            out.push(BatchResponse {
+                mean: mean_out[at..at + n].to_vec(),
+                var: var_out[at..at + n].to_vec(),
+            });
+            at += n;
+        }
+        Ok(out)
+    }
+
+    /// Convenience wrapper: one batch of cells.
+    pub fn predict_cells(&self, cells: &[usize]) -> Result<BatchResponse> {
+        let mut res = self.predict_batch(&[BatchRequest { cells: cells.to_vec() }])?;
+        Ok(res.pop().expect("one batch in, one batch out"))
+    }
+
+    /// Predictive means for spatial inputs that were never part of the
+    /// training grid: rows of `s_star` are new points in the same
+    /// standardized coordinate space as the training inputs, and the
+    /// returned `m x q` matrix holds the raw-scale mean across the full
+    /// time grid for each.
+    ///
+    /// This is the amortized-GEMM serving path: the engine-resident
+    /// half-product `unvec(M alpha) K_TT^T` is reused by every call, so
+    /// each batch costs one `m x p` cross-Gram and one
+    /// `m x p @ p x q` GEMM. Pathwise variances are not available
+    /// off-grid (prior function samples exist only on the grid), so
+    /// this returns means only; use grid queries for calibrated
+    /// uncertainty.
+    pub fn predict_new_points(&self, s_star: &Matrix<f64>) -> Result<Matrix<f64>> {
+        if s_star.cols != self.model.ds {
+            bail!("query points have {} columns, model expects ds={}", s_star.cols, self.model.ds);
+        }
+        let k_star = self.kernel.spatial.gram(s_star, &self.model.s);
+        let mut g = k_star.matmul(&self.half_alpha);
+        for x in &mut g.data {
+            *x = *x * self.model.y_std + self.model.y_mean;
+        }
+        Ok(g)
+    }
+}
+
+/// Recompute the full-grid posterior from the checkpointed pathwise
+/// state, in the fit's compute precision `T`.
+///
+/// Replays the fit's prediction phase exactly: the same backend type,
+/// the same Gram construction from the same hyperparameter bits, the
+/// same `kron_apply` entry point, the same [`PATHWISE_CHUNK`]-row
+/// sample chunks in the same order, and the same f64 moment
+/// accumulation — which is what makes the result bit-identical to the
+/// in-memory fit rather than merely close.
+fn reconstruct<T: Scalar>(m: &TrainedModel) -> Result<Posterior> {
+    let q = m.q();
+    let pq = m.grid_len();
+    let mut be = RustKronBackend::<T>::new(m.ds, &m.time_family, q, 1).with_mode(MvmMode::Kron);
+    be.set_data(&m.s, &m.t, &m.mask).context("installing checkpointed data")?;
+    be.set_hypers(&m.theta, m.log_sigma2).context("rebuilding Gram factors")?;
+    let to_t = |row: &[f64]| -> Vec<T> { row.iter().map(|&x| T::from_f64(x)).collect() };
+
+    let ma = Matrix::from_vec(1, pq, to_t(&m.masked_alpha));
+    let mean_std_t = be.kron_apply(&ma).context("predictive-mean MVM")?;
+    let mean_std: Vec<f64> = mean_std_t.row(0).iter().map(|x| x.to_f64()).collect();
+
+    let mut mean_acc = vec![0.0f64; pq];
+    let mut var_acc = vec![0.0f64; pq];
+    let nsamp = m.n_samples;
+    let mut done = 0;
+    while done < nsamp {
+        let b = PATHWISE_CHUNK.min(nsamp - done);
+        let mut vm_chunk = Matrix::<T>::zeros(b, pq);
+        let mut f_chunk = Matrix::<T>::zeros(b, pq);
+        for r in 0..b {
+            vm_chunk.row_mut(r).copy_from_slice(&to_t(m.vm.row(done + r)));
+            f_chunk.row_mut(r).copy_from_slice(&to_t(m.f_prior.row(done + r)));
+        }
+        let kv = be.kron_apply(&vm_chunk).context("pathwise MVM")?;
+        accumulate_pathwise_moments(&f_chunk, &kv, &mut mean_acc, &mut var_acc);
+        done += b;
+    }
+    Ok(finalize_posterior(
+        &mean_std,
+        &mean_acc,
+        &var_acc,
+        nsamp,
+        m.log_sigma2.exp(),
+        m.y_mean,
+        m.y_std,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::well_specified;
+    use crate::gp::lkgp::{Lkgp, LkgpConfig};
+    use crate::kernels::ProductGridKernel as Pgk;
+
+    fn fitted(seed: u64) -> crate::gp::lkgp::LkgpFit {
+        let kernel = Pgk::new(2, "rbf", 6);
+        let data = well_specified(12, 6, 2, &kernel, 0.02, 0.3, seed);
+        let cfg = LkgpConfig {
+            train_iters: 5,
+            n_samples: 8,
+            probes: 4,
+            cg_tol: 1e-3,
+            cg_max_iters: 200,
+            seed,
+            capture_pathwise: true,
+            ..LkgpConfig::default()
+        };
+        Lkgp::fit(&data, cfg).unwrap()
+    }
+
+    #[test]
+    fn reconstruction_matches_fit_bit_for_bit() {
+        let fit = fitted(3);
+        let engine = ServeEngine::from_model(fit.model.clone().unwrap()).unwrap();
+        let rep = engine.verify();
+        assert!(
+            rep.bit_identical,
+            "reconstructed posterior deviates: mean {} var {}",
+            rep.max_mean_diff,
+            rep.max_var_diff
+        );
+        let recon = engine.reconstructed();
+        for c in 0..fit.posterior.mean.len() {
+            assert_eq!(fit.posterior.mean[c].to_bits(), recon.mean[c].to_bits());
+            assert_eq!(fit.posterior.var[c].to_bits(), recon.var[c].to_bits());
+        }
+    }
+
+    #[test]
+    fn batch_grouping_does_not_change_answers() {
+        let fit = fitted(5);
+        let engine = ServeEngine::from_model(fit.model.unwrap()).unwrap();
+        let pq = engine.model().grid_len();
+        let all: Vec<usize> = (0..pq).collect();
+        let one = engine.predict_cells(&all).unwrap();
+        // same cells split into ragged batches
+        let batches: Vec<BatchRequest> = vec![
+            BatchRequest { cells: all[..5].to_vec() },
+            BatchRequest { cells: all[5..6].to_vec() },
+            BatchRequest { cells: all[6..].to_vec() },
+        ];
+        let many = engine.predict_batch(&batches).unwrap();
+        let glued_mean: Vec<f64> = many.iter().flat_map(|r| r.mean.iter().copied()).collect();
+        let glued_var: Vec<f64> = many.iter().flat_map(|r| r.var.iter().copied()).collect();
+        assert_eq!(
+            one.mean.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            glued_mean.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            one.var.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            glued_var.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn out_of_range_cell_is_rejected() {
+        let fit = fitted(7);
+        let engine = ServeEngine::from_model(fit.model.unwrap()).unwrap();
+        let pq = engine.model().grid_len();
+        let err = engine.predict_cells(&[0, pq]).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+    }
+
+    #[test]
+    fn new_point_means_agree_with_grid_means_at_training_points() {
+        let fit = fitted(11);
+        let engine = ServeEngine::from_model(fit.model.unwrap()).unwrap();
+        let m = engine.model();
+        let (q, pq) = (m.q(), m.grid_len());
+        // query the training inputs themselves as "new" points
+        let s_star = m.s.clone();
+        let got = engine.predict_new_points(&s_star).unwrap();
+        let grid = engine.predict_cells(&(0..pq).collect::<Vec<_>>()).unwrap();
+        let scale = grid.mean.iter().map(|x| x.abs()).fold(1.0, f64::max);
+        for j in 0..m.p() {
+            for k in 0..q {
+                let want = grid.mean[j * q + k];
+                let have = got[(j, k)];
+                assert!(
+                    (want - have).abs() < 1e-7 * scale,
+                    "cell ({j},{k}): grid {want} vs new-point {have}"
+                );
+            }
+        }
+    }
+}

@@ -16,9 +16,13 @@ use crate::linalg::{Matrix, Scalar};
 
 use super::cg::{BatchedOp, CgStats};
 
+/// Stopping criteria and block size for [`solve_altproj`].
 pub struct AltProjOptions {
+    /// Coordinate-block size b.
     pub block_size: usize,
+    /// Maximum full sweeps over all blocks.
     pub max_sweeps: usize,
+    /// Relative residual tolerance.
     pub tol: f64,
 }
 

@@ -14,7 +14,9 @@ use super::precond::Preconditioner;
 /// A symmetric positive definite operator applied to a batch of row
 /// vectors: `out[b] = A v[b]`.
 pub trait BatchedOp<T: Scalar> {
+    /// Dimension n of the operator (rows of `v` have n columns).
     fn dim(&self) -> usize;
+    /// Apply the operator to every row of `v`: `out[b] = A v[b]`.
     fn apply_batch(&mut self, v: &Matrix<T>) -> Matrix<T>;
     /// Operators whose applies can fail mid-solve (e.g. a PJRT backend,
     /// see `gp::backend::SystemOp`) report it here so the solver stops
@@ -39,7 +41,10 @@ impl<T: Scalar, O: BatchedOp<T> + ?Sized> BatchedOp<T> for &mut O {
 }
 
 /// Dense matrix as a BatchedOp (baselines, tests).
-pub struct DenseOp<'a, T: Scalar>(pub &'a Matrix<T>);
+pub struct DenseOp<'a, T: Scalar>(
+    /// The (symmetric) system matrix.
+    pub &'a Matrix<T>,
+);
 
 impl<'a, T: Scalar> BatchedOp<T> for DenseOp<'a, T> {
     fn dim(&self) -> usize {
@@ -51,8 +56,10 @@ impl<'a, T: Scalar> BatchedOp<T> for DenseOp<'a, T> {
     }
 }
 
+/// Stopping criteria for [`solve_cg`].
 #[derive(Clone, Debug)]
 pub struct CgOptions {
+    /// Iteration cap per solve.
     pub max_iters: usize,
     /// relative residual norm tolerance ||r|| / ||b||.
     pub tol: f64,
@@ -64,12 +71,16 @@ impl Default for CgOptions {
     }
 }
 
+/// Convergence report of one [`solve_cg`] call.
 #[derive(Clone, Debug, Default)]
 pub struct CgStats {
+    /// Iterations executed.
     pub iters: usize,
+    /// Batched operator applications performed.
     pub mvm_count: usize,
     /// final relative residuals per system
     pub rel_residuals: Vec<f64>,
+    /// True when every system met the tolerance.
     pub converged: bool,
 }
 

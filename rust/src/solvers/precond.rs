@@ -10,13 +10,30 @@
 use crate::linalg::chol::{cholesky, Cholesky};
 use crate::linalg::{Matrix, Scalar};
 
+/// A CG preconditioner `M ~ A` applied as `z = M^{-1} r` per iteration.
 pub enum Preconditioner<T: Scalar> {
+    /// No preconditioning (M = I).
     Identity,
-    Jacobi { inv_diag: Vec<T> },
-    LowRankPlusNoise { l: Matrix<T>, sigma2: T, cap_chol: Cholesky<T> },
+    /// Diagonal scaling.
+    Jacobi {
+        /// Reciprocal of the system diagonal.
+        inv_diag: Vec<T>,
+    },
+    /// The paper's pivoted-Cholesky preconditioner
+    /// `M = L L^T + sigma2 I`, applied via the Woodbury identity.
+    LowRankPlusNoise {
+        /// Rank-r pivoted Cholesky factor (n x r).
+        l: Matrix<T>,
+        /// Observation-noise variance on the diagonal.
+        sigma2: T,
+        /// Cholesky of the r x r capacitance `sigma2 I + L^T L`.
+        cap_chol: Cholesky<T>,
+    },
 }
 
 impl<T: Scalar> Preconditioner<T> {
+    /// Jacobi preconditioner from the system diagonal (clamped away
+    /// from zero).
     pub fn jacobi(diag: &[f64]) -> Self {
         Preconditioner::Jacobi {
             inv_diag: diag.iter().map(|&d| T::from_f64(1.0 / d.max(1e-12))).collect(),

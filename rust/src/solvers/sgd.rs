@@ -12,9 +12,13 @@ use crate::linalg::{Matrix, Scalar};
 
 use super::cg::{BatchedOp, CgStats};
 
+/// Stopping criteria and dynamics for the SGD solver.
 pub struct SgdOptions {
+    /// Gradient-step cap.
     pub max_iters: usize,
+    /// Relative residual tolerance.
     pub tol: f64,
+    /// Heavy-ball momentum coefficient.
     pub momentum: f64,
     /// iterate-averaging window fraction (tail averaging)
     pub avg_frac: f64,

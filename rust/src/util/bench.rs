@@ -12,22 +12,31 @@ use super::json::Json;
 /// One benchmark measurement result.
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// Benchmark label.
     pub name: String,
+    /// Median nanoseconds per call across samples.
     pub median_ns: f64,
+    /// Mean nanoseconds per call.
     pub mean_ns: f64,
+    /// 10th-percentile nanoseconds per call.
     pub p10_ns: f64,
+    /// 90th-percentile nanoseconds per call.
     pub p90_ns: f64,
+    /// Number of timed samples.
     pub samples: usize,
+    /// FLOPs per call, when the caller annotated throughput.
     pub flops: Option<f64>,
     /// worker threads in effect (`crate::par`) when the measurement ran
     pub threads: usize,
 }
 
 impl Measurement {
+    /// Median seconds per call.
     pub fn secs(&self) -> f64 {
         self.median_ns / 1e9
     }
 
+    /// One human-readable report line.
     pub fn report(&self) -> String {
         let human = |ns: f64| {
             if ns < 1e3 {
@@ -59,8 +68,11 @@ impl Measurement {
 
 /// Bench runner with a global time budget per measurement.
 pub struct Bencher {
+    /// Target wall time per sample (inner iterations auto-calibrate).
     pub sample_target: Duration,
+    /// Samples per measurement.
     pub samples: usize,
+    /// Completed measurements, in run order.
     pub results: Vec<Measurement>,
 }
 
@@ -81,6 +93,7 @@ pub fn black_box<T>(x: T) -> T {
 }
 
 impl Bencher {
+    /// Short-budget bencher (smoke mode).
     pub fn quick() -> Self {
         Bencher { sample_target: Duration::from_millis(60), samples: 3, results: Vec::new() }
     }

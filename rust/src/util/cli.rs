@@ -5,8 +5,10 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line: subcommand, `--key value` flags, positionals.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// First bare argument, if any (e.g. `train`).
     pub subcommand: Option<String>,
     flags: BTreeMap<String, String>,
     positional: Vec<String>,
@@ -41,6 +43,7 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments.
     pub fn from_env() -> Self {
         Self::parse(std::env::args().skip(1))
     }
@@ -49,27 +52,33 @@ impl Args {
         self.seen.borrow_mut().push(key.to_string());
     }
 
+    /// Raw flag value, if provided.
     pub fn str_opt(&self, key: &str) -> Option<String> {
         self.mark(key);
         self.flags.get(key).cloned()
     }
 
+    /// String flag with a default.
     pub fn str(&self, key: &str, default: &str) -> String {
         self.str_opt(key).unwrap_or_else(|| default.to_string())
     }
 
+    /// Unsigned-integer flag with a default (unparseable -> default).
     pub fn usize(&self, key: &str, default: usize) -> usize {
         self.str_opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// u64 flag with a default (unparseable -> default).
     pub fn u64(&self, key: &str, default: u64) -> u64 {
         self.str_opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Float flag with a default (unparseable -> default).
     pub fn f64(&self, key: &str, default: f64) -> f64 {
         self.str_opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Boolean flag: present (and not `false`/`0`) means true.
     pub fn bool(&self, key: &str) -> bool {
         self.str_opt(key).map(|v| v != "false" && v != "0").unwrap_or(false)
     }
@@ -82,6 +91,32 @@ impl Args {
         }
     }
 
+    /// Comma-separated list of unsigned integers, e.g. `--cells 0,5,12`
+    /// (`lkgp predict`). Strict: `Ok(None)` when the flag is absent,
+    /// and `Err` naming the offending token when any entry fails to
+    /// parse — a typo must not silently change the query. Empty tokens
+    /// (trailing commas) are ignored.
+    pub fn usize_list(&self, key: &str) -> Result<Option<Vec<usize>>, String> {
+        let Some(raw) = self.str_opt(key) else {
+            return Ok(None);
+        };
+        // a bare `--key` (no value) parses as the boolean sentinel
+        if raw == "true" {
+            return Err(format!("--{key} requires a comma-separated list of unsigned integers"));
+        }
+        let mut out = Vec::new();
+        for tok in raw.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            match tok.parse() {
+                Ok(v) => out.push(v),
+                Err(_) => {
+                    return Err(format!("--{key}: {tok:?} is not an unsigned integer"))
+                }
+            }
+        }
+        Ok(Some(out))
+    }
+
+    /// Bare (non-flag) arguments after the subcommand.
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
@@ -128,6 +163,22 @@ mod tests {
         let a = parse("run --ratios=0.1,0.5,0.9 --lr=0.1");
         assert_eq!(a.f64_list("ratios", &[]), vec![0.1, 0.5, 0.9]);
         assert_eq!(a.f64("lr", 0.0), 0.1);
+    }
+
+    #[test]
+    fn usize_lists_are_strict() {
+        let a = parse("predict --cells=3,1,4");
+        assert_eq!(a.usize_list("cells"), Ok(Some(vec![3, 1, 4])));
+        assert_eq!(a.usize_list("rows"), Ok(None));
+        // trailing comma is tolerated, a typo is not
+        let b = parse("predict --cells 0,5,");
+        assert_eq!(b.usize_list("cells"), Ok(Some(vec![0, 5])));
+        let c = parse("predict --cells 0,x2");
+        assert!(c.usize_list("cells").unwrap_err().contains("\"x2\""));
+        // a bare flag (value forgotten) errors instead of leaking the
+        // boolean sentinel into the parse
+        let d = parse("predict --cells --json out.json");
+        assert!(d.usize_list("cells").unwrap_err().contains("requires"));
     }
 
     #[test]

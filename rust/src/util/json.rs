@@ -12,15 +12,22 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object; insertion order is preserved for serialization.
     Obj(Vec<(String, Json)>),
 }
 
 impl Json {
+    /// Parse a complete JSON document.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.skip_ws();
@@ -32,6 +39,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Object member lookup (`None` for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
@@ -51,6 +59,7 @@ impl Json {
         cur
     }
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -58,10 +67,12 @@ impl Json {
         }
     }
 
+    /// Numeric value truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -69,6 +80,7 @@ impl Json {
         }
     }
 
+    /// Array elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -76,6 +88,7 @@ impl Json {
         }
     }
 
+    /// Key/value pairs, if this is an object.
     pub fn as_obj(&self) -> Option<&[(String, Json)]> {
         match self {
             Json::Obj(kv) => Some(kv),
@@ -91,18 +104,29 @@ impl Json {
         }
     }
 
+    /// Build an object from `(&str, Json)` pairs (insertion order kept).
     pub fn obj(kv: Vec<(&str, Json)>) -> Json {
         Json::Obj(kv.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Array of numbers from an f64 slice.
     pub fn arr_f64(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
+
+    /// Array of numbers from a usize slice (e.g. the grid-cell index
+    /// lists `lkgp predict --json` emits).
+    pub fn arr_usize(xs: &[usize]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
 }
 
+/// Parse failure with the byte offset where it occurred.
 #[derive(Debug)]
 pub struct JsonError {
+    /// Byte offset of the failure.
     pub pos: usize,
+    /// What went wrong.
     pub msg: String,
 }
 

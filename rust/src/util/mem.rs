@@ -9,18 +9,22 @@
 /// Analytic byte accounting for matrix storage.
 #[derive(Default, Debug, Clone, Copy)]
 pub struct ByteCounter {
+    /// Accumulated bytes.
     pub bytes: u64,
 }
 
 impl ByteCounter {
+    /// Count an f32 matrix of the given shape.
     pub fn add_matrix_f32(&mut self, rows: usize, cols: usize) {
         self.bytes += (rows as u64) * (cols as u64) * 4;
     }
 
+    /// Count an f32 vector of length n.
     pub fn add_vector_f32(&mut self, n: usize) {
         self.bytes += n as u64 * 4;
     }
 
+    /// Accumulated mebibytes.
     pub fn mib(&self) -> f64 {
         self.bytes as f64 / (1024.0 * 1024.0)
     }

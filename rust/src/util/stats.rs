@@ -33,6 +33,7 @@ pub fn gaussian_nll(mean: &[f64], var: &[f64], target: &[f64]) -> f64 {
     s / mean.len() as f64
 }
 
+/// Arithmetic mean (0 for an empty slice).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
@@ -40,6 +41,7 @@ pub fn mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
+/// Unbiased sample variance (0 for fewer than two values).
 pub fn variance(xs: &[f64]) -> f64 {
     if xs.len() < 2 {
         return 0.0;

@@ -9,12 +9,16 @@ use std::fmt::Write as _;
 /// A simple rectangular table with a header row.
 #[derive(Clone, Debug, Default)]
 pub struct Table {
+    /// Caption printed above the table.
     pub title: String,
+    /// Column headers.
     pub header: Vec<String>,
+    /// Data rows (each matching the header arity).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Empty table with a title and column headers.
     pub fn new(title: &str, header: &[&str]) -> Self {
         Table {
             title: title.to_string(),
@@ -23,6 +27,7 @@ impl Table {
         }
     }
 
+    /// Append one row (asserts the arity).
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
         self.rows.push(cells);

@@ -11,22 +11,27 @@ use super::rng::Rng;
 
 /// Value generators for property tests.
 pub struct Gen {
+    /// The underlying seeded generator (exposed for custom draws).
     pub rng: Rng,
 }
 
 impl Gen {
+    /// Uniform size in `[lo, hi]` inclusive.
     pub fn size(&mut self, lo: usize, hi: usize) -> usize {
         lo + self.rng.below(hi - lo + 1)
     }
 
+    /// Uniform float in `[lo, hi)`.
     pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
         self.rng.uniform_in(lo, hi)
     }
 
+    /// n standard-normal f64 draws.
     pub fn vec_normal(&mut self, n: usize) -> Vec<f64> {
         self.rng.normals(n)
     }
 
+    /// n standard-normal f32 draws.
     pub fn vec_normal_f32(&mut self, n: usize) -> Vec<f32> {
         self.rng.normals_f32(n)
     }

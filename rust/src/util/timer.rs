@@ -8,14 +8,17 @@ use std::time::{Duration, Instant};
 pub struct Stopwatch(Instant);
 
 impl Stopwatch {
+    /// Start timing now.
     pub fn start() -> Self {
         Stopwatch(Instant::now())
     }
 
+    /// Elapsed time since start.
     pub fn elapsed(&self) -> Duration {
         self.0.elapsed()
     }
 
+    /// Elapsed seconds since start.
     pub fn secs(&self) -> f64 {
         self.elapsed().as_secs_f64()
     }
@@ -28,6 +31,7 @@ pub struct Profile {
 }
 
 impl Profile {
+    /// Empty profile.
     pub fn new() -> Self {
         Self::default()
     }
@@ -40,20 +44,24 @@ impl Profile {
         out
     }
 
+    /// Add a duration sample under `name`.
     pub fn add(&mut self, name: &str, d: Duration) {
         let e = self.acc.entry(name.to_string()).or_insert((Duration::ZERO, 0));
         e.0 += d;
         e.1 += 1;
     }
 
+    /// Accumulated seconds under `name` (0 if never timed).
     pub fn secs(&self, name: &str) -> f64 {
         self.acc.get(name).map(|(d, _)| d.as_secs_f64()).unwrap_or(0.0)
     }
 
+    /// Sum over all phases.
     pub fn total_secs(&self) -> f64 {
         self.acc.values().map(|(d, _)| d.as_secs_f64()).sum()
     }
 
+    /// Fold another profile's phases into this one.
     pub fn merge(&mut self, other: &Profile) {
         for (k, (d, n)) in &other.acc {
             let e = self.acc.entry(k.clone()).or_insert((Duration::ZERO, 0));

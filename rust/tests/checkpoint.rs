@@ -1,0 +1,233 @@
+//! Checkpoint + serving integration tests: the train-once / serve-many
+//! contract.
+//!
+//! * save -> load -> serve reproduces the in-memory posterior **bit for
+//!   bit** in f64 (and within the documented tolerance in f32, where it
+//!   is in fact also bit-exact because the f32 state round-trips
+//!   losslessly through the f64-widened in-memory form).
+//! * Corrupted, truncated, and wrong-version checkpoints are rejected
+//!   with typed `CheckpointError`s, never panics.
+//! * Serving is bit-invariant across thread counts (1/2/4/8) and across
+//!   arbitrary regroupings of query batches.
+
+use lkgp::data::synthetic::well_specified;
+use lkgp::gp::backend::Precision;
+use lkgp::gp::lkgp::{Lkgp, LkgpConfig, LkgpFit};
+use lkgp::kernels::ProductGridKernel;
+use lkgp::model::io::{fnv64, CheckpointError, VERSION};
+use lkgp::model::TrainedModel;
+use lkgp::par;
+use lkgp::serve::{BatchRequest, ServeEngine};
+use lkgp::util::testing::assert_close;
+
+fn fit_small(precision: Precision, seed: u64) -> LkgpFit {
+    let kernel = ProductGridKernel::new(2, "rbf", 6);
+    let data = well_specified(16, 6, 2, &kernel, 0.02, 0.3, seed);
+    let cfg = LkgpConfig {
+        train_iters: 6,
+        n_samples: 8,
+        probes: 4,
+        cg_tol: 1e-3,
+        cg_max_iters: 200,
+        seed,
+        precision,
+        capture_pathwise: true,
+        ..LkgpConfig::default()
+    };
+    Lkgp::fit(&data, cfg).unwrap()
+}
+
+fn tmp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("lkgp_ckpt_test_{}_{tag}.ckpt", std::process::id()))
+}
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn save_load_serve_is_bit_identical_in_f64() {
+    let fit = fit_small(Precision::F64, 3);
+    let model = fit.model.as_ref().unwrap();
+    let path = tmp_path("f64");
+    let n_bytes = model.save(&path).unwrap();
+    assert!(n_bytes > 0);
+
+    let loaded = TrainedModel::load(&path).unwrap();
+    // the stored posterior survives the disk round trip exactly
+    assert_eq!(bits(&fit.posterior.mean), bits(&loaded.posterior.mean));
+    assert_eq!(bits(&fit.posterior.var), bits(&loaded.posterior.var));
+
+    // and serving reconstructs it bit for bit from the pathwise state
+    let engine = ServeEngine::open(&path).unwrap();
+    let rep = engine.verify();
+    assert!(
+        rep.bit_identical,
+        "reconstruction deviated: mean {} var {}",
+        rep.max_mean_diff,
+        rep.max_var_diff
+    );
+    let pq = engine.model().grid_len();
+    let res = engine.predict_cells(&(0..pq).collect::<Vec<_>>()).unwrap();
+    assert_eq!(bits(&fit.posterior.mean), bits(&res.mean));
+    assert_eq!(bits(&fit.posterior.var), bits(&res.var));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn save_load_serve_f32_within_precision_tolerance() {
+    let fit = fit_small(Precision::F32, 5);
+    let model = fit.model.as_ref().unwrap();
+    let path = tmp_path("f32");
+    model.save(&path).unwrap();
+    let loaded = TrainedModel::load(&path).unwrap();
+    assert_eq!(loaded.precision, Precision::F32);
+    // stored posterior is f64 and survives exactly
+    assert_eq!(bits(&fit.posterior.mean), bits(&loaded.posterior.mean));
+    // the f32 state tensors round-trip exactly (they originated as f32)
+    assert_eq!(bits(&model.vm.data), bits(&loaded.vm.data));
+
+    let engine = ServeEngine::from_model(loaded).unwrap();
+    // reconstruction replays the same f32 MVMs, so it lands well within
+    // the documented f32 accuracy contract (and is bit-exact in
+    // practice — the tolerance guards the contract, not the mechanism)
+    assert_close(&engine.reconstructed().mean, &fit.posterior.mean, 1e-4).unwrap();
+    assert_close(&engine.reconstructed().var, &fit.posterior.var, 1e-4).unwrap();
+    // serving itself always answers from the stored (exact) posterior
+    assert_eq!(bits(&engine.posterior().mean), bits(&fit.posterior.mean));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn f32_checkpoint_is_smaller_than_f64() {
+    let b64 = fit_small(Precision::F64, 7).model.unwrap().to_bytes();
+    let b32 = fit_small(Precision::F32, 7).model.unwrap().to_bytes();
+    // the three state tensors halve; metadata and posterior stay f64
+    assert!(
+        (b32.len() as f64) < 0.8 * b64.len() as f64,
+        "f32 checkpoint {} bytes vs f64 {} bytes",
+        b32.len(),
+        b64.len()
+    );
+}
+
+#[test]
+fn corrupted_checkpoints_are_rejected_with_typed_errors() {
+    let model = fit_small(Precision::F64, 9).model.unwrap();
+    let bytes = model.to_bytes();
+
+    // bit rot in the middle -> checksum mismatch
+    let mut flipped = bytes.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0x10;
+    match TrainedModel::from_bytes(&flipped) {
+        Err(CheckpointError::ChecksumMismatch { .. }) => {}
+        other => panic!("expected ChecksumMismatch, got {other:?}"),
+    }
+
+    // too short to even hold the header
+    match TrainedModel::from_bytes(&bytes[..12]) {
+        Err(CheckpointError::Truncated { .. }) => {}
+        other => panic!("expected Truncated, got {other:?}"),
+    }
+
+    // mid-body truncation with a re-stamped (valid) trailer
+    let cut = bytes.len() / 2;
+    let mut short = bytes[..cut].to_vec();
+    short.extend_from_slice(&fnv64(&short).to_le_bytes());
+    match TrainedModel::from_bytes(&short) {
+        Err(CheckpointError::Truncated { .. }) => {}
+        other => panic!("expected Truncated, got {other:?}"),
+    }
+
+    // future format version, well-formed otherwise
+    let mut vnext = bytes.clone();
+    vnext[8..12].copy_from_slice(&(VERSION + 1).to_le_bytes());
+    let n = vnext.len();
+    let sum = fnv64(&vnext[..n - 8]);
+    vnext[n - 8..].copy_from_slice(&sum.to_le_bytes());
+    match TrainedModel::from_bytes(&vnext) {
+        Err(CheckpointError::UnsupportedVersion { supported, .. }) => {
+            assert_eq!(supported, VERSION)
+        }
+        other => panic!("expected UnsupportedVersion, got {other:?}"),
+    }
+
+    // not a checkpoint at all
+    let mut junk = bytes;
+    junk[..8].copy_from_slice(b"NOTLKGP!");
+    let n = junk.len();
+    let sum = fnv64(&junk[..n - 8]);
+    junk[n - 8..].copy_from_slice(&sum.to_le_bytes());
+    match TrainedModel::from_bytes(&junk) {
+        Err(CheckpointError::BadMagic { .. }) => {}
+        other => panic!("expected BadMagic, got {other:?}"),
+    }
+}
+
+#[test]
+fn typed_error_survives_the_anyhow_chain_of_load() {
+    let model = fit_small(Precision::F64, 11).model.unwrap();
+    let mut bytes = model.to_bytes();
+    let mid = bytes.len() / 3;
+    bytes[mid] ^= 0x01;
+    let path = tmp_path("corrupt");
+    std::fs::write(&path, &bytes).unwrap();
+    let err = TrainedModel::load(&path).unwrap_err();
+    let typed = err
+        .downcast_ref::<CheckpointError>()
+        .unwrap_or_else(|| panic!("no CheckpointError in chain: {err:#}"));
+    assert!(matches!(typed, CheckpointError::ChecksumMismatch { .. }), "{typed}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn serving_is_bit_invariant_across_thread_counts() {
+    let fit = fit_small(Precision::F64, 13);
+    let model = fit.model.unwrap();
+    let pq = model.grid_len();
+    // ragged batch mix exercising the steal-scheduled coalesced sweep
+    let batches: Vec<BatchRequest> = vec![
+        BatchRequest { cells: (0..pq).collect() },
+        BatchRequest { cells: vec![0] },
+        BatchRequest { cells: (0..pq).rev().take(7).collect() },
+        BatchRequest { cells: vec![] },
+        BatchRequest { cells: (0..pq).step_by(3).collect() },
+    ];
+    let run = |t: usize| {
+        par::with_threads(t, || {
+            let engine = ServeEngine::from_model(model.clone()).unwrap();
+            assert!(engine.verify().bit_identical, "replay broke at {t} threads");
+            let res = engine.predict_batch(&batches).unwrap();
+            let mut out: Vec<u64> = bits(&engine.reconstructed().mean);
+            out.extend(bits(&engine.reconstructed().var));
+            for r in &res {
+                out.extend(bits(&r.mean));
+                out.extend(bits(&r.var));
+            }
+            out
+        })
+    };
+    let want = run(1);
+    for t in [2usize, 4, 8] {
+        assert_eq!(want, run(t), "thread count {t} changed served bits");
+    }
+}
+
+#[test]
+fn f32_serving_is_bit_invariant_across_thread_counts() {
+    let fit = fit_small(Precision::F32, 17);
+    let model = fit.model.unwrap();
+    let run = |t: usize| {
+        par::with_threads(t, || {
+            let engine = ServeEngine::from_model(model.clone()).unwrap();
+            let mut out = bits(&engine.reconstructed().mean);
+            out.extend(bits(&engine.reconstructed().var));
+            out
+        })
+    };
+    let want = run(1);
+    for t in [2usize, 4, 8] {
+        assert_eq!(want, run(t), "thread count {t} changed f32 served bits");
+    }
+}
