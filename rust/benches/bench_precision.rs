@@ -133,7 +133,7 @@ fn main() {
     let diag = sys64.diag();
     let pre64: Preconditioner<f64> = Preconditioner::jacobi(&diag);
     let pre32: Preconditioner<f32> = Preconditioner::jacobi(&diag);
-    let cg_opts = CgOptions { max_iters: cg_iters, tol: 0.0 };
+    let cg_opts = CgOptions { max_iters: cg_iters, tol: 0.0, ..CgOptions::default() };
     let t_cg64 = b
         .bench(&format!("cg {cg_iters}it rhs={rhs_rows} f64"), || {
             black_box(solve_cg(&mut SysOp(&sys64), &rhs64, &pre64, &cg_opts))

@@ -46,7 +46,7 @@ fn main() {
             }
             r
         };
-        let opts = CgOptions { max_iters: 400, tol: 1e-2 };
+        let opts = CgOptions { max_iters: 400, tol: 1e-2, ..CgOptions::default() };
         for (pname, pre) in [
             ("identity", Preconditioner::Identity),
             ("jacobi", Preconditioner::jacobi(&sys.diag())),

@@ -29,7 +29,7 @@ pub fn knn(xs: &Matrix<f64>, query: &[f64], k: usize, exclude: Option<usize>) ->
         let d = sqdist(xs.row(i), query);
         if best.len() < k {
             best.push((d, i));
-            best.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            best.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
         } else if d < best[k - 1].0 {
             best[k - 1] = (d, i);
             let mut j = k - 1;

@@ -28,8 +28,10 @@ fn pick_rows(data: &GridDataset) -> Vec<usize> {
     let median = by_prefix[by_prefix.len() / 2];
     let outlier = *censored
         .iter()
-        .max_by(|&&a, &&b| outlier_score(a).partial_cmp(&outlier_score(b)).unwrap())
-        .unwrap();
+        .max_by(|&&a, &&b| {
+            outlier_score(a).partial_cmp(&outlier_score(b)).unwrap_or(std::cmp::Ordering::Equal)
+        })
+        .expect("censored is non-empty: guarded by the caller above");
     vec![shortest, median, outlier]
 }
 

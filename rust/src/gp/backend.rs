@@ -115,20 +115,41 @@ pub trait KronBackend<T: Scalar = f64> {
 /// Adapter: use a backend as a CG operator.
 ///
 /// `BatchedOp::apply_batch` is infallible by contract, but backend MVMs
-/// (notably PJRT execution) can fail mid-solve. Instead of panicking,
-/// the first failure is parked in an error slot, `BatchedOp::failed`
-/// reports it so `solve_cg` stops at its next check, and the caller
-/// surfaces the error through [`SystemOp::take_err`] after the solve —
-/// see `gp/lkgp.rs`.
+/// (notably PJRT execution) can fail mid-solve. A failing apply is
+/// retried up to a bounded number of times with doubling backoff (see
+/// [`SystemOp::with_retries`]; retrying an identical deterministic MVM
+/// cannot change bits — a retried success returns exactly the value a
+/// first-try success would have). Once retries are exhausted the
+/// failure is parked in an error slot, `BatchedOp::failed` reports it
+/// so `solve_cg` stops at its next check, and the caller surfaces the
+/// error through [`SystemOp::take_err`] after the solve — see
+/// `gp/lkgp.rs`.
 pub struct SystemOp<'a, B> {
     be: &'a mut B,
     err: Option<anyhow::Error>,
+    max_retries: usize,
+    backoff_ms: u64,
+    retries: u64,
 }
 
 impl<'a, B> SystemOp<'a, B> {
-    /// Wrap a backend for the duration of one CG solve.
+    /// Wrap a backend for the duration of one CG solve (no retries).
     pub fn new(be: &'a mut B) -> Self {
-        SystemOp { be, err: None }
+        SystemOp::with_retries(be, 0, 0)
+    }
+
+    /// Wrap a backend, retrying each failing MVM up to `max_retries`
+    /// times. The first retry waits `backoff_ms` milliseconds and each
+    /// further retry doubles the wait (`backoff_ms = 0` retries
+    /// immediately — keep it 0 in tests for determinism of *runtime*;
+    /// numeric outputs are unaffected either way).
+    pub fn with_retries(be: &'a mut B, max_retries: usize, backoff_ms: u64) -> Self {
+        SystemOp { be, err: None, max_retries, backoff_ms, retries: 0 }
+    }
+
+    /// MVM retries performed so far (across all applies of this solve).
+    pub fn retries(&self) -> u64 {
+        self.retries
     }
 
     /// Return the first backend error observed during the solve, if any.
@@ -149,11 +170,24 @@ impl<'a, T: Scalar, B: KronBackend<T>> BatchedOp<T> for SystemOp<'a, B> {
         if self.err.is_some() {
             return Matrix::zeros(v.rows, v.cols);
         }
-        match self.be.system_mvm(v) {
-            Ok(out) => out,
-            Err(e) => {
-                self.err = Some(e);
-                Matrix::zeros(v.rows, v.cols)
+        let mut attempt = 0;
+        let mut wait_ms = self.backoff_ms;
+        loop {
+            match self.be.system_mvm(v) {
+                Ok(out) => return out,
+                Err(e) if attempt < self.max_retries => {
+                    attempt += 1;
+                    self.retries += 1;
+                    let _ = e; // transient: drop and retry
+                    if wait_ms > 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(wait_ms));
+                        wait_ms = wait_ms.saturating_mul(2);
+                    }
+                }
+                Err(e) => {
+                    self.err = Some(e);
+                    return Matrix::zeros(v.rows, v.cols);
+                }
             }
         }
     }
@@ -269,7 +303,7 @@ impl<T: Scalar> KronBackend<T> for RustKronBackend<T> {
         if self.mode == MvmMode::DenseMaterialized {
             // n x n observed Gram in f32 (what the standard iterative
             // baseline stores on the GPU); rows built in parallel
-            let sys = self.sys.as_ref().unwrap();
+            let sys = self.sys.as_ref().expect("sys installed above");
             let n = self.obs_idx.len();
             let q = sys.op.q();
             let mut dense = Matrix::<f32>::zeros(n, n);
@@ -291,8 +325,15 @@ impl<T: Scalar> KronBackend<T> for RustKronBackend<T> {
     }
 
     fn system_mvm(&mut self, v: &Matrix<T>) -> Result<Matrix<T>> {
-        match &self.mode {
-            MvmMode::Kron => Ok(self.sys().apply_batch(v)),
+        let fault = crate::util::failpoint::check("backend_mvm");
+        if matches!(fault, Some(crate::util::failpoint::FaultAction::Error)) {
+            return Err(anyhow::Error::new(crate::util::failpoint::InjectedFault {
+                site: "backend_mvm".into(),
+                action: crate::util::failpoint::FaultAction::Error,
+            }));
+        }
+        let mut out = match &self.mode {
+            MvmMode::Kron => self.sys().apply_batch(v),
             MvmMode::DenseMaterialized => {
                 let dense = self.dense.as_ref().context("dense gram")?;
                 let s2 = T::from_f64(self.log_sigma2.exp());
@@ -319,7 +360,7 @@ impl<T: Scalar> KronBackend<T> for RustKronBackend<T> {
                         *o += s2 * *vi;
                     }
                 });
-                Ok(out)
+                out
             }
             MvmMode::DenseLazy { block_rows } => {
                 let sys = self.sys.as_ref().context("hypers")?;
@@ -349,9 +390,13 @@ impl<T: Scalar> KronBackend<T> for RustKronBackend<T> {
                     }
                     out.row_mut(b).copy_from_slice(&padded);
                 }
-                Ok(out)
+                out
             }
+        };
+        if matches!(fault, Some(crate::util::failpoint::FaultAction::Nan)) {
+            out[(0, 0)] = T::from_f64(f64::NAN);
         }
+        Ok(out)
     }
 
     fn kron_apply(&mut self, v: &Matrix<T>) -> Result<Matrix<T>> {
@@ -594,6 +639,13 @@ impl KronBackend<f64> for PjrtKronBackend {
     }
 
     fn system_mvm(&mut self, v: &Matrix<f64>) -> Result<Matrix<f64>> {
+        let fault = crate::util::failpoint::check("backend_mvm");
+        if matches!(fault, Some(crate::util::failpoint::FaultAction::Error)) {
+            return Err(anyhow::Error::new(crate::util::failpoint::InjectedFault {
+                site: "backend_mvm".into(),
+                action: crate::util::failpoint::FaultAction::Error,
+            }));
+        }
         self.check_fresh()?;
         let [kss, ktt] = self.gram_inputs();
         let fixed = [
@@ -602,7 +654,11 @@ impl KronBackend<f64> for PjrtKronBackend {
             TensorF32::vec1(self.mask32.clone()),
             TensorF32::scalar(convert::f32_of(self.log_sigma2.exp())),
         ];
-        self.exec_batched("kron_mvm", &fixed, v)
+        let mut out = self.exec_batched("kron_mvm", &fixed, v)?;
+        if matches!(fault, Some(crate::util::failpoint::FaultAction::Nan)) {
+            out[(0, 0)] = f64::NAN;
+        }
+        Ok(out)
     }
 
     fn kron_apply(&mut self, v: &Matrix<f64>) -> Result<Matrix<f64>> {

@@ -1,0 +1,174 @@
+//! Fit/serve health diagnostics.
+//!
+//! Every `Lkgp::fit` (and `serve::ServeEngine` reconstruction) records
+//! what its iterative solves actually did — iterations, residuals,
+//! non-convergence, recovery actions taken — in a [`FitDiagnostics`]
+//! attached to the result. A fit that silently recovered (preconditioner
+//! fallback, MVM retry, CG restart) still succeeds, but the diagnostics
+//! make the recovery visible to the CLI, the serving layer, and tests.
+
+/// What to do when a CG solve finishes without reaching its tolerance.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OnNonConverged {
+    /// Record it in [`FitDiagnostics`] and print one warning per fit
+    /// (the default — matches the paper's loose 0.01 tolerance, where a
+    /// near-miss is usually benign).
+    #[default]
+    Warn,
+    /// Fail the fit with a typed `SolveError::NotConverged`.
+    Error,
+}
+
+impl OnNonConverged {
+    /// Parse `"warn"` / `"error"` (case-insensitive).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "warn" => Ok(OnNonConverged::Warn),
+            "error" => Ok(OnNonConverged::Error),
+            _ => Err(format!("invalid on_nonconverged value {s:?} (expected warn|error)")),
+        }
+    }
+
+    /// Read `LKGP_ON_NONCONVERGED` from the environment (default Warn;
+    /// an invalid value warns and falls back to Warn).
+    pub fn from_env() -> Self {
+        match std::env::var("LKGP_ON_NONCONVERGED") {
+            Ok(v) if !v.trim().is_empty() => Self::parse(v.trim()).unwrap_or_else(|e| {
+                eprintln!("warning: {e}; using warn");
+                OnNonConverged::Warn
+            }),
+            _ => OnNonConverged::Warn,
+        }
+    }
+}
+
+/// Preconditioner strength levels, ordered by the fallback chain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrecondLevel {
+    /// The paper's pivoted-Cholesky + Woodbury preconditioner.
+    PivotedCholesky,
+    /// Diagonal (Jacobi) scaling.
+    Jacobi,
+    /// No preconditioning.
+    Identity,
+}
+
+impl std::fmt::Display for PrecondLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PrecondLevel::PivotedCholesky => write!(f, "pivoted-cholesky"),
+            PrecondLevel::Jacobi => write!(f, "jacobi"),
+            PrecondLevel::Identity => write!(f, "identity"),
+        }
+    }
+}
+
+/// One preconditioner downgrade taken during a fit.
+#[derive(Clone, Debug)]
+pub struct PrecondFallback {
+    /// Level that failed.
+    pub from: PrecondLevel,
+    /// Level that replaced it.
+    pub to: PrecondLevel,
+    /// Human-readable cause (construction error, indefinite apply, ...).
+    pub reason: String,
+}
+
+/// Health report of one fit (or serve reconstruction).
+///
+/// All counters are deterministic for a given input and configuration:
+/// they reflect solver decisions made on f64 reductions with fixed
+/// order, never on timing or thread count.
+#[derive(Clone, Debug, Default)]
+pub struct FitDiagnostics {
+    /// CG solves performed (train + pathwise batches).
+    pub cg_solves: usize,
+    /// How many of those finished without reaching the tolerance.
+    pub nonconverged_solves: usize,
+    /// Largest final relative residual observed across all solves.
+    pub worst_rel_residual: f64,
+    /// Stagnation restarts taken inside CG.
+    pub cg_restarts: usize,
+    /// Total CG iterations across all solves.
+    pub cg_iters_total: usize,
+    /// Total batched MVMs across all solves.
+    pub mvm_total: usize,
+    /// Backend MVM retries that recovered a transient failure.
+    pub backend_retries: u64,
+    /// Preconditioner downgrades taken (empty on a healthy fit).
+    pub precond_fallbacks: Vec<PrecondFallback>,
+    /// Hyperparameter gradient entries skipped because they were
+    /// NaN/Inf (see `optim::adam`): a nonzero count flags a diverging
+    /// hyperparameter search that would otherwise be invisible.
+    pub grads_skipped_nonfinite: u64,
+}
+
+impl FitDiagnostics {
+    /// True when the fit needed no recovery and every solve converged.
+    pub fn healthy(&self) -> bool {
+        self.nonconverged_solves == 0
+            && self.cg_restarts == 0
+            && self.backend_retries == 0
+            && self.precond_fallbacks.is_empty()
+            && self.grads_skipped_nonfinite == 0
+    }
+
+    /// Multi-line human-readable report (CLI `train` output).
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "  cg: {} solves, {} iters, {} mvms, worst rel residual {:.3e}\n",
+            self.cg_solves, self.cg_iters_total, self.mvm_total, self.worst_rel_residual
+        );
+        s += &format!(
+            "  recovery: {} non-converged, {} restarts, {} mvm retries, {} skipped grads\n",
+            self.nonconverged_solves,
+            self.cg_restarts,
+            self.backend_retries,
+            self.grads_skipped_nonfinite
+        );
+        if self.precond_fallbacks.is_empty() {
+            s += "  preconditioner: no fallbacks";
+        } else {
+            for f in &self.precond_fallbacks {
+                s += &format!("  preconditioner: {} -> {} ({})\n", f.from, f.to, f.reason);
+            }
+            s.pop();
+        }
+        s
+    }
+}
+
+impl std::fmt::Display for FitDiagnostics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_policy() {
+        assert_eq!(OnNonConverged::parse("warn"), Ok(OnNonConverged::Warn));
+        assert_eq!(OnNonConverged::parse("ERROR"), Ok(OnNonConverged::Error));
+        assert!(OnNonConverged::parse("panic").is_err());
+        assert_eq!(OnNonConverged::default(), OnNonConverged::Warn);
+    }
+
+    #[test]
+    fn healthy_and_render() {
+        let mut d = FitDiagnostics::default();
+        assert!(d.healthy());
+        d.precond_fallbacks.push(PrecondFallback {
+            from: PrecondLevel::PivotedCholesky,
+            to: PrecondLevel::Jacobi,
+            reason: "capacitance not PD".into(),
+        });
+        d.nonconverged_solves = 1;
+        assert!(!d.healthy());
+        let r = d.render();
+        assert!(r.contains("pivoted-cholesky -> jacobi"), "{r}");
+        assert!(r.contains("1 non-converged"), "{r}");
+    }
+}

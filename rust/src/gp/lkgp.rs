@@ -25,7 +25,7 @@ use anyhow::{Context, Result};
 use crate::data::GridDataset;
 use crate::linalg::{Matrix, Scalar};
 use crate::runtime::Runtime;
-use crate::solvers::cg::{solve_cg, CgOptions, CgStats};
+use crate::solvers::cg::{solve_cg, CgOptions, CgStats, SolveError};
 use crate::solvers::precond::Preconditioner;
 use crate::util::rng::Rng;
 use crate::util::timer::Profile;
@@ -33,6 +33,7 @@ use crate::util::timer::Profile;
 use super::backend::{
     KronBackend, MvmMode, PjrtKronBackend, Precision, RustKronBackend, SystemOp,
 };
+use super::diagnostics::{FitDiagnostics, OnNonConverged, PrecondFallback, PrecondLevel};
 use super::Posterior;
 
 /// Which backend executes the five LKGP operations.
@@ -83,6 +84,18 @@ pub struct LkgpConfig {
     /// `n_samples x (p q)` matrices of resident memory; off by default
     /// so experiments and benches pay nothing.
     pub capture_pathwise: bool,
+    /// What to do when a CG solve finishes without reaching `cg_tol`
+    /// (default [`OnNonConverged::Warn`]: record + one warning; `Error`
+    /// fails the fit with a typed `SolveError::NotConverged`).
+    pub on_nonconverged: OnNonConverged,
+    /// Bounded retries for a failing backend MVM inside a CG solve
+    /// (retrying a deterministic MVM cannot change bits; a transient
+    /// fault that recovers within this budget leaves only a
+    /// [`FitDiagnostics::backend_retries`] trace).
+    pub mvm_retries: usize,
+    /// Backoff before the first MVM retry, in milliseconds (doubles per
+    /// retry; 0 = retry immediately).
+    pub mvm_retry_backoff_ms: u64,
 }
 
 impl Default for LkgpConfig {
@@ -100,6 +113,9 @@ impl Default for LkgpConfig {
             precision: Precision::F64,
             init_log_sigma2: (0.1f64).ln(),
             capture_pathwise: false,
+            on_nonconverged: OnNonConverged::Warn,
+            mvm_retries: 2,
+            mvm_retry_backoff_ms: 10,
         }
     }
 }
@@ -130,6 +146,10 @@ pub struct LkgpFit {
     /// [`LkgpConfig::capture_pathwise`] is set (`None` otherwise).
     /// Checkpoint it with [`crate::model::TrainedModel::save`].
     pub model: Option<crate::model::TrainedModel>,
+    /// Solver health report: convergence, residuals, and any recovery
+    /// actions (preconditioner fallbacks, MVM retries, CG restarts,
+    /// skipped gradients) taken during the fit.
+    pub diagnostics: FitDiagnostics,
 }
 
 /// Train + predict an LKGP (or iterative-baseline) model on a dataset.
@@ -184,24 +204,163 @@ impl Lkgp {
     }
 }
 
+/// Build the strongest preconditioner that constructs cleanly, walking
+/// the fallback chain pivoted Cholesky -> Jacobi -> identity and
+/// recording every downgrade in `diags`. On the happy path the built
+/// preconditioner is exactly what the infallible constructors produce.
 fn build_precond<T: Scalar, B: KronBackend<T>>(
     be: &B,
     rank: usize,
     sigma2: f64,
-) -> Preconditioner<T> {
-    if rank == 0 {
-        Preconditioner::jacobi(&be.system_diag())
-    } else {
+    diags: &mut FitDiagnostics,
+) -> (Preconditioner<T>, PrecondLevel) {
+    if rank > 0 {
         // greedy pivot selection runs on an f64 diagonal (widened from
         // the T-precision Gram, so near-ties can still order differently
         // between precisions); within a precision it is deterministic
         // and thread-count invariant. The factor columns are in T.
         let diag: Vec<f64> = be.system_diag().iter().map(|d| d - sigma2).collect();
-        Preconditioner::pivoted_from_columns(diag, |j| be.kernel_col(j), rank, sigma2)
+        match Preconditioner::try_pivoted_from_columns(diag, |j| be.kernel_col(j), rank, sigma2)
+        {
+            Ok(p) => return (p, PrecondLevel::PivotedCholesky),
+            Err(e) => diags.precond_fallbacks.push(PrecondFallback {
+                from: PrecondLevel::PivotedCholesky,
+                to: PrecondLevel::Jacobi,
+                reason: e.to_string(),
+            }),
+        }
+    }
+    match Preconditioner::try_jacobi(&be.system_diag()) {
+        Ok(p) => (p, PrecondLevel::Jacobi),
+        Err(e) => {
+            diags.precond_fallbacks.push(PrecondFallback {
+                from: PrecondLevel::Jacobi,
+                to: PrecondLevel::Identity,
+                reason: e.to_string(),
+            });
+            (Preconditioner::Identity, PrecondLevel::Identity)
+        }
     }
 }
 
+/// Downgrade one level along the fallback chain after an in-solve
+/// failure (indefinite apply). Returns the replacement and its level.
+fn downgrade_precond<T: Scalar, B: KronBackend<T>>(
+    be: &B,
+    from: PrecondLevel,
+) -> (Preconditioner<T>, PrecondLevel) {
+    if from == PrecondLevel::PivotedCholesky {
+        if let Ok(p) = Preconditioner::try_jacobi(&be.system_diag()) {
+            return (p, PrecondLevel::Jacobi);
+        }
+    }
+    (Preconditioner::Identity, PrecondLevel::Identity)
+}
+
+/// One CG solve with the recovery policy chain applied:
+/// * backend MVM failures are retried (bounded, inside [`SystemOp`])
+///   and then surfaced as typed errors;
+/// * an indefinite-preconditioner failure downgrades the preconditioner
+///   one level and re-solves (deterministic: the decision depends only
+///   on solver f64 reductions);
+/// * non-convergence is recorded and handled per
+///   [`LkgpConfig::on_nonconverged`];
+/// * breakdowns (NaN residual) abort with a typed [`SolveError`].
+///
+/// On the happy path this is exactly `solve_cg` + counter bookkeeping —
+/// no numeric behaviour changes.
+#[allow(clippy::too_many_arguments)]
+fn solve_resilient<T: Scalar, B: KronBackend<T>>(
+    be: &mut B,
+    rhs: &Matrix<T>,
+    pre: &mut Preconditioner<T>,
+    level: &mut PrecondLevel,
+    opts: &CgOptions,
+    cfg: &LkgpConfig,
+    diags: &mut FitDiagnostics,
+    label: &str,
+) -> Result<(Matrix<T>, CgStats)> {
+    loop {
+        let (x, stats, retries, op_err) = {
+            let mut op = SystemOp::with_retries(be, cfg.mvm_retries, cfg.mvm_retry_backoff_ms);
+            let (x, stats) = solve_cg(&mut op, rhs, &*pre, opts);
+            let retries = op.retries();
+            (x, stats, retries, op.take_err())
+        };
+        diags.backend_retries += retries;
+        if let Err(e) = op_err {
+            return Err(e.context(format!("{label} solve failed")));
+        }
+        diags.cg_solves += 1;
+        diags.cg_iters_total += stats.iters;
+        diags.mvm_total += stats.mvm_count;
+        diags.cg_restarts += stats.restarts;
+        for &r in &stats.rel_residuals {
+            if r.is_finite() && r > diags.worst_rel_residual {
+                diags.worst_rel_residual = r;
+            }
+        }
+        match stats.error.clone() {
+            None => {
+                if !stats.converged {
+                    diags.nonconverged_solves += 1;
+                    let (worst_system, rel_residual) = stats
+                        .rel_residuals
+                        .iter()
+                        .enumerate()
+                        .fold((0, 0.0), |acc, (i, &r)| if r > acc.1 { (i, r) } else { acc });
+                    let err = SolveError::NotConverged {
+                        worst_system,
+                        rel_residual,
+                        iters: stats.iters,
+                    };
+                    match cfg.on_nonconverged {
+                        OnNonConverged::Error => {
+                            return Err(anyhow::Error::new(err)
+                                .context(format!("{label} solve did not converge")));
+                        }
+                        OnNonConverged::Warn => {
+                            if diags.nonconverged_solves == 1 {
+                                eprintln!("warning: {label} {err}");
+                            }
+                        }
+                    }
+                }
+                return Ok((x, stats));
+            }
+            Some(e @ SolveError::IndefinitePreconditioner { .. })
+                if *level != PrecondLevel::Identity =>
+            {
+                let (next, to) = downgrade_precond(be, *level);
+                diags.precond_fallbacks.push(PrecondFallback {
+                    from: *level,
+                    to,
+                    reason: e.to_string(),
+                });
+                *pre = next;
+                *level = to;
+            }
+            Some(e) => {
+                return Err(anyhow::Error::new(e).context(format!("{label} solve failed")));
+            }
+        }
+    }
+}
+
+/// Entry point shared by every `Lkgp::fit` path: runs the fit body with
+/// parallel-region panic capture so a fault inside a `par::` region
+/// surfaces as a typed error (`par::RegionPanic` in the anyhow chain)
+/// instead of tearing down the process.
 fn fit_with_backend<T: Scalar, B: KronBackend<T>>(
+    data: &GridDataset,
+    cfg: &LkgpConfig,
+    be: &mut B,
+) -> Result<LkgpFit> {
+    crate::par::catch_region(|| fit_with_backend_inner(data, cfg, be))
+        .map_err(|rp| anyhow::Error::new(rp).context("parallel region fault during fit"))?
+}
+
+fn fit_with_backend_inner<T: Scalar, B: KronBackend<T>>(
     data: &GridDataset,
     cfg: &LkgpConfig,
     be: &mut B,
@@ -247,10 +406,12 @@ fn fit_with_backend<T: Scalar, B: KronBackend<T>>(
     };
     let y_t: Vec<T> = y.iter().map(|&v| T::from_f64(v)).collect();
 
-    let cg_opts = CgOptions { max_iters: cfg.cg_max_iters, tol: cfg.cg_tol };
+    let cg_opts =
+        CgOptions { max_iters: cfg.cg_max_iters, tol: cfg.cg_tol, ..CgOptions::default() };
     let mut loss_trace = Vec::with_capacity(cfg.train_iters);
     let mut cg_iters_total = 0;
     let mut mvm_total = 0;
+    let mut diagnostics = FitDiagnostics::default();
     let mut alpha = vec![T::ZERO; pq];
 
     for it in 0..cfg.train_iters + 1 {
@@ -265,13 +426,12 @@ fn fit_with_backend<T: Scalar, B: KronBackend<T>>(
         for i in 0..n_probes {
             rhs.row_mut(1 + i).copy_from_slice(z_probes.row(i));
         }
-        let pre: Preconditioner<T> =
-            prof.time("precond", || build_precond(be, cfg.precond_rank, log_s2.exp()));
+        let (mut pre, mut level) = prof.time("precond", || {
+            build_precond(be, cfg.precond_rank, log_s2.exp(), &mut diagnostics)
+        });
         let (sol, stats) = prof.time("cg_solve", || -> Result<(Matrix<T>, CgStats)> {
-            let mut op = SystemOp::new(be);
-            let out = solve_cg(&mut op, &rhs, &pre, &cg_opts);
-            op.take_err()?;
-            Ok(out)
+            let d = &mut diagnostics;
+            solve_resilient(be, &rhs, &mut pre, &mut level, &cg_opts, cfg, d, "train")
         })?;
         cg_iters_total += stats.iters;
         mvm_total += stats.mvm_count;
@@ -294,6 +454,7 @@ fn fit_with_backend<T: Scalar, B: KronBackend<T>>(
         let grads = prof.time("mll_grads", || be.mll_grads(&alpha, &w, &z_probes))?;
         adam.step(&mut params, &grads);
     }
+    diagnostics.grads_skipped_nonfinite = adam.skipped_nonfinite();
     let train_secs = t_train.elapsed().as_secs_f64();
 
     // ---- prediction via pathwise conditioning ----
@@ -323,7 +484,7 @@ fn fit_with_backend<T: Scalar, B: KronBackend<T>>(
     } else {
         None
     };
-    let pre: Preconditioner<T> = build_precond(be, cfg.precond_rank, sigma2);
+    let (mut pre, mut level) = build_precond(be, cfg.precond_rank, sigma2, &mut diagnostics);
     let mut done = 0;
     while done < nsamp {
         let b = chunk.min(nsamp - done);
@@ -351,10 +512,16 @@ fn fit_with_backend<T: Scalar, B: KronBackend<T>>(
             });
         });
         let (v, stats) = prof.time("cg_sample", || -> Result<(Matrix<T>, CgStats)> {
-            let mut op = SystemOp::new(be);
-            let out = solve_cg(&mut op, &rhs, &pre, &cg_opts);
-            op.take_err()?;
-            Ok(out)
+            solve_resilient(
+                be,
+                &rhs,
+                &mut pre,
+                &mut level,
+                &cg_opts,
+                cfg,
+                &mut diagnostics,
+                "pathwise",
+            )
         })?;
         mvm_total += stats.mvm_count;
         // f_post = f_prior + (K (x) K) M v
@@ -420,6 +587,7 @@ fn fit_with_backend<T: Scalar, B: KronBackend<T>>(
         kernel_bytes: be.kernel_bytes(),
         profile: prof,
         model,
+        diagnostics,
     })
 }
 

@@ -11,6 +11,7 @@
 //!   `mll_grads` artifact).
 
 pub mod backend;
+pub mod diagnostics;
 pub mod grad;
 pub mod lkgp;
 

@@ -379,7 +379,7 @@ mod hetero_tests {
             &mut Op(&sys),
             &rhs,
             &Preconditioner::jacobi(&sys.diag()),
-            &CgOptions { max_iters: 500, tol: 1e-8 },
+            &CgOptions { max_iters: 500, tol: 1e-8, ..CgOptions::default() },
         );
         assert!(stats.converged);
         let back = sys.apply_batch(&x);

@@ -118,6 +118,27 @@
 //! MVMs only — **bit-identical** to the in-memory fit for rust-backend
 //! models — and answers coalesced query batches over the worker pool.
 //! CLI: `lkgp save` / `lkgp predict --checkpoint <path>`.
+//!
+//! ## Resilience
+//!
+//! Iterative inference fails in structured ways — NaN residuals,
+//! indefinite preconditioners, stagnating solves, transient backend
+//! errors, corrupted checkpoints — and the crate detects and reports
+//! all of them as **typed errors**, never panics (see
+//! docs/robustness.md). [`solvers::cg`] detects breakdown, indefinite
+//! preconditioning, and stagnation per system; a deterministic policy
+//! chain recovers where recovery is sound (bounded MVM retries, CG
+//! restart with a recomputed residual, preconditioner fallback pivoted
+//! Cholesky -> Jacobi -> identity) and every recovery is **shape-only**,
+//! so a recovered run is bit-identical to a clean one at any
+//! `LKGP_THREADS`. Each fit returns a
+//! [`gp::diagnostics::FitDiagnostics`] health report (non-converged
+//! solves, restarts, retries, fallbacks, NaN gradients skipped), and
+//! the [`util::failpoint`] harness (`LKGP_FAILPOINTS`, e.g.
+//! `backend_mvm@3:error;ckpt_write:torn`) injects deterministic faults
+//! at named sites — exercised by rust/tests/faults.rs and the `faults`
+//! CI job, which assert that every injected fault yields a typed error
+//! or a bit-identical recovery.
 
 #![warn(missing_docs)]
 

@@ -153,12 +153,14 @@ pub fn pivoted_cholesky<T: Scalar>(a: &Matrix<T>, rank: usize, tol: f64) -> (Mat
     let mut used = vec![false; n];
     for k in 0..rank {
         // pick the largest remaining diagonal
-        let (piv, &dmax) = d
+        let picked = d
             .iter()
             .enumerate()
             .filter(|(i, _)| !used[*i])
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap();
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal));
+        // k < rank <= n, and each pass marks exactly one index used, so
+        // at least one unused diagonal always remains
+        let Some((piv, &dmax)) = picked else { break };
         if dmax < tol * max0 || dmax <= 0.0 {
             let mut ltrim = Matrix::zeros(n, k);
             for i in 0..n {

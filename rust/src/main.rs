@@ -24,6 +24,7 @@ use lkgp::data::sarcos::SarcosSim;
 use lkgp::data::synthetic::well_specified;
 use lkgp::data::GridDataset;
 use lkgp::gp::backend::{MvmMode, Precision};
+use lkgp::gp::diagnostics::OnNonConverged;
 use lkgp::gp::lkgp::{Backend, Lkgp, LkgpConfig};
 use lkgp::kernels::ProductGridKernel;
 use lkgp::runtime::{Manifest, Runtime};
@@ -36,7 +37,7 @@ const USAGE: &str = "usage: lkgp <info|train|save|predict|experiment> [flags]
   lkgp train --data <climate|climate-precip|lcbench|sarcos|synthetic>
              [--p N] [--q N] [--missing R] [--seed S]
              [--backend rust|<artifact-config>] [--dense] [--f32]
-             [--iters N]
+             [--iters N] [--on-nonconverged warn|error]
   lkgp save  [same flags as train] [--out <path>=lkgp_model.ckpt]
   lkgp predict --checkpoint <path> [--cells i,j,k] [--json <path>]
   lkgp experiment <fig2|fig3|fig4|fig5|table1|table2|ablations|all>
@@ -120,7 +121,7 @@ fn load_dataset(args: &Args) -> GridDataset {
 
 /// Build the fit configuration shared by `train` and `save` from the
 /// common flag set.
-fn build_train_config(args: &Args, capture_pathwise: bool) -> LkgpConfig {
+fn build_train_config(args: &Args, capture_pathwise: bool) -> Result<LkgpConfig, String> {
     let backend = match args.str("backend", "rust").as_str() {
         "rust" => {
             if args.bool("dense") {
@@ -142,7 +143,13 @@ fn build_train_config(args: &Args, capture_pathwise: bool) -> LkgpConfig {
     } else {
         Precision::F64
     };
-    LkgpConfig {
+    // flag > env > default: an explicit --on-nonconverged beats
+    // LKGP_ON_NONCONVERGED, which beats the Warn default
+    let on_nonconverged = match args.str_opt("on-nonconverged") {
+        None => OnNonConverged::from_env(),
+        Some(s) => OnNonConverged::parse(&s).map_err(|e| format!("--on-nonconverged: {e}"))?,
+    };
+    Ok(LkgpConfig {
         train_iters: args.usize("iters", 20),
         n_samples: args.usize("samples", 32),
         precond_rank: args.usize("precond-rank", 0),
@@ -150,8 +157,9 @@ fn build_train_config(args: &Args, capture_pathwise: bool) -> LkgpConfig {
         backend,
         precision,
         capture_pathwise,
+        on_nonconverged,
         ..LkgpConfig::default()
-    }
+    })
 }
 
 fn print_dataset(data: &GridDataset) {
@@ -168,7 +176,13 @@ fn print_dataset(data: &GridDataset) {
 
 fn cmd_train(args: &Args) -> i32 {
     let data = load_dataset(args);
-    let cfg = build_train_config(args, false);
+    let cfg = match build_train_config(args, false) {
+        Ok(cfg) => cfg,
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            return 2;
+        }
+    };
     if let Err(e) = args.finish() {
         eprintln!("{e}\n{USAGE}");
         return 2;
@@ -185,6 +199,7 @@ fn cmd_train(args: &Args) -> i32 {
                 "time: train {:.2}s predict {:.2}s | CG iters {} | kernel bytes {}",
                 fit.train_secs, fit.predict_secs, fit.cg_iters_total, fit.kernel_bytes
             );
+            println!("\ndiagnostics:\n{}", fit.diagnostics.render());
             println!("\nprofile:\n{}", fit.profile.render());
             0
         }
@@ -203,7 +218,13 @@ fn round3(xs: &[f64]) -> Vec<f64> {
 /// binary checkpoint — the train-once half of train-once/serve-many.
 fn cmd_save(args: &Args) -> i32 {
     let data = load_dataset(args);
-    let cfg = build_train_config(args, true);
+    let cfg = match build_train_config(args, true) {
+        Ok(cfg) => cfg,
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            return 2;
+        }
+    };
     let out = args.str("out", "lkgp_model.ckpt");
     if let Err(e) = args.finish() {
         eprintln!("{e}\n{USAGE}");
@@ -217,7 +238,10 @@ fn cmd_save(args: &Args) -> i32 {
             return 1;
         }
     };
-    let model = fit.model.expect("capture_pathwise was set");
+    let Some(model) = fit.model else {
+        eprintln!("fit returned no pathwise state despite capture_pathwise; cannot checkpoint");
+        return 1;
+    };
     match model.save(&out) {
         Ok(bytes) => {
             let (test_rmse, test_nll) = fit.posterior.test_metrics(&data);
@@ -226,6 +250,9 @@ fn cmd_save(args: &Args) -> i32 {
                 "time: train {:.2}s predict {:.2}s | CG iters {}",
                 fit.train_secs, fit.predict_secs, fit.cg_iters_total
             );
+            if !fit.diagnostics.healthy() {
+                println!("diagnostics:\n{}", fit.diagnostics.render());
+            }
             println!(
                 "checkpoint: {out} ({:.1} KiB, {} pathwise samples, {})",
                 bytes as f64 / 1024.0,
@@ -285,6 +312,13 @@ fn cmd_predict(args: &Args) -> i32 {
         m.name, m.p(), m.q(), m.ds, m.n_samples, m.precision, m.time_family
     );
     println!("posterior reconstructed in {:.3}s (cheap MVMs only)", engine.reconstruct_secs());
+    let diag = engine.diagnostics();
+    if diag.backend_retries > 0 {
+        println!(
+            "resilience: {} of {} reconstruction MVMs recovered by retry",
+            diag.backend_retries, diag.mvm_total
+        );
+    }
     let rep = engine.verify();
     if rep.bit_identical {
         println!("integrity: reconstruction is bit-identical to the stored posterior");

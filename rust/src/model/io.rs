@@ -182,6 +182,15 @@ struct Cursor<'a> {
     i: usize,
 }
 
+/// Fixed-size copy of a slice whose length was already checked by the
+/// caller (`take(N)` / manual bounds check). Centralizes the
+/// `try_into` so the decoding paths stay free of unwraps.
+fn arr<const N: usize>(s: &[u8]) -> [u8; N] {
+    let mut out = [0u8; N];
+    out.copy_from_slice(&s[..N]);
+    out
+}
+
 impl<'a> Cursor<'a> {
     fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], CheckpointError> {
         if n > self.b.len() - self.i {
@@ -198,17 +207,17 @@ impl<'a> Cursor<'a> {
 
     fn u32(&mut self, what: &'static str) -> Result<u32, CheckpointError> {
         let s = self.take(4, what)?;
-        Ok(u32::from_le_bytes(s.try_into().unwrap()))
+        Ok(u32::from_le_bytes(arr(s)))
     }
 
     fn u64(&mut self, what: &'static str) -> Result<u64, CheckpointError> {
         let s = self.take(8, what)?;
-        Ok(u64::from_le_bytes(s.try_into().unwrap()))
+        Ok(u64::from_le_bytes(arr(s)))
     }
 
     fn f64(&mut self, what: &'static str) -> Result<f64, CheckpointError> {
         let s = self.take(8, what)?;
-        Ok(f64::from_le_bytes(s.try_into().unwrap()))
+        Ok(f64::from_le_bytes(arr(s)))
     }
 
     fn string(&mut self, what: &'static str) -> Result<String, CheckpointError> {
@@ -229,7 +238,7 @@ impl<'a> Cursor<'a> {
 
     fn f64_vec(&mut self, n: usize, what: &'static str) -> Result<Vec<f64>, CheckpointError> {
         let bytes = self.take(Self::byte_len(n, 8, what)?, what)?;
-        Ok(bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+        Ok(bytes.chunks_exact(8).map(|c| f64::from_le_bytes(arr(c))).collect())
     }
 
     fn f32_vec_widened(
@@ -240,7 +249,7 @@ impl<'a> Cursor<'a> {
         let bytes = self.take(Self::byte_len(n, 4, what)?, what)?;
         Ok(bytes
             .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()) as f64)
+            .map(|c| f32::from_le_bytes(arr(c)) as f64)
             .collect())
     }
 }
@@ -351,12 +360,12 @@ impl TrainedModel {
             found.copy_from_slice(&bytes[..8]);
             return Err(CheckpointError::BadMagic { found });
         }
-        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        let version = u32::from_le_bytes(arr(&bytes[8..12]));
         if version != VERSION {
             return Err(CheckpointError::UnsupportedVersion { found: version, supported: VERSION });
         }
         let body = &bytes[..bytes.len() - 8];
-        let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        let stored = u64::from_le_bytes(arr(&bytes[bytes.len() - 8..]));
         let computed = fnv64(body);
         if stored != computed {
             return Err(CheckpointError::ChecksumMismatch { stored, computed });
@@ -480,7 +489,18 @@ impl TrainedModel {
     pub fn save(&self, path: impl AsRef<Path>) -> Result<u64> {
         let path = path.as_ref();
         self.validate().map_err(anyhow::Error::new)?;
-        let bytes = self.to_bytes();
+        let mut bytes = self.to_bytes();
+        // fault injection: simulate a torn (half-written) file or a
+        // storage bit flip between encode and write — the reader must
+        // reject both with a typed error (see rust/tests/faults.rs)
+        match crate::util::failpoint::check("ckpt_write") {
+            Some(crate::util::failpoint::FaultAction::Torn) => bytes.truncate(bytes.len() / 2),
+            Some(crate::util::failpoint::FaultAction::BitFlip) => {
+                let mid = bytes.len() / 2;
+                bytes[mid] ^= 0x01;
+            }
+            _ => {}
+        }
         let mut tmp_name = path.as_os_str().to_owned();
         tmp_name.push(format!(".tmp.{}", std::process::id()));
         let tmp = std::path::PathBuf::from(tmp_name);
@@ -499,8 +519,17 @@ impl TrainedModel {
     /// `err.downcast_ref::<CheckpointError>()` to inspect them).
     pub fn load(path: impl AsRef<Path>) -> Result<TrainedModel> {
         let path = path.as_ref();
-        let bytes = std::fs::read(path)
+        let mut bytes = std::fs::read(path)
             .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        // fault injection: simulate a short read or in-transit bit flip
+        match crate::util::failpoint::check("ckpt_read") {
+            Some(crate::util::failpoint::FaultAction::Short) => bytes.truncate(bytes.len() / 2),
+            Some(crate::util::failpoint::FaultAction::BitFlip) if !bytes.is_empty() => {
+                let mid = bytes.len() / 2;
+                bytes[mid] ^= 0x01;
+            }
+            _ => {}
+        }
         TrainedModel::from_bytes(&bytes)
             .map_err(anyhow::Error::new)
             .with_context(|| format!("decoding checkpoint {}", path.display()))

@@ -16,17 +16,35 @@ pub struct Adam {
     m: Vec<f64>,
     v: Vec<f64>,
     t: u64,
+    skipped_nonfinite: u64,
 }
 
 impl Adam {
     /// Fresh optimizer state with standard (0.9, 0.999) decays.
     pub fn new(n_params: usize, lr: f64) -> Self {
-        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, m: vec![0.0; n_params], v: vec![0.0; n_params], t: 0 }
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; n_params],
+            v: vec![0.0; n_params],
+            t: 0,
+            skipped_nonfinite: 0,
+        }
     }
 
     /// Parameter-vector length this state was built for.
     pub fn dim(&self) -> usize {
         self.m.len()
+    }
+
+    /// Gradient entries that were NaN/Inf and therefore treated as zero
+    /// across all steps so far. A nonzero count means the loss surface
+    /// produced garbage gradients — the parameter search silently
+    /// ignored them, so surface this (see `gp::diagnostics`).
+    pub fn skipped_nonfinite(&self) -> u64 {
+        self.skipped_nonfinite
     }
 
     /// One descent step: params -= lr * mhat / (sqrt(vhat) + eps).
@@ -38,7 +56,12 @@ impl Adam {
         let b1t = 1.0 - self.beta1.powi(self.t as i32);
         let b2t = 1.0 - self.beta2.powi(self.t as i32);
         for i in 0..params.len() {
-            let g = if grad[i].is_finite() { grad[i] } else { 0.0 };
+            let g = if grad[i].is_finite() {
+                grad[i]
+            } else {
+                self.skipped_nonfinite += 1;
+                0.0
+            };
             self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
             self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
             let mhat = self.m[i] / b1t;
@@ -73,6 +96,11 @@ mod tests {
         let mut opt = Adam::new(1, 0.1);
         opt.step(&mut x, &[f64::NAN]);
         assert!(x[0].is_finite());
+        assert_eq!(opt.skipped_nonfinite(), 1);
+        opt.step(&mut x, &[0.5]);
+        assert_eq!(opt.skipped_nonfinite(), 1, "finite grads are not counted");
+        opt.step(&mut x, &[f64::INFINITY]);
+        assert_eq!(opt.skipped_nonfinite(), 2);
     }
 
     #[test]

@@ -131,6 +131,24 @@ pub fn with_threads<T>(n: usize, f: impl FnOnce() -> T) -> T {
     f()
 }
 
+/// Run `f`, converting a [`RegionPanic`] escaping from any parallel
+/// region inside it into a typed `Err` instead of unwinding further.
+///
+/// This is the boundary where the resilience layer turns a worker-task
+/// panic (caught per chunk and rethrown on the submitting thread by the
+/// region scheduler) into an error value that survives `anyhow` chains.
+/// Panics that are *not* region panics are re-raised unchanged — only
+/// structured pool faults are captured.
+pub fn catch_region<T>(f: impl FnOnce() -> T) -> Result<T, RegionPanic> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(v) => Ok(v),
+        Err(payload) => match payload.downcast::<RegionPanic>() {
+            Ok(rp) => Err(*rp),
+            Err(other) => std::panic::resume_unwind(other),
+        },
+    }
+}
+
 /// Join all persistent pool workers and reset the pool; the next
 /// parallel region lazily restarts it. Safe to call at any time —
 /// regions racing a shutdown complete by running their chunks on the

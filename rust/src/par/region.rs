@@ -122,10 +122,34 @@ impl RegionState {
 /// Used for regions that collapse inline and for the cheap-sweep
 /// sequential fallback, so the payload a caller catches never depends
 /// on which path a threshold picked.
+/// Consult the `par_region` failpoint at region dispatch. When it fires
+/// with the `panic` action, chunk 0 of this region panics — exercising
+/// the per-chunk catch / cancel / rethrow machinery end to end. The
+/// check happens once per region (not per chunk), so a bare
+/// `par_region:panic` spec is deterministic at any thread count; `@N`
+/// indexing is only meaningful where regions dispatch from one thread.
+fn region_fault() -> bool {
+    matches!(
+        crate::util::failpoint::check("par_region"),
+        Some(crate::util::failpoint::FaultAction::Panic)
+    )
+}
+
 pub(crate) fn run_sequential(name: &'static str, n_chunks: usize, task: &(dyn Fn(usize) + Sync)) {
     if n_chunks == 0 {
         return;
     }
+    let inject = region_fault();
+    let wrapped = move |c: usize| {
+        if inject && c == 0 {
+            panic!("injected fault at failpoint par_region");
+        }
+        task(c)
+    };
+    run_sequential_inner(name, n_chunks, &wrapped)
+}
+
+fn run_sequential_inner(name: &'static str, n_chunks: usize, task: &(dyn Fn(usize) + Sync)) {
     REGIONS.fetch_add(1, Ordering::Relaxed);
     let state = RegionState {
         name,
@@ -156,9 +180,17 @@ pub(crate) fn run_chunked(
     if n_chunks == 0 {
         return;
     }
+    let inject = region_fault();
+    let wrapped = move |c: usize| {
+        if inject && c == 0 {
+            panic!("injected fault at failpoint par_region");
+        }
+        task(c)
+    };
+    let task: &(dyn Fn(usize) + Sync) = &wrapped;
     let nt = super::effective_width(n_chunks);
     if nt <= 1 {
-        run_sequential(name, n_chunks, task);
+        run_sequential_inner(name, n_chunks, task);
         return;
     }
     REGIONS.fetch_add(1, Ordering::Relaxed);

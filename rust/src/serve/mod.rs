@@ -50,6 +50,7 @@
 use anyhow::{bail, Context, Result};
 
 use crate::gp::backend::{KronBackend, MvmMode, Precision, RustKronBackend};
+use crate::gp::diagnostics::FitDiagnostics;
 use crate::gp::lkgp::{accumulate_pathwise_moments, finalize_posterior, PATHWISE_CHUNK};
 use crate::gp::Posterior;
 use crate::kernels::ProductGridKernel;
@@ -94,6 +95,13 @@ pub struct VerifyReport {
 /// output bits never depend on it.
 const SERVE_BLOCK: usize = 256;
 
+/// Bounded retries for a failed backend MVM during posterior
+/// reconstruction, mirroring the fit path's transient-fault tolerance
+/// (`LkgpConfig::mvm_retries`). Retries are pure re-executions of a
+/// deterministic computation, so a retry that succeeds produces the
+/// same bits a first-try success would have.
+const SERVE_MVM_RETRIES: usize = 2;
+
 /// A loaded model plus everything reconstructed from it, ready to
 /// answer queries. Construction does all the heavy work; queries are
 /// cheap and `&self` (share one engine across threads freely).
@@ -116,6 +124,9 @@ pub struct ServeEngine {
     /// evaluation for new-point queries).
     kernel: ProductGridKernel,
     reconstruct_secs: f64,
+    /// Resilience counters accumulated while building the engine
+    /// (backend MVM retries during reconstruction, MVM totals).
+    diagnostics: FitDiagnostics,
 }
 
 impl ServeEngine {
@@ -130,17 +141,21 @@ impl ServeEngine {
     pub fn from_model(model: TrainedModel) -> Result<Self> {
         model.validate().map_err(anyhow::Error::new)?;
         let t0 = std::time::Instant::now();
-        let reconstructed = match model.precision {
-            Precision::F64 => reconstruct::<f64>(&model)?,
-            Precision::F32 => reconstruct::<f32>(&model)?,
-        };
+        let mut diagnostics = FitDiagnostics::default();
+        let reconstructed = crate::par::catch_region(|| match model.precision {
+            Precision::F64 => reconstruct::<f64>(&model, &mut diagnostics),
+            Precision::F32 => reconstruct::<f32>(&model, &mut diagnostics),
+        })
+        .map_err(|rp| {
+            anyhow::Error::new(rp).context("parallel region fault during posterior reconstruction")
+        })??;
         let mut kernel = ProductGridKernel::new(model.ds, &model.time_family, model.q());
         kernel.set_theta(&model.theta);
         let ktt = kernel.gram_t(&model.t);
         let a = Matrix::from_vec(model.p(), model.q(), model.masked_alpha.clone());
         let half_alpha = matmul_nt(&a, &ktt);
         let reconstruct_secs = t0.elapsed().as_secs_f64();
-        Ok(ServeEngine { model, reconstructed, half_alpha, kernel, reconstruct_secs })
+        Ok(ServeEngine { model, reconstructed, half_alpha, kernel, reconstruct_secs, diagnostics })
     }
 
     /// The underlying model state.
@@ -165,6 +180,13 @@ impl ServeEngine {
     /// Wall-clock seconds the posterior reconstruction took.
     pub fn reconstruct_secs(&self) -> f64 {
         self.reconstruct_secs
+    }
+
+    /// Resilience counters from engine construction: total backend MVMs
+    /// issued during the reconstruction replay and how many had to be
+    /// retried after transient failures. All zeros on a clean build.
+    pub fn diagnostics(&self) -> &FitDiagnostics {
+        &self.diagnostics
     }
 
     /// Compare the reconstructed posterior against the one stored in
@@ -221,20 +243,25 @@ impl ServeEngine {
                 var_out[i] = var[cell];
             }
         } else {
-            crate::par::par_zip_mut_steal(
-                "serve.predict_batch",
-                &mut mean_out,
-                &mut var_out,
-                SERVE_BLOCK,
-                |ci, ms, vs| {
-                    let base = ci * SERVE_BLOCK;
-                    for (off, (m, v)) in ms.iter_mut().zip(vs.iter_mut()).enumerate() {
-                        let cell = cells[base + off];
-                        *m = mean[cell];
-                        *v = var[cell];
-                    }
-                },
-            );
+            crate::par::catch_region(|| {
+                crate::par::par_zip_mut_steal(
+                    "serve.predict_batch",
+                    &mut mean_out,
+                    &mut var_out,
+                    SERVE_BLOCK,
+                    |ci, ms, vs| {
+                        let base = ci * SERVE_BLOCK;
+                        for (off, (m, v)) in ms.iter_mut().zip(vs.iter_mut()).enumerate() {
+                            let cell = cells[base + off];
+                            *m = mean[cell];
+                            *v = var[cell];
+                        }
+                    },
+                )
+            })
+            .map_err(|rp| {
+                anyhow::Error::new(rp).context("parallel region fault during batched prediction")
+            })?;
         }
         let mut out = Vec::with_capacity(batches.len());
         let mut at = 0;
@@ -252,7 +279,7 @@ impl ServeEngine {
     /// Convenience wrapper: one batch of cells.
     pub fn predict_cells(&self, cells: &[usize]) -> Result<BatchResponse> {
         let mut res = self.predict_batch(&[BatchRequest { cells: cells.to_vec() }])?;
-        Ok(res.pop().expect("one batch in, one batch out"))
+        res.pop().ok_or_else(|| anyhow::anyhow!("predict_batch returned no response for one batch"))
     }
 
     /// Predictive means for spatial inputs that were never part of the
@@ -290,7 +317,7 @@ impl ServeEngine {
 /// sample chunks in the same order, and the same f64 moment
 /// accumulation — which is what makes the result bit-identical to the
 /// in-memory fit rather than merely close.
-fn reconstruct<T: Scalar>(m: &TrainedModel) -> Result<Posterior> {
+fn reconstruct<T: Scalar>(m: &TrainedModel, diags: &mut FitDiagnostics) -> Result<Posterior> {
     let q = m.q();
     let pq = m.grid_len();
     let mut be = RustKronBackend::<T>::new(m.ds, &m.time_family, q, 1).with_mode(MvmMode::Kron);
@@ -299,7 +326,7 @@ fn reconstruct<T: Scalar>(m: &TrainedModel) -> Result<Posterior> {
     let to_t = |row: &[f64]| -> Vec<T> { row.iter().map(|&x| T::from_f64(x)).collect() };
 
     let ma = Matrix::from_vec(1, pq, to_t(&m.masked_alpha));
-    let mean_std_t = be.kron_apply(&ma).context("predictive-mean MVM")?;
+    let mean_std_t = serve_mvm(&be, &ma, diags).context("predictive-mean MVM")?;
     let mean_std: Vec<f64> = mean_std_t.row(0).iter().map(|x| x.to_f64()).collect();
 
     let mut mean_acc = vec![0.0f64; pq];
@@ -314,7 +341,7 @@ fn reconstruct<T: Scalar>(m: &TrainedModel) -> Result<Posterior> {
             vm_chunk.row_mut(r).copy_from_slice(&to_t(m.vm.row(done + r)));
             f_chunk.row_mut(r).copy_from_slice(&to_t(m.f_prior.row(done + r)));
         }
-        let kv = be.kron_apply(&vm_chunk).context("pathwise MVM")?;
+        let kv = serve_mvm(&be, &vm_chunk, diags).context("pathwise MVM")?;
         accumulate_pathwise_moments(&f_chunk, &kv, &mut mean_acc, &mut var_acc);
         done += b;
     }
@@ -327,6 +354,41 @@ fn reconstruct<T: Scalar>(m: &TrainedModel) -> Result<Posterior> {
         m.y_mean,
         m.y_std,
     ))
+}
+
+/// One reconstruction MVM with bounded retry: transient backend errors
+/// (including faults injected at the `serve_mvm` failpoint) are retried
+/// up to [`SERVE_MVM_RETRIES`] times before surfacing as a typed error.
+/// Each attempt is a pure re-execution, so a successful retry yields
+/// the same bits as a clean first attempt; `diags` records how many
+/// MVMs ran and how many were retried.
+fn serve_mvm<T: Scalar>(
+    be: &RustKronBackend<T>,
+    rhs: &Matrix<T>,
+    diags: &mut FitDiagnostics,
+) -> Result<Matrix<T>> {
+    use crate::util::failpoint::{self, FaultAction, InjectedFault};
+    let mut attempt = 0usize;
+    loop {
+        diags.mvm_total += 1;
+        let res = match failpoint::check("serve_mvm") {
+            Some(FaultAction::Error) => Err(anyhow::Error::new(InjectedFault {
+                site: "serve_mvm".into(),
+                action: FaultAction::Error,
+            })),
+            _ => be.kron_apply(rhs),
+        };
+        match res {
+            Ok(out) => return Ok(out),
+            Err(_) if attempt < SERVE_MVM_RETRIES => {
+                attempt += 1;
+                diags.backend_retries += 1;
+            }
+            Err(e) => {
+                return Err(e.context(format!("backend MVM failed after {attempt} retries")));
+            }
+        }
+    }
 }
 
 #[cfg(test)]

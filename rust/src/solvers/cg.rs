@@ -6,8 +6,16 @@
 //! is amortized across RHS — exactly how the paper batches y together
 //! with pathwise/probe vectors). Per-system convergence is tracked by
 //! relative residual norm (paper: tolerance 0.01).
+//!
+//! The solver is defensive: per-system NaN/Inf breakdown detection, a
+//! stagnation watchdog (no residual progress across a window triggers a
+//! residual-recomputation restart, then a typed stop), and an
+//! indefinite-preconditioner check on z'r. All detection reads f64
+//! reductions the solver already computes, so a healthy solve produces
+//! bit-identical iterates with the checks in place.
 
 use crate::linalg::{Matrix, Scalar};
+use crate::util::failpoint::{self, FaultAction};
 
 use super::precond::Preconditioner;
 
@@ -63,13 +71,107 @@ pub struct CgOptions {
     pub max_iters: usize,
     /// relative residual norm tolerance ||r|| / ||b||.
     pub tol: f64,
+    /// Stagnation window: if no active system improves its relative
+    /// residual by at least 0.1% over this many consecutive iterations,
+    /// the solver restarts (recomputed residual) and, once restarts are
+    /// exhausted, stops with [`SolveOutcome::Stagnated`]. 0 disables
+    /// the watchdog.
+    pub stall_window: usize,
+    /// Residual-recomputation restarts allowed before a stagnated solve
+    /// gives up.
+    pub max_restarts: usize,
 }
 
 impl Default for CgOptions {
     fn default() -> Self {
-        CgOptions { max_iters: 500, tol: 1e-2 }
+        CgOptions { max_iters: 500, tol: 1e-2, stall_window: 50, max_restarts: 1 }
     }
 }
+
+/// Why a system (or the whole solve) stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolveOutcome {
+    /// Relative residual met the tolerance.
+    Converged,
+    /// Iteration cap reached before the tolerance.
+    MaxIters,
+    /// Residual plateaued across the stall window with restarts
+    /// exhausted.
+    Stagnated,
+    /// Residual became NaN/Inf (or the preconditioner was indefinite).
+    Breakdown,
+    /// The batched operator reported a failure mid-solve.
+    OperatorFailed,
+}
+
+/// Per-system diagnostic of one [`solve_cg`] call.
+#[derive(Clone, Copy, Debug)]
+pub struct SolveDiag {
+    /// How this system ended.
+    pub outcome: SolveOutcome,
+    /// Final relative residual of this system.
+    pub rel_residual: f64,
+}
+
+/// Typed hard failures detected inside [`solve_cg`].
+///
+/// Recorded in [`CgStats::error`] (the solver still returns its best
+/// iterate) so callers can apply recovery policy; the error type
+/// survives `anyhow` chains for downcasting.
+#[derive(Clone, Debug)]
+pub enum SolveError {
+    /// A residual became non-finite.
+    Breakdown {
+        /// System whose residual broke down first.
+        system: usize,
+        /// Iteration at which the breakdown was detected.
+        iter: usize,
+    },
+    /// The preconditioner produced z'r < 0 beyond roundoff — it is not
+    /// positive definite, so CG's invariants are void.
+    IndefinitePreconditioner {
+        /// System with the negative inner product.
+        system: usize,
+        /// Iteration at which it was detected.
+        iter: usize,
+        /// The offending z'r value.
+        rz: f64,
+    },
+    /// The solve finished without reaching the tolerance (reported by
+    /// policy layers; `solve_cg` itself records this via
+    /// `converged == false`).
+    NotConverged {
+        /// System with the largest final relative residual.
+        worst_system: usize,
+        /// That system's relative residual.
+        rel_residual: f64,
+        /// Iterations executed.
+        iters: usize,
+    },
+}
+
+impl std::fmt::Display for SolveError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SolveError::Breakdown { system, iter } => write!(
+                f,
+                "CG breakdown: non-finite residual in system {system} at iteration {iter}"
+            ),
+            SolveError::IndefinitePreconditioner { system, iter, rz } => write!(
+                f,
+                "preconditioner is not positive definite: z'r = {rz:.3e} \
+                 for system {system} at iteration {iter}"
+            ),
+            SolveError::NotConverged { worst_system, rel_residual, iters } => write!(
+                f,
+                "CG did not converge: system {worst_system} at relative residual \
+                 {rel_residual:.3e} after {iters} iterations"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SolveError {}
 
 /// Convergence report of one [`solve_cg`] call.
 #[derive(Clone, Debug, Default)]
@@ -82,11 +184,56 @@ pub struct CgStats {
     pub rel_residuals: Vec<f64>,
     /// True when every system met the tolerance.
     pub converged: bool,
+    /// Per-system outcome and final residual.
+    pub diags: Vec<SolveDiag>,
+    /// Stagnation restarts taken during the solve.
+    pub restarts: usize,
+    /// Hard failure detected mid-solve (breakdown / indefinite
+    /// preconditioner); `None` for clean, merely-unconverged, or
+    /// operator-failed solves (the operator owns its own error).
+    pub error: Option<SolveError>,
+}
+
+fn diags_from(rel: &[f64], tol: f64, fallback: SolveOutcome) -> Vec<SolveDiag> {
+    rel.iter()
+        .map(|&r| SolveDiag {
+            outcome: if !r.is_finite() {
+                SolveOutcome::Breakdown
+            } else if r <= tol {
+                SolveOutcome::Converged
+            } else {
+                fallback
+            },
+            rel_residual: r,
+        })
+        .collect()
+}
+
+/// z'r must be >= 0 for an SPD preconditioner. Returns the first active
+/// system where it is negative beyond roundoff (scaled by ||r||^2).
+fn indefinite_system<T: Scalar>(rz: &[f64], active: &[bool], r: &Matrix<T>) -> Option<usize> {
+    for sys in 0..rz.len() {
+        if !active[sys] || rz[sys] >= 0.0 {
+            continue;
+        }
+        let mut rr = 0.0f64;
+        for v in r.row(sys) {
+            let f = v.to_f64();
+            rr += f * f;
+        }
+        if rz[sys].abs() > 1e-12 * rr.max(1e-300) {
+            return Some(sys);
+        }
+    }
+    None
 }
 
 /// Solve A X = B with batched PCG. Returns (X, stats); X rows align
 /// with B rows. Iteration stops when every system's relative residual
-/// is below tol (or max_iters).
+/// is below tol (or max_iters). Hard failures (NaN residual, indefinite
+/// preconditioner) abort early with `stats.error` set; the operator
+/// signalling `failed()` stops the solve with the partial iterate and
+/// leaves error reporting to the operator's owner.
 pub fn solve_cg<T: Scalar>(
     op: &mut impl BatchedOp<T>,
     b: &Matrix<T>,
@@ -117,24 +264,104 @@ pub fn solve_cg<T: Scalar>(
     let mut rz = dot_rows(&r, &z);
     let mut stats = CgStats::default();
     let mut active = vec![true; nsys];
+    // stagnation watchdog state
+    let mut best_rel = vec![f64::INFINITY; nsys];
+    let mut stall = 0usize;
+    let mut tail_outcome = SolveOutcome::MaxIters;
+
+    if let Some(sys) = indefinite_system(&rz, &active, &r) {
+        let rel: Vec<f64> =
+            dot_rows(&r, &r).iter().zip(&b_norms).map(|(s, bn)| s.sqrt() / bn).collect();
+        stats.error =
+            Some(SolveError::IndefinitePreconditioner { system: sys, iter: 0, rz: rz[sys] });
+        stats.diags = diags_from(&rel, opts.tol, SolveOutcome::Breakdown);
+        stats.rel_residuals = rel;
+        return (x, stats);
+    }
 
     for iter in 0..opts.max_iters {
+        if matches!(failpoint::check("cg_iter"), Some(FaultAction::Nan)) {
+            r[(0, 0)] = T::from_f64(f64::NAN);
+        }
         // convergence check
         let rr = dot_rows(&r, &r);
         let rel: Vec<f64> = rr.iter().zip(&b_norms).map(|(s, bn)| s.sqrt() / bn).collect();
+        // breakdown detection: a non-finite residual would otherwise
+        // read as "converged" (NaN > tol is false) and poison x forever
+        if let Some(sys) = rel.iter().position(|v| !v.is_finite()) {
+            stats.error = Some(SolveError::Breakdown { system: sys, iter });
+            stats.diags = diags_from(&rel, opts.tol, SolveOutcome::Breakdown);
+            stats.rel_residuals = rel;
+            stats.iters = iter;
+            return (x, stats);
+        }
         for (a, rel) in active.iter_mut().zip(&rel) {
             *a = *rel > opts.tol;
         }
-        stats.rel_residuals = rel;
         if active.iter().all(|a| !a) {
             stats.converged = true;
             stats.iters = iter;
+            stats.diags = diags_from(&rel, opts.tol, SolveOutcome::Converged);
+            stats.rel_residuals = rel;
             return (x, stats);
+        }
+        // stagnation watchdog: progress means some active system
+        // improved its best-seen residual by at least 0.1%
+        let mut improved = false;
+        for sys in 0..nsys {
+            if active[sys] && rel[sys] < 0.999 * best_rel[sys] {
+                improved = true;
+            }
+            if rel[sys] < best_rel[sys] {
+                best_rel[sys] = rel[sys];
+            }
+        }
+        stall = if improved { 0 } else { stall + 1 };
+        stats.rel_residuals = rel;
+        if opts.stall_window > 0 && stall >= opts.stall_window {
+            if stats.restarts < opts.max_restarts {
+                // restart: recompute r = b - A x from scratch to shed
+                // accumulated rounding drift, then rebuild the Krylov
+                // direction state
+                let ax = op.apply_batch(&x);
+                stats.mvm_count += 1;
+                if op.failed() {
+                    tail_outcome = SolveOutcome::OperatorFailed;
+                    break;
+                }
+                for sys in 0..nsys {
+                    let (rrow, brow, axrow) = (r.row_mut(sys), b.row(sys), ax.row(sys));
+                    for ((ri, bi), ai) in rrow.iter_mut().zip(brow).zip(axrow) {
+                        *ri = *bi - *ai;
+                    }
+                }
+                z = precond.apply_batch(&r);
+                p = z.clone();
+                rz = dot_rows(&r, &z);
+                if let Some(sys) = indefinite_system(&rz, &active, &r) {
+                    stats.error = Some(SolveError::IndefinitePreconditioner {
+                        system: sys,
+                        iter,
+                        rz: rz[sys],
+                    });
+                    stats.diags =
+                        diags_from(&stats.rel_residuals, opts.tol, SolveOutcome::Breakdown);
+                    stats.iters = iter;
+                    return (x, stats);
+                }
+                stats.restarts += 1;
+                stall = 0;
+                stats.iters = iter;
+                continue;
+            }
+            tail_outcome = SolveOutcome::Stagnated;
+            break;
         }
 
         let ap = op.apply_batch(&p);
         stats.mvm_count += 1;
         if op.failed() {
+            tail_outcome = SolveOutcome::OperatorFailed;
             break; // operator failure: stop, caller surfaces the error
         }
         let pap = dot_rows(&p, &ap);
@@ -154,6 +381,16 @@ pub fn solve_cg<T: Scalar>(
         }
         z = precond.apply_batch(&r);
         let rz_new = dot_rows(&r, &z);
+        if let Some(sys) = indefinite_system(&rz_new, &active, &r) {
+            stats.error = Some(SolveError::IndefinitePreconditioner {
+                system: sys,
+                iter,
+                rz: rz_new[sys],
+            });
+            stats.diags = diags_from(&stats.rel_residuals, opts.tol, SolveOutcome::Breakdown);
+            stats.iters = iter;
+            return (x, stats);
+        }
         for sys in 0..nsys {
             if !active[sys] {
                 continue;
@@ -172,6 +409,8 @@ pub fn solve_cg<T: Scalar>(
     let rr = dot_rows(&r, &r);
     stats.rel_residuals = rr.iter().zip(&b_norms).map(|(s, bn)| s.sqrt() / bn).collect();
     stats.converged = stats.rel_residuals.iter().all(|&r| r <= opts.tol);
+    let fallback = if stats.converged { SolveOutcome::Converged } else { tail_outcome };
+    stats.diags = diags_from(&stats.rel_residuals, opts.tol, fallback);
     (x, stats)
 }
 
@@ -201,6 +440,7 @@ mod tests {
         assert!(!stats.converged);
         assert_eq!(stats.mvm_count, 1);
         assert!(x.data.iter().all(|&v| v == 0.0));
+        assert!(stats.diags.iter().all(|d| d.outcome == SolveOutcome::OperatorFailed));
     }
 
     #[test]
@@ -214,10 +454,13 @@ mod tests {
                 &mut op,
                 &b,
                 &Preconditioner::Identity,
-                &CgOptions { max_iters: 10 * n, tol: 1e-10 },
+                &CgOptions { max_iters: 10 * n, tol: 1e-10, ..CgOptions::default() },
             );
             if !stats.converged {
                 return Err(format!("not converged: {:?}", stats.rel_residuals));
+            }
+            if stats.error.is_some() {
+                return Err(format!("unexpected solve error: {:?}", stats.error));
             }
             for sys in 0..3 {
                 let back = a.matvec(x.row(sys));
@@ -239,7 +482,7 @@ mod tests {
             }
         });
         let b = Matrix::from_vec(1, n, vec![1.0; n]);
-        let opts = CgOptions { max_iters: 200, tol: 1e-8 };
+        let opts = CgOptions { max_iters: 200, tol: 1e-8, ..CgOptions::default() };
         let (_, s_plain) = solve_cg(&mut DenseOp(&a), &b, &Preconditioner::Identity, &opts);
         let diag: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
         let pre = Preconditioner::jacobi(&diag);
@@ -269,6 +512,8 @@ mod tests {
         assert!(stats.converged);
         assert!(x.row(0).iter().all(|&v| (v - 0.5).abs() < 1e-6));
         assert!(x.row(1).iter().all(|&v| v.abs() < 1e-12));
+        assert_eq!(stats.diags.len(), 2);
+        assert!(stats.diags.iter().all(|d| d.outcome == SolveOutcome::Converged));
     }
 
     #[test]
@@ -282,12 +527,84 @@ mod tests {
             &mut DenseOp(&a),
             &b,
             &Preconditioner::Identity,
-            &CgOptions { max_iters: 200, tol: 1e-4 },
+            &CgOptions { max_iters: 200, tol: 1e-4, ..CgOptions::default() },
         );
         assert!(stats.converged, "{:?}", stats.rel_residuals);
         let back = a.matvec(x.row(0));
         for (g, w) in back.iter().zip(b.row(0)) {
             assert!((g - w).abs() < 1e-2);
         }
+    }
+
+    #[test]
+    fn stagnation_restarts_then_stops_typed() {
+        // an operator that maps everything to zero makes no progress:
+        // pap = 0 skips every update, so the residual plateaus forever
+        struct ZeroOp(usize);
+        impl BatchedOp<f64> for ZeroOp {
+            fn dim(&self) -> usize {
+                self.0
+            }
+            fn apply_batch(&mut self, v: &Matrix<f64>) -> Matrix<f64> {
+                Matrix::zeros(v.rows, v.cols)
+            }
+        }
+        let n = 8;
+        let b = Matrix::from_vec(1, n, vec![1.0; n]);
+        let opts = CgOptions { max_iters: 200, tol: 1e-8, stall_window: 5, max_restarts: 1 };
+        let (x, stats) = solve_cg(&mut ZeroOp(n), &b, &Preconditioner::Identity, &opts);
+        assert!(!stats.converged);
+        assert_eq!(stats.restarts, 1, "one restart before giving up");
+        assert!(stats.iters < 200, "watchdog must fire well before max_iters");
+        assert!(stats.diags.iter().all(|d| d.outcome == SolveOutcome::Stagnated));
+        assert!(x.data.iter().all(|&v| v == 0.0));
+        assert!(stats.error.is_none(), "stagnation is policy, not a hard error");
+    }
+
+    #[test]
+    fn indefinite_preconditioner_detected() {
+        let n = 10;
+        let a = Matrix::from_fn(n, n, |i, j| if i == j { 2.0 } else { 0.0 });
+        let b = Matrix::from_vec(1, n, vec![1.0; n]);
+        // a negative "inverse diagonal" is not SPD: z'r = -||r||^2 < 0
+        let pre = Preconditioner::Jacobi { inv_diag: vec![-1.0; n] };
+        let (_, stats) = solve_cg(&mut DenseOp(&a), &b, &pre, &CgOptions::default());
+        assert!(!stats.converged);
+        match stats.error {
+            Some(SolveError::IndefinitePreconditioner { system: 0, rz, .. }) => {
+                assert!(rz < 0.0, "rz {rz}");
+            }
+            ref other => panic!("expected IndefinitePreconditioner, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn nan_residual_is_a_typed_breakdown() {
+        // operator that injects a NaN into its output: alpha goes NaN,
+        // poisoning r, and the solver must stop with a typed error
+        // instead of reporting instant convergence (NaN > tol == false)
+        struct NanOp(usize);
+        impl BatchedOp<f64> for NanOp {
+            fn dim(&self) -> usize {
+                self.0
+            }
+            fn apply_batch(&mut self, v: &Matrix<f64>) -> Matrix<f64> {
+                let mut out = v.clone();
+                out[(0, 0)] = f64::NAN;
+                out
+            }
+        }
+        let n = 6;
+        let b = Matrix::from_vec(1, n, vec![1.0; n]);
+        let (_, stats) =
+            solve_cg(&mut NanOp(n), &b, &Preconditioner::Identity, &CgOptions::default());
+        assert!(!stats.converged);
+        assert!(
+            matches!(stats.error, Some(SolveError::Breakdown { system: 0, .. })),
+            "{:?}",
+            stats.error
+        );
+        assert!(stats.iters <= 2, "breakdown must be caught immediately");
+        assert_eq!(stats.diags[0].outcome, SolveOutcome::Breakdown);
     }
 }

@@ -10,5 +10,5 @@ pub mod cg;
 pub mod precond;
 pub mod sgd;
 
-pub use cg::{BatchedOp, CgOptions, CgStats, solve_cg};
-pub use precond::Preconditioner;
+pub use cg::{solve_cg, BatchedOp, CgOptions, CgStats, SolveDiag, SolveError, SolveOutcome};
+pub use precond::{PrecondError, Preconditioner};

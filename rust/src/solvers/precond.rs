@@ -9,6 +9,51 @@
 
 use crate::linalg::chol::{cholesky, Cholesky};
 use crate::linalg::{Matrix, Scalar};
+use crate::util::failpoint::{self, FaultAction, InjectedFault};
+
+/// Typed failures while *constructing* a preconditioner.
+///
+/// Construction failures are recoverable: the policy layer in
+/// `gp::lkgp` falls back pivoted Cholesky → Jacobi → identity, so these
+/// errors are data for that chain rather than a reason to abort a fit.
+#[derive(Clone, Debug)]
+pub enum PrecondError {
+    /// The Woodbury capacitance matrix `sigma2 I + L^T L` was not
+    /// positive definite (Cholesky failed).
+    CapacitanceNotPd {
+        /// Rank of the offending low-rank factor.
+        rank: usize,
+    },
+    /// A system diagonal entry was NaN/Inf, so no diagonal-based
+    /// preconditioner can be formed from it.
+    NonFiniteDiag {
+        /// Index of the first non-finite entry.
+        index: usize,
+        /// The offending value.
+        value: f64,
+    },
+    /// A `precond_build` failpoint fired (fault-injection harness).
+    Injected(InjectedFault),
+}
+
+impl std::fmt::Display for PrecondError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PrecondError::CapacitanceNotPd { rank } => {
+                write!(
+                    f,
+                    "preconditioner capacitance matrix (rank {rank}) is not positive definite"
+                )
+            }
+            PrecondError::NonFiniteDiag { index, value } => {
+                write!(f, "system diagonal entry {index} is non-finite ({value})")
+            }
+            PrecondError::Injected(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for PrecondError {}
 
 /// A CG preconditioner `M ~ A` applied as `z = M^{-1} r` per iteration.
 pub enum Preconditioner<T: Scalar> {
@@ -33,23 +78,50 @@ pub enum Preconditioner<T: Scalar> {
 
 impl<T: Scalar> Preconditioner<T> {
     /// Jacobi preconditioner from the system diagonal (clamped away
-    /// from zero).
+    /// from zero). Panics on a non-finite diagonal; prefer
+    /// [`Preconditioner::try_jacobi`] where a fallback exists.
     pub fn jacobi(diag: &[f64]) -> Self {
-        Preconditioner::Jacobi {
-            inv_diag: diag.iter().map(|&d| T::from_f64(1.0 / d.max(1e-12))).collect(),
+        match Self::try_jacobi(diag) {
+            Ok(p) => p,
+            Err(e) => panic!("{e}"),
         }
+    }
+
+    /// Fallible [`Preconditioner::jacobi`]: validates the diagonal is
+    /// finite (a NaN would otherwise slip through the `max` clamp and
+    /// produce a finite-but-meaningless scale) before building the
+    /// identical clamped reciprocal.
+    pub fn try_jacobi(diag: &[f64]) -> Result<Self, PrecondError> {
+        if let Some((index, &value)) = diag.iter().enumerate().find(|(_, v)| !v.is_finite()) {
+            return Err(PrecondError::NonFiniteDiag { index, value });
+        }
+        Ok(Preconditioner::Jacobi {
+            inv_diag: diag.iter().map(|&d| T::from_f64(1.0 / d.max(1e-12))).collect(),
+        })
     }
 
     /// Build the Woodbury form for M = L L^T + sigma2 I:
     /// M^{-1} = (1/s2) [ I - L (s2 I_r + L^T L)^{-1} L^T ].
+    /// Panics if the capacitance matrix is not PD; prefer
+    /// [`Preconditioner::try_low_rank`] where a fallback exists.
     pub fn low_rank(l: Matrix<T>, sigma2: f64) -> Self {
+        match Self::try_low_rank(l, sigma2) {
+            Ok(p) => p,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Fallible [`Preconditioner::low_rank`]: a non-PD capacitance
+    /// matrix becomes a typed [`PrecondError`] instead of a panic.
+    pub fn try_low_rank(l: Matrix<T>, sigma2: f64) -> Result<Self, PrecondError> {
         let r = l.cols;
         let mut cap = l.transpose().matmul(&l); // r x r
         for i in 0..r {
             cap[(i, i)] += T::from_f64(sigma2);
         }
-        let cap_chol = cholesky(&cap).expect("capacitance matrix not PD");
-        Preconditioner::LowRankPlusNoise { l, sigma2: T::from_f64(sigma2), cap_chol }
+        let cap_chol =
+            cholesky(&cap).ok_or(PrecondError::CapacitanceNotPd { rank: r })?;
+        Ok(Preconditioner::LowRankPlusNoise { l, sigma2: T::from_f64(sigma2), cap_chol })
     }
 
     /// Build from a lazily-evaluated kernel: greedy pivoted Cholesky
@@ -71,6 +143,35 @@ impl<T: Scalar> Preconditioner<T> {
         rank: usize,
         sigma2: f64,
     ) -> Self {
+        match Self::try_pivoted_from_columns(diag_no_noise, col, rank, sigma2) {
+            Ok(p) => p,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Fallible [`Preconditioner::pivoted_from_columns`]: validates the
+    /// input diagonal, converts a non-PD capacitance into a typed
+    /// [`PrecondError`], and honours the `precond_build` failpoint so
+    /// the fallback chain in `gp::lkgp` is testable.
+    pub fn try_pivoted_from_columns(
+        diag_no_noise: Vec<f64>,
+        col: impl Fn(usize) -> Vec<T>,
+        rank: usize,
+        sigma2: f64,
+    ) -> Result<Self, PrecondError> {
+        if let Some(action) = failpoint::check("precond_build") {
+            if action == FaultAction::Error {
+                return Err(PrecondError::Injected(InjectedFault {
+                    site: "precond_build".into(),
+                    action,
+                }));
+            }
+        }
+        if let Some((index, &value)) =
+            diag_no_noise.iter().enumerate().find(|(_, v)| !v.is_finite())
+        {
+            return Err(PrecondError::NonFiniteDiag { index, value });
+        }
         // 128 rows per chunk (down from the spawn-era 256): cheaper
         // pool dispatch makes finer stealing granularity a net win for
         // the ragged later columns. Chunk boundaries are shape-only, so
@@ -88,7 +189,7 @@ impl<T: Scalar> Preconditioner<T> {
                 .iter()
                 .enumerate()
                 .filter(|(i, _)| !used[*i])
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
             else {
                 break;
             };
@@ -155,7 +256,7 @@ impl<T: Scalar> Preconditioner<T> {
                 ltrim[(i, j)] = l[(i, j)];
             }
         }
-        Self::low_rank(ltrim, sigma2)
+        Self::try_low_rank(ltrim, sigma2)
     }
 
     /// Apply M^{-1} to each row of `r`. Rows are independent systems,
@@ -249,6 +350,33 @@ mod tests {
             let want = ch.solve(rhs.row(0));
             assert_close(got.row(0), &want, 1e-5)
         });
+    }
+
+    #[test]
+    fn construction_failures_are_typed() {
+        // NaN sneaks past the clamp in the infallible path, so try_jacobi
+        // must reject it up front
+        let err = Preconditioner::<f64>::try_jacobi(&[1.0, f64::NAN, 2.0]).err();
+        assert!(
+            matches!(err, Some(PrecondError::NonFiniteDiag { index: 1, .. })),
+            "{err:?}"
+        );
+        // sigma2 = 0 with a rank-deficient L -> singular capacitance
+        let l = Matrix::<f64>::zeros(4, 2);
+        let err = Preconditioner::try_low_rank(l, 0.0).err();
+        assert!(
+            matches!(err, Some(PrecondError::CapacitanceNotPd { rank: 2 })),
+            "{err:?}"
+        );
+        // and the lazy builder surfaces a bad diagonal the same way
+        let err = Preconditioner::<f64>::try_pivoted_from_columns(
+            vec![1.0, f64::INFINITY],
+            |_| vec![0.0; 2],
+            2,
+            0.1,
+        )
+        .err();
+        assert!(matches!(err, Some(PrecondError::NonFiniteDiag { index: 1, .. })), "{err:?}");
     }
 
     #[test]

@@ -126,7 +126,7 @@ impl Bencher {
             }
             times.push(t.elapsed().as_nanos() as f64 / iters as f64);
         }
-        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
         let pick = |q: f64| times[((times.len() - 1) as f64 * q).round() as usize];
         let m = Measurement {
             name: name.to_string(),
@@ -140,7 +140,7 @@ impl Bencher {
         };
         println!("{}", m.report());
         self.results.push(m);
-        self.results.last().unwrap()
+        self.results.last().expect("measure() pushed a result above")
     }
 
     /// Write all results as CSV under results/bench/.

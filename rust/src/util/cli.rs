@@ -31,7 +31,7 @@ impl Args {
                 if let Some((k, v)) = key.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
                 } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    let v = it.next().unwrap();
+                    let v = it.next().unwrap_or_default(); // peek guarantees Some
                     out.flags.insert(key.to_string(), v);
                 } else {
                     out.flags.insert(key.to_string(), "true".to_string());

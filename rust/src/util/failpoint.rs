@@ -1,0 +1,318 @@
+//! Deterministic fault-injection failpoints.
+//!
+//! A *failpoint* is a named site in the code (e.g. `backend_mvm`,
+//! `ckpt_write`) that normally does nothing. When armed through the
+//! `LKGP_FAILPOINTS` environment variable (or programmatically via
+//! [`with_failpoints`] in tests) it fires a configured [`FaultAction`]
+//! that the surrounding code translates into a realistic failure: a
+//! typed backend error, a NaN in a CG iterate, a torn checkpoint write,
+//! a panicking parallel-region chunk.
+//!
+//! # Grammar
+//!
+//! ```text
+//! LKGP_FAILPOINTS = spec [ ';' spec ]*
+//! spec            = site [ '@' N ] ':' action
+//! action          = error | nan | panic | torn | short | bitflip
+//! ```
+//!
+//! * `site` names the failpoint (see `docs/robustness.md` for the list).
+//! * `@N` fires only on the N-th *hit* of that site (0-based, counted
+//!   process-wide across the failpoint's lifetime); without `@N` the
+//!   spec fires on every hit.
+//! * Example: `backend_mvm@3:error;ckpt_write:torn` — the fourth backend
+//!   MVM fails with a typed error, and every checkpoint write is torn.
+//!
+//! # Determinism
+//!
+//! Hit counting is the only state: no clocks, no RNG, no thread
+//! identity. Sites are placed where the serial order of hits is fixed by
+//! the bit-determinism contract (dispatch points, not per-chunk work),
+//! so a given spec injects the same fault at the same logical step at
+//! any `LKGP_THREADS`.
+//!
+//! # Cost when disarmed
+//!
+//! [`check`] is a single relaxed atomic load when no failpoints are
+//! configured — safe to leave in hot paths.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+
+/// What an armed failpoint injects when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Return a typed error from the instrumented operation.
+    Error,
+    /// Poison the operation's numeric output with a NaN.
+    Nan,
+    /// Panic inside the instrumented region (exercises panic capture).
+    Panic,
+    /// Truncate a file write partway through (crash-consistency).
+    Torn,
+    /// Truncate a file read partway through.
+    Short,
+    /// Flip one bit/byte of an IO buffer (silent corruption).
+    BitFlip,
+}
+
+impl FaultAction {
+    fn parse(tok: &str) -> Result<Self, String> {
+        match tok {
+            "error" => Ok(FaultAction::Error),
+            "nan" => Ok(FaultAction::Nan),
+            "panic" => Ok(FaultAction::Panic),
+            "torn" => Ok(FaultAction::Torn),
+            "short" => Ok(FaultAction::Short),
+            "bitflip" => Ok(FaultAction::BitFlip),
+            _ => Err(format!(
+                "unknown failpoint action {tok:?} (expected error|nan|panic|torn|short|bitflip)"
+            )),
+        }
+    }
+}
+
+/// A typed error representing a fault injected at a failpoint.
+///
+/// Instrumented operations that fail with [`FaultAction::Error`] wrap
+/// this in their usual error type so the rest of the stack exercises
+/// its real error paths; tests downcast through the anyhow chain to
+/// verify the fault propagated as a typed error rather than a panic.
+#[derive(Clone, Debug)]
+pub struct InjectedFault {
+    /// Failpoint site that fired.
+    pub site: String,
+    /// Action that was injected.
+    pub action: FaultAction,
+}
+
+impl std::fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "injected fault at failpoint {} ({:?})", self.site, self.action)
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+/// One parsed `site[@N]:action` spec plus its hit counter.
+struct FailSpec {
+    site: String,
+    nth: Option<u64>,
+    action: FaultAction,
+    hits: u64,
+}
+
+const UNINIT: u8 = 0;
+const DISARMED: u8 = 1;
+const ARMED: u8 = 2;
+
+/// Fast-path flag: UNINIT until the env var is first consulted, then
+/// DISARMED (no specs) or ARMED (at least one spec installed).
+static STATE: AtomicU8 = AtomicU8::new(UNINIT);
+/// Installed specs; `None` means disarmed.
+static SPECS: Mutex<Option<Vec<FailSpec>>> = Mutex::new(None);
+/// Serializes `with_failpoints`/`without_failpoints` scopes across test
+/// threads so concurrently running tests never see each other's specs.
+static SCOPE: Mutex<()> = Mutex::new(());
+
+fn lock_specs() -> std::sync::MutexGuard<'static, Option<Vec<FailSpec>>> {
+    SPECS.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Parse a full `LKGP_FAILPOINTS` value into specs.
+fn parse(s: &str) -> Result<Vec<FailSpec>, String> {
+    let mut out = Vec::new();
+    for spec in s.split(';').map(str::trim).filter(|t| !t.is_empty()) {
+        let (head, action) = spec
+            .rsplit_once(':')
+            .ok_or_else(|| format!("failpoint spec {spec:?} missing ':action'"))?;
+        let action = FaultAction::parse(action.trim())?;
+        let (site, nth) = match head.split_once('@') {
+            Some((site, n)) => {
+                let n: u64 = n
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("failpoint spec {spec:?}: bad hit index {n:?}"))?;
+                (site.trim(), Some(n))
+            }
+            None => (head.trim(), None),
+        };
+        if site.is_empty() {
+            return Err(format!("failpoint spec {spec:?} has an empty site name"));
+        }
+        out.push(FailSpec { site: site.to_string(), nth, action, hits: 0 });
+    }
+    Ok(out)
+}
+
+/// Install specs (or disarm with `None`), returning the previous specs.
+fn install(specs: Option<Vec<FailSpec>>) -> Option<Vec<FailSpec>> {
+    let mut guard = lock_specs();
+    let armed = specs.as_ref().map(|v| !v.is_empty()).unwrap_or(false);
+    let prev = std::mem::replace(&mut *guard, specs);
+    STATE.store(if armed { ARMED } else { DISARMED }, Ordering::Release);
+    prev
+}
+
+fn init_from_env() {
+    let mut guard = lock_specs();
+    if STATE.load(Ordering::Acquire) != UNINIT {
+        return; // lost the init race; someone else installed
+    }
+    let specs = match std::env::var("LKGP_FAILPOINTS") {
+        Ok(v) if !v.trim().is_empty() => match parse(&v) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                eprintln!("warning: ignoring invalid LKGP_FAILPOINTS: {e}");
+                None
+            }
+        },
+        _ => None,
+    };
+    let armed = specs.as_ref().map(|v| !v.is_empty()).unwrap_or(false);
+    *guard = specs;
+    STATE.store(if armed { ARMED } else { DISARMED }, Ordering::Release);
+}
+
+#[cold]
+fn check_slow(site: &str) -> Option<FaultAction> {
+    let mut guard = lock_specs();
+    let specs = guard.as_mut()?;
+    let mut fired = None;
+    for spec in specs.iter_mut() {
+        if spec.site != site {
+            continue;
+        }
+        let hit = spec.hits;
+        spec.hits += 1;
+        let fire = match spec.nth {
+            Some(n) => hit == n,
+            None => true,
+        };
+        if fire && fired.is_none() {
+            fired = Some(spec.action);
+        }
+    }
+    fired
+}
+
+/// Consult the failpoint named `site`.
+///
+/// Returns `Some(action)` when an armed spec fires on this hit and
+/// `None` otherwise. Every call counts as one hit of `site` (whether or
+/// not a spec fires), so `site@N` specs index the N-th call. Disarmed
+/// cost is one relaxed atomic load.
+pub fn check(site: &str) -> Option<FaultAction> {
+    match STATE.load(Ordering::Relaxed) {
+        DISARMED => None,
+        ARMED => check_slow(site),
+        _ => {
+            init_from_env();
+            check(site)
+        }
+    }
+}
+
+/// Run `f` with the given failpoint spec string armed, restoring the
+/// previous configuration afterwards (even on panic).
+///
+/// Panics if `spec` does not parse — tests should fail loudly on a bad
+/// spec rather than silently running without faults. Scopes are
+/// serialized process-wide (failpoints are global state), so concurrent
+/// tests queue rather than interfere; do not nest scopes on one thread.
+pub fn with_failpoints<T>(spec: &str, f: impl FnOnce() -> T) -> T {
+    let specs = parse(spec).unwrap_or_else(|e| panic!("with_failpoints: {e}"));
+    scoped(Some(specs), f)
+}
+
+/// Run `f` with all failpoints disarmed, restoring the previous
+/// configuration afterwards. Use for fault-test baselines that must not
+/// see faults armed by a sibling scope or the environment.
+pub fn without_failpoints<T>(f: impl FnOnce() -> T) -> T {
+    scoped(None, f)
+}
+
+fn scoped<T>(specs: Option<Vec<FailSpec>>, f: impl FnOnce() -> T) -> T {
+    let _scope = SCOPE.lock().unwrap_or_else(|e| e.into_inner());
+    struct Restore(Option<Option<Vec<FailSpec>>>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            if let Some(prev) = self.0.take() {
+                install(prev);
+            }
+        }
+    }
+    // Force init first so `prev` reflects the env-derived baseline
+    // rather than UNINIT (which install() would misreport as armed).
+    if STATE.load(Ordering::Acquire) == UNINIT {
+        init_from_env();
+    }
+    let _restore = Restore(Some(install(specs)));
+    f()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Unit tests use reserved `__fp_test_*` site names that no library
+    // code consults, so they cannot perturb concurrently running tests.
+
+    #[test]
+    fn disarmed_returns_none() {
+        without_failpoints(|| {
+            assert_eq!(check("__fp_test_a"), None);
+            assert_eq!(check("__fp_test_a"), None);
+        });
+    }
+
+    #[test]
+    fn every_hit_fires_without_index() {
+        with_failpoints("__fp_test_b:error", || {
+            assert_eq!(check("__fp_test_b"), Some(FaultAction::Error));
+            assert_eq!(check("__fp_test_b"), Some(FaultAction::Error));
+            assert_eq!(check("__fp_test_other"), None);
+        });
+    }
+
+    #[test]
+    fn nth_hit_fires_once() {
+        with_failpoints("__fp_test_c@2:nan", || {
+            assert_eq!(check("__fp_test_c"), None);
+            assert_eq!(check("__fp_test_c"), None);
+            assert_eq!(check("__fp_test_c"), Some(FaultAction::Nan));
+            assert_eq!(check("__fp_test_c"), None);
+        });
+    }
+
+    #[test]
+    fn multiple_specs_and_restore() {
+        with_failpoints("__fp_test_d:torn; __fp_test_e@0:bitflip", || {
+            assert_eq!(check("__fp_test_e"), Some(FaultAction::BitFlip));
+            assert_eq!(check("__fp_test_e"), None);
+            assert_eq!(check("__fp_test_d"), Some(FaultAction::Torn));
+        });
+        // scope ended: sites are disarmed again (absent env config)
+        without_failpoints(|| {
+            assert_eq!(check("__fp_test_d"), None);
+        });
+    }
+
+    #[test]
+    fn parse_errors_are_typed() {
+        assert!(parse("no_action_here").is_err());
+        assert!(parse("site@x:error").is_err());
+        assert!(parse("site:explode").is_err());
+        assert!(parse(":error").is_err());
+        assert!(parse("").unwrap().is_empty());
+        assert!(parse(" ; ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn injected_fault_display() {
+        let e = InjectedFault { site: "backend_mvm".into(), action: FaultAction::Error };
+        let s = e.to_string();
+        assert!(s.contains("injected fault"), "{s}");
+        assert!(s.contains("backend_mvm"), "{s}");
+    }
+}

@@ -246,7 +246,9 @@ impl<'a> Parser<'a> {
                     // consume one UTF-8 code point
                     let s = std::str::from_utf8(&self.b[self.i..])
                         .map_err(|_| self.err("invalid utf8"))?;
-                    let ch = s.chars().next().unwrap();
+                    let Some(ch) = s.chars().next() else {
+                        return Err(self.err("invalid utf8"));
+                    };
                     out.push(ch);
                     self.i += ch.len_utf8();
                 }

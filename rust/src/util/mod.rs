@@ -10,6 +10,7 @@
 pub mod bench;
 pub mod cli;
 pub mod convert;
+pub mod failpoint;
 pub mod json;
 pub mod mem;
 pub mod rng;

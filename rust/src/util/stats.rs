@@ -67,7 +67,9 @@ pub fn mean_sem_str(xs: &[f64]) -> String {
 pub fn ranks(scores: &[f64]) -> Vec<f64> {
     let n = scores.len();
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    idx.sort_by(|&a, &b| {
+        scores[a].partial_cmp(&scores[b]).unwrap_or(std::cmp::Ordering::Equal)
+    });
     let mut out = vec![0.0; n];
     let mut i = 0;
     while i < n {

@@ -1,0 +1,302 @@
+//! Fault-injection integration tests: every injected fault must surface
+//! as a typed error or a deterministic recovery — never a panic, never
+//! silently wrong bits.
+//!
+//! All tests that arm real failpoint sites do so through
+//! `with_failpoints` (and baselines through `without_failpoints`);
+//! those scopes are serialized process-wide, so the tests in this
+//! binary cannot perturb each other even when the harness runs them on
+//! parallel threads. Dataset generation happens *outside* the scopes so
+//! faults only ever hit the operation under test.
+
+use lkgp::data::synthetic::well_specified;
+use lkgp::data::GridDataset;
+use lkgp::gp::diagnostics::{OnNonConverged, PrecondLevel};
+use lkgp::gp::lkgp::{Lkgp, LkgpConfig, LkgpFit};
+use lkgp::kernels::ProductGridKernel;
+use lkgp::model::io::CheckpointError;
+use lkgp::model::TrainedModel;
+use lkgp::par::RegionPanic;
+use lkgp::serve::ServeEngine;
+use lkgp::solvers::SolveError;
+use lkgp::util::failpoint::{with_failpoints, without_failpoints, InjectedFault};
+use lkgp::util::rng::Rng;
+
+fn dataset(seed: u64) -> GridDataset {
+    let kernel = ProductGridKernel::new(2, "rbf", 8);
+    well_specified(20, 8, 2, &kernel, 0.01, 0.25, seed)
+}
+
+fn cfg(seed: u64) -> LkgpConfig {
+    LkgpConfig {
+        train_iters: 3,
+        n_samples: 8,
+        probes: 4,
+        cg_tol: 1e-3,
+        cg_max_iters: 200,
+        seed,
+        capture_pathwise: true,
+        mvm_retry_backoff_ms: 0, // retries should not slow the tests
+        ..LkgpConfig::default()
+    }
+}
+
+fn posterior_bits(fit: &LkgpFit) -> (Vec<u64>, Vec<u64>) {
+    (
+        fit.posterior.mean.iter().map(|x| x.to_bits()).collect(),
+        fit.posterior.var.iter().map(|x| x.to_bits()).collect(),
+    )
+}
+
+fn tmp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("lkgp_faults_{}_{tag}.ckpt", std::process::id()))
+}
+
+// ---------------------------------------------------------------------
+// backend MVM faults
+// ---------------------------------------------------------------------
+
+#[test]
+fn persistent_backend_error_fails_fit_with_typed_error() {
+    let data = dataset(1);
+    let err = with_failpoints("backend_mvm:error", || Lkgp::fit(&data, cfg(1)))
+        .err()
+        .expect("a persistently failing backend cannot produce a fit");
+    let injected = err
+        .downcast_ref::<InjectedFault>()
+        .unwrap_or_else(|| panic!("expected InjectedFault in chain, got: {err:#}"));
+    assert_eq!(injected.site, "backend_mvm");
+}
+
+#[test]
+fn transient_backend_error_recovers_bit_identically() {
+    let data = dataset(2);
+    let clean = without_failpoints(|| Lkgp::fit(&data, cfg(2)).expect("clean fit"));
+    let faulted = with_failpoints("backend_mvm@2:error", || {
+        Lkgp::fit(&data, cfg(2)).expect("one transient MVM failure is within the retry budget")
+    });
+    assert!(
+        faulted.diagnostics.backend_retries >= 1,
+        "the injected failure must show up as a recorded retry"
+    );
+    assert_eq!(clean.diagnostics.backend_retries, 0);
+    assert_eq!(
+        posterior_bits(&clean),
+        posterior_bits(&faulted),
+        "a retried deterministic MVM must not change a single output bit"
+    );
+}
+
+#[test]
+fn transient_recovery_is_thread_invariant() {
+    let data = dataset(3);
+    let run = |threads: usize| {
+        lkgp::par::with_threads(threads, || {
+            with_failpoints("backend_mvm@2:error", || {
+                Lkgp::fit(&data, cfg(3)).expect("transient fault recovers at any thread count")
+            })
+        })
+    };
+    let f1 = run(1);
+    let f4 = run(4);
+    assert!(f1.diagnostics.backend_retries >= 1);
+    assert_eq!(f1.diagnostics.backend_retries, f4.diagnostics.backend_retries);
+    assert_eq!(posterior_bits(&f1), posterior_bits(&f4));
+}
+
+// ---------------------------------------------------------------------
+// CG divergence detection
+// ---------------------------------------------------------------------
+
+#[test]
+fn nan_in_cg_residual_is_a_typed_breakdown() {
+    let data = dataset(4);
+    let err = with_failpoints("cg_iter:nan", || Lkgp::fit(&data, cfg(4)))
+        .err()
+        .expect("a NaN-poisoned solve must fail");
+    match err.downcast_ref::<SolveError>() {
+        Some(SolveError::Breakdown { .. }) => {}
+        other => panic!("expected SolveError::Breakdown, got {other:?} in: {err:#}"),
+    }
+}
+
+#[test]
+fn nonconverged_solve_policy_warn_vs_error() {
+    let data = dataset(5);
+    let strangled = |policy: OnNonConverged| LkgpConfig {
+        cg_max_iters: 1,
+        cg_tol: 1e-12,
+        on_nonconverged: policy,
+        ..cfg(5)
+    };
+    without_failpoints(|| {
+        let err = Lkgp::fit(&data, strangled(OnNonConverged::Error))
+            .err()
+            .expect("Error policy must fail a non-converged fit");
+        match err.downcast_ref::<SolveError>() {
+            Some(SolveError::NotConverged { .. }) => {}
+            other => panic!("expected SolveError::NotConverged, got {other:?} in: {err:#}"),
+        }
+        let fit = Lkgp::fit(&data, strangled(OnNonConverged::Warn))
+            .expect("Warn policy records but does not fail");
+        assert!(fit.diagnostics.nonconverged_solves > 0);
+        assert!(!fit.diagnostics.healthy());
+    });
+}
+
+// ---------------------------------------------------------------------
+// preconditioner fallback
+// ---------------------------------------------------------------------
+
+#[test]
+fn failed_pivoted_precond_falls_back_to_jacobi_bit_identically() {
+    let data = dataset(6);
+    // Baseline: rank 0 goes straight to the Jacobi preconditioner.
+    let jacobi = without_failpoints(|| Lkgp::fit(&data, cfg(6)).expect("clean jacobi fit"));
+    // Faulted: rank > 0 attempts pivoted Cholesky, whose build fails at
+    // the failpoint; the policy chain must land on the same Jacobi.
+    let fallback = with_failpoints("precond_build:error", || {
+        let c = LkgpConfig { precond_rank: 30, ..cfg(6) };
+        Lkgp::fit(&data, c).expect("precond build failure is recoverable")
+    });
+    assert!(
+        !fallback.diagnostics.precond_fallbacks.is_empty(),
+        "fallback must be recorded in the diagnostics"
+    );
+    for f in &fallback.diagnostics.precond_fallbacks {
+        assert_eq!(f.from, PrecondLevel::PivotedCholesky);
+        assert_eq!(f.to, PrecondLevel::Jacobi);
+    }
+    assert_eq!(
+        posterior_bits(&jacobi),
+        posterior_bits(&fallback),
+        "fallback Jacobi must run the exact math of a rank-0 fit"
+    );
+}
+
+// ---------------------------------------------------------------------
+// parallel-region faults
+// ---------------------------------------------------------------------
+
+#[test]
+fn region_panic_surfaces_as_typed_error_not_a_crash() {
+    let data = dataset(7);
+    let err = with_failpoints("par_region:panic", || Lkgp::fit(&data, cfg(7)))
+        .err()
+        .expect("a panicking region chunk must fail the fit");
+    let rp = err
+        .downcast_ref::<RegionPanic>()
+        .unwrap_or_else(|| panic!("expected RegionPanic in chain, got: {err:#}"));
+    assert!(rp.payload.contains("injected fault"), "{rp}");
+}
+
+// ---------------------------------------------------------------------
+// checkpoint IO faults
+// ---------------------------------------------------------------------
+
+fn fitted_model(seed: u64) -> TrainedModel {
+    let data = dataset(seed);
+    without_failpoints(|| Lkgp::fit(&data, cfg(seed)).expect("clean fit"))
+        .model
+        .expect("capture_pathwise was set")
+}
+
+#[test]
+fn torn_checkpoint_write_is_detected_on_load() {
+    let model = fitted_model(8);
+    let path = tmp_path("torn");
+    with_failpoints("ckpt_write:torn", || {
+        model.save(&path).expect("the torn write itself succeeds");
+    });
+    let err = without_failpoints(|| TrainedModel::load(&path))
+        .err()
+        .expect("a torn checkpoint must not load");
+    assert!(
+        err.downcast_ref::<CheckpointError>().is_some(),
+        "expected a typed CheckpointError, got: {err:#}"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn short_and_bitflipped_reads_are_typed_errors() {
+    let model = fitted_model(9);
+    let path = tmp_path("read");
+    without_failpoints(|| model.save(&path).expect("clean save"));
+
+    let err = with_failpoints("ckpt_read:short", || TrainedModel::load(&path))
+        .err()
+        .expect("a short read must not load");
+    assert!(err.downcast_ref::<CheckpointError>().is_some(), "{err:#}");
+
+    let err = with_failpoints("ckpt_read:bitflip", || TrainedModel::load(&path))
+        .err()
+        .expect("a silently corrupted read must not load");
+    match err.downcast_ref::<CheckpointError>() {
+        Some(CheckpointError::ChecksumMismatch { .. }) => {}
+        other => panic!("expected ChecksumMismatch, got {other:?} in: {err:#}"),
+    }
+
+    // and the file itself is still good once faults are disarmed
+    without_failpoints(|| TrainedModel::load(&path).expect("uncorrupted load succeeds"));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn checkpoint_fuzz_byte_flips_and_truncations_never_panic() {
+    let model = fitted_model(10);
+    let bytes = model.to_bytes();
+    let n = bytes.len();
+    assert!(n > 64, "checkpoint unexpectedly tiny ({n} bytes)");
+
+    // truncations at structural boundaries and arbitrary cut points:
+    // every prefix must be rejected with a typed error, never a panic
+    let cuts =
+        [0usize, 1, 7, 8, 9, 15, 16, 31, n / 4, n / 2, 3 * n / 4, n - 9, n - 8, n - 1];
+    for &cut in cuts.iter().filter(|&&c| c < n) {
+        assert!(
+            TrainedModel::from_bytes(&bytes[..cut]).is_err(),
+            "truncation to {cut} bytes must be rejected"
+        );
+    }
+
+    // seeded single-bit flips all over the file: the trailing checksum
+    // (or an earlier structural check) must catch every one of them
+    let mut rng = Rng::new(0xFAu64);
+    for _ in 0..64 {
+        let pos = (rng.next_u64() % n as u64) as usize;
+        let bit = (rng.next_u64() % 8) as u8;
+        let mut corrupted = bytes.clone();
+        corrupted[pos] ^= 1 << bit;
+        assert!(
+            TrainedModel::from_bytes(&corrupted).is_err(),
+            "flip of bit {bit} at byte {pos} must be rejected"
+        );
+    }
+
+    // sanity: the pristine bytes still round-trip
+    let back = TrainedModel::from_bytes(&bytes).expect("pristine bytes round-trip");
+    assert_eq!(back.posterior.mean, model.posterior.mean);
+}
+
+// ---------------------------------------------------------------------
+// serving faults
+// ---------------------------------------------------------------------
+
+#[test]
+fn serve_reconstruction_retries_transient_mvm_failures() {
+    let model = fitted_model(11);
+    let engine = with_failpoints("serve_mvm@0:error", || {
+        ServeEngine::from_model(model.clone()).expect("one transient MVM failure is retried")
+    });
+    assert!(engine.diagnostics().backend_retries >= 1);
+    assert!(
+        engine.verify().bit_identical,
+        "a retried reconstruction must still match the stored posterior bit for bit"
+    );
+
+    let err = with_failpoints("serve_mvm:error", || ServeEngine::from_model(model))
+        .err()
+        .expect("a persistently failing backend cannot build an engine");
+    assert!(err.downcast_ref::<InjectedFault>().is_some(), "{err:#}");
+}

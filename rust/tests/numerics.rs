@@ -120,7 +120,7 @@ fn cg_solution_meets_residual_bound<T: Scalar>() {
             &mut DenseOp(&a),
             &b,
             &Preconditioner::Identity,
-            &CgOptions { max_iters: 30 * n, tol },
+            &CgOptions { max_iters: 30 * n, tol, ..CgOptions::default() },
         );
         if !stats.converged {
             return Err(format!("not converged: {:?}", stats.rel_residuals));
