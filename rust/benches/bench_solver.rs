@@ -1,13 +1,27 @@
 //! Bench: batched preconditioned CG on the LKGP system operator —
 //! iterations and wall time per preconditioner (identity / Jacobi /
-//! pivoted Cholesky, the paper's Appendix-C solver configuration).
+//! pivoted Cholesky, the paper's Appendix-C solver configuration) —
+//! plus the eigendecomposition solver paths added on top of it:
+//!
+//! * `KronEig` preconditioner under light (5%) masking, gated in
+//!   `BENCH_solver.json` to cut CG iterations at least 2x versus
+//!   pivoted Cholesky (`eig.iters_reduction_ge_2x`);
+//! * the direct spectral solve on a fully-observed grid
+//!   (factorization + solve) versus CG wall time
+//!   (`eig.full_grid_speedup_vs_cg`, informational).
+//!
+//! `LKGP_BENCH_SMOKE=1` shrinks sizes for the CI `bench-smoke` job,
+//! which gates on the emitted `BENCH_solver.json` via
+//! `scripts/check_bench.py`.
 
 use lkgp::kernels::ProductGridKernel;
 use lkgp::kron::{KronOp, MaskedKronSystem};
 use lkgp::linalg::Matrix;
 use lkgp::solvers::cg::{solve_cg, BatchedOp, CgOptions};
+use lkgp::solvers::eig::EigSolver;
 use lkgp::solvers::precond::Preconditioner;
 use lkgp::util::bench::{black_box, Bencher};
+use lkgp::util::json::Json;
 use lkgp::util::rng::Rng;
 
 struct Op<'a>(&'a MaskedKronSystem<f64>);
@@ -21,11 +35,26 @@ impl<'a> BatchedOp<f64> for Op<'a> {
     }
 }
 
+fn masked_rhs(rng: &mut Rng, rows: usize, n: usize, mask: &[f64]) -> Matrix<f64> {
+    let mut r = Matrix::from_vec(rows, n, rng.normals(rows * n));
+    for row in 0..rows {
+        for (x, m) in r.row_mut(row).iter_mut().zip(mask) {
+            *x *= *m;
+        }
+    }
+    r
+}
+
 fn main() {
-    let mut b = Bencher::quick();
+    let smoke = std::env::var("LKGP_BENCH_SMOKE").ok().as_deref() == Some("1");
+    let mut b = if smoke { Bencher::quick() } else { Bencher::default() };
     let mut rng = Rng::new(3);
-    println!("# bench_solver — PCG on the latent-Kronecker system\n");
-    for (p, q, s2) in [(128usize, 16usize, 0.1f64), (256, 32, 0.01)] {
+    println!("# bench_solver — PCG + eig solver on the latent-Kronecker system (smoke: {smoke})\n");
+
+    // ---- section 1: the Appendix-C preconditioner ladder at 30% masking
+    let shapes: &[(usize, usize, f64)] =
+        if smoke { &[(128, 16, 0.1)] } else { &[(128, 16, 0.1), (256, 32, 0.01)] };
+    for &(p, q, s2) in shapes {
         let n = p * q;
         let kernel = ProductGridKernel::new(3, "rbf", q);
         let s = Matrix::from_vec(p, 3, rng.normals(p * 3));
@@ -37,15 +66,7 @@ fn main() {
             mask.clone(),
             s2,
         );
-        let rhs = {
-            let mut r = Matrix::from_vec(4, n, rng.normals(4 * n));
-            for row in 0..4 {
-                for (x, m) in r.row_mut(row).iter_mut().zip(&mask) {
-                    *x *= *m;
-                }
-            }
-            r
-        };
+        let rhs = masked_rhs(&mut rng, 4, n, &mask);
         let opts = CgOptions { max_iters: 400, tol: 1e-2, ..CgOptions::default() };
         for (pname, pre) in [
             ("identity", Preconditioner::Identity),
@@ -72,5 +93,111 @@ fn main() {
             );
         }
     }
+
+    // ---- section 2: KronEig preconditioner at 5% masking, tight tol
+    // The latent-grid inverse is exact up to a rank <= 2 * #missing
+    // perturbation, so preconditioned CG converges in O(#missing) steps
+    // where pivoted Cholesky still grinds through the tail spectrum.
+    let (p, q) = if smoke { (64usize, 12usize) } else { (128usize, 16usize) };
+    let s2 = 1e-3;
+    let tol = 1e-6;
+    let n = p * q;
+    let kernel = ProductGridKernel::new(3, "rbf", q);
+    let s = Matrix::from_vec(p, 3, rng.normals(p * 3));
+    let t: Vec<f64> = (0..q).map(|k| k as f64 / (q - 1) as f64).collect();
+    let kss = kernel.gram_s(&s);
+    let ktt = kernel.gram_t(&t);
+    let mask: Vec<f64> =
+        (0..n).map(|_| if rng.uniform() < 0.05 { 0.0 } else { 1.0 }).collect();
+    let sys = MaskedKronSystem::new(KronOp::new(kss.clone(), ktt.clone()), mask.clone(), s2);
+    let rhs = masked_rhs(&mut rng, 4, n, &mask);
+    let opts = CgOptions { max_iters: 2000, tol, ..CgOptions::default() };
+
+    let pivchol = Preconditioner::pivoted_from_columns(
+        sys.diag().iter().map(|d| d - s2).collect(),
+        |j| sys.kernel_col(j),
+        50,
+        s2,
+    );
+    let (_, plain_stats) = solve_cg(&mut Op(&sys), &rhs, &pivchol, &opts);
+    let kron_eig =
+        Preconditioner::try_kron_eig(&kss, &ktt, s2).expect("kron-eig preconditioner");
+    let (_, eig_stats) = solve_cg(&mut Op(&sys), &rhs, &kron_eig, &opts);
+    b.bench(
+        &format!(
+            "cg 5% p={p} q={q} pre=pivchol-50 [{} iters, conv={}]",
+            plain_stats.iters, plain_stats.converged
+        ),
+        || {
+            black_box(solve_cg(&mut Op(&sys), &rhs, &pivchol, &opts));
+        },
+    );
+    b.bench(
+        &format!(
+            "cg 5% p={p} q={q} pre=kron-eig [{} iters, conv={}]",
+            eig_stats.iters, eig_stats.converged
+        ),
+        || {
+            black_box(solve_cg(&mut Op(&sys), &rhs, &kron_eig, &opts));
+        },
+    );
+    let cg_iters_plain = plain_stats.iters;
+    let cg_iters_eig_precond = eig_stats.iters;
+    let reduction_ok =
+        eig_stats.converged && cg_iters_plain >= 2 * cg_iters_eig_precond.max(1);
+
+    // ---- section 3: full grid — direct spectral solve vs CG wall time
+    let full_sys =
+        MaskedKronSystem::new(KronOp::new(kss.clone(), ktt.clone()), vec![1.0; n], s2);
+    let rhs_full = Matrix::from_vec(4, n, rng.normals(4 * n));
+    let jacobi_full = Preconditioner::jacobi(&full_sys.diag());
+    let (_, full_cg_stats) = solve_cg(&mut Op(&full_sys), &rhs_full, &jacobi_full, &opts);
+    let cg_secs = b
+        .bench(
+            &format!(
+                "cg full-grid p={p} q={q} pre=jacobi [{} iters, conv={}]",
+                full_cg_stats.iters, full_cg_stats.converged
+            ),
+            || {
+                black_box(solve_cg(&mut Op(&full_sys), &rhs_full, &jacobi_full, &opts));
+            },
+        )
+        .secs();
+    let eig_secs = b
+        .bench(&format!("eig full-grid p={p} q={q} [factor + 4-rhs solve]"), || {
+            let es = EigSolver::try_new(&kss, &ktt, s2).expect("eig solver");
+            black_box(es.solve_batch(&rhs_full));
+        })
+        .secs();
+    let full_grid_speedup_vs_cg = cg_secs / eig_secs.max(1e-12);
+    println!(
+        "\nfull-grid: eig {:.3}ms vs cg {:.3}ms ({full_grid_speedup_vs_cg:.1}x); \
+         5% masking: kron-eig {cg_iters_eig_precond} iters vs pivchol {cg_iters_plain}",
+        eig_secs * 1e3,
+        cg_secs * 1e3
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("bench_solver".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "eig",
+            Json::obj(vec![
+                ("shape", Json::Str(format!("{p}x{q}"))),
+                ("mask_missing", Json::Num(0.05)),
+                ("sigma2", Json::Num(s2)),
+                ("tol", Json::Num(tol)),
+                ("cg_iters_plain", Json::Num(cg_iters_plain as f64)),
+                ("cg_iters_eig_precond", Json::Num(cg_iters_eig_precond as f64)),
+                ("iters_reduction_ge_2x", Json::Bool(reduction_ok)),
+                ("full_grid_secs_cg", Json::Num(cg_secs)),
+                ("full_grid_secs_eig", Json::Num(eig_secs)),
+                ("full_grid_speedup_vs_cg", Json::Num(full_grid_speedup_vs_cg)),
+            ]),
+        ),
+    ]);
+    let _ = std::fs::write("BENCH_solver.json", format!("{doc}\n"));
     b.save_csv("bench_solver");
+    b.save_json("bench_solver");
+    println!("\nwrote BENCH_solver.json + results/bench/bench_solver.{{csv,json}}");
 }

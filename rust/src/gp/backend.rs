@@ -110,6 +110,13 @@ pub trait KronBackend<T: Scalar = f64> {
     fn kernel_bytes(&self) -> u64;
     /// kernel evaluations performed since set_hypers (Fig-2 axis)
     fn kernel_evals(&self) -> u64;
+    /// The current Gram factors `(K_SS, K_TT)` widened to f64, if the
+    /// backend exposes them (after `set_hypers`). Feeds the direct
+    /// eigendecomposition solver and the `KronEig` preconditioner;
+    /// `None` means those paths fall back to CG.
+    fn gram_factors(&self) -> Option<(Matrix<f64>, Matrix<f64>)> {
+        None
+    }
 }
 
 /// Adapter: use a backend as a CG operator.
@@ -478,6 +485,12 @@ impl<T: Scalar> KronBackend<T> for RustKronBackend<T> {
     fn kernel_evals(&self) -> u64 {
         self.kernel_evals
     }
+
+    fn gram_factors(&self) -> Option<(Matrix<f64>, Matrix<f64>)> {
+        self.sys
+            .as_ref()
+            .map(|s| (s.op.kss.cast::<f64>(), s.op.ktt.cast::<f64>()))
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -753,6 +766,16 @@ impl KronBackend<f64> for PjrtKronBackend {
 
     fn kernel_evals(&self) -> u64 {
         ((self.p * self.p) + (self.q * self.q)) as u64
+    }
+
+    fn gram_factors(&self) -> Option<(Matrix<f64>, Matrix<f64>)> {
+        if !self.fresh {
+            return None;
+        }
+        Some((
+            Matrix::from_vec(self.p, self.p, convert::f64_vec(&self.kss)),
+            Matrix::from_vec(self.q, self.q, convert::f64_vec(&self.ktt)),
+        ))
     }
 }
 

@@ -42,9 +42,78 @@ impl OnNonConverged {
     }
 }
 
+/// Which linear-system engine `Lkgp::fit` should use
+/// (config `LkgpConfig::solver`, env `LKGP_SOLVER`, CLI `--solver`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Solver {
+    /// Pick automatically: the exact per-factor eigendecomposition
+    /// solver on fully-observed grids (zero CG iterations), plain CG
+    /// everywhere else — bit-identical to `Cg` on any masked grid.
+    #[default]
+    Auto,
+    /// Always run (preconditioned) CG — the paper's default engine.
+    Cg,
+    /// Force the eigendecomposition path: direct spectral solves on
+    /// fully-observed grids; under masking, CG with the latent-grid
+    /// `KronEig` preconditioner ahead of pivoted Cholesky.
+    Eig,
+}
+
+impl Solver {
+    /// Parse `"auto"` / `"cg"` / `"eig"` (case-insensitive).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(Solver::Auto),
+            "cg" => Ok(Solver::Cg),
+            "eig" => Ok(Solver::Eig),
+            _ => Err(format!("invalid solver value {s:?} (expected cg|eig|auto)")),
+        }
+    }
+
+    /// Read `LKGP_SOLVER` from the environment (default Auto; an
+    /// invalid value warns and falls back to Auto).
+    pub fn from_env() -> Self {
+        match std::env::var("LKGP_SOLVER") {
+            Ok(v) if !v.trim().is_empty() => Self::parse(v.trim()).unwrap_or_else(|e| {
+                eprintln!("warning: {e}; using auto");
+                Solver::Auto
+            }),
+            _ => Solver::Auto,
+        }
+    }
+}
+
+/// Which solver path actually produced a result (recorded in
+/// [`FitDiagnostics`]; the request lives in `LkgpConfig::solver`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SolverPath {
+    /// Batched preconditioned conjugate gradients.
+    #[default]
+    Cg,
+    /// Direct per-factor eigendecomposition solves (no CG iterations).
+    Eig,
+    /// Serve-side checkpoint reconstruction: captured pathwise state
+    /// replayed through MVMs only, no linear solves at all.
+    Replay,
+}
+
+impl std::fmt::Display for SolverPath {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SolverPath::Cg => write!(f, "cg"),
+            SolverPath::Eig => write!(f, "eig"),
+            SolverPath::Replay => write!(f, "mvm-replay"),
+        }
+    }
+}
+
 /// Preconditioner strength levels, ordered by the fallback chain.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PrecondLevel {
+    /// Exact latent-grid (unmasked-system) inverse from per-factor
+    /// eigendecompositions — the strongest level, used ahead of pivoted
+    /// Cholesky when `LKGP_SOLVER=eig` meets a masked grid.
+    KronEig,
     /// The paper's pivoted-Cholesky + Woodbury preconditioner.
     PivotedCholesky,
     /// Diagonal (Jacobi) scaling.
@@ -56,6 +125,7 @@ pub enum PrecondLevel {
 impl std::fmt::Display for PrecondLevel {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
+            PrecondLevel::KronEig => write!(f, "kron-eig"),
             PrecondLevel::PivotedCholesky => write!(f, "pivoted-cholesky"),
             PrecondLevel::Jacobi => write!(f, "jacobi"),
             PrecondLevel::Identity => write!(f, "identity"),
@@ -81,6 +151,12 @@ pub struct PrecondFallback {
 /// order, never on timing or thread count.
 #[derive(Clone, Debug, Default)]
 pub struct FitDiagnostics {
+    /// Which solver path produced the result (CG, direct eig, or a
+    /// serve-side MVM replay).
+    pub solver_path: SolverPath,
+    /// Direct eigendecomposition solves performed (always zero on the
+    /// CG path; these contribute zero CG iterations).
+    pub eig_solves: usize,
     /// CG solves performed (train + pathwise batches).
     pub cg_solves: usize,
     /// How many of those finished without reaching the tolerance.
@@ -116,6 +192,10 @@ impl FitDiagnostics {
     /// Multi-line human-readable report (CLI `train` output).
     pub fn render(&self) -> String {
         let mut s = format!(
+            "  solver: {} path, {} eig solves\n",
+            self.solver_path, self.eig_solves
+        );
+        s += &format!(
             "  cg: {} solves, {} iters, {} mvms, worst rel residual {:.3e}\n",
             self.cg_solves, self.cg_iters_total, self.mvm_total, self.worst_rel_residual
         );
@@ -154,6 +234,18 @@ mod tests {
         assert_eq!(OnNonConverged::parse("ERROR"), Ok(OnNonConverged::Error));
         assert!(OnNonConverged::parse("panic").is_err());
         assert_eq!(OnNonConverged::default(), OnNonConverged::Warn);
+    }
+
+    #[test]
+    fn parse_solver() {
+        assert_eq!(Solver::parse("cg"), Ok(Solver::Cg));
+        assert_eq!(Solver::parse("EIG"), Ok(Solver::Eig));
+        assert_eq!(Solver::parse("Auto"), Ok(Solver::Auto));
+        assert!(Solver::parse("lu").is_err());
+        assert_eq!(Solver::default(), Solver::Auto);
+        assert_eq!(SolverPath::default(), SolverPath::Cg);
+        assert_eq!(format!("{}", SolverPath::Replay), "mvm-replay");
+        assert_eq!(format!("{}", PrecondLevel::KronEig), "kron-eig");
     }
 
     #[test]

@@ -25,7 +25,10 @@ use anyhow::{Context, Result};
 use crate::data::GridDataset;
 use crate::linalg::{Matrix, Scalar};
 use crate::runtime::Runtime;
-use crate::solvers::cg::{solve_cg, CgOptions, CgStats, SolveError};
+use crate::solvers::cg::{
+    solve_cg, CgOptions, CgStats, SolveDiag, SolveError, SolveOutcome,
+};
+use crate::solvers::eig::EigSolver;
 use crate::solvers::precond::Preconditioner;
 use crate::util::rng::Rng;
 use crate::util::timer::Profile;
@@ -33,7 +36,9 @@ use crate::util::timer::Profile;
 use super::backend::{
     KronBackend, MvmMode, PjrtKronBackend, Precision, RustKronBackend, SystemOp,
 };
-use super::diagnostics::{FitDiagnostics, OnNonConverged, PrecondFallback, PrecondLevel};
+use super::diagnostics::{
+    FitDiagnostics, OnNonConverged, PrecondFallback, PrecondLevel, Solver, SolverPath,
+};
 use super::Posterior;
 
 /// Which backend executes the five LKGP operations.
@@ -96,6 +101,15 @@ pub struct LkgpConfig {
     /// Backoff before the first MVM retry, in milliseconds (doubles per
     /// retry; 0 = retry immediately).
     pub mvm_retry_backoff_ms: u64,
+    /// Which linear-system engine runs the solves (default
+    /// [`Solver::Auto`]: the direct per-factor eigendecomposition path
+    /// on fully-observed grids — zero CG iterations — and plain CG,
+    /// bit-identical to [`Solver::Cg`], on any masked grid).
+    /// [`Solver::Eig`] additionally enables the latent-grid `KronEig`
+    /// preconditioner under masking. The CLI maps `--solver` /
+    /// `LKGP_SOLVER` here; `Default::default()` does not read the
+    /// environment.
+    pub solver: Solver,
 }
 
 impl Default for LkgpConfig {
@@ -116,6 +130,7 @@ impl Default for LkgpConfig {
             on_nonconverged: OnNonConverged::Warn,
             mvm_retries: 2,
             mvm_retry_backoff_ms: 10,
+            solver: Solver::Auto,
         }
     }
 }
@@ -205,15 +220,37 @@ impl Lkgp {
 }
 
 /// Build the strongest preconditioner that constructs cleanly, walking
-/// the fallback chain pivoted Cholesky -> Jacobi -> identity and
-/// recording every downgrade in `diags`. On the happy path the built
-/// preconditioner is exactly what the infallible constructors produce.
+/// the fallback chain KronEig (when `kron_eig` requests it) -> pivoted
+/// Cholesky -> Jacobi -> identity and recording every downgrade in
+/// `diags`. On the happy path the built preconditioner is exactly what
+/// the infallible constructors produce.
 fn build_precond<T: Scalar, B: KronBackend<T>>(
     be: &B,
     rank: usize,
     sigma2: f64,
+    kron_eig: bool,
     diags: &mut FitDiagnostics,
 ) -> (Preconditioner<T>, PrecondLevel) {
+    if kron_eig {
+        let next = if rank > 0 { PrecondLevel::PivotedCholesky } else { PrecondLevel::Jacobi };
+        match be.gram_factors() {
+            Some((kss, ktt)) => {
+                match Preconditioner::try_kron_eig(&kss, &ktt, sigma2) {
+                    Ok(p) => return (p, PrecondLevel::KronEig),
+                    Err(e) => diags.precond_fallbacks.push(PrecondFallback {
+                        from: PrecondLevel::KronEig,
+                        to: next,
+                        reason: e.to_string(),
+                    }),
+                }
+            }
+            None => diags.precond_fallbacks.push(PrecondFallback {
+                from: PrecondLevel::KronEig,
+                to: next,
+                reason: "backend does not expose Gram factors".into(),
+            }),
+        }
+    }
     if rank > 0 {
         // greedy pivot selection runs on an f64 diagonal (widened from
         // the T-precision Gram, so near-ties can still order differently
@@ -249,7 +286,7 @@ fn downgrade_precond<T: Scalar, B: KronBackend<T>>(
     be: &B,
     from: PrecondLevel,
 ) -> (Preconditioner<T>, PrecondLevel) {
-    if from == PrecondLevel::PivotedCholesky {
+    if from == PrecondLevel::KronEig || from == PrecondLevel::PivotedCholesky {
         if let Ok(p) = Preconditioner::try_jacobi(&be.system_diag()) {
             return (p, PrecondLevel::Jacobi);
         }
@@ -295,13 +332,18 @@ fn solve_resilient<T: Scalar, B: KronBackend<T>>(
         diags.cg_iters_total += stats.iters;
         diags.mvm_total += stats.mvm_count;
         diags.cg_restarts += stats.restarts;
-        for &r in &stats.rel_residuals {
-            if r.is_finite() && r > diags.worst_rel_residual {
-                diags.worst_rel_residual = r;
-            }
-        }
         match stats.error.clone() {
             None => {
+                // Residuals fold into worst_rel_residual only for the
+                // solve that actually stands: an aborted attempt (e.g.
+                // indefinite preconditioner, whose residuals are still
+                // at their initial 1.0) is replaced by the re-solve
+                // below, and its residuals must not poison the report.
+                for &r in &stats.rel_residuals {
+                    if r.is_finite() && r > diags.worst_rel_residual {
+                        diags.worst_rel_residual = r;
+                    }
+                }
                 if !stats.converged {
                     diags.nonconverged_solves += 1;
                     let (worst_system, rel_residual) = stats
@@ -347,6 +389,71 @@ fn solve_resilient<T: Scalar, B: KronBackend<T>>(
     }
 }
 
+/// One direct spectral solve standing in for [`solve_resilient`] on the
+/// fully-observed path: zero CG iterations and zero MVMs. The true
+/// per-row residuals (measured against the original factors, typically
+/// ~1e-14) fold into the same diagnostics and are checked against
+/// `cg_tol` under the same [`LkgpConfig::on_nonconverged`] policy;
+/// fabricated [`CgStats`] keep downstream accounting uniform across
+/// solver paths.
+fn solve_eig_direct<T: Scalar>(
+    es: &EigSolver,
+    rhs: &Matrix<T>,
+    cfg: &LkgpConfig,
+    diags: &mut FitDiagnostics,
+    label: &str,
+) -> Result<(Matrix<T>, CgStats)> {
+    let (x, rels) = es.solve_batch(rhs);
+    diags.solver_path = SolverPath::Eig;
+    diags.eig_solves += 1;
+    for &r in &rels {
+        if r.is_finite() && r > diags.worst_rel_residual {
+            diags.worst_rel_residual = r;
+        }
+    }
+    let converged = rels.iter().all(|&r| r.is_finite() && r <= cfg.cg_tol);
+    if !converged {
+        diags.nonconverged_solves += 1;
+        let (worst_system, rel_residual) = rels
+            .iter()
+            .enumerate()
+            .fold((0, 0.0), |acc, (i, &r)| if r > acc.1 { (i, r) } else { acc });
+        let err = SolveError::NotConverged { worst_system, rel_residual, iters: 0 };
+        match cfg.on_nonconverged {
+            OnNonConverged::Error => {
+                return Err(anyhow::Error::new(err)
+                    .context(format!("{label} eig solve missed tolerance")));
+            }
+            OnNonConverged::Warn => {
+                if diags.nonconverged_solves == 1 {
+                    eprintln!("warning: {label} {err}");
+                }
+            }
+        }
+    }
+    let sys_diags: Vec<SolveDiag> = rels
+        .iter()
+        .map(|&r| SolveDiag {
+            outcome: if r.is_finite() && r <= cfg.cg_tol {
+                SolveOutcome::Converged
+            } else {
+                SolveOutcome::MaxIters
+            },
+            rel_residual: r,
+        })
+        .collect();
+    let stats = CgStats {
+        iters: 0,
+        mvm_count: 0,
+        rel_residuals: rels,
+        converged,
+        diags: sys_diags,
+        restarts: 0,
+        error: None,
+    };
+    Ok((x, stats))
+}
+
 /// Entry point shared by every `Lkgp::fit` path: runs the fit body with
 /// parallel-region panic capture so a fault inside a `par::` region
 /// surfaces as a typed error (`par::RegionPanic` in the anyhow chain)
@@ -374,6 +481,15 @@ fn fit_with_backend_inner<T: Scalar, B: KronBackend<T>>(
     let (y_mean, y_std) = data.target_stats();
 
     be.set_data(&data.s, &data.t, &mask)?;
+
+    // Solver selection (see `LkgpConfig::solver`): on a fully-observed
+    // grid Auto/Eig replace CG with exact per-factor spectral solves;
+    // under masking Eig requests the KronEig preconditioner and Auto
+    // stays bit-identical to plain CG.
+    let full_grid = !mask.is_empty() && mask.iter().all(|&m| m != 0.0);
+    let mut eig_direct = full_grid && cfg.solver != Solver::Cg;
+    let kron_eig_pre = !full_grid && cfg.solver == Solver::Eig;
+    let mut eig_cur: Option<EigSolver> = None;
 
     // hyperparameter vector: [theta.., log_sigma2]
     let mut kernel = crate::kernels::ProductGridKernel::new(data.s.cols, &data.time_family, q);
@@ -420,19 +536,49 @@ fn fit_with_backend_inner<T: Scalar, B: KronBackend<T>>(
         prof.time("set_hypers", || be.set_hypers(theta, log_s2))?;
         kernel.set_theta(theta);
 
+        if eig_direct {
+            // refactor once per hyperparameter setting; a construction
+            // failure (no factors, or a non-invertible spectrum) drops
+            // the whole fit back to CG with one warning
+            eig_cur = match prof.time("eig_factor", || {
+                be.gram_factors()
+                    .map(|(kss, ktt)| EigSolver::try_new(&kss, &ktt, log_s2.exp()))
+            }) {
+                Some(Ok(es)) => Some(es),
+                Some(Err(e)) => {
+                    eprintln!("warning: eig solver unavailable ({e}); falling back to cg");
+                    eig_direct = false;
+                    None
+                }
+                None => {
+                    eprintln!(
+                        "warning: backend exposes no Gram factors; falling back to cg"
+                    );
+                    eig_direct = false;
+                    None
+                }
+            };
+        }
+
         // batched solve: [y | probes]
         let mut rhs = Matrix::<T>::zeros(1 + n_probes, pq);
         rhs.row_mut(0).copy_from_slice(&y_t);
         for i in 0..n_probes {
             rhs.row_mut(1 + i).copy_from_slice(z_probes.row(i));
         }
-        let (mut pre, mut level) = prof.time("precond", || {
-            build_precond(be, cfg.precond_rank, log_s2.exp(), &mut diagnostics)
-        });
-        let (sol, stats) = prof.time("cg_solve", || -> Result<(Matrix<T>, CgStats)> {
-            let d = &mut diagnostics;
-            solve_resilient(be, &rhs, &mut pre, &mut level, &cg_opts, cfg, d, "train")
-        })?;
+        let (sol, stats) = if let Some(es) = eig_cur.as_ref().filter(|_| eig_direct) {
+            prof.time("eig_solve", || {
+                solve_eig_direct(es, &rhs, cfg, &mut diagnostics, "train")
+            })?
+        } else {
+            let (mut pre, mut level) = prof.time("precond", || {
+                build_precond(be, cfg.precond_rank, log_s2.exp(), kron_eig_pre, &mut diagnostics)
+            });
+            prof.time("cg_solve", || -> Result<(Matrix<T>, CgStats)> {
+                let d = &mut diagnostics;
+                solve_resilient(be, &rhs, &mut pre, &mut level, &cg_opts, cfg, d, "train")
+            })?
+        };
         cg_iters_total += stats.iters;
         mvm_total += stats.mvm_count;
         alpha.copy_from_slice(sol.row(0));
@@ -484,7 +630,15 @@ fn fit_with_backend_inner<T: Scalar, B: KronBackend<T>>(
     } else {
         None
     };
-    let (mut pre, mut level) = build_precond(be, cfg.precond_rank, sigma2, &mut diagnostics);
+    // The eig solver factored at the final training iteration already
+    // holds the final hyperparameters (the loop breaks after the solve,
+    // before any Adam step), so the pathwise solves reuse it directly.
+    let eig_pred = eig_cur.as_ref().filter(|_| eig_direct);
+    let (mut pre, mut level) = if eig_pred.is_some() {
+        (Preconditioner::Identity, PrecondLevel::Identity)
+    } else {
+        build_precond(be, cfg.precond_rank, sigma2, kron_eig_pre, &mut diagnostics)
+    };
     let mut done = 0;
     while done < nsamp {
         let b = chunk.min(nsamp - done);
@@ -511,18 +665,24 @@ fn fit_with_backend_inner<T: Scalar, B: KronBackend<T>>(
                 }
             });
         });
-        let (v, stats) = prof.time("cg_sample", || -> Result<(Matrix<T>, CgStats)> {
-            solve_resilient(
-                be,
-                &rhs,
-                &mut pre,
-                &mut level,
-                &cg_opts,
-                cfg,
-                &mut diagnostics,
-                "pathwise",
-            )
-        })?;
+        let (v, stats) = if let Some(es) = eig_pred {
+            prof.time("eig_sample", || {
+                solve_eig_direct(es, &rhs, cfg, &mut diagnostics, "pathwise")
+            })?
+        } else {
+            prof.time("cg_sample", || -> Result<(Matrix<T>, CgStats)> {
+                solve_resilient(
+                    be,
+                    &rhs,
+                    &mut pre,
+                    &mut level,
+                    &cg_opts,
+                    cfg,
+                    &mut diagnostics,
+                    "pathwise",
+                )
+            })?
+        };
         mvm_total += stats.mvm_count;
         // f_post = f_prior + (K (x) K) M v
         let mut vm = v;
@@ -785,6 +945,96 @@ mod tests {
             pre.cg_iters_total,
             plain.cg_iters_total
         );
+    }
+
+    #[test]
+    fn full_grid_auto_runs_zero_cg_iterations() {
+        // Acceptance gate: a fully-observed grid under the default Auto
+        // solver must never enter CG — every solve is a direct spectral
+        // solve with true residuals at roundoff level.
+        let kernel = ProductGridKernel::new(2, "rbf", 8);
+        let data = well_specified(20, 8, 2, &kernel, 0.01, 0.0, 21);
+        let fit = Lkgp::fit(&data, quick_cfg()).unwrap();
+        assert_eq!(fit.diagnostics.solver_path, SolverPath::Eig);
+        assert!(fit.diagnostics.eig_solves > 0, "{:?}", fit.diagnostics);
+        assert_eq!(fit.diagnostics.cg_solves, 0);
+        assert_eq!(fit.diagnostics.cg_iters_total, 0);
+        assert_eq!(fit.cg_iters_total, 0);
+        assert_eq!(fit.mvm_total, 0);
+        // exact solves: residuals far inside the CG tolerance
+        assert!(
+            fit.diagnostics.worst_rel_residual < 1e-8,
+            "worst rel residual {}",
+            fit.diagnostics.worst_rel_residual
+        );
+        assert_eq!(fit.diagnostics.nonconverged_solves, 0);
+        assert!(fit.posterior.var.iter().all(|&v| v.is_finite() && v > 0.0));
+    }
+
+    #[test]
+    fn eig_and_cg_posteriors_agree_on_full_grid() {
+        // Same seed, same probe/sample streams: forcing CG on a full
+        // grid must land on the same posterior as the spectral path to
+        // within the solve tolerance (same shape of bound as the
+        // f32-vs-f64 contract above).
+        let kernel = ProductGridKernel::new(2, "rbf", 6);
+        let data = well_specified(16, 6, 2, &kernel, 0.05, 0.0, 29);
+        let cfg_cg = LkgpConfig {
+            seed: 5,
+            train_iters: 10,
+            lr: 0.02,
+            solver: Solver::Cg,
+            ..quick_cfg()
+        };
+        let cfg_eig = LkgpConfig { solver: Solver::Auto, ..cfg_cg.clone() };
+        let fit_cg = Lkgp::fit(&data, cfg_cg).unwrap();
+        let fit_eig = Lkgp::fit(&data, cfg_eig).unwrap();
+        assert_eq!(fit_cg.diagnostics.solver_path, SolverPath::Cg);
+        assert!(fit_cg.diagnostics.eig_solves == 0 && fit_cg.cg_iters_total > 0);
+        assert_eq!(fit_eig.diagnostics.solver_path, SolverPath::Eig);
+        let scale = fit_cg
+            .posterior
+            .mean
+            .iter()
+            .map(|x| x.abs())
+            .fold(0.0, f64::max)
+            .max(1e-6);
+        for i in 0..fit_cg.posterior.mean.len() {
+            assert!(
+                (fit_cg.posterior.mean[i] - fit_eig.posterior.mean[i]).abs()
+                    < 0.05 * scale + 0.02,
+                "mean mismatch at {i}: {} vs {}",
+                fit_cg.posterior.mean[i],
+                fit_eig.posterior.mean[i]
+            );
+            assert!(fit_eig.posterior.var[i].is_finite() && fit_eig.posterior.var[i] > 0.0);
+        }
+    }
+
+    #[test]
+    fn zero_noise_jacobi_falls_back_to_identity() {
+        // try_jacobi regression: sigma2 = 0 zeroes the system diagonal
+        // at every unobserved cell, so the Jacobi constructor must fail
+        // typed and the fit must walk to the identity preconditioner
+        // instead of dividing by zero.
+        let kernel = ProductGridKernel::new(2, "rbf", 6);
+        let data = well_specified(12, 6, 2, &kernel, 0.01, 0.3, 33);
+        let cfg = LkgpConfig {
+            train_iters: 0,
+            n_samples: 2,
+            init_log_sigma2: f64::NEG_INFINITY,
+            ..quick_cfg()
+        };
+        let fit = Lkgp::fit(&data, cfg).unwrap();
+        assert!(
+            fit.diagnostics
+                .precond_fallbacks
+                .iter()
+                .any(|f| f.from == PrecondLevel::Jacobi && f.to == PrecondLevel::Identity),
+            "{:?}",
+            fit.diagnostics.precond_fallbacks
+        );
+        assert!(fit.posterior.mean.iter().all(|m| m.is_finite()));
     }
 
     #[test]

@@ -107,6 +107,30 @@
 //! is pinned by rust/tests/numerics.rs and measured by
 //! `cargo bench --bench bench_precision` (BENCH_precision.json).
 //!
+//! ## Solvers
+//!
+//! The observed-grid system `M (K_SS ⊗ K_TT) M + σ²I` is solved by
+//! batched preconditioned CG ([`solvers::cg`], the paper's solver) or,
+//! when the grid is fully observed, **exactly** by the direct spectral
+//! solver [`solvers::eig::EigSolver`]: one symmetric
+//! eigendecomposition per Kronecker factor (in-crate
+//! tridiagonalization + implicit-shift QL, [`linalg::eig::sym_eig`])
+//! turns `(K_SS ⊗ K_TT + σ²I)⁻¹` into four Kronecker GEMMs and a
+//! diagonal scale — zero CG iterations. Selection is
+//! [`gp::diagnostics::Solver`] (`LkgpConfig::solver`, CLI `--solver`,
+//! env `LKGP_SOLVER`; default `auto` = eig on full grids, CG under
+//! masking). Under light masking the same spectral identity serves as
+//! the `KronEig` preconditioner
+//! ([`solvers::precond::Preconditioner::try_kron_eig`]): the latent
+//! inverse differs from the true one by a rank `<= 2 * #missing`
+//! perturbation, so preconditioned CG converges in `O(#missing)`
+//! iterations (the `bench_solver` CI gate pins >= 2x fewer iterations
+//! than pivoted Cholesky at 5% missing). Both eig paths fall back to
+//! CG on any [`solvers::eig::EigSolveError`], replace only the solve
+//! calls (RNG streams match the CG path, so serve replay stays
+//! bit-identical), and are thread-count bit-invariant. See
+//! docs/solvers.md for the selection matrix.
+//!
 //! ## Train once, serve many
 //!
 //! The expensive part of LKGP inference is the fit; after pathwise

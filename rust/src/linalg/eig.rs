@@ -1,0 +1,380 @@
+//! Symmetric eigendecomposition: Householder tridiagonalization plus
+//! implicit-shift QL iteration (the classic EISPACK `tred2`/`tql2`
+//! pair), all in f64.
+//!
+//! This is the spectral substrate behind the exact Kronecker solver
+//! (`solvers::eig`) and the latent-grid preconditioner
+//! (`Preconditioner::KronEig`): per-factor decompositions of `K_SS` and
+//! `K_TT` diagonalize the full `K_SS (x) K_TT + sigma2 I` system at
+//! `O(p^3 + q^3)` cost instead of `O((pq)^3)`.
+//!
+//! Determinism: the factorization is a fixed, sequential sweep — no
+//! parallel regions, no pivot choices that depend on thread count — so
+//! every consumer inherits the crate-wide `LKGP_THREADS` bit-invariance
+//! contract for free (see rust/tests/par_invariance.rs).
+
+use crate::linalg::Matrix;
+
+/// Typed failure of [`sym_eig`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum EigError {
+    /// The input matrix holds a NaN/Inf entry (nothing to decompose).
+    NonFiniteEntry {
+        /// Row of the offending entry.
+        row: usize,
+        /// Column of the offending entry.
+        col: usize,
+        /// The non-finite value found there.
+        value: f64,
+    },
+    /// The QL iteration failed to isolate an eigenvalue within the
+    /// sweep budget (50 implicit-shift iterations per eigenvalue).
+    NoConvergence {
+        /// Index of the eigenvalue that did not converge.
+        index: usize,
+    },
+}
+
+impl std::fmt::Display for EigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EigError::NonFiniteEntry { row, col, value } => {
+                write!(f, "non-finite matrix entry ({row}, {col}) = {value}")
+            }
+            EigError::NoConvergence { index } => {
+                write!(f, "QL iteration did not converge for eigenvalue {index}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EigError {}
+
+/// Eigendecomposition `A = Q diag(values) Q^T` of a symmetric matrix.
+#[derive(Clone, Debug)]
+pub struct SymEig {
+    /// Eigenvalues in ascending order.
+    pub values: Vec<f64>,
+    /// Orthonormal eigenvectors; column `j` pairs with `values[j]`.
+    pub vectors: Matrix<f64>,
+}
+
+/// Full eigendecomposition of a symmetric matrix (the strictly lower
+/// triangle is read as the mirror of the upper one).
+///
+/// Returns eigenvalues in ascending order with matching eigenvector
+/// columns. Fails typed on non-finite input or (pathologically) on a
+/// QL sweep that exceeds its iteration budget.
+pub fn sym_eig(a: &Matrix<f64>) -> Result<SymEig, EigError> {
+    assert_eq!(a.rows, a.cols, "sym_eig needs a square matrix");
+    let n = a.rows;
+    for i in 0..n {
+        for j in 0..n {
+            let v = a[(i, j)];
+            if !v.is_finite() {
+                return Err(EigError::NonFiniteEntry { row: i, col: j, value: v });
+            }
+        }
+    }
+    if n == 0 {
+        return Ok(SymEig { values: Vec::new(), vectors: Matrix::zeros(0, 0) });
+    }
+    let mut v = a.data.clone();
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n];
+    tred2(n, &mut v, &mut d, &mut e);
+    if let Err(index) = tql2(n, &mut d, &mut e, &mut v) {
+        return Err(EigError::NoConvergence { index });
+    }
+    sort_ascending(n, &mut d, &mut v);
+    Ok(SymEig { values: d, vectors: Matrix { rows: n, cols: n, data: v } })
+}
+
+/// Householder reduction of a symmetric matrix to tridiagonal form
+/// (EISPACK `tred2`). On exit `d` holds the diagonal, `e[1..]` the
+/// subdiagonal, and `v` the accumulated orthogonal transformation.
+#[allow(clippy::needless_range_loop)]
+fn tred2(n: usize, v: &mut [f64], d: &mut [f64], e: &mut [f64]) {
+    for j in 0..n {
+        d[j] = v[(n - 1) * n + j];
+    }
+    for i in (1..n).rev() {
+        // scale to avoid under/overflow in the reflector norm
+        let mut scale = 0.0;
+        let mut h = 0.0;
+        for k in 0..i {
+            scale += d[k].abs();
+        }
+        if scale == 0.0 {
+            e[i] = d[i - 1];
+            for j in 0..i {
+                d[j] = v[(i - 1) * n + j];
+                v[i * n + j] = 0.0;
+                v[j * n + i] = 0.0;
+            }
+        } else {
+            // generate the Householder vector
+            for k in 0..i {
+                d[k] /= scale;
+                h += d[k] * d[k];
+            }
+            let f = d[i - 1];
+            let mut g = h.sqrt();
+            if f > 0.0 {
+                g = -g;
+            }
+            e[i] = scale * g;
+            h -= f * g;
+            d[i - 1] = f - g;
+            for j in 0..i {
+                e[j] = 0.0;
+            }
+            // apply the similarity transformation to remaining columns
+            for j in 0..i {
+                let f = d[j];
+                v[j * n + i] = f;
+                let mut g = e[j] + v[j * n + j] * f;
+                for k in j + 1..i {
+                    g += v[k * n + j] * d[k];
+                    e[k] += v[k * n + j] * f;
+                }
+                e[j] = g;
+            }
+            let mut f = 0.0;
+            for j in 0..i {
+                e[j] /= h;
+                f += e[j] * d[j];
+            }
+            let hh = f / (h + h);
+            for j in 0..i {
+                e[j] -= hh * d[j];
+            }
+            for j in 0..i {
+                let f = d[j];
+                let g = e[j];
+                for k in j..i {
+                    v[k * n + j] -= f * e[k] + g * d[k];
+                }
+                d[j] = v[(i - 1) * n + j];
+                v[i * n + j] = 0.0;
+            }
+        }
+        d[i] = h;
+    }
+    // accumulate the transformations
+    for i in 0..n - 1 {
+        v[(n - 1) * n + i] = v[i * n + i];
+        v[i * n + i] = 1.0;
+        let h = d[i + 1];
+        if h != 0.0 {
+            for k in 0..=i {
+                d[k] = v[k * n + i + 1] / h;
+            }
+            for j in 0..=i {
+                let mut g = 0.0;
+                for k in 0..=i {
+                    g += v[k * n + i + 1] * v[k * n + j];
+                }
+                for k in 0..=i {
+                    v[k * n + j] -= g * d[k];
+                }
+            }
+        }
+        for k in 0..=i {
+            v[k * n + i + 1] = 0.0;
+        }
+    }
+    for j in 0..n {
+        d[j] = v[(n - 1) * n + j];
+        v[(n - 1) * n + j] = 0.0;
+    }
+    v[(n - 1) * n + n - 1] = 1.0;
+    e[0] = 0.0;
+}
+
+/// Implicit-shift QL iteration on a symmetric tridiagonal matrix
+/// (EISPACK `tql2`), accumulating eigenvectors into `v`. `Err(l)`
+/// reports the eigenvalue index whose sweep exceeded 50 iterations.
+#[allow(clippy::needless_range_loop)]
+fn tql2(n: usize, d: &mut [f64], e: &mut [f64], v: &mut [f64]) -> Result<(), usize> {
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+
+    let mut f = 0.0;
+    let mut tst1 = 0.0f64;
+    let eps = 2.0f64.powi(-52);
+    for l in 0..n {
+        // find a negligible subdiagonal element
+        tst1 = tst1.max(d[l].abs() + e[l].abs());
+        let mut m = l;
+        while m < n {
+            if e[m].abs() <= eps * tst1 {
+                break;
+            }
+            m += 1;
+        }
+        // if m == l, d[l] is already an eigenvalue; otherwise iterate
+        if m > l && m < n {
+            let mut iter = 0usize;
+            loop {
+                iter += 1;
+                if iter > 50 {
+                    return Err(l);
+                }
+                // implicit shift from the leading 2x2
+                let g = d[l];
+                let mut p = (d[l + 1] - g) / (2.0 * e[l]);
+                let mut r = p.hypot(1.0);
+                if p < 0.0 {
+                    r = -r;
+                }
+                d[l] = e[l] / (p + r);
+                d[l + 1] = e[l] * (p + r);
+                let dl1 = d[l + 1];
+                let mut h = g - d[l];
+                for i in l + 2..n {
+                    d[i] -= h;
+                }
+                f += h;
+
+                // implicit QL sweep from m down to l
+                p = d[m];
+                let mut c = 1.0;
+                let mut c2 = c;
+                let mut c3 = c;
+                let el1 = e[l + 1];
+                let mut s = 0.0;
+                let mut s2 = 0.0;
+                for i in (l..m).rev() {
+                    c3 = c2;
+                    c2 = c;
+                    s2 = s;
+                    let g = c * e[i];
+                    h = c * p;
+                    r = p.hypot(e[i]);
+                    e[i + 1] = s * r;
+                    s = e[i] / r;
+                    c = p / r;
+                    p = c * d[i] - s * g;
+                    d[i + 1] = h + s * (c * g + s * d[i]);
+                    // accumulate the rotation into the eigenvectors
+                    for k in 0..n {
+                        let h = v[k * n + i + 1];
+                        v[k * n + i + 1] = s * v[k * n + i] + c * h;
+                        v[k * n + i] = c * v[k * n + i] - s * h;
+                    }
+                }
+                p = -s * s2 * c3 * el1 * e[l] / dl1;
+                e[l] = s * p;
+                d[l] = c * p;
+                if e[l].abs() <= eps * tst1 {
+                    break;
+                }
+            }
+        }
+        d[l] += f;
+        e[l] = 0.0;
+    }
+    Ok(())
+}
+
+/// Deterministic ascending selection sort of eigenpairs (stable with
+/// respect to ties, independent of any thread count).
+fn sort_ascending(n: usize, d: &mut [f64], v: &mut [f64]) {
+    for i in 0..n.saturating_sub(1) {
+        let mut k = i;
+        let mut p = d[i];
+        for j in i + 1..n {
+            if d[j] < p {
+                k = j;
+                p = d[j];
+            }
+        }
+        if k != i {
+            d[k] = d[i];
+            d[i] = p;
+            for j in 0..n {
+                v.swap(j * n + i, j * n + k);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::{assert_close, prop_check};
+
+    #[test]
+    fn prop_reconstructs_spd_matrices() {
+        prop_check("eig-reconstruction", 811, 20, |g| {
+            let n = g.size(1, 12);
+            let a = Matrix::from_vec(n, n, g.spd(n));
+            let eig = sym_eig(&a).map_err(|e| e.to_string())?;
+            // Q Lambda Q^T == A
+            let mut recon = Matrix::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    let mut acc = 0.0;
+                    for k in 0..n {
+                        acc += eig.vectors[(i, k)] * eig.values[k] * eig.vectors[(j, k)];
+                    }
+                    recon[(i, j)] = acc;
+                }
+            }
+            assert_close(&recon.data, &a.data, 1e-8)?;
+            // Q^T Q == I
+            for i in 0..n {
+                for j in 0..n {
+                    let mut acc = 0.0;
+                    for k in 0..n {
+                        acc += eig.vectors[(k, i)] * eig.vectors[(k, j)];
+                    }
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    if (acc - want).abs() > 1e-10 {
+                        return Err(format!("Q^T Q at ({i},{j}) = {acc}"));
+                    }
+                }
+            }
+            // ascending, and positive for SPD input
+            for k in 0..n {
+                if k + 1 < n && eig.values[k] > eig.values[k + 1] {
+                    return Err(format!("eigenvalues not ascending at {k}"));
+                }
+                if eig.values[k] <= 0.0 {
+                    return Err(format!("SPD eigenvalue {k} = {}", eig.values[k]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn diagonal_matrix_has_its_diagonal_as_spectrum() {
+        let a = Matrix::from_fn(3, 3, |i, j| if i == j { [3.0, 1.0, 2.0][i] } else { 0.0 });
+        let eig = sym_eig(&a).expect("eig");
+        assert_close(&eig.values, &[1.0, 2.0, 3.0], 1e-12).expect("values");
+    }
+
+    #[test]
+    fn non_finite_input_is_a_typed_error() {
+        let mut a = Matrix::zeros(2, 2);
+        a[(0, 1)] = f64::NAN;
+        match sym_eig(&a) {
+            Err(EigError::NonFiniteEntry { row: 0, col: 1, .. }) => {}
+            other => panic!("expected NonFiniteEntry, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_and_single_entry_matrices() {
+        let e0 = sym_eig(&Matrix::zeros(0, 0)).expect("0x0");
+        assert!(e0.values.is_empty());
+        let a = Matrix::from_vec(1, 1, vec![4.5]);
+        let e1 = sym_eig(&a).expect("1x1");
+        assert_eq!(e1.values, vec![4.5]);
+        assert_eq!(e1.vectors[(0, 0)].abs(), 1.0);
+    }
+}

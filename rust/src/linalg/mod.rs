@@ -2,13 +2,16 @@
 //!
 //! Everything the GP stack needs: a generic row-major matrix over
 //! f32/f64, a blocked GEMM, Cholesky factorization + triangular solves,
-//! and the rank-revealing pivoted Cholesky used both by the CG
+//! the rank-revealing pivoted Cholesky used both by the CG
 //! preconditioner (paper Appendix C: "pivoted Cholesky preconditioner of
-//! rank 100") and by CaGP's low-rank actions.
+//! rank 100") and by CaGP's low-rank actions, and a symmetric
+//! eigensolver (`eig`) backing the exact per-factor Kronecker solver.
 
 pub mod chol;
+pub mod eig;
 pub mod gemm;
 pub mod matrix;
 
 pub use chol::{cholesky, pivoted_cholesky, solve_lower, solve_lower_t, Cholesky};
+pub use eig::{sym_eig, EigError, SymEig};
 pub use matrix::{Matrix, Scalar};

@@ -24,7 +24,7 @@ use lkgp::data::sarcos::SarcosSim;
 use lkgp::data::synthetic::well_specified;
 use lkgp::data::GridDataset;
 use lkgp::gp::backend::{MvmMode, Precision};
-use lkgp::gp::diagnostics::OnNonConverged;
+use lkgp::gp::diagnostics::{OnNonConverged, Solver};
 use lkgp::gp::lkgp::{Backend, Lkgp, LkgpConfig};
 use lkgp::kernels::ProductGridKernel;
 use lkgp::runtime::{Manifest, Runtime};
@@ -38,6 +38,7 @@ const USAGE: &str = "usage: lkgp <info|train|save|predict|experiment> [flags]
              [--p N] [--q N] [--missing R] [--seed S]
              [--backend rust|<artifact-config>] [--dense] [--f32]
              [--iters N] [--on-nonconverged warn|error]
+             [--solver auto|cg|eig]
   lkgp save  [same flags as train] [--out <path>=lkgp_model.ckpt]
   lkgp predict --checkpoint <path> [--cells i,j,k] [--json <path>]
   lkgp experiment <fig2|fig3|fig4|fig5|table1|table2|ablations|all>
@@ -149,6 +150,12 @@ fn build_train_config(args: &Args, capture_pathwise: bool) -> Result<LkgpConfig,
         None => OnNonConverged::from_env(),
         Some(s) => OnNonConverged::parse(&s).map_err(|e| format!("--on-nonconverged: {e}"))?,
     };
+    // same precedence for the solver engine: --solver beats LKGP_SOLVER,
+    // which beats the Auto default
+    let solver = match args.str_opt("solver") {
+        None => Solver::from_env(),
+        Some(s) => Solver::parse(&s).map_err(|e| format!("--solver: {e}"))?,
+    };
     Ok(LkgpConfig {
         train_iters: args.usize("iters", 20),
         n_samples: args.usize("samples", 32),
@@ -158,6 +165,7 @@ fn build_train_config(args: &Args, capture_pathwise: bool) -> Result<LkgpConfig,
         precision,
         capture_pathwise,
         on_nonconverged,
+        solver,
         ..LkgpConfig::default()
     })
 }

@@ -50,7 +50,7 @@
 use anyhow::{bail, Context, Result};
 
 use crate::gp::backend::{KronBackend, MvmMode, Precision, RustKronBackend};
-use crate::gp::diagnostics::FitDiagnostics;
+use crate::gp::diagnostics::{FitDiagnostics, SolverPath};
 use crate::gp::lkgp::{accumulate_pathwise_moments, finalize_posterior, PATHWISE_CHUNK};
 use crate::gp::Posterior;
 use crate::kernels::ProductGridKernel;
@@ -142,6 +142,9 @@ impl ServeEngine {
         model.validate().map_err(anyhow::Error::new)?;
         let t0 = std::time::Instant::now();
         let mut diagnostics = FitDiagnostics::default();
+        // reconstruction replays captured pathwise state through MVMs
+        // only — no linear solves of any kind run at serve time
+        diagnostics.solver_path = SolverPath::Replay;
         let reconstructed = crate::par::catch_region(|| match model.precision {
             Precision::F64 => reconstruct::<f64>(&model, &mut diagnostics),
             Precision::F32 => reconstruct::<f32>(&model, &mut diagnostics),
@@ -430,6 +433,38 @@ mod tests {
             assert_eq!(fit.posterior.mean[c].to_bits(), recon.mean[c].to_bits());
             assert_eq!(fit.posterior.var[c].to_bits(), recon.var[c].to_bits());
         }
+    }
+
+    #[test]
+    fn eig_trained_checkpoint_roundtrips_bit_for_bit() {
+        // A model trained on the fully-observed spectral path (zero CG
+        // iterations) must checkpoint and replay exactly like a
+        // CG-trained one: the serve replay is pure MVMs either way, and
+        // it records the mvm-replay path in its diagnostics.
+        let kernel = Pgk::new(2, "rbf", 6);
+        let data = well_specified(12, 6, 2, &kernel, 0.02, 0.0, 19);
+        let cfg = LkgpConfig {
+            train_iters: 5,
+            n_samples: 8,
+            probes: 4,
+            cg_tol: 1e-3,
+            cg_max_iters: 200,
+            seed: 19,
+            capture_pathwise: true,
+            ..LkgpConfig::default()
+        };
+        let fit = Lkgp::fit(&data, cfg).unwrap();
+        assert_eq!(fit.diagnostics.solver_path, SolverPath::Eig);
+        assert_eq!(fit.cg_iters_total, 0);
+        let engine = ServeEngine::from_model(fit.model.clone().unwrap()).unwrap();
+        assert_eq!(engine.diagnostics().solver_path, SolverPath::Replay);
+        let rep = engine.verify();
+        assert!(
+            rep.bit_identical,
+            "eig-trained replay deviates: mean {} var {}",
+            rep.max_mean_diff,
+            rep.max_var_diff
+        );
     }
 
     #[test]

@@ -71,14 +71,16 @@ pub struct CgOptions {
     pub max_iters: usize,
     /// relative residual norm tolerance ||r|| / ||b||.
     pub tol: f64,
-    /// Stagnation window: if no active system improves its relative
-    /// residual by at least 0.1% over this many consecutive iterations,
-    /// the solver restarts (recomputed residual) and, once restarts are
-    /// exhausted, stops with [`SolveOutcome::Stagnated`]. 0 disables
-    /// the watchdog.
+    /// Stagnation window, tracked **per system**: when a system goes
+    /// this many consecutive iterations without improving its relative
+    /// residual by at least 0.1%, the solver restarts (recomputed
+    /// residual) and, once that system's restarts are exhausted,
+    /// retires it with [`SolveOutcome::Stagnated`] while the rest of
+    /// the batch keeps iterating. 0 disables the watchdog.
     pub stall_window: usize,
-    /// Residual-recomputation restarts allowed before a stagnated solve
-    /// gives up.
+    /// Residual-recomputation restarts allowed **per system** before a
+    /// stagnated system gives up. One system's stall history never
+    /// burns a sibling's budget.
     pub max_restarts: usize,
 }
 
@@ -186,7 +188,8 @@ pub struct CgStats {
     pub converged: bool,
     /// Per-system outcome and final residual.
     pub diags: Vec<SolveDiag>,
-    /// Stagnation restarts taken during the solve.
+    /// Stagnation restarts taken during the solve, summed over the
+    /// batch (each system draws on its own `max_restarts` budget).
     pub restarts: usize,
     /// Hard failure detected mid-solve (breakdown / indefinite
     /// preconditioner); `None` for clean, merely-unconverged, or
@@ -209,17 +212,26 @@ fn diags_from(rel: &[f64], tol: f64, fallback: SolveOutcome) -> Vec<SolveDiag> {
         .collect()
 }
 
-/// z'r must be >= 0 for an SPD preconditioner. Returns the first active
-/// system where it is negative beyond roundoff (scaled by ||r||^2).
+/// z'r must be finite and >= 0 for an SPD preconditioner. Returns the
+/// first active system where it is negative beyond roundoff (scaled by
+/// ||r||^2) — or non-finite while the residual itself is still finite,
+/// which means the preconditioner apply poisoned z (a broken residual
+/// is the breakdown detector's case, not this one).
 fn indefinite_system<T: Scalar>(rz: &[f64], active: &[bool], r: &Matrix<T>) -> Option<usize> {
     for sys in 0..rz.len() {
-        if !active[sys] || rz[sys] >= 0.0 {
+        if !active[sys] || (rz[sys].is_finite() && rz[sys] >= 0.0) {
             continue;
         }
         let mut rr = 0.0f64;
         for v in r.row(sys) {
             let f = v.to_f64();
             rr += f * f;
+        }
+        if !rz[sys].is_finite() {
+            if rr.is_finite() {
+                return Some(sys);
+            }
+            continue;
         }
         if rz[sys].abs() > 1e-12 * rr.max(1e-300) {
             return Some(sys);
@@ -264,9 +276,12 @@ pub fn solve_cg<T: Scalar>(
     let mut rz = dot_rows(&r, &z);
     let mut stats = CgStats::default();
     let mut active = vec![true; nsys];
-    // stagnation watchdog state
+    // stagnation watchdog state, all tracked per system: one system's
+    // stall streak must never consume a sibling's restart budget
     let mut best_rel = vec![f64::INFINITY; nsys];
-    let mut stall = 0usize;
+    let mut stall = vec![0usize; nsys];
+    let mut restarts_used = vec![0usize; nsys];
+    let mut stagnated = vec![false; nsys];
     let mut tail_outcome = SolveOutcome::MaxIters;
 
     if let Some(sys) = indefinite_system(&rz, &active, &r) {
@@ -295,66 +310,96 @@ pub fn solve_cg<T: Scalar>(
             stats.iters = iter;
             return (x, stats);
         }
-        for (a, rel) in active.iter_mut().zip(&rel) {
-            *a = *rel > opts.tol;
+        for (sys, a) in active.iter_mut().enumerate() {
+            *a = rel[sys] > opts.tol && !stagnated[sys];
         }
         if active.iter().all(|a| !a) {
+            if stagnated.iter().any(|&s| s) {
+                // retired systems keep their last residual; fall through
+                // to the final report so they read Stagnated, not
+                // Converged
+                break;
+            }
             stats.converged = true;
             stats.iters = iter;
             stats.diags = diags_from(&rel, opts.tol, SolveOutcome::Converged);
             stats.rel_residuals = rel;
             return (x, stats);
         }
-        // stagnation watchdog: progress means some active system
-        // improved its best-seen residual by at least 0.1%
-        let mut improved = false;
+        // stagnation watchdog: a system makes progress when it improves
+        // its own best-seen residual by at least 0.1%; stall streaks
+        // are per system
         for sys in 0..nsys {
-            if active[sys] && rel[sys] < 0.999 * best_rel[sys] {
-                improved = true;
+            if active[sys] {
+                if rel[sys] < 0.999 * best_rel[sys] {
+                    stall[sys] = 0;
+                } else {
+                    stall[sys] += 1;
+                }
             }
             if rel[sys] < best_rel[sys] {
                 best_rel[sys] = rel[sys];
             }
         }
-        stall = if improved { 0 } else { stall + 1 };
         stats.rel_residuals = rel;
-        if opts.stall_window > 0 && stall >= opts.stall_window {
-            if stats.restarts < opts.max_restarts {
-                // restart: recompute r = b - A x from scratch to shed
-                // accumulated rounding drift, then rebuild the Krylov
-                // direction state
-                let ax = op.apply_batch(&x);
-                stats.mvm_count += 1;
-                if op.failed() {
-                    tail_outcome = SolveOutcome::OperatorFailed;
+        // a system whose streak hit the window restarts against its own
+        // budget; once that budget is exhausted it retires as Stagnated
+        // while the rest of the batch keeps iterating
+        let mut restart_now = false;
+        if opts.stall_window > 0 {
+            for sys in 0..nsys {
+                if !active[sys] || stall[sys] < opts.stall_window {
+                    continue;
+                }
+                if restarts_used[sys] < opts.max_restarts {
+                    restarts_used[sys] += 1;
+                    restart_now = true;
                     break;
                 }
-                for sys in 0..nsys {
-                    let (rrow, brow, axrow) = (r.row_mut(sys), b.row(sys), ax.row(sys));
-                    for ((ri, bi), ai) in rrow.iter_mut().zip(brow).zip(axrow) {
-                        *ri = *bi - *ai;
-                    }
-                }
-                z = precond.apply_batch(&r);
-                p = z.clone();
-                rz = dot_rows(&r, &z);
-                if let Some(sys) = indefinite_system(&rz, &active, &r) {
-                    stats.error = Some(SolveError::IndefinitePreconditioner {
-                        system: sys,
-                        iter,
-                        rz: rz[sys],
-                    });
-                    stats.diags =
-                        diags_from(&stats.rel_residuals, opts.tol, SolveOutcome::Breakdown);
-                    stats.iters = iter;
-                    return (x, stats);
-                }
-                stats.restarts += 1;
-                stall = 0;
-                stats.iters = iter;
-                continue;
+                stagnated[sys] = true;
+                active[sys] = false;
             }
-            tail_outcome = SolveOutcome::Stagnated;
+        }
+        if restart_now {
+            // restart: recompute r = b - A x from scratch to shed
+            // accumulated rounding drift, then rebuild the Krylov
+            // direction state (shared across the batch, so every
+            // system's stall streak starts over)
+            let ax = op.apply_batch(&x);
+            stats.mvm_count += 1;
+            if op.failed() {
+                tail_outcome = SolveOutcome::OperatorFailed;
+                break;
+            }
+            for sys in 0..nsys {
+                let (rrow, brow, axrow) = (r.row_mut(sys), b.row(sys), ax.row(sys));
+                for ((ri, bi), ai) in rrow.iter_mut().zip(brow).zip(axrow) {
+                    *ri = *bi - *ai;
+                }
+            }
+            z = precond.apply_batch(&r);
+            p = z.clone();
+            rz = dot_rows(&r, &z);
+            if let Some(sys) = indefinite_system(&rz, &active, &r) {
+                stats.error = Some(SolveError::IndefinitePreconditioner {
+                    system: sys,
+                    iter,
+                    rz: rz[sys],
+                });
+                stats.diags =
+                    diags_from(&stats.rel_residuals, opts.tol, SolveOutcome::Breakdown);
+                stats.iters = iter;
+                return (x, stats);
+            }
+            stats.restarts += 1;
+            for s in stall.iter_mut() {
+                *s = 0;
+            }
+            stats.iters = iter;
+            continue;
+        }
+        if active.iter().all(|a| !a) {
+            // every remaining system just retired stagnated
             break;
         }
 
@@ -411,6 +456,13 @@ pub fn solve_cg<T: Scalar>(
     stats.converged = stats.rel_residuals.iter().all(|&r| r <= opts.tol);
     let fallback = if stats.converged { SolveOutcome::Converged } else { tail_outcome };
     stats.diags = diags_from(&stats.rel_residuals, opts.tol, fallback);
+    for (sys, diag) in stats.diags.iter_mut().enumerate() {
+        if stagnated[sys]
+            && !matches!(diag.outcome, SolveOutcome::Converged | SolveOutcome::Breakdown)
+        {
+            diag.outcome = SolveOutcome::Stagnated;
+        }
+    }
     (x, stats)
 }
 
@@ -559,6 +611,83 @@ mod tests {
         assert!(stats.diags.iter().all(|d| d.outcome == SolveOutcome::Stagnated));
         assert!(x.data.iter().all(|&v| v == 0.0));
         assert!(stats.error.is_none(), "stagnation is policy, not a hard error");
+    }
+
+    #[test]
+    fn stalled_system_does_not_burn_siblings_budget() {
+        // row 0 sees a zero operator (stalls forever); row 1 sees the
+        // identity (converges in one iteration). The stalling system
+        // must retire as Stagnated without dragging the converged one
+        // down with it.
+        struct SplitOp(usize);
+        impl BatchedOp<f64> for SplitOp {
+            fn dim(&self) -> usize {
+                self.0
+            }
+            fn apply_batch(&mut self, v: &Matrix<f64>) -> Matrix<f64> {
+                let mut out = v.clone();
+                for x in out.row_mut(0).iter_mut() {
+                    *x = 0.0;
+                }
+                out
+            }
+        }
+        let n = 8;
+        let mut b = Matrix::zeros(2, n);
+        b.row_mut(0).copy_from_slice(&vec![1.0; n]);
+        b.row_mut(1).copy_from_slice(&vec![2.0; n]);
+        let opts = CgOptions { max_iters: 200, tol: 1e-8, stall_window: 5, max_restarts: 1 };
+        let (x, stats) = solve_cg(&mut SplitOp(n), &b, &Preconditioner::Identity, &opts);
+        assert!(!stats.converged);
+        assert_eq!(stats.diags[0].outcome, SolveOutcome::Stagnated, "{:?}", stats.diags);
+        assert_eq!(stats.diags[1].outcome, SolveOutcome::Converged, "{:?}", stats.diags);
+        assert_eq!(stats.restarts, 1, "only the stalling system restarts");
+        assert!(x.row(1).iter().all(|&v| (v - 2.0).abs() < 1e-9));
+        assert!(stats.error.is_none(), "stagnation is policy, not a hard error");
+    }
+
+    #[test]
+    fn restart_budget_is_per_system() {
+        // both systems stall: each must draw on its own restart budget
+        // (the old batch-global counter allowed a single restart total,
+        // so system 0's stall history starved system 1)
+        struct ZeroOp(usize);
+        impl BatchedOp<f64> for ZeroOp {
+            fn dim(&self) -> usize {
+                self.0
+            }
+            fn apply_batch(&mut self, v: &Matrix<f64>) -> Matrix<f64> {
+                Matrix::zeros(v.rows, v.cols)
+            }
+        }
+        let n = 6;
+        let mut b = Matrix::zeros(2, n);
+        b.row_mut(0).copy_from_slice(&vec![1.0; n]);
+        b.row_mut(1).copy_from_slice(&vec![3.0; n]);
+        let opts = CgOptions { max_iters: 200, tol: 1e-8, stall_window: 5, max_restarts: 1 };
+        let (_, stats) = solve_cg(&mut ZeroOp(n), &b, &Preconditioner::Identity, &opts);
+        assert!(!stats.converged);
+        assert_eq!(stats.restarts, 2, "one restart per stalling system");
+        assert!(stats.diags.iter().all(|d| d.outcome == SolveOutcome::Stagnated));
+        assert!(stats.error.is_none());
+    }
+
+    #[test]
+    fn poisoned_preconditioner_apply_reads_indefinite() {
+        // a preconditioner that emits NaN on a finite residual must be
+        // flagged as indefinite (so the downgrade path can re-solve),
+        // not misread as convergence or a residual breakdown
+        let n = 5;
+        let a = Matrix::from_fn(n, n, |i, j| if i == j { 2.0 } else { 0.0 });
+        let b = Matrix::from_vec(1, n, vec![1.0; n]);
+        let pre = Preconditioner::Jacobi { inv_diag: vec![f64::NAN; n] };
+        let (_, stats) = solve_cg(&mut DenseOp(&a), &b, &pre, &CgOptions::default());
+        assert!(!stats.converged);
+        assert!(
+            matches!(stats.error, Some(SolveError::IndefinitePreconditioner { system: 0, .. })),
+            "{:?}",
+            stats.error
+        );
     }
 
     #[test]

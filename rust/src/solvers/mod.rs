@@ -3,12 +3,17 @@
 //! The LKGP posterior, probe solves, and pathwise-conditioning samples
 //! are all solutions of `(P K P^T + sigma2 I) x = b` computed by batched
 //! preconditioned conjugate gradients against a matrix-free operator
-//! (rust Kron backend or the PJRT kron_mvm artifact).
+//! (rust Kron backend or the PJRT kron_mvm artifact). On fully-observed
+//! grids the `eig` module short-circuits CG entirely with an exact
+//! per-factor spectral solve; under light masking the same
+//! decomposition serves as the latent-grid `KronEig` preconditioner.
 
 pub mod altproj;
 pub mod cg;
+pub mod eig;
 pub mod precond;
 pub mod sgd;
 
 pub use cg::{solve_cg, BatchedOp, CgOptions, CgStats, SolveDiag, SolveError, SolveOutcome};
+pub use eig::{EigSolveError, EigSolver};
 pub use precond::{PrecondError, Preconditioner};

@@ -174,6 +174,34 @@ fn failed_pivoted_precond_falls_back_to_jacobi_bit_identically() {
     );
 }
 
+#[test]
+fn worst_residual_reflects_the_recovered_solve_not_the_aborted_one() {
+    // A NaN-poisoned preconditioner apply aborts the first train solve
+    // at iteration 0 with its relative residuals still at their initial
+    // 1.0. The fit recovers by downgrading to Jacobi and re-solving —
+    // and FitDiagnostics::worst_rel_residual must report the residual of
+    // the solve that stands, not the 1.0 of the aborted attempt.
+    let data = dataset(12);
+    let fit = with_failpoints("precond_apply@0:nan", || {
+        let c = LkgpConfig { precond_rank: 30, ..cfg(12) };
+        Lkgp::fit(&data, c).expect("an indefinite preconditioner apply is recoverable")
+    });
+    assert!(
+        fit.diagnostics
+            .precond_fallbacks
+            .iter()
+            .any(|f| f.from == PrecondLevel::PivotedCholesky && f.to == PrecondLevel::Jacobi),
+        "{:?}",
+        fit.diagnostics.precond_fallbacks
+    );
+    assert!(
+        fit.diagnostics.worst_rel_residual <= 1e-3,
+        "worst_rel_residual {} still reflects the aborted attempt",
+        fit.diagnostics.worst_rel_residual
+    );
+    assert!(fit.diagnostics.worst_rel_residual > 0.0);
+}
+
 // ---------------------------------------------------------------------
 // parallel-region faults
 // ---------------------------------------------------------------------

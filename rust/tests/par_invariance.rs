@@ -232,6 +232,76 @@ fn full_fit_posterior_bit_identical_across_thread_counts() {
 }
 
 #[test]
+fn eig_solver_fit_bit_identical_across_thread_counts() {
+    // The direct spectral path on a fully-observed grid: the sequential
+    // eigendecomposition plus KronOp-based applies must keep the whole
+    // posterior bit-identical at 1/2/4/8 worker threads.
+    use lkgp::gp::diagnostics::SolverPath;
+    let kernel = ProductGridKernel::new(2, "rbf", 8);
+    let data = well_specified(16, 8, 2, &kernel, 0.05, 0.0, 9);
+    let cfg = LkgpConfig {
+        train_iters: 4,
+        n_samples: 8,
+        probes: 4,
+        seed: 3,
+        ..LkgpConfig::default()
+    };
+    let f1 = with_threads(1, || Lkgp::fit(&data, cfg.clone()).unwrap());
+    assert_eq!(f1.diagnostics.solver_path, SolverPath::Eig);
+    assert_eq!(f1.cg_iters_total, 0);
+    for t in [2usize, 4, 8] {
+        let ft = with_threads(t, || Lkgp::fit(&data, cfg.clone()).unwrap());
+        assert_eq!(ft.diagnostics.solver_path, SolverPath::Eig);
+        assert_eq!(
+            bits(&f1.posterior.mean),
+            bits(&ft.posterior.mean),
+            "eig posterior mean differs at t={t}"
+        );
+        assert_eq!(
+            bits(&f1.posterior.var),
+            bits(&ft.posterior.var),
+            "eig posterior var differs at t={t}"
+        );
+        for (a, b) in f1.loss_trace.iter().zip(&ft.loss_trace) {
+            assert_eq!(a.to_bits(), b.to_bits(), "eig loss trace differs at t={t}");
+        }
+    }
+}
+
+#[test]
+fn kron_eig_precond_fit_bit_identical_across_thread_counts() {
+    // Solver::Eig on a masked grid: CG preconditioned by the latent-grid
+    // eigendecomposition. Same bit-invariance bar as every other path.
+    use lkgp::gp::diagnostics::Solver;
+    let kernel = ProductGridKernel::new(2, "rbf", 8);
+    let data = well_specified(16, 8, 2, &kernel, 0.05, 0.3, 9);
+    let cfg = LkgpConfig {
+        train_iters: 4,
+        n_samples: 8,
+        probes: 4,
+        seed: 3,
+        solver: Solver::Eig,
+        ..LkgpConfig::default()
+    };
+    let f1 = with_threads(1, || Lkgp::fit(&data, cfg.clone()).unwrap());
+    assert!(f1.cg_iters_total > 0, "masked grid must still run CG");
+    for t in [2usize, 4, 8] {
+        let ft = with_threads(t, || Lkgp::fit(&data, cfg.clone()).unwrap());
+        assert_eq!(f1.cg_iters_total, ft.cg_iters_total, "iteration count differs at t={t}");
+        assert_eq!(
+            bits(&f1.posterior.mean),
+            bits(&ft.posterior.mean),
+            "kron-eig posterior mean differs at t={t}"
+        );
+        assert_eq!(
+            bits(&f1.posterior.var),
+            bits(&ft.posterior.var),
+            "kron-eig posterior var differs at t={t}"
+        );
+    }
+}
+
+#[test]
 fn pivoted_cholesky_steal_bit_identical_across_thread_counts() {
     // The ragged work-stealing schedule on the production
     // lazy-pivoted-Cholesky path: later columns sweep n rows whose cost

@@ -2,8 +2,8 @@
 """Benchmark-regression gate for the bench-smoke CI job.
 
 Reads the machine-readable bench artifacts (BENCH_par.json,
-BENCH_precision.json) and exits non-zero if any acceptance field
-regressed:
+BENCH_precision.json, BENCH_solver.json) and exits non-zero if any
+acceptance field regressed:
 
   BENCH_par.json
     gemm_microkernel.tiled_ge_1p5x   tiled f64 GEMM >= 1.5x scalar matmul_nt
@@ -26,11 +26,22 @@ regressed:
     speedups_f32_over_f64.mvm_ge_1p5x  f32 Kron MVM >= 1.5x f64
     fig3_accuracy.within_1pct          f32 test RMSE within 1% of f64
 
+  BENCH_solver.json
+    eig.iters_reduction_ge_2x        KronEig-preconditioned CG needs at most
+                                     half the iterations of pivoted Cholesky
+                                     at 5% missingness
+
+  also required to be present and numeric in BENCH_solver.json:
+    eig.cg_iters_plain               pivoted-Cholesky CG iterations
+    eig.cg_iters_eig_precond         KronEig-preconditioned CG iterations
+    eig.full_grid_speedup_vs_cg      direct spectral solve vs CG wall time on
+                                     a fully-observed grid (informational)
+
 A referenced key that is absent is reported as a named error listing the
 keys that *are* available at the deepest resolvable level, so a renamed
 bench field fails loudly instead of looking like a regression.
 
-Usage: check_bench.py BENCH_par.json BENCH_precision.json
+Usage: check_bench.py BENCH_par.json BENCH_precision.json BENCH_solver.json
 """
 
 import json
@@ -47,6 +58,12 @@ GATES = {
         (("speedups_f32_over_f64", "mvm_ge_1p5x"), "f32 Kron MVM >= 1.5x f64"),
         (("fig3_accuracy", "within_1pct"), "f32 test RMSE within 1% of f64"),
     ],
+    "BENCH_solver.json": [
+        (
+            ("eig", "iters_reduction_ge_2x"),
+            "KronEig precond cuts CG iterations >= 2x vs pivoted Cholesky at 5% missing",
+        ),
+    ],
 }
 
 # numeric metrics that must exist (informational gauges the perf
@@ -55,6 +72,11 @@ REQUIRED_NUMBERS = {
     "BENCH_par.json": [
         (("pool", "dispatch_ns"), "persistent-pool empty-region latency"),
         (("pool", "steal_ratio"), "steal-mode chunk migration ratio"),
+    ],
+    "BENCH_solver.json": [
+        (("eig", "cg_iters_plain"), "pivoted-Cholesky CG iterations"),
+        (("eig", "cg_iters_eig_precond"), "KronEig-preconditioned CG iterations"),
+        (("eig", "full_grid_speedup_vs_cg"), "direct spectral solve speedup vs CG"),
     ],
 }
 
