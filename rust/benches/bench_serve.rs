@@ -1,0 +1,223 @@
+//! Bench: the `lkgp serve` daemon under concurrent client load —
+//! cross-request batching (admission window > 0) versus serial
+//! per-request dispatch (window = 0) on the same checkpointed model.
+//!
+//! Concurrent clients pipeline small predict requests over their own
+//! TCP connections; the batched daemon coalesces requests from all of
+//! them into shared steal-scheduled `predict_batch` sweeps with one
+//! coalesced socket write per connection per sweep, while the serial
+//! daemon answers each request on its own. Every response is checked
+//! bit-for-bit against the engine's offline answer — grouping must
+//! never change output bits (`serve.wire_bit_identical`).
+//!
+//! Emits `BENCH_serve.json`, gated in CI by `scripts/check_bench.py`
+//! (`serve.batched_ge_1x`: batched throughput at least matches serial;
+//! p50/p99 latency fields present and numeric). `LKGP_BENCH_SMOKE=1`
+//! shrinks sizes for the CI `bench-smoke` job.
+
+use std::sync::Arc;
+
+use lkgp::data::synthetic::well_specified;
+use lkgp::gp::lkgp::{Lkgp, LkgpConfig};
+use lkgp::kernels::ProductGridKernel;
+use lkgp::model::TrainedModel;
+use lkgp::serve::daemon::{DaemonOptions, ServeClient, ServeDaemon};
+use lkgp::serve::ServeEngine;
+use lkgp::util::json::Json;
+use lkgp::util::rng::Rng;
+use lkgp::util::wire::{Request, Response};
+
+/// Pipelining depth: requests in flight per client before draining
+/// responses (bounds socket buffering on both sides).
+const PIPELINE: usize = 64;
+
+struct Load {
+    clients: usize,
+    requests_per_client: usize,
+    cells_per_request: usize,
+}
+
+/// Drive `load` against a daemon at `addr`; every client checks each
+/// response bit-for-bit against the expected posterior. Returns the
+/// wall seconds for the whole round.
+fn drive(addr: &str, load: &Load, expect_mean: &Arc<Vec<f64>>, expect_var: &Arc<Vec<f64>>) -> f64 {
+    let pq = expect_mean.len();
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for client_id in 0..load.clients {
+        let addr = addr.to_string();
+        let (expect_mean, expect_var) = (Arc::clone(expect_mean), Arc::clone(expect_var));
+        let (reqs, per_req) = (load.requests_per_client, load.cells_per_request);
+        handles.push(std::thread::spawn(move || {
+            let mut client = ServeClient::connect(&addr).expect("connect");
+            let mut rng = Rng::new(0xBE7C_u64 + client_id as u64);
+            let mut sent = 0usize;
+            while sent < reqs {
+                let burst = PIPELINE.min(reqs - sent);
+                let mut expected: Vec<(u64, Vec<usize>)> = Vec::with_capacity(burst);
+                for _ in 0..burst {
+                    let cells: Vec<usize> = (0..per_req).map(|_| rng.below(pq)).collect();
+                    let id = client.fresh_id();
+                    client
+                        .send(&Request::Predict { id, model: String::new(), cells: cells.clone() })
+                        .expect("send");
+                    expected.push((id, cells));
+                }
+                for (id, cells) in expected {
+                    let resp = client.recv().expect("recv");
+                    match resp {
+                        Response::Predict { id: rid, mean, var } => {
+                            assert_eq!(rid, id, "responses must arrive in request order");
+                            for (i, &c) in cells.iter().enumerate() {
+                                assert_eq!(
+                                    mean[i].to_bits(),
+                                    expect_mean[c].to_bits(),
+                                    "client {client_id}: served mean bits differ at cell {c}"
+                                );
+                                assert_eq!(
+                                    var[i].to_bits(),
+                                    expect_var[c].to_bits(),
+                                    "client {client_id}: served var bits differ at cell {c}"
+                                );
+                            }
+                        }
+                        other => panic!("client {client_id}: unexpected response {other:?}"),
+                    }
+                }
+                sent += burst;
+            }
+        }));
+    }
+    let mut ok = true;
+    for h in handles {
+        ok &= h.join().is_ok();
+    }
+    assert!(ok, "a bench client panicked (bit mismatch or transport error)");
+    t0.elapsed().as_secs_f64()
+}
+
+/// Best-of-`rounds` throughput (requests/sec) against one daemon.
+fn measure(
+    addr: &str,
+    load: &Load,
+    rounds: usize,
+    expect_mean: &Arc<Vec<f64>>,
+    expect_var: &Arc<Vec<f64>>,
+) -> f64 {
+    let total = (load.clients * load.requests_per_client) as f64;
+    let mut best = 0.0f64;
+    for _ in 0..rounds {
+        let secs = drive(addr, load, expect_mean, expect_var);
+        best = best.max(total / secs.max(1e-9));
+    }
+    best
+}
+
+fn fit_model(p: usize, q: usize) -> TrainedModel {
+    let kernel = ProductGridKernel::new(2, "rbf", q);
+    let data = well_specified(p, q, 2, &kernel, 0.05, 0.3, 7);
+    let cfg = LkgpConfig {
+        train_iters: 3,
+        n_samples: 8,
+        probes: 4,
+        cg_tol: 1e-2,
+        cg_max_iters: 200,
+        seed: 7,
+        capture_pathwise: true,
+        ..LkgpConfig::default()
+    };
+    let fit = Lkgp::fit(&data, cfg).expect("bench fit");
+    fit.model.expect("capture_pathwise was on")
+}
+
+fn main() {
+    let smoke = std::env::var("LKGP_BENCH_SMOKE").ok().as_deref() == Some("1");
+    let (p, q) = if smoke { (32usize, 8usize) } else { (64usize, 16usize) };
+    let load = Load {
+        clients: 8,
+        requests_per_client: if smoke { 128 } else { 512 },
+        cells_per_request: 8,
+    };
+    let rounds = 3;
+    let window_ms = 1u64;
+    println!("# bench_serve — daemon throughput under concurrency (smoke: {smoke})\n");
+
+    let model = fit_model(p, q);
+    let engine = ServeEngine::from_model(model.clone()).expect("engine");
+    let pq = engine.model().grid_len();
+    let full = engine.predict_cells(&(0..pq).collect::<Vec<_>>()).expect("offline posterior");
+    let expect_mean = Arc::new(full.mean);
+    let expect_var = Arc::new(full.var);
+
+    // ---- serial baseline: window 0, one sweep per request
+    let serial_engine = ServeEngine::from_model(model.clone()).expect("engine");
+    let mut serial_daemon = ServeDaemon::start(
+        "127.0.0.1:0",
+        vec![("bench".to_string(), serial_engine)],
+        DaemonOptions { window_ms: 0, ..DaemonOptions::default() },
+    )
+    .expect("serial daemon");
+    let addr = serial_daemon.local_addr().to_string();
+    let throughput_serial_rps = measure(&addr, &load, rounds, &expect_mean, &expect_var);
+    let serial_report = serial_daemon.shutdown();
+    println!(
+        "serial  (window 0 ms): {throughput_serial_rps:>10.0} req/s  [{}]",
+        serial_report.render()
+    );
+
+    // ---- cross-request batching: admission window + early close
+    let batched_engine = ServeEngine::from_model(model).expect("engine");
+    let mut batched_daemon = ServeDaemon::start(
+        "127.0.0.1:0",
+        vec![("bench".to_string(), batched_engine)],
+        DaemonOptions { window_ms, max_batch: 256, ..DaemonOptions::default() },
+    )
+    .expect("batched daemon");
+    let addr = batched_daemon.local_addr().to_string();
+    let throughput_batched_rps = measure(&addr, &load, rounds, &expect_mean, &expect_var);
+    let batched_report = batched_daemon.shutdown();
+    println!(
+        "batched (window {window_ms} ms): {throughput_batched_rps:>10.0} req/s  [{}]",
+        batched_report.render()
+    );
+
+    let batched_speedup = throughput_batched_rps / throughput_serial_rps.max(1e-9);
+    let batched_ge_1x = throughput_batched_rps >= throughput_serial_rps;
+    println!(
+        "\ncross-request batching: {batched_speedup:.2}x serial dispatch \
+         (occupancy {:.1}, p50 {:.3} ms, p99 {:.3} ms)",
+        batched_report.mean_batch_occupancy, batched_report.p50_ms, batched_report.p99_ms
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("bench_serve".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "serve",
+            Json::obj(vec![
+                ("grid", Json::Str(format!("{p}x{q}"))),
+                ("clients", Json::Num(load.clients as f64)),
+                ("requests_per_client", Json::Num(load.requests_per_client as f64)),
+                ("cells_per_request", Json::Num(load.cells_per_request as f64)),
+                ("window_ms", Json::Num(window_ms as f64)),
+                ("throughput_serial_rps", Json::Num(throughput_serial_rps)),
+                ("throughput_batched_rps", Json::Num(throughput_batched_rps)),
+                ("batched_speedup", Json::Num(batched_speedup)),
+                ("batched_ge_1x", Json::Bool(batched_ge_1x)),
+                // every response of every round was asserted bit-equal
+                // to the offline posterior, or a client panic would
+                // have aborted the bench before this line
+                ("wire_bit_identical", Json::Bool(true)),
+                ("mean_batch_occupancy", Json::Num(batched_report.mean_batch_occupancy)),
+                ("p50_ms", Json::Num(batched_report.p50_ms)),
+                ("p99_ms", Json::Num(batched_report.p99_ms)),
+                ("serial_p50_ms", Json::Num(serial_report.p50_ms)),
+                ("serial_p99_ms", Json::Num(serial_report.p99_ms)),
+            ]),
+        ),
+    ]);
+    let _ = std::fs::write("BENCH_serve.json", format!("{doc}\n"));
+    let _ = std::fs::create_dir_all("results/bench");
+    let _ = std::fs::copy("BENCH_serve.json", "results/bench/bench_serve.json");
+    println!("\nwrote BENCH_serve.json + results/bench/bench_serve.json");
+}

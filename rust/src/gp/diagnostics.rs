@@ -224,6 +224,133 @@ impl std::fmt::Display for FitDiagnostics {
     }
 }
 
+/// Live health counters of a running `lkgp serve` daemon.
+///
+/// Shared (`Arc`) between the accept loop, every connection thread, and
+/// the cross-request batcher; the hot-path counters are relaxed atomics
+/// (exact totals, no ordering guarantees between them) and per-request
+/// latencies go through a mutex only once per request, after the
+/// response bytes are on the wire.
+#[derive(Debug, Default)]
+pub struct ServeCounters {
+    /// Requests decoded successfully (all kinds).
+    pub requests: std::sync::atomic::AtomicU64,
+    /// Predict requests among them.
+    pub predict_requests: std::sync::atomic::AtomicU64,
+    /// Typed error responses written (framing, decode, or per-request).
+    pub errors: std::sync::atomic::AtomicU64,
+    /// Connections accepted.
+    pub connections: std::sync::atomic::AtomicU64,
+    /// Coalesced `predict_batch` sweeps dispatched.
+    pub batches: std::sync::atomic::AtomicU64,
+    /// Predict requests answered by those sweeps (occupancy numerator).
+    pub batched_requests: std::sync::atomic::AtomicU64,
+    /// Grid cells served by those sweeps.
+    pub cells: std::sync::atomic::AtomicU64,
+    /// Per-request wall latencies in microseconds, enqueue-to-respond.
+    pub latencies_us: std::sync::Mutex<Vec<u64>>,
+}
+
+/// Point-in-time snapshot of [`ServeCounters`], with derived summary
+/// statistics (what the daemon prints on shutdown and what
+/// `bench_serve` reports into `BENCH_serve.json`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServeReport {
+    /// Requests decoded successfully.
+    pub requests: u64,
+    /// Predict requests among them.
+    pub predict_requests: u64,
+    /// Typed error responses written.
+    pub errors: u64,
+    /// Connections accepted.
+    pub connections: u64,
+    /// Coalesced sweeps dispatched.
+    pub batches: u64,
+    /// Grid cells served.
+    pub cells: u64,
+    /// Mean predict requests per sweep (window occupancy); 1.0 means
+    /// cross-request batching never coalesced anything.
+    pub mean_batch_occupancy: f64,
+    /// Median request latency, milliseconds (0 when nothing measured).
+    pub p50_ms: f64,
+    /// 99th-percentile request latency, milliseconds.
+    pub p99_ms: f64,
+}
+
+impl ServeCounters {
+    /// Record one coalesced sweep over `requests` predict requests
+    /// covering `cells` grid cells.
+    pub fn record_batch(&self, requests: u64, cells: u64) {
+        use std::sync::atomic::Ordering::Relaxed;
+        self.batches.fetch_add(1, Relaxed);
+        self.batched_requests.fetch_add(requests, Relaxed);
+        self.cells.fetch_add(cells, Relaxed);
+    }
+
+    /// Record one finished request's latency in microseconds.
+    pub fn record_latency_us(&self, us: u64) {
+        self.latencies_us.lock().unwrap_or_else(|e| e.into_inner()).push(us);
+    }
+
+    /// Snapshot the counters into a report with derived statistics.
+    pub fn report(&self) -> ServeReport {
+        use std::sync::atomic::Ordering::Relaxed;
+        let batches = self.batches.load(Relaxed);
+        let batched = self.batched_requests.load(Relaxed);
+        let mut lat = self.latencies_us.lock().unwrap_or_else(|e| e.into_inner()).clone();
+        lat.sort_unstable();
+        let pct = |p: f64| -> f64 {
+            if lat.is_empty() {
+                return 0.0;
+            }
+            // nearest-rank on the sorted sample; index arithmetic only,
+            // so the same latencies always yield the same percentile
+            let idx = ((p / 100.0) * (lat.len() - 1) as f64).round() as usize;
+            lat[idx.min(lat.len() - 1)] as f64 / 1000.0
+        };
+        ServeReport {
+            requests: self.requests.load(Relaxed),
+            predict_requests: self.predict_requests.load(Relaxed),
+            errors: self.errors.load(Relaxed),
+            connections: self.connections.load(Relaxed),
+            batches,
+            cells: self.cells.load(Relaxed),
+            mean_batch_occupancy: if batches == 0 {
+                0.0
+            } else {
+                batched as f64 / batches as f64
+            },
+            p50_ms: pct(50.0),
+            p99_ms: pct(99.0),
+        }
+    }
+}
+
+impl ServeReport {
+    /// One-line human-readable summary (daemon shutdown log line).
+    pub fn render(&self) -> String {
+        format!(
+            "served {} requests ({} predict, {} errors) on {} connections; \
+             {} sweeps, occupancy {:.2}, {} cells; latency p50 {:.3} ms p99 {:.3} ms",
+            self.requests,
+            self.predict_requests,
+            self.errors,
+            self.connections,
+            self.batches,
+            self.mean_batch_occupancy,
+            self.cells,
+            self.p50_ms,
+            self.p99_ms
+        )
+    }
+}
+
+impl std::fmt::Display for ServeReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.render())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -246,6 +373,37 @@ mod tests {
         assert_eq!(SolverPath::default(), SolverPath::Cg);
         assert_eq!(format!("{}", SolverPath::Replay), "mvm-replay");
         assert_eq!(format!("{}", PrecondLevel::KronEig), "kron-eig");
+    }
+
+    #[test]
+    fn serve_counters_report() {
+        use std::sync::atomic::Ordering::Relaxed;
+        let c = ServeCounters::default();
+        c.requests.store(10, Relaxed);
+        c.predict_requests.store(8, Relaxed);
+        c.connections.store(3, Relaxed);
+        c.record_batch(4, 100);
+        c.record_batch(4, 60);
+        for us in [1000, 2000, 3000, 4000] {
+            c.record_latency_us(us);
+        }
+        let r = c.report();
+        assert_eq!(r.requests, 10);
+        assert_eq!(r.batches, 2);
+        assert_eq!(r.cells, 160);
+        assert!((r.mean_batch_occupancy - 4.0).abs() < 1e-12);
+        // sorted latencies ms: [1, 2, 3, 4]; nearest-rank p50 = idx 2
+        assert!((r.p50_ms - 3.0).abs() < 1e-12, "p50={}", r.p50_ms);
+        assert!((r.p99_ms - 4.0).abs() < 1e-12, "p99={}", r.p99_ms);
+        let line = r.render();
+        assert!(line.contains("occupancy 4.00"), "{line}");
+    }
+
+    #[test]
+    fn serve_report_empty_is_zeroes() {
+        let r = ServeCounters::default().report();
+        assert_eq!(r.p50_ms, 0.0);
+        assert_eq!(r.mean_batch_occupancy, 0.0);
     }
 
     #[test]

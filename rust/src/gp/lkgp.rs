@@ -110,6 +110,16 @@ pub struct LkgpConfig {
     /// `LKGP_SOLVER` here; `Default::default()` does not read the
     /// environment.
     pub solver: Solver,
+    /// Admission window of the `lkgp serve` daemon's cross-request
+    /// batcher, in milliseconds: how long the daemon collects predict
+    /// requests from concurrent connections before coalescing them into
+    /// one steal-scheduled `predict_batch` sweep. `0` disables
+    /// cross-request batching (each request dispatches on its own — the
+    /// serial baseline `bench_serve` compares against). Grouping never
+    /// changes output bits; the window trades per-request latency for
+    /// sweep throughput. The CLI maps `--window` / `LKGP_SERVE_WINDOW`
+    /// here; `Default::default()` does not read the environment.
+    pub serve_batch_window_ms: u64,
 }
 
 impl Default for LkgpConfig {
@@ -131,6 +141,7 @@ impl Default for LkgpConfig {
             mvm_retries: 2,
             mvm_retry_backoff_ms: 10,
             solver: Solver::Auto,
+            serve_batch_window_ms: 2,
         }
     }
 }

@@ -141,7 +141,16 @@
 //! into a [`serve::ServeEngine`] that reconstructs the posterior with
 //! MVMs only — **bit-identical** to the in-memory fit for rust-backend
 //! models — and answers coalesced query batches over the worker pool.
-//! CLI: `lkgp save` / `lkgp predict --checkpoint <path>`.
+//! [`serve::daemon::ServeDaemon`] keeps those engines resident behind
+//! a dependency-free TCP endpoint ([`util::wire`], spec in
+//! docs/formats.md): an admission window lifts `predict_batch`'s
+//! within-call coalescing to *cross-request* batching — concurrent
+//! clients' queries ride one steal-scheduled sweep — while served
+//! bytes stay bit-identical to the offline path for any request
+//! grouping, window, or `LKGP_THREADS` (docs/serve.md; gated end to
+//! end by the `serve-smoke` CI job and `bench_serve`). CLI:
+//! `lkgp save` / `lkgp predict --checkpoint <path>` /
+//! `lkgp serve --checkpoint <path>` / `lkgp predict --addr host:port`.
 //!
 //! ## Resilience
 //!

@@ -9,6 +9,10 @@
 //!                              state to --out (train-once half)
 //! predict --checkpoint <path>  load a checkpoint and serve
 //!                              predictions (serve-many half)
+//! predict --addr host:port     query a running `lkgp serve` daemon
+//!                              over the wire protocol instead
+//! serve  --checkpoint <path>.. long-lived prediction daemon with
+//!                              cross-request batching (docs/serve.md)
 //! experiment <id> [--scale ..] regenerate a paper table/figure
 //!                              (fig2 | fig3 | fig4 | fig5 | table1 |
 //!                               table2 | all)
@@ -28,11 +32,12 @@ use lkgp::gp::diagnostics::{OnNonConverged, Solver};
 use lkgp::gp::lkgp::{Backend, Lkgp, LkgpConfig};
 use lkgp::kernels::ProductGridKernel;
 use lkgp::runtime::{Manifest, Runtime};
+use lkgp::serve::daemon::{DaemonOptions, ServeClient, ServeDaemon};
 use lkgp::serve::ServeEngine;
 use lkgp::util::cli::Args;
 use lkgp::util::json::Json;
 
-const USAGE: &str = "usage: lkgp <info|train|save|predict|experiment> [flags]
+const USAGE: &str = "usage: lkgp <info|train|save|predict|serve|experiment> [flags]
   lkgp info
   lkgp train --data <climate|climate-precip|lcbench|sarcos|synthetic>
              [--p N] [--q N] [--missing R] [--seed S]
@@ -41,6 +46,11 @@ const USAGE: &str = "usage: lkgp <info|train|save|predict|experiment> [flags]
              [--solver auto|cg|eig]
   lkgp save  [same flags as train] [--out <path>=lkgp_model.ckpt]
   lkgp predict --checkpoint <path> [--cells i,j,k] [--json <path>]
+  lkgp predict --addr host:port [--model id] --cells i,j,k
+             [--json <path>] | --ping | --shutdown
+  lkgp serve --checkpoint <path> [--checkpoint <path> ...]
+             [--addr host:port=127.0.0.1:7474] [--window MS]
+             [--max-batch N]
   lkgp experiment <fig2|fig3|fig4|fig5|table1|table2|ablations|all>
              [--scale quick|paper] [--seeds N] [--ratios a,b,..]
              [--backend rust|<artifact-config>]";
@@ -52,6 +62,7 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("save") => cmd_save(&args),
         Some("predict") => cmd_predict(&args),
+        Some("serve") => cmd_serve(&args),
         Some("experiment") => cmd_experiment(&args),
         _ => {
             eprintln!("{USAGE}");
@@ -282,10 +293,15 @@ fn cmd_save(args: &Args) -> i32 {
 
 /// `lkgp predict`: load a checkpoint, reconstruct the posterior with
 /// cheap MVMs, verify it against the stored posterior, and serve the
-/// requested cells — the serve-many half.
+/// requested cells — the serve-many half. With `--addr` the same
+/// subcommand becomes a client of a running `lkgp serve` daemon
+/// instead, emitting byte-identical `--json` cell/mean/var arrays.
 fn cmd_predict(args: &Args) -> i32 {
+    if let Some(addr) = args.str_opt("addr") {
+        return cmd_predict_remote(args, &addr);
+    }
     let Some(path) = args.str_opt("checkpoint") else {
-        eprintln!("--checkpoint <path> is required\n{USAGE}");
+        eprintln!("--checkpoint <path> (or --addr host:port) is required\n{USAGE}");
         return 2;
     };
     // strict parsing: a typo in --cells must not silently degrade into
@@ -386,6 +402,173 @@ fn cmd_predict(args: &Args) -> i32 {
         }
         println!("predictions written to {json_path}");
     }
+    0
+}
+
+/// `lkgp predict --addr`: client mode against a running daemon. The
+/// served numbers are bit-identical to offline `lkgp predict` on the
+/// same checkpoint, so the `--json` cells/mean/var arrays compare
+/// byte-for-byte (the serve-smoke CI job asserts exactly that).
+fn cmd_predict_remote(args: &Args, addr: &str) -> i32 {
+    let model = args.str("model", "");
+    let ping = args.bool("ping");
+    let shutdown = args.bool("shutdown");
+    let cells = match args.usize_list("cells") {
+        Ok(v) => v.unwrap_or_default(),
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            return 2;
+        }
+    };
+    let json_out = args.str_opt("json");
+    if let Err(e) = args.finish() {
+        eprintln!("{e}\n{USAGE}");
+        return 2;
+    }
+    let mut client = match ServeClient::connect(addr) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("cannot reach {addr}: {e:#}");
+            return 1;
+        }
+    };
+    if ping {
+        return match client.ping() {
+            Ok(info) => {
+                println!("{addr}: {info}");
+                0
+            }
+            Err(e) => {
+                eprintln!("ping failed: {e:#}");
+                1
+            }
+        };
+    }
+    if shutdown {
+        return match client.shutdown_server() {
+            Ok(()) => {
+                println!("{addr}: shutdown acknowledged");
+                0
+            }
+            Err(e) => {
+                eprintln!("shutdown failed: {e:#}");
+                1
+            }
+        };
+    }
+    if cells.is_empty() {
+        eprintln!("--cells i,j,k is required in --addr mode (or use --ping / --shutdown)\n{USAGE}");
+        return 2;
+    }
+    let t0 = std::time::Instant::now();
+    let res = match client.predict(&model, &cells) {
+        Ok(res) => res,
+        Err(e) => {
+            eprintln!("predict failed: {e:#}");
+            return 1;
+        }
+    };
+    let secs = t0.elapsed().as_secs_f64();
+    println!("{} cells served by {addr} in {:.6}s:", cells.len(), secs);
+    println!("{:>8} {:>12} {:>12}", "cell", "mean", "var");
+    for (i, &c) in cells.iter().enumerate() {
+        println!("{c:>8} {:>12.5} {:>12.5}", res.mean[i], res.var[i]);
+    }
+    if let Some(json_path) = json_out {
+        let doc = Json::obj(vec![
+            ("addr", Json::Str(addr.to_string())),
+            ("model", Json::Str(model)),
+            ("cells", Json::arr_usize(&cells)),
+            ("mean", Json::arr_f64(&res.mean)),
+            ("var", Json::arr_f64(&res.var)),
+        ]);
+        if let Err(e) = std::fs::write(&json_path, format!("{doc}\n")) {
+            eprintln!("cannot write {json_path}: {e}");
+            return 1;
+        }
+        println!("predictions written to {json_path}");
+    }
+    0
+}
+
+/// `lkgp serve`: load every `--checkpoint` into a resident engine and
+/// run the cross-request-batching daemon until a client sends a
+/// shutdown request. Window precedence: `--window` beats
+/// `LKGP_SERVE_WINDOW` beats the `LkgpConfig` default.
+fn cmd_serve(args: &Args) -> i32 {
+    let paths = args.str_all("checkpoint");
+    if paths.is_empty() {
+        eprintln!("at least one --checkpoint <path> is required\n{USAGE}");
+        return 2;
+    }
+    let addr = args.str("addr", "127.0.0.1:7474");
+    let window_ms = match args.str_opt("window") {
+        Some(v) => match v.parse::<u64>() {
+            Ok(ms) => ms,
+            Err(_) => {
+                eprintln!("--window: {v:?} is not a millisecond count\n{USAGE}");
+                return 2;
+            }
+        },
+        None => match std::env::var("LKGP_SERVE_WINDOW") {
+            Ok(v) if !v.trim().is_empty() => match v.trim().parse::<u64>() {
+                Ok(ms) => ms,
+                Err(_) => {
+                    eprintln!("warning: ignoring invalid LKGP_SERVE_WINDOW {v:?}");
+                    LkgpConfig::default().serve_batch_window_ms
+                }
+            },
+            _ => LkgpConfig::default().serve_batch_window_ms,
+        },
+    };
+    let max_batch = args.usize("max-batch", 1024);
+    if let Err(e) = args.finish() {
+        eprintln!("{e}\n{USAGE}");
+        return 2;
+    }
+    let mut engines = Vec::new();
+    for path in &paths {
+        // the file stem names the model in request frames
+        let id = std::path::Path::new(path)
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        let engine = match ServeEngine::open(path) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("cannot serve {path}: {e:#}");
+                return 1;
+            }
+        };
+        let m = engine.model();
+        let rep = engine.verify();
+        println!(
+            "loaded {id:?} from {path}: {} x {} grid, {} samples, reconstructed in {:.3}s ({})",
+            m.p(),
+            m.q(),
+            m.n_samples,
+            engine.reconstruct_secs(),
+            if rep.bit_identical { "bit-identical" } else { "deviates from stored posterior" }
+        );
+        engines.push((id, engine));
+    }
+    let opts = DaemonOptions { window_ms, max_batch, ..DaemonOptions::default() };
+    let daemon = match ServeDaemon::start(&addr, engines, opts) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("cannot start daemon: {e:#}");
+            return 1;
+        }
+    };
+    let local = daemon.local_addr();
+    println!(
+        "serving {} model(s) on {local} (admission window {window_ms} ms, max batch {max_batch})",
+        paths.len()
+    );
+    println!("query:    lkgp predict --addr {local} --cells 0,1,2");
+    println!("shutdown: lkgp predict --addr {local} --shutdown");
+    let report = daemon.wait();
+    println!("{}", report.render());
     0
 }
 

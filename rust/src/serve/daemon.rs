@@ -1,0 +1,657 @@
+//! Long-lived TCP prediction daemon with cross-request batching.
+//!
+//! [`ServeDaemon`] holds one or more resident [`ServeEngine`]s (one per
+//! checkpoint, keyed by model id) behind a dependency-free TCP
+//! endpoint speaking the length-prefixed binary protocol of
+//! [`crate::util::wire`] (spec: `docs/formats.md`). The serving model:
+//!
+//! * **Accept loop** (one thread): accepts connections and spawns one
+//!   reader thread per connection. An armed `serve_accept` failpoint
+//!   rejects the connection with a typed error frame — the daemon
+//!   itself keeps serving.
+//! * **Connection threads**: read frames, decode requests, answer pings
+//!   immediately, and hand predict requests to the batcher. Every
+//!   malformed, truncated, or mid-read-disconnected frame becomes a
+//!   typed [`Response::Error`] (and, for framing-level corruption where
+//!   the byte stream can no longer be trusted, a closed connection) —
+//!   never a daemon crash.
+//! * **Batcher** (one thread, when the admission window is nonzero):
+//!   collects predict requests from *all* connections for up to
+//!   `window_ms` (closing early at `max_batch`), coalesces them into a
+//!   single [`ServeEngine::predict_batch`] sweep per model, and
+//!   demultiplexes the responses back per connection with one coalesced
+//!   socket write each. This lifts `predict_batch`'s within-call
+//!   coalescing to *cross-request* coalescing: many tiny concurrent
+//!   queries ride one steal-scheduled sweep.
+//!
+//! **Determinism contract.** `predict_batch` guarantees that batch
+//! grouping never changes output bits, so the daemon inherits it: the
+//! bytes a client reads back for a given cell list are identical
+//! whether its request was answered alone (window 0), coalesced with
+//! a hundred strangers, or computed offline by `lkgp predict` — at any
+//! `LKGP_THREADS`. The serve CI job asserts exactly this across the
+//! wire.
+
+use std::collections::{BTreeMap, HashMap};
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::gp::diagnostics::{ServeCounters, ServeReport};
+use crate::serve::{BatchRequest, BatchResponse, ServeEngine};
+use crate::util::failpoint;
+use crate::util::wire::{
+    decode_response, encode_response, read_frame, write_frame, Request, Response, WireError,
+    MAX_FRAME_BYTES,
+};
+
+/// Tuning knobs of a [`ServeDaemon`]. `Default::default()` does not
+/// read the environment; the CLI maps `--window` / `LKGP_SERVE_WINDOW`
+/// onto `window_ms`.
+#[derive(Clone, Debug)]
+pub struct DaemonOptions {
+    /// Cross-request admission window in milliseconds: how long the
+    /// batcher collects predict requests before sweeping. `0` disables
+    /// cross-request batching — every request dispatches on its own
+    /// (the serial baseline `bench_serve` compares against).
+    pub window_ms: u64,
+    /// Close the window early once this many requests are queued.
+    pub max_batch: usize,
+    /// Per-frame payload bound handed to [`read_frame`]; a length
+    /// prefix above this is rejected before allocating.
+    pub max_frame_bytes: usize,
+}
+
+impl Default for DaemonOptions {
+    fn default() -> Self {
+        DaemonOptions {
+            window_ms: crate::gp::lkgp::LkgpConfig::default().serve_batch_window_ms,
+            max_batch: 1024,
+            max_frame_bytes: MAX_FRAME_BYTES,
+        }
+    }
+}
+
+/// One queued predict request awaiting the batcher's sweep.
+struct Pending {
+    req_id: u64,
+    /// Resolved model id (guaranteed present in `Shared::engines`).
+    model: String,
+    cells: Vec<usize>,
+    conn: Arc<ConnWriter>,
+    t0: Instant,
+}
+
+/// The write half of a connection, shared between its reader thread and
+/// the batcher. Responses for one connection serialize on this lock.
+struct ConnWriter {
+    stream: Mutex<TcpStream>,
+}
+
+impl ConnWriter {
+    /// Encode + frame + write one response (best effort: a vanished
+    /// client is the client's problem, not the daemon's).
+    fn respond(&self, resp: &Response) -> Result<(), WireError> {
+        let payload = encode_response(resp);
+        let mut s = self.stream.lock().unwrap_or_else(|e| e.into_inner());
+        write_frame(&mut *s, &payload)
+    }
+
+    fn shutdown_socket(&self) {
+        let s = self.stream.lock().unwrap_or_else(|e| e.into_inner());
+        let _ = s.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+/// State shared by the accept loop, connection threads, and batcher.
+struct Shared {
+    engines: BTreeMap<String, Arc<ServeEngine>>,
+    /// Pre-rendered model listing answering pings.
+    info_line: String,
+    queue: Mutex<Vec<Pending>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    counters: Arc<ServeCounters>,
+    /// Live connection writers, so a daemon shutdown can unblock reader
+    /// threads parked inside `read_frame`.
+    conns: Mutex<Vec<Weak<ConnWriter>>>,
+    window_ms: u64,
+    max_batch: usize,
+    max_frame_bytes: usize,
+    addr: SocketAddr,
+}
+
+impl Shared {
+    fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::Acquire)
+    }
+
+    /// Resolve a request's model id to an engine. An empty id is
+    /// shorthand for "the only model" and errors when several are
+    /// loaded.
+    fn resolve(&self, model: &str) -> Result<(String, Arc<ServeEngine>), String> {
+        if model.is_empty() {
+            if self.engines.len() == 1 {
+                let (id, e) = self
+                    .engines
+                    .iter()
+                    .next()
+                    .map(|(k, v)| (k.clone(), Arc::clone(v)))
+                    .unwrap_or_else(|| unreachable!("len checked above"));
+                return Ok((id, e));
+            }
+            return Err(format!(
+                "request names no model but {} are loaded (available: {})",
+                self.engines.len(),
+                self.model_ids()
+            ));
+        }
+        match self.engines.get(model) {
+            Some(e) => Ok((model.to_string(), Arc::clone(e))),
+            None => Err(format!("unknown model {model:?} (available: {})", self.model_ids())),
+        }
+    }
+
+    fn model_ids(&self) -> String {
+        self.engines.keys().cloned().collect::<Vec<_>>().join(", ")
+    }
+}
+
+/// Wake the accept loop out of its blocking `accept` by connecting to
+/// ourselves; the loop re-checks the shutdown flag on every iteration.
+fn wake_accept(shared: &Shared) {
+    let _ = TcpStream::connect(shared.addr);
+}
+
+/// A running serve daemon. Dropping the handle shuts the daemon down;
+/// [`ServeDaemon::wait`] blocks until a client sends a shutdown
+/// request (the CLI `lkgp serve` path).
+pub struct ServeDaemon {
+    shared: Arc<Shared>,
+    accept_handle: Option<JoinHandle<()>>,
+    batcher_handle: Option<JoinHandle<()>>,
+}
+
+impl ServeDaemon {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start serving the given engines. Model ids must be unique and
+    /// non-empty; at least one engine is required.
+    pub fn start(
+        addr: &str,
+        engines: Vec<(String, ServeEngine)>,
+        opts: DaemonOptions,
+    ) -> Result<ServeDaemon> {
+        if engines.is_empty() {
+            bail!("serve daemon needs at least one checkpoint");
+        }
+        let mut map = BTreeMap::new();
+        for (id, engine) in engines {
+            if id.is_empty() {
+                bail!("empty model id (checkpoint file stems name the models)");
+            }
+            if map.insert(id.clone(), Arc::new(engine)).is_some() {
+                bail!("duplicate model id {id:?}: checkpoint file stems must be unique");
+            }
+        }
+        let info_line = map
+            .iter()
+            .map(|(id, e)| format!("{id} ({} x {})", e.model().p(), e.model().q()))
+            .collect::<Vec<_>>()
+            .join(", ");
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr().context("resolving bound address")?;
+        let shared = Arc::new(Shared {
+            engines: map,
+            info_line,
+            queue: Mutex::new(Vec::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            counters: Arc::new(ServeCounters::default()),
+            conns: Mutex::new(Vec::new()),
+            window_ms: opts.window_ms,
+            max_batch: opts.max_batch.max(1),
+            max_frame_bytes: opts.max_frame_bytes,
+            addr: local,
+        });
+        let batcher_handle = if opts.window_ms > 0 {
+            let s = Arc::clone(&shared);
+            Some(
+                std::thread::Builder::new()
+                    .name("lkgp-serve-batcher".into())
+                    .spawn(move || batcher_loop(&s))
+                    .context("spawning batcher thread")?,
+            )
+        } else {
+            None
+        };
+        let s = Arc::clone(&shared);
+        let accept_handle = std::thread::Builder::new()
+            .name("lkgp-serve-accept".into())
+            .spawn(move || accept_loop(&s, &listener))
+            .context("spawning accept thread")?;
+        Ok(ServeDaemon { shared, accept_handle: Some(accept_handle), batcher_handle })
+    }
+
+    /// The address the daemon is actually listening on (resolves the
+    /// ephemeral port of a `:0` bind).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// Live serve counters (shared with the serving threads).
+    pub fn counters(&self) -> Arc<ServeCounters> {
+        Arc::clone(&self.shared.counters)
+    }
+
+    /// Block until a client's shutdown request stops the daemon, then
+    /// return the final counter report. This is the CLI's foreground
+    /// path; tests usually use [`ServeDaemon::shutdown`] instead.
+    pub fn wait(mut self) -> ServeReport {
+        self.join();
+        self.shared.counters.report()
+    }
+
+    /// Stop the daemon from this side: unblock the accept loop, flush
+    /// the batcher, unblock parked connection readers, join the service
+    /// threads, and return the final counter report. Idempotent.
+    pub fn shutdown(&mut self) -> ServeReport {
+        self.shared.shutdown.store(true, Ordering::Release);
+        wake_accept(&self.shared);
+        self.join();
+        self.shared.counters.report()
+    }
+
+    fn join(&mut self) {
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.cv.notify_all();
+        if let Some(h) = self.batcher_handle.take() {
+            let _ = h.join();
+        }
+        let conns = self.shared.conns.lock().unwrap_or_else(|e| e.into_inner());
+        for weak in conns.iter() {
+            if let Some(conn) = weak.upgrade() {
+                conn.shutdown_socket();
+            }
+        }
+    }
+}
+
+impl Drop for ServeDaemon {
+    fn drop(&mut self) {
+        if self.accept_handle.is_some() || self.batcher_handle.is_some() {
+            let _ = self.shutdown();
+        }
+    }
+}
+
+fn accept_loop(shared: &Arc<Shared>, listener: &TcpListener) {
+    use std::sync::atomic::Ordering::Relaxed;
+    for stream in listener.incoming() {
+        if shared.is_shutdown() {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue, // transient accept error; keep serving
+        };
+        if let Some(action) = failpoint::check("serve_accept") {
+            // reject this one connection with a typed error frame; the
+            // daemon itself stays up
+            shared.counters.errors.fetch_add(1, Relaxed);
+            let conn = ConnWriter { stream: Mutex::new(stream) };
+            let _ = conn.respond(&Response::Error {
+                id: 0,
+                message: format!("injected fault at failpoint serve_accept ({action:?})"),
+            });
+            continue;
+        }
+        let _ = stream.set_nodelay(true);
+        shared.counters.connections.fetch_add(1, Relaxed);
+        let writer = match stream.try_clone() {
+            Ok(w) => Arc::new(ConnWriter { stream: Mutex::new(w) }),
+            Err(_) => continue, // cannot even clone the fd; drop it
+        };
+        {
+            let mut conns = shared.conns.lock().unwrap_or_else(|e| e.into_inner());
+            conns.retain(|w| w.strong_count() > 0);
+            conns.push(Arc::downgrade(&writer));
+        }
+        let s = Arc::clone(shared);
+        let spawned = std::thread::Builder::new()
+            .name("lkgp-serve-conn".into())
+            .spawn(move || handle_conn(&s, stream, writer));
+        if spawned.is_err() {
+            // thread exhaustion: drop the connection, keep accepting
+            continue;
+        }
+    }
+}
+
+/// Read-decode-respond loop of one connection. Returns (closing the
+/// connection) on clean EOF, framing-level corruption, or shutdown;
+/// payload-level decode errors answer with a typed error and keep the
+/// connection open.
+fn handle_conn(shared: &Arc<Shared>, mut stream: TcpStream, conn: Arc<ConnWriter>) {
+    use std::sync::atomic::Ordering::Relaxed;
+    loop {
+        let payload = match read_frame(&mut stream, shared.max_frame_bytes) {
+            Ok(Some(p)) => p,
+            Ok(None) => return, // client closed cleanly between frames
+            Err(e) => {
+                // the byte stream can no longer be trusted: answer with
+                // a typed error, then drop the connection
+                shared.counters.errors.fetch_add(1, Relaxed);
+                let _ = conn.respond(&Response::Error { id: 0, message: e.to_string() });
+                return;
+            }
+        };
+        let req = match crate::util::wire::decode_request(&payload) {
+            Ok(r) => r,
+            Err(e) => {
+                // frame boundary was intact, so the stream stays usable
+                shared.counters.errors.fetch_add(1, Relaxed);
+                let _ = conn.respond(&Response::Error { id: 0, message: e.to_string() });
+                continue;
+            }
+        };
+        shared.counters.requests.fetch_add(1, Relaxed);
+        match req {
+            Request::Ping { id } => {
+                let _ = conn
+                    .respond(&Response::Info { id, info: format!("models: {}", shared.info_line) });
+            }
+            Request::Shutdown { id } => {
+                let _ = conn.respond(&Response::ShutdownAck { id });
+                shared.shutdown.store(true, Ordering::Release);
+                shared.cv.notify_all();
+                wake_accept(shared);
+                return;
+            }
+            Request::Predict { id, model, cells } => {
+                shared.counters.predict_requests.fetch_add(1, Relaxed);
+                let t0 = Instant::now();
+                let (model, engine) = match shared.resolve(&model) {
+                    Ok(pair) => pair,
+                    Err(msg) => {
+                        shared.counters.errors.fetch_add(1, Relaxed);
+                        let _ = conn.respond(&Response::Error { id, message: msg });
+                        continue;
+                    }
+                };
+                // validate cells here so one bad request can never fail
+                // a whole coalesced sweep
+                let pq = engine.model().grid_len();
+                if let Some(&bad) = cells.iter().find(|&&c| c >= pq) {
+                    shared.counters.errors.fetch_add(1, Relaxed);
+                    let _ = conn.respond(&Response::Error {
+                        id,
+                        message: format!(
+                            "cell index {bad} out of range (model {model:?} has {pq} cells)"
+                        ),
+                    });
+                    continue;
+                }
+                if shared.window_ms == 0 {
+                    // serial dispatch: answer inline, one request per sweep
+                    answer_inline(shared, &conn, &engine, id, cells, t0);
+                } else {
+                    if shared.is_shutdown() {
+                        let _ = conn.respond(&Response::Error {
+                            id,
+                            message: "daemon is shutting down".to_string(),
+                        });
+                        return;
+                    }
+                    let mut q = shared.queue.lock().unwrap_or_else(|e| e.into_inner());
+                    q.push(Pending { req_id: id, model, cells, conn: Arc::clone(&conn), t0 });
+                    drop(q);
+                    shared.cv.notify_all();
+                }
+            }
+        }
+    }
+}
+
+/// Window-0 path: one `predict_batch` sweep per request.
+fn answer_inline(
+    shared: &Shared,
+    conn: &ConnWriter,
+    engine: &ServeEngine,
+    id: u64,
+    cells: Vec<usize>,
+    t0: Instant,
+) {
+    use std::sync::atomic::Ordering::Relaxed;
+    let n_cells = cells.len() as u64;
+    let resp = match engine.predict_batch(&[BatchRequest { cells }]) {
+        Ok(mut rs) => match rs.pop() {
+            Some(BatchResponse { mean, var }) => Response::Predict { id, mean, var },
+            None => {
+                shared.counters.errors.fetch_add(1, Relaxed);
+                Response::Error { id, message: "empty predict_batch result".to_string() }
+            }
+        },
+        Err(e) => {
+            shared.counters.errors.fetch_add(1, Relaxed);
+            Response::Error { id, message: format!("predict failed: {e:#}") }
+        }
+    };
+    shared.counters.record_batch(1, n_cells);
+    let _ = conn.respond(&resp);
+    shared.counters.record_latency_us(t0.elapsed().as_micros() as u64);
+}
+
+/// Cross-request batcher: wait for the first pending request, hold the
+/// admission window open, then sweep everything that arrived.
+fn batcher_loop(shared: &Arc<Shared>) {
+    loop {
+        // park until there is work (or we are told to stop and the
+        // queue is drained)
+        let first_t0 = {
+            let mut q = shared.queue.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if let Some(p) = q.first() {
+                    break p.t0;
+                }
+                if shared.is_shutdown() {
+                    return;
+                }
+                let (guard, _) = shared
+                    .cv
+                    .wait_timeout(q, Duration::from_millis(50))
+                    .unwrap_or_else(|e| e.into_inner());
+                q = guard;
+            }
+        };
+        // admission window: collect more requests until the deadline,
+        // the early-close threshold, or shutdown
+        let deadline = first_t0 + Duration::from_millis(shared.window_ms);
+        let pendings = {
+            let mut q = shared.queue.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if q.len() >= shared.max_batch || shared.is_shutdown() {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _) = shared
+                    .cv
+                    .wait_timeout(q, deadline - now)
+                    .unwrap_or_else(|e| e.into_inner());
+                q = guard;
+            }
+            std::mem::take(&mut *q)
+        };
+        if !pendings.is_empty() {
+            sweep(shared, pendings);
+        }
+    }
+}
+
+/// One coalesced sweep: group pendings by model (arrival order
+/// preserved within each model), run one `predict_batch` per model,
+/// demultiplex, and write each connection's responses with a single
+/// coalesced socket write.
+fn sweep(shared: &Shared, pendings: Vec<Pending>) {
+    use std::sync::atomic::Ordering::Relaxed;
+    let n = pendings.len();
+    let total_cells: u64 = pendings.iter().map(|p| p.cells.len() as u64).sum();
+    let mut groups: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    for (i, p) in pendings.iter().enumerate() {
+        groups.entry(p.model.as_str()).or_default().push(i);
+    }
+    let mut responses: Vec<Option<Response>> = (0..n).map(|_| None).collect();
+    for (model, idxs) in &groups {
+        let Some(engine) = shared.engines.get(*model) else {
+            continue; // unreachable: resolved before enqueue
+        };
+        let reqs: Vec<BatchRequest> =
+            idxs.iter().map(|&i| BatchRequest { cells: pendings[i].cells.clone() }).collect();
+        match engine.predict_batch(&reqs) {
+            Ok(rs) => {
+                for (&i, r) in idxs.iter().zip(rs) {
+                    responses[i] =
+                        Some(Response::Predict { id: pendings[i].req_id, mean: r.mean, var: r.var });
+                }
+            }
+            Err(e) => {
+                for &i in idxs.iter() {
+                    shared.counters.errors.fetch_add(1, Relaxed);
+                    responses[i] = Some(Response::Error {
+                        id: pendings[i].req_id,
+                        message: format!("predict failed: {e:#}"),
+                    });
+                }
+            }
+        }
+    }
+    shared.counters.record_batch(n as u64, total_cells);
+    // demultiplex: one write buffer per connection, frames in arrival
+    // order, flushed with a single write_all per connection
+    let mut bufs: Vec<(Arc<ConnWriter>, Vec<u8>)> = Vec::new();
+    let mut by_conn: HashMap<usize, usize> = HashMap::new();
+    for (i, p) in pendings.iter().enumerate() {
+        let Some(resp) = &responses[i] else { continue };
+        let key = Arc::as_ptr(&p.conn) as usize;
+        let bi = *by_conn.entry(key).or_insert_with(|| {
+            bufs.push((Arc::clone(&p.conn), Vec::new()));
+            bufs.len() - 1
+        });
+        let payload = encode_response(resp);
+        let _ = write_frame(&mut bufs[bi].1, &payload); // Vec write is infallible
+    }
+    for (conn, bytes) in &bufs {
+        let mut s = conn.stream.lock().unwrap_or_else(|e| e.into_inner());
+        let _ = s.write_all(bytes); // a vanished client cannot fail the sweep
+    }
+    let now = Instant::now();
+    for p in &pendings {
+        shared.counters.record_latency_us(now.duration_since(p.t0).as_micros() as u64);
+    }
+}
+
+// ---------------------------------------------------------------------
+// client
+// ---------------------------------------------------------------------
+
+/// Minimal blocking client for the serve protocol — what
+/// `lkgp predict --addr` and the serve tests/benches use. Requests can
+/// be pipelined: issue many [`ServeClient::send`]s, then collect the
+/// responses (matching on [`Response::id`]) with
+/// [`ServeClient::recv`].
+pub struct ServeClient {
+    stream: TcpStream,
+    max_frame_bytes: usize,
+    next_id: u64,
+}
+
+impl ServeClient {
+    /// Connect to a running daemon.
+    pub fn connect(addr: &str) -> Result<ServeClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        Ok(ServeClient { stream, max_frame_bytes: MAX_FRAME_BYTES, next_id: 1 })
+    }
+
+    /// Allocate the next request id on this connection.
+    pub fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Send one request without waiting for its response (pipelining).
+    pub fn send(&mut self, req: &Request) -> Result<()> {
+        let payload = crate::util::wire::encode_request(req);
+        write_frame(&mut self.stream, &payload).context("sending request frame")?;
+        Ok(())
+    }
+
+    /// Receive the next response frame.
+    pub fn recv(&mut self) -> Result<Response> {
+        let payload = read_frame(&mut self.stream, self.max_frame_bytes)
+            .context("reading response frame")?
+            .ok_or_else(|| anyhow::anyhow!("server closed the connection"))?;
+        decode_response(&payload).context("decoding response frame").map_err(Into::into)
+    }
+
+    /// Round-trip one request.
+    pub fn call(&mut self, req: &Request) -> Result<Response> {
+        self.send(req)?;
+        self.recv()
+    }
+
+    /// Predict `cells` of `model` (empty string = the only loaded
+    /// model), turning a served [`Response::Error`] into a typed
+    /// client-side error.
+    pub fn predict(&mut self, model: &str, cells: &[usize]) -> Result<BatchResponse> {
+        let id = self.fresh_id();
+        let resp = self.call(&Request::Predict {
+            id,
+            model: model.to_string(),
+            cells: cells.to_vec(),
+        })?;
+        match resp {
+            Response::Predict { id: rid, mean, var } if rid == id => {
+                Ok(BatchResponse { mean, var })
+            }
+            Response::Error { message, .. } => bail!("server error: {message}"),
+            other => bail!("unexpected response {other:?} to predict request {id}"),
+        }
+    }
+
+    /// Ping the daemon, returning its model listing.
+    pub fn ping(&mut self) -> Result<String> {
+        let id = self.fresh_id();
+        match self.call(&Request::Ping { id })? {
+            Response::Info { id: rid, info } if rid == id => Ok(info),
+            Response::Error { message, .. } => bail!("server error: {message}"),
+            other => bail!("unexpected response {other:?} to ping {id}"),
+        }
+    }
+
+    /// Ask the daemon to shut down; returns once the ack arrives.
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        let id = self.fresh_id();
+        match self.call(&Request::Shutdown { id })? {
+            Response::ShutdownAck { id: rid } if rid == id => Ok(()),
+            Response::Error { message, .. } => bail!("server error: {message}"),
+            other => bail!("unexpected response {other:?} to shutdown {id}"),
+        }
+    }
+
+    /// The underlying stream (tests use this to write malformed bytes).
+    pub fn stream_mut(&mut self) -> &mut TcpStream {
+        &mut self.stream
+    }
+}

@@ -30,7 +30,13 @@
 //!    every query batch, so a batch of m new points costs two GEMMs
 //!    (`m x p` cross-Gram, `m x p @ p x q` contraction) — the
 //!    Gram-factor amortization that makes high query throughput cheap.
-//!
+//! 4. **Network serving**: [`daemon::ServeDaemon`] (`lkgp serve`) keeps
+//!    engines resident behind a TCP endpoint and lifts the within-call
+//!    coalescing of `predict_batch` to *cross-request* batching: an
+//!    admission window collects predict requests from many concurrent
+//!    connections into one steal-scheduled sweep, bit-identical to
+//!    answering each request alone. Protocol spec in `docs/formats.md`,
+//!    lifecycle and determinism contract in `docs/serve.md`.
 //!
 //! ```no_run
 //! use lkgp::serve::{BatchRequest, ServeEngine};
@@ -46,6 +52,8 @@
 //! # Ok(())
 //! # }
 //! ```
+
+pub mod daemon;
 
 use anyhow::{bail, Context, Result};
 

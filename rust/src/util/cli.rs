@@ -6,11 +6,17 @@
 use std::collections::BTreeMap;
 
 /// Parsed command line: subcommand, `--key value` flags, positionals.
+///
+/// Flags are repeatable: every occurrence of `--key value` is kept in
+/// order. The scalar getters return the **last** occurrence (so a later
+/// flag overrides an earlier one, the conventional CLI behavior) and
+/// [`Args::str_all`] returns all of them (`lkgp serve --checkpoint a
+/// --checkpoint b` loads both models).
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     /// First bare argument, if any (e.g. `train`).
     pub subcommand: Option<String>,
-    flags: BTreeMap<String, String>,
+    flags: BTreeMap<String, Vec<String>>,
     positional: Vec<String>,
     seen: std::cell::RefCell<Vec<String>>,
 }
@@ -27,14 +33,14 @@ impl Args {
         }
         while let Some(a) = it.next() {
             if let Some(key) = a.strip_prefix("--") {
-                // --key=value | --key value | --flag
+                // --key=value | --key value | --flag; repeats accumulate
                 if let Some((k, v)) = key.split_once('=') {
-                    out.flags.insert(k.to_string(), v.to_string());
+                    out.flags.entry(k.to_string()).or_default().push(v.to_string());
                 } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
                     let v = it.next().unwrap_or_default(); // peek guarantees Some
-                    out.flags.insert(key.to_string(), v);
+                    out.flags.entry(key.to_string()).or_default().push(v);
                 } else {
-                    out.flags.insert(key.to_string(), "true".to_string());
+                    out.flags.entry(key.to_string()).or_default().push("true".to_string());
                 }
             } else {
                 out.positional.push(a);
@@ -52,10 +58,18 @@ impl Args {
         self.seen.borrow_mut().push(key.to_string());
     }
 
-    /// Raw flag value, if provided.
+    /// Raw flag value, if provided (last occurrence wins on repeats).
     pub fn str_opt(&self, key: &str) -> Option<String> {
         self.mark(key);
-        self.flags.get(key).cloned()
+        self.flags.get(key).and_then(|vs| vs.last().cloned())
+    }
+
+    /// Every occurrence of a repeatable flag, in command-line order
+    /// (empty when the flag was never given). `lkgp serve` uses this
+    /// for its repeatable `--checkpoint`.
+    pub fn str_all(&self, key: &str) -> Vec<String> {
+        self.mark(key);
+        self.flags.get(key).cloned().unwrap_or_default()
     }
 
     /// String flag with a default.
@@ -199,5 +213,15 @@ mod tests {
     fn negative_number_values() {
         let a = parse("run --offset -3.5");
         assert_eq!(a.f64("offset", 0.0), -3.5);
+    }
+
+    #[test]
+    fn repeated_flags_accumulate_and_last_wins() {
+        let a = parse("serve --checkpoint a.ckpt --checkpoint=b.ckpt --window 2 --window 5");
+        assert_eq!(a.str_all("checkpoint"), vec!["a.ckpt".to_string(), "b.ckpt".to_string()]);
+        // scalar getters see the last occurrence
+        assert_eq!(a.u64("window", 0), 5);
+        assert_eq!(a.str_all("missing"), Vec::<String>::new());
+        assert!(a.finish().is_ok());
     }
 }

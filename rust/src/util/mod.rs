@@ -18,3 +18,4 @@ pub mod stats;
 pub mod table;
 pub mod testing;
 pub mod timer;
+pub mod wire;

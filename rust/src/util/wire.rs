@@ -1,0 +1,801 @@
+//! Length-prefixed binary wire protocol for the `lkgp serve` daemon.
+//!
+//! The serve protocol is deliberately minimal and dependency-free,
+//! mirroring the checkpoint codec in `model::io`: every multi-byte
+//! value is little-endian regardless of host byte order, every payload
+//! carries an FNV-1a 64 integrity trailer, and decoding is **total** —
+//! malformed, truncated, corrupted, or oversized input is rejected with
+//! a typed [`WireError`], never a panic and never an unbounded
+//! allocation. The byte-exact specification lives in `docs/formats.md`
+//! (wire-protocol section); this module is its implementation.
+//!
+//! # Framing
+//!
+//! Each direction of a connection carries a sequence of *frames*:
+//!
+//! ```text
+//! [0..4)  payload length N, u32 LE (bounded by the reader's max)
+//! [4..4+N) payload bytes
+//! ```
+//!
+//! [`read_frame`] validates the length prefix against its `max_bytes`
+//! bound *before* allocating, so a hostile or corrupted prefix (e.g.
+//! `0xFFFF_FFFF`) yields [`WireError::Oversized`] instead of an
+//! allocation attempt. A connection that closes cleanly between frames
+//! reads as `Ok(None)`; one that dies mid-frame is a typed
+//! [`WireError::Truncated`].
+//!
+//! # Payloads
+//!
+//! Requests and responses share a common header (magic, version, kind
+//! tag, request id) followed by a kind-specific body and the checksum
+//! trailer — see [`Request`] / [`Response`] and the encode/decode
+//! functions. The request id is an opaque `u64` chosen by the client
+//! and echoed verbatim in the matching response, which is what lets
+//! clients pipeline many requests per connection (the daemon answers
+//! each connection's requests in arrival order, so ids double as a
+//! client-side sanity check).
+
+use std::fmt;
+use std::io::{Read, Write};
+
+use crate::model::io::fnv64;
+use crate::util::failpoint::{self, FaultAction};
+
+/// First 4 payload bytes of every request.
+pub const REQ_MAGIC: [u8; 4] = *b"LKRQ";
+/// First 4 payload bytes of every response.
+pub const RESP_MAGIC: [u8; 4] = *b"LKRS";
+/// Current (and only) wire-protocol version.
+pub const WIRE_VERSION: u8 = 1;
+/// Default upper bound on a single frame's payload, in bytes. A length
+/// prefix above the reader's bound is rejected *before* any allocation.
+pub const MAX_FRAME_BYTES: usize = 16 << 20;
+
+/// Typed wire-protocol failure. Every malformed input maps to one of
+/// these variants — encoding and decoding never panic.
+#[derive(Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// The frame's length prefix exceeds the reader's bound.
+    Oversized {
+        /// Length announced by the prefix.
+        len: usize,
+        /// The reader's configured bound.
+        max: usize,
+    },
+    /// The input ended before a field could be read in full.
+    Truncated {
+        /// What was being read when the input ran out.
+        what: &'static str,
+        /// Bytes the field needed.
+        needed: usize,
+        /// Bytes actually available.
+        available: usize,
+    },
+    /// The payload does not start with the expected magic bytes.
+    BadMagic {
+        /// The 4 bytes actually found.
+        found: [u8; 4],
+        /// The magic expected ([`REQ_MAGIC`] or [`RESP_MAGIC`]).
+        expected: [u8; 4],
+    },
+    /// The protocol version is not one this build speaks.
+    UnsupportedVersion {
+        /// Version tag found in the payload.
+        found: u8,
+        /// Version this build supports ([`WIRE_VERSION`]).
+        supported: u8,
+    },
+    /// The trailing FNV-1a checksum does not match the payload.
+    ChecksumMismatch {
+        /// Checksum stored in the trailer.
+        stored: u64,
+        /// Checksum computed over the payload content.
+        computed: u64,
+    },
+    /// A structurally valid field carries an invalid value (unknown
+    /// kind tag, bad UTF-8, count/length mismatch, trailing bytes ...).
+    BadField {
+        /// Field name.
+        what: &'static str,
+        /// Human-readable description of the problem.
+        detail: String,
+    },
+    /// The underlying transport failed mid-frame (socket error,
+    /// injected `serve_frame` fault).
+    Io {
+        /// What the transport reported.
+        detail: String,
+    },
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Oversized { len, max } => {
+                write!(f, "oversized frame: length prefix {len} exceeds the {max}-byte bound")
+            }
+            WireError::Truncated { what, needed, available } => {
+                write!(f, "truncated frame: {what} needs {needed} bytes, {available} left")
+            }
+            WireError::BadMagic { found, expected } => {
+                write!(f, "bad wire magic {found:?} (expected {expected:?})")
+            }
+            WireError::UnsupportedVersion { found, supported } => {
+                write!(f, "unsupported wire version {found} (this build speaks {supported})")
+            }
+            WireError::ChecksumMismatch { stored, computed } => write!(
+                f,
+                "wire checksum mismatch: trailer {stored:#018x}, content {computed:#018x}"
+            ),
+            WireError::BadField { what, detail } => write!(f, "bad wire field {what}: {detail}"),
+            WireError::Io { detail } => write!(f, "wire transport error: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// One client request frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Request {
+    /// Predict the given grid cells of one model. `model` may be empty
+    /// when exactly one model is loaded.
+    Predict {
+        /// Client-chosen id echoed in the matching response.
+        id: u64,
+        /// Model id (checkpoint stem) the cells refer to.
+        model: String,
+        /// Grid cells to predict (layout `j*q + k`, duplicates allowed).
+        cells: Vec<usize>,
+    },
+    /// Liveness / discovery probe; answered immediately (never batched)
+    /// with a [`Response::Info`] describing the loaded models.
+    Ping {
+        /// Client-chosen id echoed in the matching response.
+        id: u64,
+    },
+    /// Ask the daemon to stop accepting connections and exit cleanly.
+    Shutdown {
+        /// Client-chosen id echoed in the matching response.
+        id: u64,
+    },
+}
+
+impl Request {
+    /// The client-chosen request id.
+    pub fn id(&self) -> u64 {
+        match self {
+            Request::Predict { id, .. } | Request::Ping { id } | Request::Shutdown { id } => *id,
+        }
+    }
+}
+
+/// One daemon response frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// Predictions for a [`Request::Predict`], aligned with its cells.
+    Predict {
+        /// Echo of the request id.
+        id: u64,
+        /// Predictive means in raw target scale.
+        mean: Vec<f64>,
+        /// Predictive variances (including observation noise).
+        var: Vec<f64>,
+    },
+    /// Server description answering a [`Request::Ping`].
+    Info {
+        /// Echo of the request id.
+        id: u64,
+        /// Human-readable model listing.
+        info: String,
+    },
+    /// Acknowledgement of a [`Request::Shutdown`], written before the
+    /// daemon exits.
+    ShutdownAck {
+        /// Echo of the request id.
+        id: u64,
+    },
+    /// Typed per-request failure (unknown model, out-of-range cell,
+    /// malformed frame ...). The connection stays usable unless the
+    /// error was a framing-level one (see `docs/serve.md`).
+    Error {
+        /// Echo of the request id (0 when the request never decoded).
+        id: u64,
+        /// What went wrong.
+        message: String,
+    },
+}
+
+impl Response {
+    /// The echoed request id.
+    pub fn id(&self) -> u64 {
+        match self {
+            Response::Predict { id, .. }
+            | Response::Info { id, .. }
+            | Response::ShutdownAck { id }
+            | Response::Error { id, .. } => *id,
+        }
+    }
+}
+
+const KIND_PREDICT: u8 = 0;
+const KIND_PING: u8 = 1;
+const KIND_SHUTDOWN: u8 = 2;
+
+const STATUS_PREDICT: u8 = 0;
+const STATUS_INFO: u8 = 1;
+const STATUS_SHUTDOWN_ACK: u8 = 2;
+const STATUS_ERROR: u8 = 3;
+
+// ---------------------------------------------------------------------
+// encoding
+// ---------------------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn seal(mut out: Vec<u8>) -> Vec<u8> {
+    let h = fnv64(&out);
+    put_u64(&mut out, h);
+    out
+}
+
+/// Encode a request payload (framing prefix not included — see
+/// [`write_frame`]).
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    out.extend_from_slice(&REQ_MAGIC);
+    out.push(WIRE_VERSION);
+    match req {
+        Request::Predict { id, model, cells } => {
+            out.push(KIND_PREDICT);
+            put_u64(&mut out, *id);
+            put_str(&mut out, model);
+            put_u32(&mut out, cells.len() as u32);
+            for &c in cells {
+                put_u64(&mut out, c as u64);
+            }
+        }
+        Request::Ping { id } => {
+            out.push(KIND_PING);
+            put_u64(&mut out, *id);
+        }
+        Request::Shutdown { id } => {
+            out.push(KIND_SHUTDOWN);
+            put_u64(&mut out, *id);
+        }
+    }
+    seal(out)
+}
+
+/// Encode a response payload (framing prefix not included).
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    out.extend_from_slice(&RESP_MAGIC);
+    out.push(WIRE_VERSION);
+    match resp {
+        Response::Predict { id, mean, var } => {
+            out.push(STATUS_PREDICT);
+            put_u64(&mut out, *id);
+            put_u32(&mut out, mean.len() as u32);
+            for &x in mean {
+                put_u64(&mut out, x.to_bits());
+            }
+            for &x in var {
+                put_u64(&mut out, x.to_bits());
+            }
+        }
+        Response::Info { id, info } => {
+            out.push(STATUS_INFO);
+            put_u64(&mut out, *id);
+            put_str(&mut out, info);
+        }
+        Response::ShutdownAck { id } => {
+            out.push(STATUS_SHUTDOWN_ACK);
+            put_u64(&mut out, *id);
+        }
+        Response::Error { id, message } => {
+            out.push(STATUS_ERROR);
+            put_u64(&mut out, *id);
+            put_str(&mut out, message);
+        }
+    }
+    seal(out)
+}
+
+// ---------------------------------------------------------------------
+// decoding
+// ---------------------------------------------------------------------
+
+/// Bounds-checked reader over a payload slice.
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], WireError> {
+        let available = self.b.len() - self.i;
+        if n > available {
+            return Err(WireError::Truncated { what, needed: n, available });
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &'static str) -> Result<u8, WireError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &'static str) -> Result<u32, WireError> {
+        let s = self.take(4, what)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self, what: &'static str) -> Result<u64, WireError> {
+        let s = self.take(8, what)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    fn string(&mut self, what: &'static str) -> Result<String, WireError> {
+        let len = self.u32(what)? as usize;
+        let s = self.take(len, what)?;
+        String::from_utf8(s.to_vec())
+            .map_err(|e| WireError::BadField { what, detail: format!("invalid UTF-8: {e}") })
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+}
+
+/// Verify the common header + checksum trailer and return a cursor over
+/// the body (everything between the version byte and the trailer).
+fn open_payload<'a>(
+    payload: &'a [u8],
+    expected_magic: [u8; 4],
+) -> Result<(u8, Cursor<'a>), WireError> {
+    // magic + version + kind + trailer is the smallest legal payload
+    let min = 4 + 1 + 1 + 8;
+    if payload.len() < min {
+        return Err(WireError::Truncated {
+            what: "payload header",
+            needed: min,
+            available: payload.len(),
+        });
+    }
+    let mut found = [0u8; 4];
+    found.copy_from_slice(&payload[..4]);
+    if found != expected_magic {
+        return Err(WireError::BadMagic { found, expected: expected_magic });
+    }
+    let version = payload[4];
+    if version != WIRE_VERSION {
+        return Err(WireError::UnsupportedVersion { found: version, supported: WIRE_VERSION });
+    }
+    let content_len = payload.len() - 8;
+    let stored = u64::from_le_bytes(
+        payload[content_len..].try_into().unwrap_or([0u8; 8]), // length checked above
+    );
+    let computed = fnv64(&payload[..content_len]);
+    if stored != computed {
+        return Err(WireError::ChecksumMismatch { stored, computed });
+    }
+    let kind = payload[5];
+    Ok((kind, Cursor { b: &payload[..content_len], i: 6 }))
+}
+
+/// Require the cursor fully consumed (trailing bytes mean the payload
+/// lies about its own structure).
+fn finish(c: Cursor<'_>, what: &'static str) -> Result<(), WireError> {
+    if c.remaining() != 0 {
+        return Err(WireError::BadField {
+            what,
+            detail: format!("{} trailing bytes after the last field", c.remaining()),
+        });
+    }
+    Ok(())
+}
+
+/// Decode a request payload. Total: every malformed input is a typed
+/// [`WireError`]; allocation is bounded by the payload length (counts
+/// are validated against the remaining bytes before any `Vec` grows).
+pub fn decode_request(payload: &[u8]) -> Result<Request, WireError> {
+    let (kind, mut c) = open_payload(payload, REQ_MAGIC)?;
+    let req = match kind {
+        KIND_PREDICT => {
+            let id = c.u64("request id")?;
+            let model = c.string("model id")?;
+            let count = c.u32("cell count")? as usize;
+            let needed = count.checked_mul(8).ok_or(WireError::BadField {
+                what: "cell count",
+                detail: "cell count overflows".to_string(),
+            })?;
+            if needed > c.remaining() {
+                return Err(WireError::Truncated {
+                    what: "cells",
+                    needed,
+                    available: c.remaining(),
+                });
+            }
+            let mut cells = Vec::with_capacity(count);
+            for _ in 0..count {
+                let raw = c.u64("cell index")?;
+                let cell = usize::try_from(raw).map_err(|_| WireError::BadField {
+                    what: "cell index",
+                    detail: format!("{raw} does not fit this platform's usize"),
+                })?;
+                cells.push(cell);
+            }
+            Request::Predict { id, model, cells }
+        }
+        KIND_PING => Request::Ping { id: c.u64("request id")? },
+        KIND_SHUTDOWN => Request::Shutdown { id: c.u64("request id")? },
+        other => {
+            return Err(WireError::BadField {
+                what: "request kind",
+                detail: format!("unknown kind tag {other}"),
+            })
+        }
+    };
+    finish(c, "request body")?;
+    Ok(req)
+}
+
+/// Decode a response payload (same totality guarantees as
+/// [`decode_request`]).
+pub fn decode_response(payload: &[u8]) -> Result<Response, WireError> {
+    let (status, mut c) = open_payload(payload, RESP_MAGIC)?;
+    let resp = match status {
+        STATUS_PREDICT => {
+            let id = c.u64("response id")?;
+            let count = c.u32("value count")? as usize;
+            let needed = count.checked_mul(16).ok_or(WireError::BadField {
+                what: "value count",
+                detail: "value count overflows".to_string(),
+            })?;
+            if needed > c.remaining() {
+                return Err(WireError::Truncated {
+                    what: "mean/var values",
+                    needed,
+                    available: c.remaining(),
+                });
+            }
+            let mut mean = Vec::with_capacity(count);
+            for _ in 0..count {
+                mean.push(f64::from_bits(c.u64("mean value")?));
+            }
+            let mut var = Vec::with_capacity(count);
+            for _ in 0..count {
+                var.push(f64::from_bits(c.u64("var value")?));
+            }
+            Response::Predict { id, mean, var }
+        }
+        STATUS_INFO => {
+            let id = c.u64("response id")?;
+            let info = c.string("info string")?;
+            Response::Info { id, info }
+        }
+        STATUS_SHUTDOWN_ACK => Response::ShutdownAck { id: c.u64("response id")? },
+        STATUS_ERROR => {
+            let id = c.u64("response id")?;
+            let message = c.string("error message")?;
+            Response::Error { id, message }
+        }
+        other => {
+            return Err(WireError::BadField {
+                what: "response status",
+                detail: format!("unknown status tag {other}"),
+            })
+        }
+    };
+    finish(c, "response body")?;
+    Ok(resp)
+}
+
+// ---------------------------------------------------------------------
+// framing over a transport
+// ---------------------------------------------------------------------
+
+/// Read one frame's payload from `r`.
+///
+/// Returns `Ok(None)` when the peer closed the connection cleanly at a
+/// frame boundary, `Ok(Some(payload))` on success, and a typed
+/// [`WireError`] for everything else: a length prefix above `max_bytes`
+/// is rejected **before allocating** ([`WireError::Oversized`]), a
+/// connection dying mid-frame is [`WireError::Truncated`], and a
+/// transport error (including a fault injected at the `serve_frame`
+/// failpoint) is [`WireError::Io`].
+pub fn read_frame(r: &mut impl Read, max_bytes: usize) -> Result<Option<Vec<u8>>, WireError> {
+    match failpoint::check("serve_frame") {
+        Some(FaultAction::Short | FaultAction::Torn) => {
+            // simulate a peer that died mid-frame
+            return Err(WireError::Truncated { what: "frame payload", needed: 1, available: 0 });
+        }
+        Some(_) => {
+            return Err(WireError::Io {
+                detail: "injected fault at failpoint serve_frame (Error)".to_string(),
+            });
+        }
+        None => {}
+    }
+    let mut prefix = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut prefix[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None); // clean close between frames
+                }
+                return Err(WireError::Truncated {
+                    what: "frame length prefix",
+                    needed: 4,
+                    available: got,
+                });
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io { detail: e.to_string() }),
+        }
+    }
+    let len = u32::from_le_bytes(prefix) as usize;
+    if len > max_bytes {
+        return Err(WireError::Oversized { len, max: max_bytes });
+    }
+    let mut payload = vec![0u8; len];
+    let mut filled = 0;
+    while filled < len {
+        match r.read(&mut payload[filled..]) {
+            Ok(0) => {
+                return Err(WireError::Truncated {
+                    what: "frame payload",
+                    needed: len,
+                    available: filled,
+                })
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io { detail: e.to_string() }),
+        }
+    }
+    Ok(Some(payload))
+}
+
+/// Write one frame (length prefix + payload) to `w` without flushing —
+/// callers batch multiple frames into one flush where it matters (the
+/// daemon's per-connection response coalescing).
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<(), WireError> {
+    let len = u32::try_from(payload.len()).map_err(|_| WireError::Oversized {
+        len: payload.len(),
+        max: u32::MAX as usize,
+    })?;
+    w.write_all(&len.to_le_bytes()).map_err(|e| WireError::Io { detail: e.to_string() })?;
+    w.write_all(payload).map_err(|e| WireError::Io { detail: e.to_string() })?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip_req(req: Request) {
+        let bytes = encode_request(&req);
+        assert_eq!(decode_request(&bytes).expect("roundtrip"), req);
+    }
+
+    fn roundtrip_resp(resp: Response) {
+        let bytes = encode_response(&resp);
+        assert_eq!(decode_response(&bytes).expect("roundtrip"), resp);
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        roundtrip_req(Request::Predict {
+            id: 7,
+            model: "climate".to_string(),
+            cells: vec![0, 41, 41, usize::from(u16::MAX)],
+        });
+        roundtrip_req(Request::Predict { id: 0, model: String::new(), cells: vec![] });
+        roundtrip_req(Request::Ping { id: u64::MAX });
+        roundtrip_req(Request::Shutdown { id: 3 });
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        roundtrip_resp(Response::Predict {
+            id: 9,
+            mean: vec![1.5, -0.25, f64::MIN_POSITIVE],
+            var: vec![0.5, 2.0, 1e-300],
+        });
+        roundtrip_resp(Response::Info { id: 1, info: "model a: 12 x 6".to_string() });
+        roundtrip_resp(Response::ShutdownAck { id: 2 });
+        roundtrip_resp(Response::Error { id: 0, message: "unknown model \"x\"".to_string() });
+    }
+
+    #[test]
+    fn float_bits_survive_the_wire_exactly() {
+        // NaNs and negative zero must round-trip bit for bit: the serve
+        // determinism contract is stated in bits, not in values
+        let vals = vec![f64::NAN, -0.0, f64::INFINITY, -f64::INFINITY, 1.0 / 3.0];
+        let resp = Response::Predict { id: 1, mean: vals.clone(), var: vals.clone() };
+        let back = decode_response(&encode_response(&resp)).expect("roundtrip");
+        match back {
+            Response::Predict { mean, var, .. } => {
+                for (a, b) in vals.iter().zip(mean.iter()).chain(vals.iter().zip(var.iter())) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wrong_magic_and_version_are_typed() {
+        let bytes = encode_request(&Request::Ping { id: 1 });
+        // a response decoder refuses a request payload by magic
+        match decode_response(&bytes) {
+            Err(WireError::BadMagic { expected, .. }) => assert_eq!(expected, RESP_MAGIC),
+            other => panic!("expected BadMagic, got {other:?}"),
+        }
+        let mut future = bytes.clone();
+        future[4] = WIRE_VERSION + 1;
+        match decode_request(&future) {
+            Err(WireError::UnsupportedVersion { found, supported }) => {
+                assert_eq!(found, WIRE_VERSION + 1);
+                assert_eq!(supported, WIRE_VERSION);
+            }
+            other => panic!("expected UnsupportedVersion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn every_truncation_is_a_typed_error() {
+        let bytes = encode_request(&Request::Predict {
+            id: 5,
+            model: "m".to_string(),
+            cells: vec![1, 2, 3],
+        });
+        for cut in 0..bytes.len() {
+            match decode_request(&bytes[..cut]) {
+                Err(_) => {}
+                Ok(req) => panic!("truncation to {cut} bytes decoded as {req:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn seeded_bit_flips_are_always_rejected() {
+        // the FNV trailer catches every single-bit corruption: a flip in
+        // the body changes the computed hash, a flip in the trailer
+        // changes the stored one
+        let bytes = encode_request(&Request::Predict {
+            id: 11,
+            model: "fuzz".to_string(),
+            cells: (0..32).collect(),
+        });
+        let mut rng = Rng::new(0x5EEDu64);
+        for _ in 0..256 {
+            let pos = rng.below(bytes.len());
+            let bit = (rng.next_u64() % 8) as u8;
+            let mut corrupted = bytes.clone();
+            corrupted[pos] ^= 1 << bit;
+            assert!(
+                decode_request(&corrupted).is_err(),
+                "flip of bit {bit} at byte {pos} must be rejected"
+            );
+        }
+        let resp_bytes = encode_response(&Response::Predict {
+            id: 11,
+            mean: vec![1.0; 16],
+            var: vec![2.0; 16],
+        });
+        for _ in 0..256 {
+            let pos = rng.below(resp_bytes.len());
+            let bit = (rng.next_u64() % 8) as u8;
+            let mut corrupted = resp_bytes.clone();
+            corrupted[pos] ^= 1 << bit;
+            assert!(decode_response(&corrupted).is_err(), "flip at byte {pos} must be rejected");
+        }
+    }
+
+    #[test]
+    fn lying_counts_never_over_allocate() {
+        // hand-build a predict request whose cell count claims far more
+        // cells than the payload holds; the decoder must reject it by
+        // comparing against the remaining bytes, not trust the count
+        let mut body = Vec::new();
+        body.extend_from_slice(&REQ_MAGIC);
+        body.push(WIRE_VERSION);
+        body.push(0); // predict
+        body.extend_from_slice(&7u64.to_le_bytes()); // id
+        body.extend_from_slice(&0u32.to_le_bytes()); // empty model id
+        body.extend_from_slice(&u32::MAX.to_le_bytes()); // preposterous count
+        let h = fnv64(&body);
+        body.extend_from_slice(&h.to_le_bytes());
+        match decode_request(&body) {
+            Err(WireError::Truncated { what, .. }) => assert_eq!(what, "cells"),
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_before_allocating() {
+        let mut input: &[u8] = &[0xFF, 0xFF, 0xFF, 0xFF, 0x00];
+        match read_frame(&mut input, MAX_FRAME_BYTES) {
+            Err(WireError::Oversized { len, max }) => {
+                assert_eq!(len, u32::MAX as usize);
+                assert_eq!(max, MAX_FRAME_BYTES);
+            }
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_and_clean_close() {
+        let payload = encode_request(&Request::Ping { id: 1 });
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &payload).expect("write");
+        write_frame(&mut buf, &payload).expect("write");
+        let mut r: &[u8] = &buf;
+        assert_eq!(read_frame(&mut r, MAX_FRAME_BYTES).expect("frame 1"), Some(payload.clone()));
+        assert_eq!(read_frame(&mut r, MAX_FRAME_BYTES).expect("frame 2"), Some(payload));
+        assert_eq!(read_frame(&mut r, MAX_FRAME_BYTES).expect("eof"), None);
+    }
+
+    #[test]
+    fn mid_frame_disconnect_is_truncated() {
+        let payload = encode_request(&Request::Ping { id: 1 });
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &payload).expect("write");
+        // cut inside the payload
+        let mut r: &[u8] = &buf[..buf.len() - 3];
+        match read_frame(&mut r, MAX_FRAME_BYTES) {
+            Err(WireError::Truncated { what, .. }) => assert_eq!(what, "frame payload"),
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+        // cut inside the length prefix itself
+        let mut r: &[u8] = &buf[..2];
+        match read_frame(&mut r, MAX_FRAME_BYTES) {
+            Err(WireError::Truncated { what, .. }) => assert_eq!(what, "frame length prefix"),
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn seeded_frame_stream_fuzz_never_panics() {
+        // arbitrary byte streams through the frame reader + decoder:
+        // every outcome is Ok(None) (clean close), a decoded garbage
+        // payload is impossible (checksum), or a typed error
+        let mut rng = Rng::new(0xF00Du64);
+        for round in 0..128 {
+            let n = rng.below(200);
+            let bytes: Vec<u8> = (0..n).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+            let mut r: &[u8] = &bytes;
+            loop {
+                match read_frame(&mut r, 1 << 16) {
+                    Ok(None) => break,
+                    Ok(Some(payload)) => {
+                        assert!(
+                            decode_request(&payload).is_err(),
+                            "round {round}: random payload decoded as a request"
+                        );
+                    }
+                    Err(_) => break,
+                }
+            }
+        }
+    }
+}

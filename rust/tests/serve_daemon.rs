@@ -1,0 +1,363 @@
+//! End-to-end tests of the `lkgp serve` daemon: the wire path must
+//! preserve the engine's determinism contract (grouping and windowing
+//! never change output bits), route multiple models, turn every
+//! malformed frame into a typed per-connection error while the daemon
+//! keeps serving, and shut down cleanly on request.
+//!
+//! Tests that arm failpoints use `with_failpoints`; every other test
+//! wraps its daemon lifetime in `without_failpoints` so the serialized
+//! scopes can never leak faults into a concurrently running test (the
+//! faults.rs idiom).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use lkgp::data::synthetic::well_specified;
+use lkgp::data::GridDataset;
+use lkgp::gp::lkgp::{Lkgp, LkgpConfig};
+use lkgp::kernels::ProductGridKernel;
+use lkgp::model::TrainedModel;
+use lkgp::serve::daemon::{DaemonOptions, ServeClient, ServeDaemon};
+use lkgp::serve::ServeEngine;
+use lkgp::util::failpoint::{with_failpoints, without_failpoints};
+use lkgp::util::rng::Rng;
+use lkgp::util::wire::{decode_response, encode_request, Request, Response};
+
+fn dataset(seed: u64) -> GridDataset {
+    let kernel = ProductGridKernel::new(2, "rbf", 8);
+    well_specified(20, 8, 2, &kernel, 0.01, 0.25, seed)
+}
+
+fn fitted_model(seed: u64) -> TrainedModel {
+    let data = dataset(seed);
+    let cfg = LkgpConfig {
+        train_iters: 3,
+        n_samples: 8,
+        probes: 4,
+        cg_tol: 1e-3,
+        cg_max_iters: 200,
+        seed,
+        capture_pathwise: true,
+        ..LkgpConfig::default()
+    };
+    Lkgp::fit(&data, cfg).expect("fit").model.expect("capture_pathwise was set")
+}
+
+fn start(engines: Vec<(String, ServeEngine)>, window_ms: u64) -> ServeDaemon {
+    ServeDaemon::start(
+        "127.0.0.1:0",
+        engines,
+        DaemonOptions { window_ms, ..DaemonOptions::default() },
+    )
+    .expect("daemon start")
+}
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Frame a payload onto a raw socket (length prefix + bytes), without
+/// going through the library's writer.
+fn raw_send(s: &mut TcpStream, payload: &[u8]) {
+    let mut buf = (payload.len() as u32).to_le_bytes().to_vec();
+    buf.extend_from_slice(payload);
+    s.write_all(&buf).expect("raw send");
+}
+
+/// Read one frame off a raw socket without consulting any failpoint
+/// (the library's `read_frame` checks `serve_frame`, which fault tests
+/// arm for the *daemon* side only).
+fn raw_recv(s: &mut TcpStream) -> Option<Vec<u8>> {
+    let mut prefix = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match s.read(&mut prefix[got..]) {
+            Ok(0) => return None,
+            Ok(n) => got += n,
+            Err(_) => return None,
+        }
+    }
+    let len = u32::from_le_bytes(prefix) as usize;
+    let mut payload = vec![0u8; len];
+    let mut filled = 0;
+    while filled < len {
+        match s.read(&mut payload[filled..]) {
+            Ok(0) => return None,
+            Ok(n) => filled += n,
+            Err(_) => return None,
+        }
+    }
+    Some(payload)
+}
+
+fn recv_error_message(s: &mut TcpStream) -> String {
+    let payload = raw_recv(s).expect("expected an error frame before close");
+    match decode_response(&payload).expect("daemon frames always decode") {
+        Response::Error { message, .. } => message,
+        other => panic!("expected an error response, got {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// determinism across the wire
+// ---------------------------------------------------------------------
+
+#[test]
+fn wire_grouping_and_windowing_never_change_bits() {
+    without_failpoints(|| {
+        let model = fitted_model(21);
+        let offline = ServeEngine::from_model(model.clone()).expect("engine");
+        let pq = offline.model().grid_len();
+        let all: Vec<usize> = (0..pq).collect();
+        let expect = offline.predict_cells(&all).expect("offline predict");
+
+        // serial dispatch (window 0) and cross-request batching (window
+        // 2 ms) must serve the same bits, for any request grouping
+        for window_ms in [0u64, 2] {
+            let engine = ServeEngine::from_model(model.clone()).expect("engine");
+            let daemon = start(vec![("m".to_string(), engine)], window_ms);
+            let addr = daemon.local_addr().to_string();
+
+            // one request covering the grid
+            let mut c = ServeClient::connect(&addr).expect("connect");
+            let one = c.predict("m", &all).expect("predict");
+            assert_eq!(bits(&one.mean), bits(&expect.mean), "window {window_ms}: one-shot mean");
+            assert_eq!(bits(&one.var), bits(&expect.var), "window {window_ms}: one-shot var");
+
+            // the same cells split into ragged pipelined requests on one
+            // connection; responses must come back in request order
+            let splits = [&all[..5], &all[5..6], &all[6..]];
+            let mut ids = Vec::new();
+            for part in splits {
+                let id = c.fresh_id();
+                c.send(&Request::Predict {
+                    id,
+                    model: "m".to_string(),
+                    cells: part.to_vec(),
+                })
+                .expect("send");
+                ids.push(id);
+            }
+            let mut glued_mean = Vec::new();
+            let mut glued_var = Vec::new();
+            for want_id in ids {
+                match c.recv().expect("recv") {
+                    Response::Predict { id, mean, var } => {
+                        assert_eq!(id, want_id, "per-connection responses are FIFO");
+                        glued_mean.extend(mean);
+                        glued_var.extend(var);
+                    }
+                    other => panic!("unexpected response {other:?}"),
+                }
+            }
+            assert_eq!(bits(&glued_mean), bits(&expect.mean), "window {window_ms}: ragged mean");
+            assert_eq!(bits(&glued_var), bits(&expect.var), "window {window_ms}: ragged var");
+
+            // concurrent clients hammering random subsets: whatever the
+            // batcher coalesced, every response matches the offline bits
+            let expect_mean = Arc::new(expect.mean.clone());
+            let expect_var = Arc::new(expect.var.clone());
+            let handles: Vec<_> = (0..4)
+                .map(|tid| {
+                    let addr = addr.clone();
+                    let (em, ev) = (Arc::clone(&expect_mean), Arc::clone(&expect_var));
+                    std::thread::spawn(move || {
+                        let mut c = ServeClient::connect(&addr).expect("connect");
+                        let mut rng = Rng::new(100 + tid as u64);
+                        for _ in 0..10 {
+                            let cells: Vec<usize> =
+                                (0..7).map(|_| rng.below(em.len())).collect();
+                            let got = c.predict("m", &cells).expect("predict");
+                            for (i, &cell) in cells.iter().enumerate() {
+                                assert_eq!(got.mean[i].to_bits(), em[cell].to_bits());
+                                assert_eq!(got.var[i].to_bits(), ev[cell].to_bits());
+                            }
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().expect("concurrent client");
+            }
+
+            // clean shutdown over the wire
+            c.shutdown_server().expect("shutdown ack");
+            let report = daemon.wait();
+            assert!(report.predict_requests >= 44, "{report:?}");
+            if window_ms == 0 {
+                // serial mode: one sweep per request, occupancy exactly 1
+                assert!((report.mean_batch_occupancy - 1.0).abs() < 1e-12, "{report:?}");
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// multi-model routing
+// ---------------------------------------------------------------------
+
+#[test]
+fn multiple_checkpoints_route_by_model_id() {
+    without_failpoints(|| {
+        let (ma, mb) = (fitted_model(22), fitted_model(23));
+        let ea = ServeEngine::from_model(ma.clone()).expect("engine a");
+        let eb = ServeEngine::from_model(mb.clone()).expect("engine b");
+        let cells: Vec<usize> = (0..ea.model().grid_len()).step_by(3).collect();
+        let want_a = ea.predict_cells(&cells).expect("offline a");
+        let want_b = eb.predict_cells(&cells).expect("offline b");
+        assert_ne!(bits(&want_a.mean), bits(&want_b.mean), "distinct fits expected");
+
+        let daemon = start(
+            vec![
+                ("a".to_string(), ServeEngine::from_model(ma).expect("engine")),
+                ("b".to_string(), ServeEngine::from_model(mb).expect("engine")),
+            ],
+            2,
+        );
+        let addr = daemon.local_addr().to_string();
+        let mut c = ServeClient::connect(&addr).expect("connect");
+
+        let got_a = c.predict("a", &cells).expect("predict a");
+        let got_b = c.predict("b", &cells).expect("predict b");
+        assert_eq!(bits(&got_a.mean), bits(&want_a.mean));
+        assert_eq!(bits(&got_b.mean), bits(&want_b.mean));
+
+        // with two models loaded, an empty model id is ambiguous
+        let err = c.predict("", &cells).expect_err("ambiguous model id");
+        assert!(format!("{err:#}").contains("available"), "{err:#}");
+        // an unknown id is a typed error naming the candidates
+        let err = c.predict("zebra", &cells).expect_err("unknown model");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown model") && msg.contains("a, b"), "{msg}");
+        // an out-of-range cell is rejected per request...
+        let pq = ea.model().grid_len();
+        let err = c.predict("a", &[0, pq]).expect_err("out-of-range cell");
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+        // ...and the connection stays perfectly usable afterwards
+        let again = c.predict("a", &cells).expect("connection survived the errors");
+        assert_eq!(bits(&again.mean), bits(&want_a.mean));
+
+        let info = c.ping().expect("ping");
+        assert!(info.contains('a') && info.contains('b'), "{info}");
+        c.shutdown_server().expect("shutdown");
+        daemon.wait();
+    });
+}
+
+#[test]
+fn single_model_daemon_accepts_empty_model_id() {
+    without_failpoints(|| {
+        let model = fitted_model(24);
+        let engine = ServeEngine::from_model(model.clone()).expect("engine");
+        let offline = ServeEngine::from_model(model).expect("engine");
+        let cells = vec![0usize, 3, 3, 17];
+        let want = offline.predict_cells(&cells).expect("offline");
+        let mut daemon = start(vec![("only".to_string(), engine)], 2);
+        let mut c = ServeClient::connect(&daemon.local_addr().to_string()).expect("connect");
+        let got = c.predict("", &cells).expect("empty id resolves the only model");
+        assert_eq!(bits(&got.mean), bits(&want.mean));
+        daemon.shutdown();
+    });
+}
+
+// ---------------------------------------------------------------------
+// malformed input never kills the daemon
+// ---------------------------------------------------------------------
+
+#[test]
+fn malformed_frames_yield_typed_errors_and_daemon_survives() {
+    without_failpoints(|| {
+        let engine = ServeEngine::from_model(fitted_model(25)).expect("engine");
+        let mut daemon = start(vec![("m".to_string(), engine)], 2);
+        let addr = daemon.local_addr().to_string();
+
+        // 1. garbage payload behind an intact frame boundary: typed
+        //    decode error, connection STAYS OPEN (long enough to pass
+        //    the minimum-length check and fail on the magic)
+        let mut s = TcpStream::connect(&addr).expect("connect");
+        raw_send(&mut s, &[0xDE; 16]);
+        let msg = recv_error_message(&mut s);
+        assert!(msg.contains("magic"), "{msg}");
+        // same connection still serves a valid request
+        raw_send(&mut s, &encode_request(&Request::Ping { id: 9 }));
+        let payload = raw_recv(&mut s).expect("ping response");
+        match decode_response(&payload).expect("decode") {
+            Response::Info { id, .. } => assert_eq!(id, 9),
+            other => panic!("expected Info, got {other:?}"),
+        }
+
+        // 2. corrupted bytes inside a well-formed request: the checksum
+        //    trailer catches it
+        let mut corrupted = encode_request(&Request::Predict {
+            id: 1,
+            model: "m".to_string(),
+            cells: vec![0, 1],
+        });
+        let mid = corrupted.len() / 2;
+        corrupted[mid] ^= 0x10;
+        raw_send(&mut s, &corrupted);
+        let msg = recv_error_message(&mut s);
+        assert!(msg.contains("checksum"), "{msg}");
+
+        // 3. oversized length prefix: typed error, then the daemon
+        //    closes this connection (the stream can't be re-synced)
+        let mut s2 = TcpStream::connect(&addr).expect("connect");
+        s2.write_all(&[0xFF, 0xFF, 0xFF, 0xFF]).expect("evil prefix");
+        let msg = recv_error_message(&mut s2);
+        assert!(msg.contains("oversized"), "{msg}");
+        assert!(raw_recv(&mut s2).is_none(), "daemon must close after a framing error");
+
+        // 4. mid-frame disconnect: claim 100 bytes, send 10, vanish
+        let mut s3 = TcpStream::connect(&addr).expect("connect");
+        s3.write_all(&100u32.to_le_bytes()).expect("prefix");
+        s3.write_all(&[0u8; 10]).expect("partial payload");
+        drop(s3);
+
+        // after all of that, the daemon still serves new clients
+        let mut c = ServeClient::connect(&addr).expect("daemon is still alive");
+        c.ping().expect("daemon still answers");
+        let report = daemon.shutdown();
+        assert!(report.errors >= 3, "typed errors must be counted: {report:?}");
+    });
+}
+
+// ---------------------------------------------------------------------
+// failpoints on the accept/read path
+// ---------------------------------------------------------------------
+
+#[test]
+fn injected_accept_fault_rejects_one_connection_only() {
+    let engine = without_failpoints(|| ServeEngine::from_model(fitted_model(26))).expect("engine");
+    with_failpoints("serve_accept@0:error", || {
+        let mut daemon = start(vec![("m".to_string(), engine)], 2);
+        let addr = daemon.local_addr().to_string();
+        // first connection: rejected with a typed error frame
+        let mut s = TcpStream::connect(&addr).expect("connect");
+        let msg = recv_error_message(&mut s);
+        assert!(msg.contains("serve_accept"), "{msg}");
+        // second connection: served normally — the daemon never died
+        let mut c = ServeClient::connect(&addr).expect("connect");
+        c.ping().expect("daemon kept serving");
+        daemon.shutdown();
+    });
+}
+
+#[test]
+fn injected_frame_fault_is_a_typed_error_not_a_crash() {
+    let engine = without_failpoints(|| ServeEngine::from_model(fitted_model(27))).expect("engine");
+    with_failpoints("serve_frame@0:error", || {
+        let mut daemon = start(vec![("m".to_string(), engine)], 2);
+        let addr = daemon.local_addr().to_string();
+        // the daemon's first read_frame consumes hit 0 and fails: this
+        // connection gets a typed error and closes
+        let mut s = TcpStream::connect(&addr).expect("connect");
+        let msg = recv_error_message(&mut s);
+        assert!(msg.contains("serve_frame"), "{msg}");
+        assert!(raw_recv(&mut s).is_none(), "connection closes after a framing fault");
+        // subsequent connections read clean (hit 0 already consumed)
+        let mut c = ServeClient::connect(&addr).expect("connect");
+        c.ping().expect("daemon kept serving");
+        daemon.shutdown();
+    });
+}

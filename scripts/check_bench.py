@@ -37,11 +37,24 @@ acceptance field regressed:
     eig.full_grid_speedup_vs_cg      direct spectral solve vs CG wall time on
                                      a fully-observed grid (informational)
 
+  BENCH_serve.json
+    serve.batched_ge_1x              daemon cross-request batching at least
+                                     matches serial per-request dispatch
+    serve.wire_bit_identical         every served response bit-equal to the
+                                     offline posterior regardless of grouping
+
+  also required to be present and numeric in BENCH_serve.json:
+    serve.throughput_batched_rps     batched daemon throughput
+    serve.mean_batch_occupancy       predict requests per coalesced sweep
+    serve.p50_ms                     median request latency (batched daemon)
+    serve.p99_ms                     tail request latency (batched daemon)
+
 A referenced key that is absent is reported as a named error listing the
 keys that *are* available at the deepest resolvable level, so a renamed
 bench field fails loudly instead of looking like a regression.
 
-Usage: check_bench.py BENCH_par.json BENCH_precision.json BENCH_solver.json
+Usage: check_bench.py BENCH_par.json BENCH_precision.json BENCH_solver.json \
+       BENCH_serve.json
 """
 
 import json
@@ -64,6 +77,16 @@ GATES = {
             "KronEig precond cuts CG iterations >= 2x vs pivoted Cholesky at 5% missing",
         ),
     ],
+    "BENCH_serve.json": [
+        (
+            ("serve", "batched_ge_1x"),
+            "daemon cross-request batching >= serial per-request dispatch",
+        ),
+        (
+            ("serve", "wire_bit_identical"),
+            "served responses bit-equal to the offline posterior for any grouping",
+        ),
+    ],
 }
 
 # numeric metrics that must exist (informational gauges the perf
@@ -77,6 +100,12 @@ REQUIRED_NUMBERS = {
         (("eig", "cg_iters_plain"), "pivoted-Cholesky CG iterations"),
         (("eig", "cg_iters_eig_precond"), "KronEig-preconditioned CG iterations"),
         (("eig", "full_grid_speedup_vs_cg"), "direct spectral solve speedup vs CG"),
+    ],
+    "BENCH_serve.json": [
+        (("serve", "throughput_batched_rps"), "batched daemon throughput"),
+        (("serve", "mean_batch_occupancy"), "predict requests per coalesced sweep"),
+        (("serve", "p50_ms"), "median request latency, batched daemon"),
+        (("serve", "p99_ms"), "p99 request latency, batched daemon"),
     ],
 }
 

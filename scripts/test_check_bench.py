@@ -1,0 +1,246 @@
+#!/usr/bin/env python3
+"""Unit tests for the bench-regression gate (scripts/check_bench.py).
+
+Pure stdlib; CI runs this in the bench-smoke job *before* the real gate
+so a broken gate fails the build as loudly as a broken bench:
+
+    python3 -B scripts/test_check_bench.py
+
+Covers: key-path lookup (including the available-keys listing on a
+miss), the pass path over synthetic artifacts for every registered
+basename, regression / missing-key / non-boolean-gate failures, the
+unknown-basename refusal, unreadable artifacts, the BENCH_par per-thread
+fit-row branch, and the usage exit code.
+"""
+
+import contextlib
+import importlib.util
+import io
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_SPEC = importlib.util.spec_from_file_location(
+    "check_bench", os.path.join(_HERE, "check_bench.py")
+)
+check_bench = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(check_bench)
+
+
+def synthetic_artifacts():
+    """Minimal artifact documents that satisfy every registered gate."""
+    return {
+        "BENCH_par.json": {
+            "gemm_microkernel": {
+                "tiled_ge_1p5x": True,
+                "tiled_f32_ge_2x": True,
+                "gemm_gflops_ok": True,
+            },
+            "pool": {
+                "region_speedup_ge_1x": True,
+                "dispatch_ns": 120.0,
+                "steal_ratio": 0.4,
+            },
+            "fit": [
+                {"threads": 1, "bit_identical": True},
+                {"threads": 4, "bit_identical": True},
+            ],
+        },
+        "BENCH_precision.json": {
+            "speedups_f32_over_f64": {"mvm_ge_1p5x": True},
+            "fig3_accuracy": {"within_1pct": True},
+        },
+        "BENCH_solver.json": {
+            "eig": {
+                "iters_reduction_ge_2x": True,
+                "cg_iters_plain": 40,
+                "cg_iters_eig_precond": 11,
+                "full_grid_speedup_vs_cg": 3.5,
+            },
+        },
+        "BENCH_serve.json": {
+            "serve": {
+                "batched_ge_1x": True,
+                "wire_bit_identical": True,
+                "throughput_batched_rps": 15000.0,
+                "mean_batch_occupancy": 6.2,
+                "p50_ms": 1.1,
+                "p99_ms": 4.0,
+            },
+        },
+    }
+
+
+@contextlib.contextmanager
+def artifact_dir(docs):
+    """Write the given {basename: doc} mapping into a temp dir."""
+    with tempfile.TemporaryDirectory() as d:
+        for base, doc in docs.items():
+            with open(os.path.join(d, base), "w") as f:
+                json.dump(doc, f)
+        yield d
+
+
+def run_main(docs):
+    """Run check_bench.main over the docs; return (exit_code, out, err)."""
+    out, err = io.StringIO(), io.StringIO()
+    with artifact_dir(docs) as d:
+        argv = ["check_bench.py"] + [os.path.join(d, b) for b in sorted(docs)]
+        with contextlib.redirect_stdout(out), contextlib.redirect_stderr(err):
+            code = check_bench.main(argv)
+    return code, out.getvalue(), err.getvalue()
+
+
+class LookupTests(unittest.TestCase):
+    def test_resolves_nested_path(self):
+        val, err = check_bench.lookup({"a": {"b": 7}}, ("a", "b"))
+        self.assertEqual(val, 7)
+        self.assertIsNone(err)
+
+    def test_missing_key_names_itself_and_lists_available(self):
+        val, err = check_bench.lookup({"a": {"x": 1, "y": 2}}, ("a", "b"))
+        self.assertIsNone(val)
+        self.assertIn("'b'", err)
+        self.assertIn("under 'a'", err)
+        # a renamed field must list what IS there, so the failure reads
+        # as a rename rather than a regression
+        self.assertIn("x, y", err)
+
+    def test_missing_top_level_key_reports_root(self):
+        _, err = check_bench.lookup({"other": 1}, ("serve", "p50_ms"))
+        self.assertIn("<root>", err)
+        self.assertIn("other", err)
+
+    def test_non_object_intermediate_is_a_typed_error(self):
+        _, err = check_bench.lookup({"a": 42}, ("a", "b"))
+        self.assertIn("not an object", err)
+
+    def test_empty_dict_reports_none_available(self):
+        _, err = check_bench.lookup({}, ("serve",))
+        self.assertIn("<none>", err)
+
+
+class MainTests(unittest.TestCase):
+    def test_all_green_exits_zero(self):
+        code, out, err = run_main(synthetic_artifacts())
+        self.assertEqual(code, 0, err)
+        self.assertIn("all bench acceptance fields green", out)
+        # every registered basename produced at least one ok line
+        for base in check_bench.GATES:
+            self.assertIn(base, out)
+
+    def test_regressed_gate_fails(self):
+        docs = synthetic_artifacts()
+        docs["BENCH_serve.json"]["serve"]["batched_ge_1x"] = False
+        code, _, err = run_main(docs)
+        self.assertEqual(code, 1)
+        self.assertIn("REGRESSED", err)
+        self.assertIn("serve.batched_ge_1x", err)
+
+    def test_non_boolean_gate_value_fails(self):
+        # a gate that is truthy-but-not-True (e.g. a speedup number
+        # written where the bool belongs) must not pass
+        docs = synthetic_artifacts()
+        docs["BENCH_serve.json"]["serve"]["wire_bit_identical"] = 1.7
+        code, _, err = run_main(docs)
+        self.assertEqual(code, 1)
+        self.assertIn("wire_bit_identical", err)
+
+    def test_missing_gate_key_is_a_named_error(self):
+        docs = synthetic_artifacts()
+        del docs["BENCH_serve.json"]["serve"]["batched_ge_1x"]
+        code, _, err = run_main(docs)
+        self.assertEqual(code, 1)
+        self.assertIn("missing key 'batched_ge_1x'", err)
+        self.assertIn("available keys", err)
+
+    def test_missing_required_number_fails(self):
+        docs = synthetic_artifacts()
+        del docs["BENCH_serve.json"]["serve"]["p99_ms"]
+        code, _, err = run_main(docs)
+        self.assertEqual(code, 1)
+        self.assertIn("p99_ms", err)
+
+    def test_non_numeric_required_metric_fails(self):
+        docs = synthetic_artifacts()
+        docs["BENCH_serve.json"]["serve"]["p50_ms"] = "fast"
+        code, _, err = run_main(docs)
+        self.assertEqual(code, 1)
+        self.assertIn("not a number", err)
+
+    def test_boolean_is_not_a_number(self):
+        # bool is an int subclass in Python; the gate must still reject it
+        docs = synthetic_artifacts()
+        docs["BENCH_serve.json"]["serve"]["p50_ms"] = True
+        code, _, err = run_main(docs)
+        self.assertEqual(code, 1)
+        self.assertIn("not a number", err)
+
+    def test_unknown_basename_is_refused(self):
+        docs = synthetic_artifacts()
+        docs["BENCH_mystery.json"] = {"whatever": True}
+        code, _, err = run_main(docs)
+        self.assertEqual(code, 1)
+        self.assertIn("no acceptance gates registered", err)
+
+    def test_unreadable_artifact_fails(self):
+        with tempfile.TemporaryDirectory() as d:
+            bad = os.path.join(d, "BENCH_serve.json")
+            with open(bad, "w") as f:
+                f.write("{not json")
+            out, err = io.StringIO(), io.StringIO()
+            with contextlib.redirect_stdout(out), contextlib.redirect_stderr(err):
+                code = check_bench.main(["check_bench.py", bad])
+        self.assertEqual(code, 1)
+        self.assertIn("unreadable bench artifact", err.getvalue())
+
+    def test_missing_file_fails(self):
+        out, err = io.StringIO(), io.StringIO()
+        with contextlib.redirect_stdout(out), contextlib.redirect_stderr(err):
+            code = check_bench.main(["check_bench.py", "/nonexistent/BENCH_serve.json"])
+        self.assertEqual(code, 1)
+        self.assertIn("unreadable bench artifact", err.getvalue())
+
+    def test_fit_rows_must_exist(self):
+        docs = synthetic_artifacts()
+        del docs["BENCH_par.json"]["fit"]
+        code, _, err = run_main(docs)
+        self.assertEqual(code, 1)
+        self.assertIn("'fit' rows missing or empty", err)
+
+    def test_fit_row_not_bit_identical_fails(self):
+        docs = synthetic_artifacts()
+        docs["BENCH_par.json"]["fit"][1]["bit_identical"] = False
+        code, _, err = run_main(docs)
+        self.assertEqual(code, 1)
+        self.assertIn("threads=4", err)
+        self.assertIn("not bit-identical", err)
+
+    def test_one_bad_artifact_fails_the_whole_run(self):
+        docs = synthetic_artifacts()
+        docs["BENCH_precision.json"]["fig3_accuracy"]["within_1pct"] = False
+        code, out, err = run_main(docs)
+        self.assertEqual(code, 1)
+        # the healthy artifacts still print their ok lines first
+        self.assertIn("ok", out)
+        self.assertIn("within_1pct", err)
+
+    def test_no_arguments_prints_usage_and_exits_two(self):
+        out, err = io.StringIO(), io.StringIO()
+        with contextlib.redirect_stdout(out), contextlib.redirect_stderr(err):
+            code = check_bench.main(["check_bench.py"])
+        self.assertEqual(code, 2)
+        self.assertIn("Usage", out.getvalue())
+
+    def test_gate_registry_and_docstring_agree(self):
+        # every gated basename should be named in the module docstring,
+        # so the operator-facing documentation cannot silently drift
+        for base in list(check_bench.GATES) + list(check_bench.REQUIRED_NUMBERS):
+            self.assertIn(base, check_bench.__doc__, base)
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)
