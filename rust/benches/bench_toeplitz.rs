@@ -1,0 +1,122 @@
+//! Bench: the FFT/Toeplitz time-factor fast path vs the dense
+//! `K_TT` half-GEMM it replaces.
+//!
+//! Gates emitted to `BENCH_toeplitz.json` (checked by
+//! `scripts/check_bench.py` in the CI `bench-smoke` job):
+//!
+//! * `toeplitz.mvm_speedup_ge_2x` — at q = 4096 the O(q log q)
+//!   circulant-embedding MVM must beat the dense O(q^2) half-GEMM by at
+//!   least 2x (the asymptotic claim holds even at smoke sizes, so the
+//!   q stays 4096 in smoke mode);
+//! * `toeplitz.bit_identical_threads` — a Toeplitz-path
+//!   `KronOp::apply_batch` produces identical bits at 1 and 4 worker
+//!   threads (fixed butterfly order, one column per steal task).
+//!
+//! `LKGP_BENCH_SMOKE=1` shrinks repetition counts, not the gate shape.
+
+use lkgp::kernels::RbfArd;
+use lkgp::kron::toeplitz::ToeplitzOp;
+use lkgp::kron::KronOp;
+use lkgp::linalg::gemm::matmul_nt;
+use lkgp::linalg::Matrix;
+use lkgp::par::with_threads;
+use lkgp::util::bench::{black_box, Bencher};
+use lkgp::util::json::Json;
+use lkgp::util::rng::Rng;
+
+fn toeplitz_col(q: usize, ell: f64) -> Vec<f64> {
+    (0..q).map(|lag| (-0.5 * (lag as f64 / ell).powi(2)).exp()).collect()
+}
+
+fn main() {
+    let smoke = std::env::var("LKGP_BENCH_SMOKE").ok().as_deref() == Some("1");
+    let mut b = if smoke { Bencher::quick() } else { Bencher::default() };
+    let mut rng = Rng::new(11);
+    println!("# bench_toeplitz — FFT time factor vs dense half-GEMM (smoke: {smoke})\n");
+
+    // ---- section 1: the headline MVM crossover at q = 4096 ----
+    // The dense comparator is exactly the production dense path's K_TT
+    // half: one `V @ K_TT^T` GEMM over the batch rows.
+    let q = 4096usize;
+    let rows = 4usize;
+    let col = toeplitz_col(q, 64.0);
+    let top = ToeplitzOp::new(&col);
+    let ktt = Matrix::from_fn(q, q, |i, j| col[i.abs_diff(j)]);
+    let v = Matrix::from_vec(rows, q, rng.normals(rows * q));
+
+    let dense_secs = b
+        .bench(&format!("dense half-GEMM q={q} rows={rows}"), || {
+            black_box(matmul_nt(&v, &ktt));
+        })
+        .secs();
+    let toep_secs = b
+        .bench(&format!("toeplitz fft q={q} rows={rows} (m={})", top.embed_len()), || {
+            let mut out = vec![0.0f64; q];
+            for r in 0..rows {
+                top.matvec_into(v.row(r), &mut out);
+                black_box(&out);
+            }
+        })
+        .secs();
+    let mvm_speedup = dense_secs / toep_secs.max(1e-12);
+
+    // agreement sanity: FFT rounding differs from GEMM rounding, so the
+    // two paths match to tolerance, never bit-for-bit
+    let want = matmul_nt(&v, &ktt);
+    let mut max_abs_diff = 0.0f64;
+    let mut out = vec![0.0f64; q];
+    for r in 0..rows {
+        top.matvec_into(v.row(r), &mut out);
+        for (a, w) in out.iter().zip(want.row(r)) {
+            max_abs_diff = max_abs_diff.max((a - w).abs());
+        }
+    }
+
+    // ---- section 2: thread-count bit-invariance of the full Kron op ----
+    // Ragged sizes on purpose: 7 spatial points x 257 time steps leaves
+    // uneven steal chunks at every thread count.
+    let (bp, bq) = (7usize, 257usize);
+    let bcol = toeplitz_col(bq, 16.0);
+    let bktt = Matrix::from_fn(bq, bq, |i, j| bcol[i.abs_diff(j)]);
+    let s = Matrix::from_vec(bp, 2, rng.normals(bp * 2));
+    let kss = RbfArd::new(2).gram(&s, &s);
+    let fast = KronOp::new(kss, bktt).with_toeplitz(ToeplitzOp::new(&bcol));
+    let bv = Matrix::from_vec(3, bp * bq, rng.normals(3 * bp * bq));
+    let a1 = with_threads(1, || fast.apply_batch(&bv));
+    let a4 = with_threads(4, || fast.apply_batch(&bv));
+    let bit_identical_threads = a1
+        .data
+        .iter()
+        .zip(&a4.data)
+        .all(|(x, y)| x.to_bits() == y.to_bits());
+
+    println!(
+        "\nq={q}: dense {:.3}ms vs toeplitz {:.3}ms ({mvm_speedup:.1}x, max |diff| {max_abs_diff:.2e}); \
+         threads 1 vs 4 bit-identical: {bit_identical_threads}",
+        dense_secs * 1e3,
+        toep_secs * 1e3
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("bench_toeplitz".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "toeplitz",
+            Json::obj(vec![
+                ("q", Json::Num(q as f64)),
+                ("embed_len", Json::Num(top.embed_len() as f64)),
+                ("batch_rows", Json::Num(rows as f64)),
+                ("secs_dense", Json::Num(dense_secs)),
+                ("secs_toeplitz", Json::Num(toep_secs)),
+                ("mvm_speedup", Json::Num(mvm_speedup)),
+                ("mvm_speedup_ge_2x", Json::Bool(mvm_speedup >= 2.0)),
+                ("max_abs_diff_vs_dense", Json::Num(max_abs_diff)),
+                ("bit_identical_threads", Json::Bool(bit_identical_threads)),
+            ]),
+        ),
+    ]);
+    let _ = std::fs::write("BENCH_toeplitz.json", format!("{doc}\n"));
+    b.save_csv("bench_toeplitz");
+    b.save_json("bench_toeplitz");
+    println!("\nwrote BENCH_toeplitz.json + results/bench/bench_toeplitz.{{csv,json}}");
+}

@@ -18,15 +18,24 @@
 
 use anyhow::{bail, Context, Result};
 
+use crate::kernels::time::{detect_uniform_spacing, GridSpacing};
 use crate::kernels::ProductGridKernel;
 use crate::kron::lazy::LazyGramOp;
+use crate::kron::toeplitz::ToeplitzOp;
 use crate::kron::{KronOp, MaskedKronSystem};
 use crate::linalg::{cholesky, Matrix, Scalar};
 use crate::runtime::{Runtime, TensorF32};
 use crate::solvers::cg::BatchedOp;
 use crate::util::convert;
 
+use super::diagnostics::{TimeOpChoice, TimeOpPath};
 use super::grad::{mll_surrogate_grads, standard_pairs};
+
+/// Relative tolerance under which a time grid counts as uniformly
+/// spaced for time-op auto-selection (loose enough for accumulated
+/// float noise in `linspace`-style grids, tight enough to reject
+/// real jitter).
+const UNIFORM_GRID_REL_TOL: f64 = 1e-6;
 
 /// How the CG system operator is applied (the Fig-3 comparison axis).
 #[derive(Clone, Debug, PartialEq)]
@@ -116,6 +125,12 @@ pub trait KronBackend<T: Scalar = f64> {
     /// `None` means those paths fall back to CG.
     fn gram_factors(&self) -> Option<(Matrix<f64>, Matrix<f64>)> {
         None
+    }
+    /// Which time-factor engine this backend's MVMs use (recorded in
+    /// `FitDiagnostics::time_op`). Backends without a Toeplitz fast
+    /// path are always dense.
+    fn time_op_path(&self) -> TimeOpPath {
+        TimeOpPath::Dense
     }
 }
 
@@ -214,6 +229,11 @@ pub struct RustKronBackend<T: Scalar = f64> {
     pub kernel: ProductGridKernel,
     /// Which MVM implementation `system_mvm` runs.
     pub mode: MvmMode,
+    /// Requested time-factor engine (resolved against the grid and
+    /// kernel family in `set_data`; see [`TimeOpChoice`]).
+    time_choice: TimeOpChoice,
+    /// Resolved time-factor path actually applied by `system_mvm`.
+    time_path: TimeOpPath,
     probes: usize,
     s: Matrix<f64>,
     t: Vec<f64>,
@@ -234,6 +254,8 @@ impl<T: Scalar> RustKronBackend<T> {
         RustKronBackend {
             kernel: ProductGridKernel::new(ds, time_family, q),
             mode: MvmMode::Kron,
+            time_choice: TimeOpChoice::Dense,
+            time_path: TimeOpPath::Dense,
             probes,
             s: Matrix::zeros(0, ds),
             t: Vec::new(),
@@ -249,6 +271,15 @@ impl<T: Scalar> RustKronBackend<T> {
     /// Select the MVM mode (builder style).
     pub fn with_mode(mut self, mode: MvmMode) -> Self {
         self.mode = mode;
+        self
+    }
+
+    /// Select the time-factor engine (builder style). The choice is
+    /// resolved against the actual grid and kernel family when
+    /// `set_data` runs; `Auto`/`Toeplitz` fall back to dense (with a
+    /// warning) when K_TT is not Toeplitz. Call before `set_data`.
+    pub fn with_time_op(mut self, choice: TimeOpChoice) -> Self {
+        self.time_choice = choice;
         self
     }
 
@@ -286,6 +317,27 @@ impl<T: Scalar> KronBackend<T> for RustKronBackend<T> {
         self.mask = mask.to_vec();
         self.obs_idx =
             (0..mask.len()).filter(|&i| mask[i] != 0.0).collect();
+        self.time_path = match self.time_choice {
+            TimeOpChoice::Dense => TimeOpPath::Dense,
+            req @ (TimeOpChoice::Auto | TimeOpChoice::Toeplitz) => {
+                let stationary = self.kernel.time.is_stationary();
+                let uniform = !t.is_empty()
+                    && matches!(
+                        detect_uniform_spacing(t, UNIFORM_GRID_REL_TOL),
+                        GridSpacing::Uniform { .. }
+                    );
+                if stationary && uniform {
+                    TimeOpPath::Toeplitz
+                } else {
+                    eprintln!(
+                        "warning: time-op {req:?} requested but K_TT is not Toeplitz \
+                         (stationary kernel: {stationary}, uniform grid: {uniform}); \
+                         using the dense path"
+                    );
+                    TimeOpPath::Dense
+                }
+            }
+        };
         self.sys = None;
         self.dense = None;
         Ok(())
@@ -301,11 +353,15 @@ impl<T: Scalar> KronBackend<T> for RustKronBackend<T> {
         let (p, q) = (kss.rows, ktt.rows);
         self.kernel_evals = (p * p + q * q) as u64;
         let mask_t: Vec<T> = self.mask.iter().map(|&m| T::from_f64(m)).collect();
-        self.sys = Some(MaskedKronSystem::new(
-            KronOp::new(kss, ktt),
-            mask_t,
-            T::from_f64(log_sigma2.exp()),
-        ));
+        let mut op = KronOp::new(kss, ktt);
+        if self.time_path == TimeOpPath::Toeplitz {
+            // first row of the (exactly symmetric) Gram is the Toeplitz
+            // column, widened through the same values the dense path
+            // multiplies — no separate kernel evaluation
+            let col: Vec<f64> = (0..q).map(|lag| op.ktt[(0, lag)].to_f64()).collect();
+            op = op.with_toeplitz(ToeplitzOp::new(&col));
+        }
+        self.sys = Some(MaskedKronSystem::new(op, mask_t, T::from_f64(log_sigma2.exp())));
         self.dense = None;
         if self.mode == MvmMode::DenseMaterialized {
             // n x n observed Gram in f32 (what the standard iterative
@@ -490,6 +546,10 @@ impl<T: Scalar> KronBackend<T> for RustKronBackend<T> {
         self.sys
             .as_ref()
             .map(|s| (s.op.kss.cast::<f64>(), s.op.ktt.cast::<f64>()))
+    }
+
+    fn time_op_path(&self) -> TimeOpPath {
+        self.time_path
     }
 }
 
@@ -801,6 +861,73 @@ mod tests {
 
     fn toy_backend(mode: MvmMode) -> RustKronBackend {
         toy_backend_in::<f64>(mode)
+    }
+
+    /// Same data/hypers as `toy_backend`, routed through `choice`.
+    fn toy_backend_time_op(choice: TimeOpChoice) -> RustKronBackend {
+        let mut rng = Rng::new(7);
+        let (p, q, ds) = (8, 5, 2);
+        let s = Matrix::from_vec(p, ds, rng.normals(p * ds));
+        let t: Vec<f64> = (0..q).map(|k| k as f64 / (q - 1) as f64).collect();
+        let mut mask = vec![1.0; p * q];
+        for i in (0..p * q).step_by(3) {
+            mask[i] = 0.0;
+        }
+        let mut be = RustKronBackend::new(ds, "rbf", q, 4).with_time_op(choice);
+        be.set_data(&s, &t, &mask).unwrap();
+        be.set_hypers(&vec![0.0; be.kernel.n_theta()], -1.5).unwrap();
+        be
+    }
+
+    #[test]
+    fn time_op_resolves_against_grid_and_family() {
+        let mut rng = Rng::new(21);
+        let (p, q, ds) = (6, 8, 2);
+        let s = Matrix::from_vec(p, ds, rng.normals(p * ds));
+        let t: Vec<f64> = (0..q).map(|k| k as f64 * 0.25).collect();
+        let mask = vec![1.0; p * q];
+        let mut resolve = |choice, t: &[f64], family: &str| {
+            let mut be = RustKronBackend::<f64>::new(ds, family, q, 2).with_time_op(choice);
+            be.set_data(&s, t, &mask).unwrap();
+            be.time_op_path()
+        };
+        assert_eq!(resolve(TimeOpChoice::Dense, &t, "rbf"), TimeOpPath::Dense);
+        assert_eq!(resolve(TimeOpChoice::Auto, &t, "rbf"), TimeOpPath::Toeplitz);
+        assert_eq!(resolve(TimeOpChoice::Toeplitz, &t, "rbf"), TimeOpPath::Toeplitz);
+        // irregular grid falls back to dense
+        let mut tj = t.clone();
+        tj[3] += 0.1;
+        assert_eq!(resolve(TimeOpChoice::Auto, &tj, "rbf"), TimeOpPath::Dense);
+        assert_eq!(resolve(TimeOpChoice::Toeplitz, &tj, "rbf"), TimeOpPath::Dense);
+        // non-stationary (task-indexed) family falls back to dense
+        assert_eq!(resolve(TimeOpChoice::Auto, &t, "icm"), TimeOpPath::Dense);
+    }
+
+    #[test]
+    fn toeplitz_time_op_matches_dense_backend_mvm() {
+        let mut rng = Rng::new(23);
+        let mut be_d = toy_backend_time_op(TimeOpChoice::Dense);
+        let mut be_t = toy_backend_time_op(TimeOpChoice::Toeplitz);
+        assert_eq!(be_d.time_op_path(), TimeOpPath::Dense);
+        assert_eq!(be_t.time_op_path(), TimeOpPath::Toeplitz);
+        let v = Matrix::from_vec(3, be_d.dim(), rng.normals(3 * be_d.dim()));
+        let a = be_d.system_mvm(&v).unwrap();
+        let b = be_t.system_mvm(&v).unwrap();
+        let scale = a.max_abs().max(1.0);
+        for i in 0..a.data.len() {
+            assert!(
+                (a.data[i] - b.data[i]).abs() < 1e-9 * scale,
+                "idx {i}: {} vs {}",
+                a.data[i],
+                b.data[i]
+            );
+        }
+        // the cross-covariance apply routes through the same TimeOp
+        let ka = be_d.kron_apply(&v).unwrap();
+        let kb = be_t.kron_apply(&v).unwrap();
+        for i in 0..ka.data.len() {
+            assert!((ka.data[i] - kb.data[i]).abs() < 1e-9 * scale, "kron idx {i}");
+        }
     }
 
     #[test]

@@ -107,6 +107,69 @@ impl std::fmt::Display for SolverPath {
     }
 }
 
+/// Which engine should apply the `K_TT` half of Kronecker MVMs
+/// (config `LkgpConfig::time_op`, env `LKGP_TIME_OP`, CLI `--time-op`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TimeOpChoice {
+    /// Engage the O(q log q) Toeplitz/FFT path when the time grid is
+    /// detected uniform and the time kernel is stationary; fall back to
+    /// dense (with a warning) otherwise.
+    Auto,
+    /// Always use the dense q x q GEMM — the default, bit-compatible
+    /// with the committed golden posterior.
+    #[default]
+    Dense,
+    /// Require the Toeplitz/FFT path; falls back to dense with a
+    /// warning when the grid is non-uniform or the kernel
+    /// non-stationary (recorded in [`FitDiagnostics::time_op`]).
+    Toeplitz,
+}
+
+impl TimeOpChoice {
+    /// Parse `"auto"` / `"dense"` / `"toeplitz"` (case-insensitive).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(TimeOpChoice::Auto),
+            "dense" => Ok(TimeOpChoice::Dense),
+            "toeplitz" => Ok(TimeOpChoice::Toeplitz),
+            _ => Err(format!("invalid time-op value {s:?} (expected auto|dense|toeplitz)")),
+        }
+    }
+
+    /// Read `LKGP_TIME_OP` from the environment (default Dense; an
+    /// invalid value warns and falls back to Dense).
+    pub fn from_env() -> Self {
+        match std::env::var("LKGP_TIME_OP") {
+            Ok(v) if !v.trim().is_empty() => Self::parse(v.trim()).unwrap_or_else(|e| {
+                eprintln!("warning: {e}; using dense");
+                TimeOpChoice::Dense
+            }),
+            _ => TimeOpChoice::Dense,
+        }
+    }
+}
+
+/// Which time-factor engine actually ran (recorded in
+/// [`FitDiagnostics`] and persisted in checkpoints so serve replays the
+/// identical MVM path; the request lives in `LkgpConfig::time_op`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TimeOpPath {
+    /// Dense q x q GEMM for the `K_TT` half of every Kron MVM.
+    #[default]
+    Dense,
+    /// Planned-FFT circulant-embedding MVMs (O(q log q)).
+    Toeplitz,
+}
+
+impl std::fmt::Display for TimeOpPath {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TimeOpPath::Dense => write!(f, "dense"),
+            TimeOpPath::Toeplitz => write!(f, "toeplitz"),
+        }
+    }
+}
+
 /// Preconditioner strength levels, ordered by the fallback chain.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PrecondLevel {
@@ -154,6 +217,8 @@ pub struct FitDiagnostics {
     /// Which solver path produced the result (CG, direct eig, or a
     /// serve-side MVM replay).
     pub solver_path: SolverPath,
+    /// Which time-factor engine applied the `K_TT` half of Kron MVMs.
+    pub time_op: TimeOpPath,
     /// Direct eigendecomposition solves performed (always zero on the
     /// CG path; these contribute zero CG iterations).
     pub eig_solves: usize,
@@ -192,8 +257,8 @@ impl FitDiagnostics {
     /// Multi-line human-readable report (CLI `train` output).
     pub fn render(&self) -> String {
         let mut s = format!(
-            "  solver: {} path, {} eig solves\n",
-            self.solver_path, self.eig_solves
+            "  solver: {} path, {} eig solves, {} time factor\n",
+            self.solver_path, self.eig_solves, self.time_op
         );
         s += &format!(
             "  cg: {} solves, {} iters, {} mvms, worst rel residual {:.3e}\n",
@@ -373,6 +438,19 @@ mod tests {
         assert_eq!(SolverPath::default(), SolverPath::Cg);
         assert_eq!(format!("{}", SolverPath::Replay), "mvm-replay");
         assert_eq!(format!("{}", PrecondLevel::KronEig), "kron-eig");
+    }
+
+    #[test]
+    fn parse_time_op() {
+        assert_eq!(TimeOpChoice::parse("auto"), Ok(TimeOpChoice::Auto));
+        assert_eq!(TimeOpChoice::parse("DENSE"), Ok(TimeOpChoice::Dense));
+        assert_eq!(TimeOpChoice::parse("Toeplitz"), Ok(TimeOpChoice::Toeplitz));
+        assert!(TimeOpChoice::parse("fft").is_err());
+        // default must stay Dense: the golden posterior pins dense bits
+        assert_eq!(TimeOpChoice::default(), TimeOpChoice::Dense);
+        assert_eq!(TimeOpPath::default(), TimeOpPath::Dense);
+        assert_eq!(format!("{}", TimeOpPath::Toeplitz), "toeplitz");
+        assert!(FitDiagnostics::default().render().contains("dense time factor"));
     }
 
     #[test]

@@ -38,6 +38,7 @@ use super::backend::{
 };
 use super::diagnostics::{
     FitDiagnostics, OnNonConverged, PrecondFallback, PrecondLevel, Solver, SolverPath,
+    TimeOpChoice,
 };
 use super::Posterior;
 
@@ -110,6 +111,18 @@ pub struct LkgpConfig {
     /// `LKGP_SOLVER` here; `Default::default()` does not read the
     /// environment.
     pub solver: Solver,
+    /// Which engine applies the `K_TT` half of every Kronecker MVM
+    /// (default [`TimeOpChoice::Dense`]: the seed GEMM path,
+    /// bit-compatible with the committed golden posterior).
+    /// [`TimeOpChoice::Auto`] and [`TimeOpChoice::Toeplitz`] engage the
+    /// O(q log q) planned-FFT circulant-embedding path when the time
+    /// grid is uniformly spaced and the time kernel stationary, and
+    /// fall back to dense (with a warning) otherwise; the path actually
+    /// taken is recorded in [`FitDiagnostics::time_op`] and persisted
+    /// in checkpoints. The CLI maps `--time-op` / `LKGP_TIME_OP` here;
+    /// `Default::default()` does not read the environment. Rust backend
+    /// only — PJRT artifacts keep their compiled dense MVM.
+    pub time_op: TimeOpChoice,
     /// Admission window of the `lkgp serve` daemon's cross-request
     /// batcher, in milliseconds: how long the daemon collects predict
     /// requests from concurrent connections before coalescing them into
@@ -141,6 +154,7 @@ impl Default for LkgpConfig {
             mvm_retries: 2,
             mvm_retry_backoff_ms: 10,
             solver: Solver::Auto,
+            time_op: TimeOpChoice::Dense,
             serve_batch_window_ms: 2,
         }
     }
@@ -193,7 +207,8 @@ impl Lkgp {
                         data.q(),
                         cfg.probes,
                     )
-                    .with_mode(mode.clone());
+                    .with_mode(mode.clone())
+                    .with_time_op(cfg.time_op);
                     fit_with_backend(data, &cfg, &mut be)
                 }
                 Precision::F32 => {
@@ -203,7 +218,8 @@ impl Lkgp {
                         data.q(),
                         cfg.probes,
                     )
-                    .with_mode(mode.clone());
+                    .with_mode(mode.clone())
+                    .with_time_op(cfg.time_op);
                     fit_with_backend(data, &cfg, &mut be)
                 }
             },
@@ -538,7 +554,10 @@ fn fit_with_backend_inner<T: Scalar, B: KronBackend<T>>(
     let mut loss_trace = Vec::with_capacity(cfg.train_iters);
     let mut cg_iters_total = 0;
     let mut mvm_total = 0;
-    let mut diagnostics = FitDiagnostics::default();
+    // the backend resolved the time-op request against the actual grid
+    // and kernel family in set_data above
+    let mut diagnostics =
+        FitDiagnostics { time_op: be.time_op_path(), ..FitDiagnostics::default() };
     let mut alpha = vec![T::ZERO; pq];
 
     for it in 0..cfg.train_iters + 1 {
@@ -731,6 +750,7 @@ fn fit_with_backend_inner<T: Scalar, B: KronBackend<T>>(
             "f32" => Precision::F32,
             _ => Precision::F64,
         },
+        time_op: be.time_op_path(),
         ds: data.s.cols,
         s: data.s.clone(),
         t: data.t.clone(),
@@ -940,6 +960,40 @@ mod tests {
         );
         // the f32 factored kernel is half the size
         assert_eq!(fit32.kernel_bytes * 2, fit64.kernel_bytes);
+    }
+
+    #[test]
+    fn toeplitz_time_op_matches_dense_posterior() {
+        // Same seed, same probe/sample streams: routing the K_TT half
+        // through the FFT path must land on the same posterior as the
+        // dense GEMM to within the solve tolerance (same shape of bound
+        // as the f32-vs-f64 and eig-vs-cg contracts).
+        use super::super::diagnostics::TimeOpPath;
+        let kernel = ProductGridKernel::new(2, "rbf", 8);
+        let data = well_specified(16, 8, 2, &kernel, 0.05, 0.3, 17);
+        let cfg_d = LkgpConfig { seed: 5, train_iters: 8, lr: 0.02, ..quick_cfg() };
+        let cfg_t = LkgpConfig { time_op: TimeOpChoice::Toeplitz, ..cfg_d.clone() };
+        let fit_d = Lkgp::fit(&data, cfg_d).unwrap();
+        let fit_t = Lkgp::fit(&data, cfg_t).unwrap();
+        assert_eq!(fit_d.diagnostics.time_op, TimeOpPath::Dense);
+        assert_eq!(fit_t.diagnostics.time_op, TimeOpPath::Toeplitz);
+        let scale = fit_d
+            .posterior
+            .mean
+            .iter()
+            .map(|x| x.abs())
+            .fold(0.0, f64::max)
+            .max(1e-6);
+        for i in 0..fit_d.posterior.mean.len() {
+            assert!(
+                (fit_d.posterior.mean[i] - fit_t.posterior.mean[i]).abs()
+                    < 0.05 * scale + 0.02,
+                "mean mismatch at {i}: {} vs {}",
+                fit_d.posterior.mean[i],
+                fit_t.posterior.mean[i]
+            );
+            assert!(fit_t.posterior.var[i].is_finite() && fit_t.posterior.var[i] > 0.0);
+        }
     }
 
     #[test]

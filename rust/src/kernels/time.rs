@@ -122,6 +122,18 @@ impl TimeKernel {
         }
     }
 
+    /// Whether the family is stationary in t — K_TT[i][j] depends only
+    /// on t[i] - t[j]. Stationary + uniform grid ⇒ K_TT is Toeplitz,
+    /// which is what the `auto` time-op mode checks before engaging the
+    /// FFT fast path. ICM keys on task index, not a metric, so it is
+    /// not stationary.
+    pub fn is_stationary(&self) -> bool {
+        match self {
+            TimeKernel::Rbf { .. } | TimeKernel::RbfPeriodic { .. } => true,
+            TimeKernel::Icm { .. } => false,
+        }
+    }
+
     /// The lower-triangular ICM factor L (exp on diagonal).
     pub fn icm_l(&self) -> Matrix<f64> {
         match self {
@@ -139,6 +151,39 @@ impl TimeKernel {
             _ => panic!("icm_l on non-ICM kernel"),
         }
     }
+}
+
+/// Result of [`detect_uniform_spacing`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GridSpacing {
+    /// Consecutive spacings all match the mean spacing `dt` to the
+    /// requested relative tolerance (dt = 0.0 for grids of length <= 1).
+    Uniform {
+        /// The common grid spacing.
+        dt: f64,
+    },
+    /// At least one spacing deviates beyond tolerance.
+    Irregular,
+}
+
+/// Classify a time grid as uniformly spaced or not. Every consecutive
+/// difference must match the mean spacing `(t[q-1] - t[0]) / (q-1)`
+/// within `rel_tol` relative to that mean (absolute when the mean is
+/// ~0). Grids of length <= 1 are trivially uniform. Used by the `auto`
+/// time-op mode to decide whether K_TT is Toeplitz.
+pub fn detect_uniform_spacing(t: &[f64], rel_tol: f64) -> GridSpacing {
+    let q = t.len();
+    if q <= 1 {
+        return GridSpacing::Uniform { dt: 0.0 };
+    }
+    let dt = (t[q - 1] - t[0]) / (q - 1) as f64;
+    let tol = rel_tol * dt.abs().max(f64::EPSILON);
+    for w in t.windows(2) {
+        if ((w[1] - w[0]) - dt).abs() > tol {
+            return GridSpacing::Irregular;
+        }
+    }
+    GridSpacing::Uniform { dt }
 }
 
 #[cfg(test)]
@@ -181,6 +226,48 @@ mod tests {
         k.set_params(&p);
         let g = k.gram(&grid(5));
         assert!(cholesky(&g).is_some(), "ICM gram not PD");
+    }
+
+    #[test]
+    fn stationarity_by_family() {
+        assert!(TimeKernel::new("rbf", 4).is_stationary());
+        assert!(TimeKernel::new("rbf_periodic", 4).is_stationary());
+        assert!(!TimeKernel::new("icm", 4).is_stationary());
+    }
+
+    #[test]
+    fn uniform_spacing_detects_regular_grids() {
+        let t: Vec<f64> = (0..50).map(|i| 0.3 + i as f64 * 0.02).collect();
+        match detect_uniform_spacing(&t, 1e-8) {
+            GridSpacing::Uniform { dt } => assert!((dt - 0.02).abs() < 1e-12),
+            GridSpacing::Irregular => panic!("regular grid flagged irregular"),
+        }
+    }
+
+    #[test]
+    fn uniform_spacing_rejects_jitter_beyond_tolerance() {
+        let mut t: Vec<f64> = (0..20).map(|i| i as f64 * 0.1).collect();
+        t[7] += 0.01; // 10% jitter on one step
+        assert_eq!(detect_uniform_spacing(&t, 1e-4), GridSpacing::Irregular);
+        // ...but a loose tolerance accepts the same grid
+        assert!(matches!(detect_uniform_spacing(&t, 0.5), GridSpacing::Uniform { .. }));
+        // tiny float noise passes at a sane tolerance
+        let t2: Vec<f64> = (0..20).map(|i| i as f64 * 0.1 + (i % 3) as f64 * 1e-12).collect();
+        assert!(matches!(detect_uniform_spacing(&t2, 1e-6), GridSpacing::Uniform { .. }));
+    }
+
+    #[test]
+    fn uniform_spacing_rejects_irregular_grids() {
+        assert_eq!(
+            detect_uniform_spacing(&[0.0, 1.0, 3.0, 6.0], 1e-6),
+            GridSpacing::Irregular
+        );
+    }
+
+    #[test]
+    fn uniform_spacing_degenerate_lengths_are_uniform() {
+        assert_eq!(detect_uniform_spacing(&[], 1e-6), GridSpacing::Uniform { dt: 0.0 });
+        assert_eq!(detect_uniform_spacing(&[4.2], 1e-6), GridSpacing::Uniform { dt: 0.0 });
     }
 
     #[test]

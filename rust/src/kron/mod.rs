@@ -15,21 +15,46 @@ pub mod toeplitz;
 use crate::linalg::gemm::{matmul_acc, matmul_nt};
 use crate::linalg::{Matrix, Scalar};
 
+/// Engine for the `K_TT` half of a Kronecker MVM. `Dense` is the
+/// bit-exact seed path (blocked GEMM); `Toeplitz` applies the time
+/// factor in O(q log q) via circulant embedding when the grid is
+/// uniform and the time kernel stationary (`LkgpConfig::time_op`).
+#[derive(Clone, Debug)]
+pub enum TimeOp {
+    /// Dense q x q GEMM against the materialized `K_TT`.
+    Dense,
+    /// Planned-FFT Toeplitz MVM (see [`toeplitz::ToeplitzOp`]).
+    Toeplitz(toeplitz::ToeplitzOp),
+}
+
 /// Kronecker product operator K_SS (x) K_TT held in factored form.
 #[derive(Clone, Debug)]
 pub struct KronOp<T: Scalar = f64> {
     /// Spatial Gram factor K_SS (p x p).
     pub kss: Matrix<T>,
-    /// Time/task Gram factor K_TT (q x q).
+    /// Time/task Gram factor K_TT (q x q). Always materialized — the
+    /// diagonal/column accessors and the dense baselines read it even
+    /// when MVMs route through a Toeplitz fast path.
     pub ktt: Matrix<T>,
+    /// How `apply_batch` applies the `K_TT` half (default: `Dense`).
+    pub time_op: TimeOp,
 }
 
 impl<T: Scalar> KronOp<T> {
     /// Factored operator from square Gram factors (asserts shapes).
+    /// MVMs use the dense `K_TT` path; see [`KronOp::with_toeplitz`].
     pub fn new(kss: Matrix<T>, ktt: Matrix<T>) -> Self {
         assert_eq!(kss.rows, kss.cols);
         assert_eq!(ktt.rows, ktt.cols);
-        KronOp { kss, ktt }
+        KronOp { kss, ktt, time_op: TimeOp::Dense }
+    }
+
+    /// Route the `K_TT` half of every MVM through the given Toeplitz
+    /// operator (must represent the same q x q matrix as `ktt`).
+    pub fn with_toeplitz(mut self, op: toeplitz::ToeplitzOp) -> Self {
+        assert_eq!(op.q, self.q(), "Toeplitz factor must match K_TT dimension");
+        self.time_op = TimeOp::Toeplitz(op);
+        self
     }
 
     /// Number of spatial points p.
@@ -62,6 +87,14 @@ impl<T: Scalar> KronOp<T> {
     /// rust/tests/par_invariance.rs). The per-row two-GEMM form keeps
     /// both halves on blocked kernels with zero reshuffling.
     pub fn apply_batch(&self, v: &Matrix<T>) -> Matrix<T> {
+        match &self.time_op {
+            TimeOp::Dense => self.apply_batch_dense(v),
+            TimeOp::Toeplitz(top) => self.apply_batch_toeplitz(top, v),
+        }
+    }
+
+    /// Dense-path MVM (the seed implementation, byte-for-byte).
+    fn apply_batch_dense(&self, v: &Matrix<T>) -> Matrix<T> {
         let (p, q) = (self.p(), self.q());
         assert_eq!(v.cols, p * q, "grid vector length");
         let mut out = Matrix::zeros(v.rows, p * q);
@@ -72,6 +105,37 @@ impl<T: Scalar> KronOp<T> {
             // out_b = K_SS @ T1 (p x q)
             let mut ob = Matrix { rows: p, cols: q, data: vec![T::ZERO; p * q] };
             matmul_acc(&self.kss, &t1, &mut ob);
+            orow.copy_from_slice(&ob.data);
+        });
+        out
+    }
+
+    /// Toeplitz-path MVM: the `K_TT` half becomes b*p independent
+    /// O(q log q) FFT MVMs (one column per task, stolen across the
+    /// pool — ragged lengths don't stall a static split), then the
+    /// `K_SS` half reuses the same blocked GEMM as the dense path.
+    /// Each output element is produced by exactly one worker from a
+    /// fixed-order planned transform, so the result is bit-identical
+    /// at any `LKGP_THREADS` and any batch grouping.
+    fn apply_batch_toeplitz(&self, top: &toeplitz::ToeplitzOp, v: &Matrix<T>) -> Matrix<T> {
+        let (p, q) = (self.p(), self.q());
+        assert_eq!(v.cols, p * q, "grid vector length");
+        let mut out = Matrix::zeros(v.rows, p * q);
+        if v.rows == 0 || p == 0 || q == 0 {
+            return out;
+        }
+        // T1[b*p + i] = K_TT @ v[b][i*q..], via circulant embedding
+        let mut t1 = Matrix::zeros(v.rows * p, q);
+        crate::par::par_chunks_mut_steal("kron.toeplitz_tt", &mut t1.data, q, |ri, row| {
+            let (b, i) = (ri / p, ri % p);
+            top.matvec_into(&v.row(b)[i * q..(i + 1) * q], row);
+        });
+        // out_b = K_SS @ T1_b (p x q)
+        crate::par::par_chunks_mut("kron.toeplitz_ss", &mut out.data, p * q, |b, orow| {
+            let t1b =
+                Matrix { rows: p, cols: q, data: t1.data[b * p * q..(b + 1) * p * q].to_vec() };
+            let mut ob = Matrix { rows: p, cols: q, data: vec![T::ZERO; p * q] };
+            matmul_acc(&self.kss, &t1b, &mut ob);
             orow.copy_from_slice(&ob.data);
         });
         out

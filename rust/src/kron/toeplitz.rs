@@ -3,63 +3,152 @@
 //! Toeplitz and its MVM runs in O(q log q) via circulant embedding +
 //! FFT, making LKGP quasi-linear in the number of time steps.
 //!
-//! Includes a self-contained radix-2 complex FFT (no external crates in
-//! the offline set) and a `ToeplitzOp` that embeds the q x q Toeplitz
-//! matrix into a 2m-point circulant (m = next power of two >= q).
+//! This is the production time-factor engine behind
+//! [`TimeOp::Toeplitz`](crate::kron::TimeOp): `KronOp::apply_batch`
+//! routes the `K_TT` half of every Kronecker MVM through
+//! [`ToeplitzOp::matvec_into`] when the fit selected the Toeplitz path
+//! (`LkgpConfig::time_op` / `--time-op` / `LKGP_TIME_OP`).
+//!
+//! The FFT is a *planned* transform: [`FftPlan`] precomputes the
+//! bit-reversal swap list and per-stage twiddle tables once per length
+//! (cached process-wide in [`plan`]), and every transform replays the
+//! same fixed butterfly order. Combined with per-worker scratch buffers
+//! that are fully overwritten per column, the batched MVM is
+//! bit-identical at any `LKGP_THREADS` and any batch grouping — the
+//! same determinism contract as the dense GEMM path.
 
-use crate::linalg::Matrix;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::{Arc, Mutex};
 
-/// In-place iterative radix-2 Cooley–Tukey FFT on interleaved
-/// (re, im) pairs. `inverse` applies the conjugate transform WITHOUT
-/// the 1/n scaling (caller scales).
-pub fn fft_inplace(re: &mut [f64], im: &mut [f64], inverse: bool) {
-    let n = re.len();
-    assert_eq!(im.len(), n);
-    assert!(n.is_power_of_two(), "fft length must be a power of two");
-    // bit reversal
-    let mut j = 0usize;
-    for i in 1..n {
-        let mut bit = n >> 1;
-        while j & bit != 0 {
-            j ^= bit;
-            bit >>= 1;
-        }
-        j |= bit;
-        if i < j {
-            re.swap(i, j);
-            im.swap(i, j);
-        }
-    }
-    let sign = if inverse { 1.0 } else { -1.0 };
-    let mut len = 2;
-    while len <= n {
-        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
-        let (wr, wi) = (ang.cos(), ang.sin());
-        let mut i = 0;
-        while i < n {
-            let (mut cr, mut ci) = (1.0f64, 0.0f64);
-            for k in 0..len / 2 {
-                let (ur, ui) = (re[i + k], im[i + k]);
-                let (vr, vi) = (
-                    re[i + k + len / 2] * cr - im[i + k + len / 2] * ci,
-                    re[i + k + len / 2] * ci + im[i + k + len / 2] * cr,
-                );
-                re[i + k] = ur + vr;
-                im[i + k] = ui + vi;
-                re[i + k + len / 2] = ur - vr;
-                im[i + k + len / 2] = ui - vi;
-                let ncr = cr * wr - ci * wi;
-                ci = cr * wi + ci * wr;
-                cr = ncr;
+use crate::linalg::{Matrix, Scalar};
+
+/// A planned radix-2 Cooley–Tukey FFT of one fixed power-of-two length:
+/// the bit-reversal permutation (as a swap list) and the per-stage
+/// twiddle factors are computed once and replayed on every transform in
+/// a fixed butterfly order, so outputs are bit-identical regardless of
+/// who runs the transform. Obtain shared plans via [`plan`].
+pub struct FftPlan {
+    n: usize,
+    /// bit-reversal swaps (i < j), in ascending-i order
+    swaps: Vec<(u32, u32)>,
+    /// forward twiddles, stage-major: the stage with half-length `h`
+    /// owns entries `[h-1, 2h-1)` (offsets telescope: 1+2+..+h/2 = h-1)
+    tw_re: Vec<f64>,
+    tw_im: Vec<f64>,
+}
+
+impl FftPlan {
+    /// Build the plan for an `n`-point transform (`n` a power of two).
+    fn new(n: usize) -> Self {
+        assert!(n.is_power_of_two(), "fft length must be a power of two");
+        let mut swaps = Vec::new();
+        let mut j = 0usize;
+        for i in 1..n {
+            let mut bit = n >> 1;
+            while j & bit != 0 {
+                j ^= bit;
+                bit >>= 1;
             }
-            i += len;
+            j |= bit;
+            if i < j {
+                swaps.push((i as u32, j as u32));
+            }
         }
-        len <<= 1;
+        let mut tw_re = vec![0.0; n.saturating_sub(1)];
+        let mut tw_im = vec![0.0; n.saturating_sub(1)];
+        let mut h = 1usize;
+        while h < n {
+            // forward twiddle w^k = exp(-i pi k / h) for the stage whose
+            // butterflies span 2h points
+            let (rs, is) = (&mut tw_re[h - 1..2 * h - 1], &mut tw_im[h - 1..2 * h - 1]);
+            for (k, (r, im)) in rs.iter_mut().zip(is.iter_mut()).enumerate() {
+                let ang = -std::f64::consts::PI * k as f64 / h as f64;
+                *r = ang.cos();
+                *im = ang.sin();
+            }
+            h <<= 1;
+        }
+        FftPlan { n, swaps, tw_re, tw_im }
+    }
+
+    /// Transform length n.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Run the transform in place on split (re, im) buffers of length
+    /// `n`. `inverse` applies the conjugate transform WITHOUT the 1/n
+    /// scaling (caller scales). The butterfly order is fixed by the
+    /// plan, so equal inputs produce bit-equal outputs.
+    pub fn run(&self, re: &mut [f64], im: &mut [f64], inverse: bool) {
+        let n = self.n;
+        assert_eq!(re.len(), n, "re length");
+        assert_eq!(im.len(), n, "im length");
+        for &(i, j) in &self.swaps {
+            re.swap(i as usize, j as usize);
+            im.swap(i as usize, j as usize);
+        }
+        let mut h = 1usize; // stage half-length; butterflies span 2h
+        while h < n {
+            let base = h - 1;
+            let mut i = 0;
+            while i < n {
+                for k in 0..h {
+                    let wr = self.tw_re[base + k];
+                    let wi =
+                        if inverse { -self.tw_im[base + k] } else { self.tw_im[base + k] };
+                    let (ur, ui) = (re[i + k], im[i + k]);
+                    let (xr, xi) = (re[i + k + h], im[i + k + h]);
+                    let vr = xr * wr - xi * wi;
+                    let vi = xr * wi + xi * wr;
+                    re[i + k] = ur + vr;
+                    im[i + k] = ui + vi;
+                    re[i + k + h] = ur - vr;
+                    im[i + k + h] = ui - vi;
+                }
+                i += 2 * h;
+            }
+            h <<= 1;
+        }
     }
 }
 
+/// Process-wide plan cache, keyed by transform length. Plans are
+/// immutable once built, so every `ToeplitzOp` of the same embedding
+/// length shares one table set instead of recomputing twiddles.
+static PLANS: Mutex<BTreeMap<usize, Arc<FftPlan>>> = Mutex::new(BTreeMap::new());
+
+/// Fetch (or build and cache) the shared plan for an `n`-point FFT.
+pub fn plan(n: usize) -> Arc<FftPlan> {
+    // a poisoned lock only means another thread panicked after the map
+    // was left in a consistent state (inserts are atomic), so recover
+    let mut cache = PLANS.lock().unwrap_or_else(|e| e.into_inner());
+    cache.entry(n).or_insert_with(|| Arc::new(FftPlan::new(n))).clone()
+}
+
+thread_local! {
+    /// Per-worker (re, im) embedding scratch, reused across columns and
+    /// MVMs. Every use fully overwrites the buffers (resize-after-clear
+    /// zero-fills), so results never depend on scratch history.
+    static SCRATCH: RefCell<(Vec<f64>, Vec<f64>)> = RefCell::new((Vec::new(), Vec::new()));
+}
+
+/// In-place radix-2 FFT on split (re, im) buffers, using the shared
+/// plan for `re.len()`. `inverse` applies the conjugate transform
+/// WITHOUT the 1/n scaling (caller scales).
+pub fn fft_inplace(re: &mut [f64], im: &mut [f64], inverse: bool) {
+    assert_eq!(im.len(), re.len());
+    plan(re.len()).run(re, im, inverse);
+}
+
 /// Symmetric Toeplitz operator defined by its first column, applied via
-/// circulant embedding: O(q log q) per MVM after an O(q log q) setup.
+/// circulant embedding: O(q log q) per MVM after an O(m log m) setup,
+/// where `m` is the minimal power of two >= 2q-1 (see [`embed_len`]).
+///
+/// [`embed_len`]: ToeplitzOp::embed_len
+#[derive(Clone)]
 pub struct ToeplitzOp {
     /// Toeplitz dimension q (the time-grid length).
     pub q: usize,
@@ -67,23 +156,34 @@ pub struct ToeplitzOp {
     /// FFT of the embedded circulant's first column
     eig_re: Vec<f64>,
     eig_im: Vec<f64>,
+    plan: Arc<FftPlan>,
+}
+
+impl fmt::Debug for ToeplitzOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ToeplitzOp {{ q: {}, m: {} }}", self.q, self.m)
+    }
 }
 
 impl ToeplitzOp {
     /// `col` is the first column [k(0), k(1), ..., k(q-1)] of the
-    /// symmetric Toeplitz matrix.
+    /// symmetric Toeplitz matrix (q >= 1).
     pub fn new(col: &[f64]) -> Self {
         let q = col.len();
-        let m = (2 * q).next_power_of_two();
-        // circulant first column: [c0, c1, .., c_{q-1}, 0.., c_{q-1}, .., c1]
+        assert!(q >= 1, "Toeplitz operator needs at least one lag");
+        // minimal circulant embedding: the first column
+        // [c0, .., c_{q-1}, 0.., c_{q-1}, .., c1] needs m >= 2q-1
+        // entries, and q=1 degenerates to the 1-point identity FFT
+        let m = (2 * q - 1).next_power_of_two();
+        let plan = plan(m);
         let mut cre = vec![0.0; m];
         let mut cim = vec![0.0; m];
         cre[..q].copy_from_slice(col);
         for lag in 1..q {
             cre[m - lag] = col[lag];
         }
-        fft_inplace(&mut cre, &mut cim, false);
-        ToeplitzOp { q, m, eig_re: cre, eig_im: cim }
+        plan.run(&mut cre, &mut cim, false);
+        ToeplitzOp { q, m, eig_re: cre, eig_im: cim, plan }
     }
 
     /// Build from a stationary kernel on a uniform grid with spacing dt.
@@ -92,21 +192,52 @@ impl ToeplitzOp {
         Self::new(&col)
     }
 
-    /// y = T v in O(q log q).
-    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+    /// Circulant embedding length m: the smallest power of two >= 2q-1.
+    pub fn embed_len(&self) -> usize {
+        self.m
+    }
+
+    /// y = T v in O(q log q), writing into `out` (both length q). The
+    /// transform runs in f64 regardless of `T` — same policy as the
+    /// f64-internal Cholesky in prior sampling — with one rounding at
+    /// the output boundary. Embedding buffers come from per-worker
+    /// thread-local scratch, amortized across the whole batch.
+    pub fn matvec_into<T: Scalar>(&self, v: &[T], out: &mut [T]) {
         assert_eq!(v.len(), self.q);
-        let mut re = vec![0.0; self.m];
-        let mut im = vec![0.0; self.m];
-        re[..self.q].copy_from_slice(v);
-        fft_inplace(&mut re, &mut im, false);
-        for i in 0..self.m {
-            let (ar, ai) = (re[i], im[i]);
-            re[i] = ar * self.eig_re[i] - ai * self.eig_im[i];
-            im[i] = ar * self.eig_im[i] + ai * self.eig_re[i];
-        }
-        fft_inplace(&mut re, &mut im, true);
-        let scale = 1.0 / self.m as f64;
-        re[..self.q].iter().map(|x| x * scale).collect()
+        assert_eq!(out.len(), self.q);
+        SCRATCH.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            let (re, im) = &mut *scratch;
+            re.clear();
+            re.resize(self.m, 0.0);
+            im.clear();
+            im.resize(self.m, 0.0);
+            for (r, x) in re[..self.q].iter_mut().zip(v) {
+                *r = x.to_f64();
+            }
+            self.plan.run(re, im, false);
+            for ((ar, ai), (er, ei)) in re
+                .iter_mut()
+                .zip(im.iter_mut())
+                .zip(self.eig_re.iter().zip(&self.eig_im))
+            {
+                let (r0, i0) = (*ar, *ai);
+                *ar = r0 * er - i0 * ei;
+                *ai = r0 * ei + i0 * er;
+            }
+            self.plan.run(re, im, true);
+            let scale = 1.0 / self.m as f64;
+            for (o, r) in out.iter_mut().zip(&re[..self.q]) {
+                *o = T::from_f64(*r * scale);
+            }
+        });
+    }
+
+    /// y = T v in O(q log q) (allocating convenience wrapper).
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.q];
+        self.matvec_into(v, &mut out);
+        out
     }
 
     /// Dense materialization (tests).
@@ -115,48 +246,18 @@ impl ToeplitzOp {
     }
 }
 
-/// Latent-Kronecker MVM with a Toeplitz time factor:
-/// out[b] = vec(K_SS @ unvec(v[b]) @ T^T) where T is Toeplitz-symmetric.
-/// Cost O(b (p^2 q + p q log q)) instead of O(b (p^2 q + p q^2)).
-pub struct KronToeplitzOp {
-    /// Spatial Gram factor K_SS (dense, p x p).
-    pub kss: Matrix<f64>,
-    /// Toeplitz time factor applied via FFT.
-    pub ktt: ToeplitzOp,
-}
-
-impl KronToeplitzOp {
-    /// Apply to a batch of grid vectors (rows of `v`, length p*q each).
-    pub fn apply_batch(&self, v: &Matrix<f64>) -> Matrix<f64> {
-        let (p, q) = (self.kss.rows, self.ktt.q);
-        assert_eq!(v.cols, p * q);
-        let mut out = Matrix::zeros(v.rows, p * q);
-        for b in 0..v.rows {
-            // right half: each of the p rows through the FFT MVM
-            let mut t1 = Matrix::zeros(p, q);
-            for i in 0..p {
-                let row = &v.row(b)[i * q..(i + 1) * q];
-                t1.row_mut(i).copy_from_slice(&self.ktt.matvec(row));
-            }
-            // left half: K_SS @ T1 (blocked GEMM)
-            let mut ob = Matrix::zeros(p, q);
-            crate::linalg::gemm::matmul_acc(&self.kss, &t1, &mut ob);
-            out.row_mut(b).copy_from_slice(&ob.data);
-        }
-        out
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kron::{KronOp, MaskedKronSystem, TimeOp};
+    use crate::par::with_threads;
     use crate::util::rng::Rng;
-    use crate::util::testing::{assert_close, prop_check, Gen};
+    use crate::util::testing::{assert_close, assert_close_prec, prop_check, Gen};
 
     #[test]
     fn fft_roundtrip() {
         prop_check("fft-roundtrip", 231, 15, |g| {
-            let n = 1 << g.size(1, 9);
+            let n = 1 << g.size(0, 9);
             let re0 = g.vec_normal(n);
             let im0 = g.vec_normal(n);
             let (mut re, mut im) = (re0.clone(), im0.clone());
@@ -172,27 +273,67 @@ mod tests {
     }
 
     #[test]
-    fn fft_matches_dft_definition() {
+    fn fft_matches_dft_definition_lengths_1_through_64() {
+        // every power-of-two length in 1..=64 against the O(n^2) DFT
         let mut rng = Rng::new(4);
-        let n = 16;
-        let re0 = rng.normals(n);
-        let (mut re, mut im) = (re0.clone(), vec![0.0; n]);
-        fft_inplace(&mut re, &mut im, false);
-        for k in 0..n {
-            let (mut sr, mut si) = (0.0, 0.0);
-            for (t, x) in re0.iter().enumerate() {
-                let ang = -2.0 * std::f64::consts::PI * (k * t) as f64 / n as f64;
-                sr += x * ang.cos();
-                si += x * ang.sin();
+        for n in [1usize, 2, 4, 8, 16, 32, 64] {
+            let re0 = rng.normals(n);
+            let im0 = rng.normals(n);
+            let (mut re, mut im) = (re0.clone(), im0.clone());
+            fft_inplace(&mut re, &mut im, false);
+            for k in 0..n {
+                let (mut sr, mut si) = (0.0, 0.0);
+                for t in 0..n {
+                    let ang = -2.0 * std::f64::consts::PI * (k * t) as f64 / n as f64;
+                    let (c, s) = (ang.cos(), ang.sin());
+                    sr += re0[t] * c - im0[t] * s;
+                    si += re0[t] * s + im0[t] * c;
+                }
+                assert!(
+                    (re[k] - sr).abs() < 1e-9 && (im[k] - si).abs() < 1e-9,
+                    "n={n} bin {k}: got ({}, {}), want ({sr}, {si})",
+                    re[k],
+                    im[k]
+                );
             }
-            assert!((re[k] - sr).abs() < 1e-9 && (im[k] - si).abs() < 1e-9, "bin {k}");
         }
+    }
+
+    #[test]
+    fn plans_are_shared_per_length() {
+        let a = plan(64);
+        let b = plan(64);
+        assert!(Arc::ptr_eq(&a, &b), "same-length plans must share tables");
+        assert_eq!(a.n(), 64);
+    }
+
+    #[test]
+    fn embed_len_is_minimal() {
+        // regression for the 2q -> 2q-1 embedding fix: the circulant
+        // length is the smallest power of two that fits both wings,
+        // and q=1 degenerates to a 1-point transform
+        for (q, want_m) in
+            [(1usize, 1usize), (2, 4), (3, 8), (4, 8), (5, 16), (8, 16), (9, 32), (16, 32), (17, 64), (64, 128)]
+        {
+            let col: Vec<f64> = (0..q).map(|lag| (-(lag as f64) / 3.0).exp()).collect();
+            let op = ToeplitzOp::new(&col);
+            assert_eq!(op.embed_len(), want_m, "q={q}");
+            assert!(op.embed_len() >= 2 * q - 1, "q={q}: wings must not overlap");
+        }
+    }
+
+    #[test]
+    fn q_equals_one_matvec_is_scalar_multiply() {
+        let op = ToeplitzOp::new(&[2.5]);
+        assert_eq!(op.embed_len(), 1);
+        let y = op.matvec(&[3.0]);
+        assert!((y[0] - 7.5).abs() < 1e-12);
     }
 
     #[test]
     fn prop_toeplitz_matvec_matches_dense() {
         prop_check("toeplitz-vs-dense", 233, 15, |g| {
-            let q = g.size(1, 50);
+            let q = g.size(1, 64);
             // SE-like decaying first column keeps things well-scaled
             let col: Vec<f64> =
                 (0..q).map(|lag| (-0.5 * (lag as f64 / 3.0).powi(2)).exp()).collect();
@@ -205,21 +346,96 @@ mod tests {
     }
 
     #[test]
-    fn kron_toeplitz_matches_kronop() {
-        let mut g = Gen { rng: Rng::new(9) };
-        let (p, q) = (6, 12);
+    fn toeplitz_matvec_matches_dense_every_length_to_64() {
+        // exhaustive q sweep so every embedding-length transition
+        // (power-of-two crossings included) gets at least one case
+        let mut rng = Rng::new(11);
+        for q in 1..=64usize {
+            let col: Vec<f64> = (0..q).map(|lag| (-(lag as f64) / 5.0).exp()).collect();
+            let op = ToeplitzOp::new(&col);
+            let v = rng.normals(q);
+            let got = op.matvec(&v);
+            let want = op.dense(&col).matvec(&v);
+            assert_close(&got, &want, 1e-9).unwrap_or_else(|e| panic!("q={q}: {e}"));
+        }
+    }
+
+    /// Build matched dense/Toeplitz KronOps over the same factors.
+    fn kron_pair<T: Scalar>(g: &mut Gen, p: usize, q: usize) -> (KronOp<T>, KronOp<T>) {
         let kernel = crate::kernels::RbfArd::new(2);
         let s = Matrix::from_vec(p, 2, g.vec_normal(p * 2));
         let kss = kernel.gram(&s, &s);
         let col: Vec<f64> =
             (0..q).map(|lag| (-0.5 * (lag as f64 / 2.0).powi(2)).exp()).collect();
-        let ktt_dense = Matrix::from_fn(q, q, |i, j| col[i.abs_diff(j)]);
-        let fast = KronToeplitzOp { kss: kss.clone(), ktt: ToeplitzOp::new(&col) };
-        let slow = crate::kron::KronOp::new(kss, ktt_dense);
-        let v = Matrix::from_vec(2, p * q, g.vec_normal(2 * p * q));
-        let a = fast.apply_batch(&v);
-        let b = slow.apply_batch(&v);
-        assert_close(&a.data, &b.data, 1e-8).unwrap();
+        let ktt = Matrix::from_fn(q, q, |i, j| col[i.abs_diff(j)]);
+        let dense = KronOp::new(kss.cast::<T>(), ktt.cast::<T>());
+        let fast = dense.clone().with_toeplitz(ToeplitzOp::new(&col));
+        (dense, fast)
+    }
+
+    #[test]
+    fn kron_toeplitz_matches_dense_full_and_masked_f64() {
+        let mut g = Gen { rng: Rng::new(9) };
+        let (p, q) = (6, 12);
+        let (dense, fast) = kron_pair::<f64>(&mut g, p, q);
+        let v = Matrix::from_vec(3, p * q, g.vec_normal(3 * p * q));
+        assert_close(&fast.apply_batch(&v).data, &dense.apply_batch(&v).data, 1e-9)
+            .expect("full-grid KronOp agreement");
+        let mask = g.mask(p * q, 0.35);
+        let sys_d = MaskedKronSystem::new(dense, mask.clone(), 0.21);
+        let sys_t = MaskedKronSystem::new(fast, mask, 0.21);
+        assert_close(&sys_t.apply_batch(&v).data, &sys_d.apply_batch(&v).data, 1e-9)
+            .expect("masked-system agreement");
+    }
+
+    #[test]
+    fn kron_toeplitz_matches_dense_full_and_masked_f32() {
+        let mut g = Gen { rng: Rng::new(10) };
+        let (p, q) = (5, 9);
+        let (dense, fast) = kron_pair::<f32>(&mut g, p, q);
+        let v: Matrix<f32> = Matrix::from_vec(2, p * q, g.vec_normal(2 * p * q)).cast();
+        let want: Vec<f64> = dense.apply_batch(&v).data.iter().map(|x| x.to_f64()).collect();
+        assert_close_prec::<f32>(&fast.apply_batch(&v).data, &want, 1e-9, 2e-4)
+            .expect("full-grid f32 agreement");
+        let mask: Vec<f32> = g.mask(p * q, 0.35).iter().map(|&m| m as f32).collect();
+        let sys_d = MaskedKronSystem::new(dense, mask.clone(), 0.21f32);
+        let sys_t = MaskedKronSystem::new(fast, mask, 0.21f32);
+        let want: Vec<f64> = sys_d.apply_batch(&v).data.iter().map(|x| x.to_f64()).collect();
+        assert_close_prec::<f32>(&sys_t.apply_batch(&v).data, &want, 1e-9, 2e-4)
+            .expect("masked-system f32 agreement");
+    }
+
+    #[test]
+    fn toeplitz_apply_bit_identical_across_threads_and_grouping() {
+        let mut g = Gen { rng: Rng::new(17) };
+        let (p, q) = (7, 11);
+        let (_, fast) = kron_pair::<f64>(&mut g, p, q);
+        let v = Matrix::from_vec(6, p * q, g.vec_normal(6 * p * q));
+        let bits = |m: &Matrix<f64>| -> Vec<u64> { m.data.iter().map(|x| x.to_bits()).collect() };
+        let base = with_threads(1, || fast.apply_batch(&v));
+        for t in [2usize, 4, 8] {
+            let got = with_threads(t, || fast.apply_batch(&v));
+            assert_eq!(bits(&base), bits(&got), "toeplitz apply differs at t={t}");
+        }
+        // batch grouping: applying row-by-row must reproduce the same bits
+        for b in 0..v.rows {
+            let one = Matrix::from_vec(1, p * q, v.row(b).to_vec());
+            let got = with_threads(3, || fast.apply_batch(&one));
+            let want: Vec<u64> = base.row(b).iter().map(|x| x.to_bits()).collect();
+            let got_bits: Vec<u64> = got.row(0).iter().map(|x| x.to_bits()).collect();
+            assert_eq!(want, got_bits, "row {b} differs when applied alone");
+        }
+    }
+
+    #[test]
+    fn time_op_debug_and_default_are_dense() {
+        let mut g = Gen { rng: Rng::new(3) };
+        let (dense, fast) = kron_pair::<f64>(&mut g, 3, 4);
+        assert!(matches!(dense.time_op, TimeOp::Dense));
+        assert!(matches!(fast.time_op, TimeOp::Toeplitz(_)));
+        // Debug must stay compact (no eigenvalue dump)
+        let s = format!("{:?}", fast.time_op);
+        assert!(s.contains("q: 4"), "{s}");
     }
 
     #[test]

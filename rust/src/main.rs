@@ -28,7 +28,7 @@ use lkgp::data::sarcos::SarcosSim;
 use lkgp::data::synthetic::well_specified;
 use lkgp::data::GridDataset;
 use lkgp::gp::backend::{MvmMode, Precision};
-use lkgp::gp::diagnostics::{OnNonConverged, Solver};
+use lkgp::gp::diagnostics::{OnNonConverged, Solver, TimeOpChoice};
 use lkgp::gp::lkgp::{Backend, Lkgp, LkgpConfig};
 use lkgp::kernels::ProductGridKernel;
 use lkgp::runtime::{Manifest, Runtime};
@@ -43,7 +43,7 @@ const USAGE: &str = "usage: lkgp <info|train|save|predict|serve|experiment> [fla
              [--p N] [--q N] [--missing R] [--seed S]
              [--backend rust|<artifact-config>] [--dense] [--f32]
              [--iters N] [--on-nonconverged warn|error]
-             [--solver auto|cg|eig]
+             [--solver auto|cg|eig] [--time-op auto|dense|toeplitz]
   lkgp save  [same flags as train] [--out <path>=lkgp_model.ckpt]
   lkgp predict --checkpoint <path> [--cells i,j,k] [--json <path>]
   lkgp predict --addr host:port [--model id] --cells i,j,k
@@ -167,6 +167,12 @@ fn build_train_config(args: &Args, capture_pathwise: bool) -> Result<LkgpConfig,
         None => Solver::from_env(),
         Some(s) => Solver::parse(&s).map_err(|e| format!("--solver: {e}"))?,
     };
+    // and for the time-factor engine: --time-op beats LKGP_TIME_OP,
+    // which beats the dense default
+    let time_op = match args.str_opt("time-op") {
+        None => TimeOpChoice::from_env(),
+        Some(s) => TimeOpChoice::parse(&s).map_err(|e| format!("--time-op: {e}"))?,
+    };
     Ok(LkgpConfig {
         train_iters: args.usize("iters", 20),
         n_samples: args.usize("samples", 32),
@@ -177,6 +183,7 @@ fn build_train_config(args: &Args, capture_pathwise: bool) -> Result<LkgpConfig,
         capture_pathwise,
         on_nonconverged,
         solver,
+        time_op,
         ..LkgpConfig::default()
     })
 }

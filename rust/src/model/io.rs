@@ -5,8 +5,9 @@
 //!
 //! ```text
 //! [0..8)    magic  b"LKGPCKPT"
-//! [8..12)   format version, u32 LE (currently 1)
-//! [12..16)  precision u8 (0 = f64, 1 = f32) + 3 reserved zero bytes
+//! [8..12)   format version, u32 LE (currently 2)
+//! [12..16)  precision u8 (0 = f64, 1 = f32), time-op u8 (0 = dense,
+//!           1 = toeplitz; new in version 2), 2 reserved zero bytes
 //! [16..48)  p, q, ds, n_samples       — 4 x u64 LE
 //! [48..72)  log_sigma2, y_mean, y_std — 3 x f64 LE
 //! ...       time_family, name         — 2 x (u32 LE length + UTF-8)
@@ -35,6 +36,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use crate::gp::backend::Precision;
+use crate::gp::diagnostics::TimeOpPath;
 use crate::gp::Posterior;
 use crate::linalg::Matrix;
 use crate::util::convert;
@@ -44,8 +46,10 @@ use super::TrainedModel;
 /// First 8 bytes of every checkpoint.
 pub const MAGIC: [u8; 8] = *b"LKGPCKPT";
 
-/// Current (and only) checkpoint format version.
-pub const VERSION: u32 = 1;
+/// Current checkpoint format version. Version 2 assigned the second
+/// header flag byte (offset 13) to the time-op tag; version-1 files
+/// are rejected with [`CheckpointError::UnsupportedVersion`].
+pub const VERSION: u32 = 2;
 
 /// FNV-1a 64-bit hash — the checkpoint's trailing checksum function.
 /// Exposed so external tooling (and the format tests) can produce and
@@ -150,6 +154,10 @@ fn put_str(out: &mut Vec<u8>, s: &str) {
 /// Tensor dtype tags (the `dtype` byte of a tensor record).
 const DTYPE_F64: u8 = 0;
 const DTYPE_F32: u8 = 1;
+
+/// Time-op tags (header byte at offset 13, format version >= 2).
+const TIME_OP_DENSE: u8 = 0;
+const TIME_OP_TOEPLITZ: u8 = 1;
 
 fn put_tensor(out: &mut Vec<u8>, name: &str, rows: usize, cols: usize, data: &[f64], dtype: u8) {
     // a real assert (not debug): a shape-desynced record would produce a
@@ -314,7 +322,11 @@ impl TrainedModel {
         out.extend_from_slice(&MAGIC);
         put_u32(&mut out, VERSION);
         out.push(state_dtype);
-        out.extend_from_slice(&[0u8; 3]);
+        out.push(match self.time_op {
+            TimeOpPath::Dense => TIME_OP_DENSE,
+            TimeOpPath::Toeplitz => TIME_OP_TOEPLITZ,
+        });
+        out.extend_from_slice(&[0u8; 2]);
         put_u64(&mut out, self.p() as u64);
         put_u64(&mut out, self.q() as u64);
         put_u64(&mut out, self.ds as u64);
@@ -372,14 +384,24 @@ impl TrainedModel {
         }
 
         let mut cur = Cursor { b: body, i: 12 };
-        let prec_byte = cur.take(4, "precision")?[0];
-        let precision = match prec_byte {
+        let flags = cur.take(4, "precision")?;
+        let precision = match flags[0] {
             DTYPE_F64 => Precision::F64,
             DTYPE_F32 => Precision::F32,
             other => {
                 return Err(CheckpointError::BadField {
                     what: "precision",
                     detail: format!("unknown precision tag {other}"),
+                })
+            }
+        };
+        let time_op = match flags[1] {
+            TIME_OP_DENSE => TimeOpPath::Dense,
+            TIME_OP_TOEPLITZ => TimeOpPath::Toeplitz,
+            other => {
+                return Err(CheckpointError::BadField {
+                    what: "time_op",
+                    detail: format!("unknown time-op tag {other}"),
                 })
             }
         };
@@ -396,7 +418,7 @@ impl TrainedModel {
         let theta = cur.f64_vec(n_theta, "theta")?;
 
         let n_tensors = cur.u32("tensor count")? as usize;
-        // version 1 has exactly 8 tensors; checking before allocating
+        // version 2 has exactly 8 tensors; checking before allocating
         // keeps a crafted count from forcing a huge reservation
         if n_tensors != 8 {
             return Err(CheckpointError::BadField {
@@ -462,6 +484,7 @@ impl TrainedModel {
             name,
             time_family,
             precision,
+            time_op,
             ds,
             s: Matrix::from_vec(p, ds, s.data),
             t: t.data,
@@ -554,6 +577,7 @@ mod tests {
             name: "dummy".into(),
             time_family: "rbf".into(),
             precision,
+            time_op: TimeOpPath::Dense,
             ds,
             s: Matrix::from_vec(p, ds, (0..p * ds).map(|i| i as f64 * 0.25).collect()),
             t: (0..q).map(|k| k as f64).collect(),
@@ -581,6 +605,7 @@ mod tests {
         assert_eq!(a.name, b.name);
         assert_eq!(a.time_family, b.time_family);
         assert_eq!(a.precision, b.precision);
+        assert_eq!(a.time_op, b.time_op);
         assert_eq!((a.p(), a.q(), a.ds, a.n_samples), (b.p(), b.q(), b.ds, b.n_samples));
         let bits = |xs: &[f64]| -> Vec<u64> { xs.iter().map(|x| x.to_bits()).collect() };
         assert_eq!(bits(&a.s.data), bits(&b.s.data));
@@ -615,6 +640,31 @@ mod tests {
         assert!(bytes.len() < m64.to_bytes().len());
         let back = TrainedModel::from_bytes(&bytes).unwrap();
         assert_models_bit_equal(&m32, &back);
+    }
+
+    #[test]
+    fn toeplitz_time_op_roundtrips() {
+        let mut m = dummy_model(Precision::F64);
+        m.time_op = TimeOpPath::Toeplitz;
+        let bytes = m.to_bytes();
+        assert_eq!(bytes[13], TIME_OP_TOEPLITZ, "time-op tag lives at offset 13");
+        let back = TrainedModel::from_bytes(&bytes).unwrap();
+        assert_models_bit_equal(&m, &back);
+    }
+
+    #[test]
+    fn unknown_time_op_tag_is_typed() {
+        let mut bytes = dummy_model(Precision::F64).to_bytes();
+        bytes[13] = 7;
+        let n = bytes.len();
+        let sum = fnv64(&bytes[..n - 8]);
+        bytes[n - 8..].copy_from_slice(&sum.to_le_bytes());
+        match TrainedModel::from_bytes(&bytes) {
+            Err(CheckpointError::BadField { what: "time_op", detail }) => {
+                assert!(detail.contains('7'), "{detail}");
+            }
+            other => panic!("expected BadField for time_op, got {other:?}"),
+        }
     }
 
     #[test]

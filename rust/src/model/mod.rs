@@ -41,6 +41,7 @@
 pub mod io;
 
 use crate::gp::backend::Precision;
+use crate::gp::diagnostics::TimeOpPath;
 use crate::gp::Posterior;
 use crate::kernels::ProductGridKernel;
 use crate::linalg::Matrix;
@@ -65,6 +66,10 @@ pub struct TrainedModel {
     /// Compute precision of the fit's iterative hot path; serve-time
     /// reconstruction replays MVMs in the same precision.
     pub precision: Precision,
+    /// Time-factor engine the fit's MVMs used; serve-time
+    /// reconstruction replays through the same engine so a Toeplitz-
+    /// trained checkpoint reproduces its posterior bit for bit.
+    pub time_op: TimeOpPath,
     /// Spatial input dimension d_s.
     pub ds: usize,
     /// Spatial training inputs, p x d_s (standardized).

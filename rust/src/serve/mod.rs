@@ -58,7 +58,7 @@ pub mod daemon;
 use anyhow::{bail, Context, Result};
 
 use crate::gp::backend::{KronBackend, MvmMode, Precision, RustKronBackend};
-use crate::gp::diagnostics::{FitDiagnostics, SolverPath};
+use crate::gp::diagnostics::{FitDiagnostics, SolverPath, TimeOpChoice, TimeOpPath};
 use crate::gp::lkgp::{accumulate_pathwise_moments, finalize_posterior, PATHWISE_CHUNK};
 use crate::gp::Posterior;
 use crate::kernels::ProductGridKernel;
@@ -331,9 +331,19 @@ impl ServeEngine {
 fn reconstruct<T: Scalar>(m: &TrainedModel, diags: &mut FitDiagnostics) -> Result<Posterior> {
     let q = m.q();
     let pq = m.grid_len();
-    let mut be = RustKronBackend::<T>::new(m.ds, &m.time_family, q, 1).with_mode(MvmMode::Kron);
+    // replay through the same time-factor engine the fit used: a
+    // Toeplitz-trained checkpoint must reproduce its FFT-path bits, and
+    // a dense-trained one must never silently upgrade to the FFT path
+    let time_choice = match m.time_op {
+        TimeOpPath::Dense => TimeOpChoice::Dense,
+        TimeOpPath::Toeplitz => TimeOpChoice::Toeplitz,
+    };
+    let mut be = RustKronBackend::<T>::new(m.ds, &m.time_family, q, 1)
+        .with_mode(MvmMode::Kron)
+        .with_time_op(time_choice);
     be.set_data(&m.s, &m.t, &m.mask).context("installing checkpointed data")?;
     be.set_hypers(&m.theta, m.log_sigma2).context("rebuilding Gram factors")?;
+    diags.time_op = be.time_op_path();
     let to_t = |row: &[f64]| -> Vec<T> { row.iter().map(|&x| T::from_f64(x)).collect() };
 
     let ma = Matrix::from_vec(1, pq, to_t(&m.masked_alpha));
@@ -470,6 +480,46 @@ mod tests {
         assert!(
             rep.bit_identical,
             "eig-trained replay deviates: mean {} var {}",
+            rep.max_mean_diff,
+            rep.max_var_diff
+        );
+    }
+
+    #[test]
+    fn toeplitz_trained_checkpoint_replays_bit_for_bit() {
+        // A model fitted through the FFT/Toeplitz time factor must
+        // carry that tag through the on-disk codec and replay through
+        // the same engine: same path recorded in the serve diagnostics,
+        // same posterior bits as the fit.
+        let kernel = Pgk::new(2, "rbf", 6);
+        let data = well_specified(12, 6, 2, &kernel, 0.02, 0.3, 23);
+        let cfg = LkgpConfig {
+            train_iters: 5,
+            n_samples: 8,
+            probes: 4,
+            cg_tol: 1e-3,
+            cg_max_iters: 200,
+            seed: 23,
+            capture_pathwise: true,
+            time_op: TimeOpChoice::Toeplitz,
+            ..LkgpConfig::default()
+        };
+        let fit = Lkgp::fit(&data, cfg).unwrap();
+        assert_eq!(fit.diagnostics.time_op, TimeOpPath::Toeplitz);
+        let model = fit.model.clone().unwrap();
+        assert_eq!(model.time_op, TimeOpPath::Toeplitz);
+        let path =
+            std::env::temp_dir().join(format!("lkgp_serve_toep_{}.ckpt", std::process::id()));
+        model.save(&path).unwrap();
+        let loaded = TrainedModel::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.time_op, TimeOpPath::Toeplitz);
+        let engine = ServeEngine::from_model(loaded).unwrap();
+        assert_eq!(engine.diagnostics().time_op, TimeOpPath::Toeplitz);
+        let rep = engine.verify();
+        assert!(
+            rep.bit_identical,
+            "toeplitz-trained replay deviates: mean {} var {}",
             rep.max_mean_diff,
             rep.max_var_diff
         );

@@ -232,6 +232,44 @@ fn full_fit_posterior_bit_identical_across_thread_counts() {
 }
 
 #[test]
+fn toeplitz_fit_posterior_bit_identical_across_thread_counts() {
+    // The FFT/Toeplitz time factor: one column per steal-pool task with
+    // a fixed butterfly order, so a full fit through the fast path must
+    // be bit-identical at 1/2/4/8 worker threads like every other path.
+    use lkgp::gp::diagnostics::{TimeOpChoice, TimeOpPath};
+    let kernel = ProductGridKernel::new(2, "rbf", 8);
+    let data = well_specified(16, 8, 2, &kernel, 0.05, 0.3, 9);
+    let cfg = LkgpConfig {
+        train_iters: 4,
+        n_samples: 8,
+        probes: 4,
+        precond_rank: 20,
+        seed: 3,
+        time_op: TimeOpChoice::Toeplitz,
+        ..LkgpConfig::default()
+    };
+    let f1 = with_threads(1, || Lkgp::fit(&data, cfg.clone()).unwrap());
+    assert_eq!(f1.diagnostics.time_op, TimeOpPath::Toeplitz);
+    for t in [2usize, 4, 8] {
+        let ft = with_threads(t, || Lkgp::fit(&data, cfg.clone()).unwrap());
+        assert_eq!(ft.diagnostics.time_op, TimeOpPath::Toeplitz);
+        assert_eq!(
+            bits(&f1.posterior.mean),
+            bits(&ft.posterior.mean),
+            "toeplitz posterior mean differs at t={t}"
+        );
+        assert_eq!(
+            bits(&f1.posterior.var),
+            bits(&ft.posterior.var),
+            "toeplitz posterior var differs at t={t}"
+        );
+        for (a, b) in f1.loss_trace.iter().zip(&ft.loss_trace) {
+            assert_eq!(a.to_bits(), b.to_bits(), "toeplitz loss trace differs at t={t}");
+        }
+    }
+}
+
+#[test]
 fn eig_solver_fit_bit_identical_across_thread_counts() {
     // The direct spectral path on a fully-observed grid: the sequential
     // eigendecomposition plus KronOp-based applies must keep the whole

@@ -49,12 +49,23 @@ acceptance field regressed:
     serve.p50_ms                     median request latency (batched daemon)
     serve.p99_ms                     tail request latency (batched daemon)
 
+  BENCH_toeplitz.json
+    toeplitz.mvm_speedup_ge_2x       FFT/Toeplitz time-factor MVM >= 2x the
+                                     dense K_TT half-GEMM at q = 4096
+    toeplitz.bit_identical_threads   Toeplitz-path Kron apply bit-identical
+                                     at 1 and 4 worker threads
+
+  also required to be present and numeric in BENCH_toeplitz.json:
+    toeplitz.mvm_speedup             measured FFT-vs-dense speedup
+    toeplitz.max_abs_diff_vs_dense   FFT-vs-dense agreement (tolerance-level,
+                                     never bit-equal: different rounding)
+
 A referenced key that is absent is reported as a named error listing the
 keys that *are* available at the deepest resolvable level, so a renamed
 bench field fails loudly instead of looking like a regression.
 
 Usage: check_bench.py BENCH_par.json BENCH_precision.json BENCH_solver.json \
-       BENCH_serve.json
+       BENCH_serve.json BENCH_toeplitz.json
 """
 
 import json
@@ -87,6 +98,16 @@ GATES = {
             "served responses bit-equal to the offline posterior for any grouping",
         ),
     ],
+    "BENCH_toeplitz.json": [
+        (
+            ("toeplitz", "mvm_speedup_ge_2x"),
+            "FFT/Toeplitz time-factor MVM >= 2x dense K_TT half-GEMM at q = 4096",
+        ),
+        (
+            ("toeplitz", "bit_identical_threads"),
+            "Toeplitz-path Kron apply bit-identical at 1 and 4 worker threads",
+        ),
+    ],
 }
 
 # numeric metrics that must exist (informational gauges the perf
@@ -106,6 +127,10 @@ REQUIRED_NUMBERS = {
         (("serve", "mean_batch_occupancy"), "predict requests per coalesced sweep"),
         (("serve", "p50_ms"), "median request latency, batched daemon"),
         (("serve", "p99_ms"), "p99 request latency, batched daemon"),
+    ],
+    "BENCH_toeplitz.json": [
+        (("toeplitz", "mvm_speedup"), "measured FFT-vs-dense time-factor speedup"),
+        (("toeplitz", "max_abs_diff_vs_dense"), "FFT-vs-dense MVM agreement"),
     ],
 }
 

@@ -71,6 +71,14 @@ def synthetic_artifacts():
                 "p99_ms": 4.0,
             },
         },
+        "BENCH_toeplitz.json": {
+            "toeplitz": {
+                "mvm_speedup_ge_2x": True,
+                "bit_identical_threads": True,
+                "mvm_speedup": 9.3,
+                "max_abs_diff_vs_dense": 2.1e-12,
+            },
+        },
     }
 
 
@@ -203,6 +211,28 @@ class MainTests(unittest.TestCase):
             code = check_bench.main(["check_bench.py", "/nonexistent/BENCH_serve.json"])
         self.assertEqual(code, 1)
         self.assertIn("unreadable bench artifact", err.getvalue())
+
+    def test_toeplitz_regressed_speedup_fails(self):
+        docs = synthetic_artifacts()
+        docs["BENCH_toeplitz.json"]["toeplitz"]["mvm_speedup_ge_2x"] = False
+        code, _, err = run_main(docs)
+        self.assertEqual(code, 1)
+        self.assertIn("REGRESSED", err)
+        self.assertIn("toeplitz.mvm_speedup_ge_2x", err)
+
+    def test_toeplitz_thread_divergence_fails(self):
+        docs = synthetic_artifacts()
+        docs["BENCH_toeplitz.json"]["toeplitz"]["bit_identical_threads"] = False
+        code, _, err = run_main(docs)
+        self.assertEqual(code, 1)
+        self.assertIn("toeplitz.bit_identical_threads", err)
+
+    def test_toeplitz_missing_speedup_number_fails(self):
+        docs = synthetic_artifacts()
+        del docs["BENCH_toeplitz.json"]["toeplitz"]["mvm_speedup"]
+        code, _, err = run_main(docs)
+        self.assertEqual(code, 1)
+        self.assertIn("mvm_speedup", err)
 
     def test_fit_rows_must_exist(self):
         docs = synthetic_artifacts()
