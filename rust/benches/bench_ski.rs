@@ -1,0 +1,171 @@
+//! Bench: SKI (sparse-kernel-interpolation) training vs a dense exact
+//! GP on the same off-grid regression sample.
+//!
+//! Gates emitted to `BENCH_ski.json` (checked by
+//! `scripts/check_bench.py` in the CI `bench-smoke` job):
+//!
+//! * `ski.rmse_within_5pct_of_dense` — held-out RMSE of the SKI fit is
+//!   within 5% of the dense exact-GP baseline (`rmse_ski <= 1.05 *
+//!   rmse_dense`), so the structured approximation costs essentially no
+//!   accuracy on a smooth surface;
+//! * `ski.fit_speedup_ge_2x` — the SKI fit (CG in data space, Kronecker
+//!   MVMs through the sparse projection) beats the O(n^3) dense
+//!   Cholesky fit by at least 2x end to end;
+//! * `ski.bit_identical_threads` — the full SKI fit posterior is
+//!   bit-identical at 1 and 4 worker threads.
+//!
+//! `LKGP_BENCH_SMOKE=1` shrinks n (and training iterations), not the
+//! gate shape: the asymptotic O(n^3) vs O(n + pq(p+q)) gap holds at
+//! smoke sizes too.
+
+use lkgp::data::synthetic::off_grid;
+use lkgp::gp::diagnostics::ProjectionChoice;
+use lkgp::gp::lkgp::{Lkgp, LkgpConfig, LkgpFit};
+use lkgp::kernels::RbfArd;
+use lkgp::kron::interp::{InterpDegree, SparseProjection};
+use lkgp::linalg::{cholesky, Matrix};
+use lkgp::par::with_threads;
+use lkgp::util::json::Json;
+
+fn rmse(pred: &[f64], want: &[f64]) -> f64 {
+    let mut sq = 0.0;
+    for (p, w) in pred.iter().zip(want) {
+        sq += (p - w) * (p - w);
+    }
+    (sq / want.len().max(1) as f64).sqrt()
+}
+
+/// Dense exact GP on the scattered points: assemble the full n x n
+/// Gram, Cholesky-factor `K + sigma2 I`, solve for the representer
+/// weights, and predict at the test points through the cross-Gram.
+/// Returns (test predictions, wall seconds for the whole fit+predict).
+fn dense_exact_gp(
+    xs: &[f64],
+    xt: &[f64],
+    y: &[f64],
+    test_xs: &[f64],
+    test_xt: &[f64],
+    sigma2: f64,
+) -> (Vec<f64>, f64) {
+    let n = y.len();
+    let pack = |a: &[f64], b: &[f64]| {
+        let mut data = Vec::with_capacity(2 * a.len());
+        for i in 0..a.len() {
+            data.push(a[i]);
+            data.push(b[i]);
+        }
+        Matrix::from_vec(a.len(), 2, data)
+    };
+    let xtrain = pack(xs, xt);
+    let xtest = pack(test_xs, test_xt);
+    // well-specified-ish hypers for the unit square: lengthscale 0.25
+    // per dimension, unit outputscale
+    let mut kernel = RbfArd::new(2);
+    kernel.log_ls = vec![0.25f64.ln(); 2];
+    let ym = y.iter().sum::<f64>() / n as f64;
+    let yc: Vec<f64> = y.iter().map(|v| v - ym).collect();
+    let t0 = std::time::Instant::now();
+    let mut k = kernel.gram(&xtrain, &xtrain);
+    k.add_diag(sigma2);
+    let ch = cholesky(&k).expect("dense Gram not PD");
+    let alpha = ch.solve(&yc);
+    let kx = kernel.gram(&xtest, &xtrain);
+    let pred: Vec<f64> = kx.matvec(&alpha).iter().map(|v| v + ym).collect();
+    (pred, t0.elapsed().as_secs_f64())
+}
+
+fn ski_cfg(train_iters: usize) -> LkgpConfig {
+    LkgpConfig {
+        train_iters,
+        n_samples: 8,
+        probes: 4,
+        cg_tol: 1e-3,
+        cg_max_iters: 400,
+        seed: 17,
+        projection: ProjectionChoice::Interp(InterpDegree::Cubic),
+        ..LkgpConfig::default()
+    }
+}
+
+fn posterior_bits(fit: &LkgpFit) -> Vec<u64> {
+    let mut out: Vec<u64> = fit.posterior.mean.iter().map(|x| x.to_bits()).collect();
+    out.extend(fit.posterior.var.iter().map(|x| x.to_bits()));
+    out
+}
+
+fn main() {
+    let smoke = std::env::var("LKGP_BENCH_SMOKE").ok().as_deref() == Some("1");
+    // full scale: n ~ 4k scattered points on a 64 x 64 inducing grid;
+    // smoke shrinks n so the O(n^3) dense baseline stays CI-friendly
+    let (n, n_test, p, q, iters) =
+        if smoke { (1536usize, 384usize, 40usize, 40usize, 4usize) } else { (4096, 1024, 64, 64, 8) };
+    let sigma2 = 0.02;
+    println!("# bench_ski — SKI projection vs dense exact GP (smoke: {smoke})\n");
+    let data = off_grid(n, n_test, p, q, sigma2, 17);
+
+    // ---- dense exact-GP baseline ----
+    let (dense_pred, dense_secs) = dense_exact_gp(
+        &data.xs,
+        &data.xt,
+        &data.y,
+        &data.test_xs,
+        &data.test_xt,
+        sigma2,
+    );
+    let rmse_dense = rmse(&dense_pred, &data.test_y);
+    println!("dense exact GP: n={n} fit+predict {:.3}s, test rmse {rmse_dense:.4}", dense_secs);
+
+    // ---- SKI fit + test-point prediction ----
+    let t0 = std::time::Instant::now();
+    let fit = Lkgp::fit_offgrid(&data, ski_cfg(iters)).expect("SKI fit");
+    let wq = SparseProjection::build(
+        &data.test_xs,
+        &data.test_xt,
+        &data.grid_s,
+        &data.grid_t,
+        InterpDegree::Cubic,
+    )
+    .expect("test-point projection");
+    let mean_grid = Matrix::from_vec(1, fit.posterior.mean.len(), fit.posterior.mean.clone());
+    let ski_pred = wq.interp_apply(&mean_grid);
+    let ski_secs = t0.elapsed().as_secs_f64();
+    let rmse_ski = rmse(ski_pred.row(0), &data.test_y);
+    let fit_speedup = dense_secs / ski_secs.max(1e-12);
+    println!(
+        "SKI (cubic, {p}x{q} grid): fit+predict {:.3}s ({fit_speedup:.1}x), test rmse {rmse_ski:.4}",
+        ski_secs
+    );
+
+    // ---- thread-count bit-invariance of the full SKI fit ----
+    let f1 = with_threads(1, || Lkgp::fit_offgrid(&data, ski_cfg(iters)).expect("t=1 fit"));
+    let f4 = with_threads(4, || Lkgp::fit_offgrid(&data, ski_cfg(iters)).expect("t=4 fit"));
+    let bit_identical_threads = posterior_bits(&f1) == posterior_bits(&f4);
+    println!("threads 1 vs 4 bit-identical: {bit_identical_threads}");
+
+    let rmse_ratio = rmse_ski / rmse_dense.max(1e-12);
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("bench_ski".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "ski",
+            Json::obj(vec![
+                ("n", Json::Num(n as f64)),
+                ("n_test", Json::Num(n_test as f64)),
+                ("p", Json::Num(p as f64)),
+                ("q", Json::Num(q as f64)),
+                ("degree", Json::Str("cubic".to_string())),
+                ("rmse_dense", Json::Num(rmse_dense)),
+                ("rmse_ski", Json::Num(rmse_ski)),
+                ("rmse_ratio", Json::Num(rmse_ratio)),
+                ("rmse_within_5pct_of_dense", Json::Bool(rmse_ratio <= 1.05)),
+                ("secs_dense_fit", Json::Num(dense_secs)),
+                ("secs_ski_fit", Json::Num(ski_secs)),
+                ("fit_speedup", Json::Num(fit_speedup)),
+                ("fit_speedup_ge_2x", Json::Bool(fit_speedup >= 2.0)),
+                ("bit_identical_threads", Json::Bool(bit_identical_threads)),
+            ]),
+        ),
+    ]);
+    let _ = std::fs::write("BENCH_ski.json", format!("{doc}\n"));
+    println!("\nwrote BENCH_ski.json");
+}

@@ -10,7 +10,9 @@
 pub mod climate;
 pub mod grid;
 pub mod lcbench;
+pub mod offgrid;
 pub mod sarcos;
 pub mod synthetic;
 
 pub use grid::GridDataset;
+pub use offgrid::OffGridDataset;

@@ -1,0 +1,232 @@
+//! Off-grid regression datasets for SKI (sparse kernel interpolation)
+//! training: n scattered `(x_s, x_t)` points projected onto a latent
+//! spatial x time inducing grid by a
+//! [`SparseProjection`](crate::kron::interp::SparseProjection).
+//!
+//! Unlike [`GridDataset`](crate::data::GridDataset), where every target
+//! sits exactly on a (partially observed) grid cell, an
+//! [`OffGridDataset`] places targets anywhere inside the grid's bounding
+//! box. The fit path (`Lkgp::fit_offgrid`) builds the interpolation
+//! projection `W` from the point coordinates and trains against the
+//! data-space system `W (K_SS (x) K_TT) W^T + sigma2 I`.
+
+use anyhow::{bail, Result};
+
+use crate::linalg::Matrix;
+
+use super::GridDataset;
+
+/// An off-grid training set plus an optional held-out test split, both
+/// referenced to the same latent inducing grid.
+///
+/// The spatial axis is one-dimensional (`ds = 1`): interpolation
+/// stencils need a sorted coordinate axis per dimension, and the latent
+/// grid is the tensor product `grid_s x grid_t`.
+#[derive(Clone, Debug)]
+pub struct OffGridDataset {
+    /// Spatial coordinate of each training point, length n.
+    pub xs: Vec<f64>,
+    /// Time coordinate of each training point, length n.
+    pub xt: Vec<f64>,
+    /// Raw (unstandardized) target of each training point, length n.
+    pub y: Vec<f64>,
+    /// Spatial coordinates of held-out test points (may be empty).
+    pub test_xs: Vec<f64>,
+    /// Time coordinates of held-out test points.
+    pub test_xt: Vec<f64>,
+    /// Raw targets of held-out test points.
+    pub test_y: Vec<f64>,
+    /// Sorted (strictly increasing) spatial inducing nodes, length p.
+    pub grid_s: Vec<f64>,
+    /// Sorted (strictly increasing) time inducing nodes, length q.
+    pub grid_t: Vec<f64>,
+    /// Time-kernel family (`"rbf"` | `"rbf_periodic"` | `"icm"`).
+    pub time_family: String,
+    /// Dataset name (reports only).
+    pub name: String,
+}
+
+impl OffGridDataset {
+    /// Number of training points n.
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    /// Number of spatial inducing nodes p.
+    pub fn p(&self) -> usize {
+        self.grid_s.len()
+    }
+
+    /// Number of time inducing nodes q.
+    pub fn q(&self) -> usize {
+        self.grid_t.len()
+    }
+
+    /// Latent grid size p*q.
+    pub fn grid_len(&self) -> usize {
+        self.p() * self.q()
+    }
+
+    /// Spatial inducing nodes as the p x 1 matrix the kernel layer
+    /// consumes.
+    pub fn s_matrix(&self) -> Matrix<f64> {
+        Matrix::from_vec(self.p(), 1, self.grid_s.clone())
+    }
+
+    /// Mean and std of the training targets — the same population
+    /// formula (and the same summation order) as
+    /// [`GridDataset::target_stats`], so a grid-coincident conversion
+    /// standardizes bit-identically to the mask path.
+    pub fn target_stats(&self) -> (f64, f64) {
+        let n = self.y.len().max(1) as f64;
+        let mean = self.y.iter().sum::<f64>() / n;
+        let var = self.y.iter().map(|y| (y - mean) * (y - mean)).sum::<f64>() / n;
+        (mean, var.sqrt().max(1e-12))
+    }
+
+    /// Standardized training targets — the RHS vector the SKI solver
+    /// consumes (no padding: every point is observed).
+    pub fn y_std(&self) -> Vec<f64> {
+        let (mean, std) = self.target_stats();
+        self.y.iter().map(|y| (y - mean) / std).collect()
+    }
+
+    /// Check internal shape consistency.
+    pub fn validate(&self) -> Result<()> {
+        let n = self.n();
+        if self.xs.len() != n || self.xt.len() != n {
+            bail!("coordinate lengths {}/{} != target length {n}", self.xs.len(), self.xt.len());
+        }
+        if self.test_xs.len() != self.test_y.len() || self.test_xt.len() != self.test_y.len() {
+            bail!(
+                "test coordinate lengths {}/{} != test target length {}",
+                self.test_xs.len(),
+                self.test_xt.len(),
+                self.test_y.len()
+            );
+        }
+        if self.grid_s.is_empty() || self.grid_t.is_empty() {
+            bail!("empty inducing grid ({} x {})", self.grid_s.len(), self.grid_t.len());
+        }
+        for g in [&self.grid_s, &self.grid_t] {
+            if g.windows(2).any(|w| !(w[0] < w[1])) {
+                bail!("inducing grid is not strictly increasing");
+            }
+        }
+        Ok(())
+    }
+
+    /// Convert a (partially observed) grid dataset into its off-grid
+    /// equivalent: one point per observed cell, placed exactly at the
+    /// cell's node coordinates, in grid order `j*q + k`. Requires a
+    /// one-dimensional, strictly increasing spatial axis (`ds == 1`).
+    ///
+    /// Because every point coincides with a grid node, the linear
+    /// interpolation projection built from this dataset is exactly the
+    /// 0/1 observation mask — the degenerate case the differential
+    /// tests pin against the mask path.
+    pub fn from_grid(g: &GridDataset) -> Result<Self> {
+        if g.s.cols != 1 {
+            bail!(
+                "interp projection needs a 1-D spatial axis (ds == 1), got ds = {}",
+                g.s.cols
+            );
+        }
+        let grid_s: Vec<f64> = (0..g.p()).map(|j| g.s[(j, 0)]).collect();
+        if grid_s.windows(2).any(|w| !(w[0] < w[1])) {
+            bail!("spatial axis must be strictly increasing for interp projection");
+        }
+        let q = g.q();
+        let mut xs = Vec::new();
+        let mut xt = Vec::new();
+        let mut y = Vec::new();
+        for j in 0..g.p() {
+            for k in 0..q {
+                let idx = j * q + k;
+                if g.mask[idx] {
+                    xs.push(grid_s[j]);
+                    xt.push(g.t[k]);
+                    y.push(g.y_grid[idx]);
+                }
+            }
+        }
+        if y.is_empty() {
+            bail!("grid dataset has no observed cells");
+        }
+        Ok(OffGridDataset {
+            xs,
+            xt,
+            y,
+            test_xs: Vec::new(),
+            test_xt: Vec::new(),
+            test_y: Vec::new(),
+            grid_s,
+            grid_t: g.t.clone(),
+            time_family: g.time_family.clone(),
+            name: g.name.clone(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::well_specified;
+    use crate::kernels::ProductGridKernel;
+
+    fn grid_1d(seed: u64, missing: f64) -> GridDataset {
+        let kernel = ProductGridKernel::new(1, "rbf", 6);
+        let mut g = well_specified(8, 6, 1, &kernel, 0.01, missing, seed);
+        // well_specified draws s ~ N(0,1); sort it into a valid axis
+        let mut col: Vec<f64> = (0..g.p()).map(|j| g.s[(j, 0)]).collect();
+        col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (j, v) in col.iter().enumerate() {
+            g.s[(j, 0)] = *v;
+        }
+        g
+    }
+
+    #[test]
+    fn from_grid_orders_points_like_the_grid() {
+        let g = grid_1d(11, 0.25);
+        let od = OffGridDataset::from_grid(&g).unwrap();
+        od.validate().unwrap();
+        assert_eq!(od.n(), g.n_observed());
+        assert_eq!(od.p(), g.p());
+        assert_eq!(od.q(), g.q());
+        let obs = g.observed_indices();
+        for (i, &idx) in obs.iter().enumerate() {
+            let (j, k) = (idx / g.q(), idx % g.q());
+            assert_eq!(od.xs[i].to_bits(), g.s[(j, 0)].to_bits());
+            assert_eq!(od.xt[i].to_bits(), g.t[k].to_bits());
+            assert_eq!(od.y[i].to_bits(), g.y_grid[idx].to_bits());
+        }
+    }
+
+    #[test]
+    fn target_stats_match_grid_bitwise() {
+        let g = grid_1d(7, 0.3);
+        let od = OffGridDataset::from_grid(&g).unwrap();
+        let (gm, gs) = g.target_stats();
+        let (om, os) = od.target_stats();
+        assert_eq!(gm.to_bits(), om.to_bits());
+        assert_eq!(gs.to_bits(), os.to_bits());
+        // standardized targets: the off-grid vector is the observed
+        // subsequence of the padded grid vector, bit for bit
+        let yg = g.y_std_padded();
+        let yo = od.y_std();
+        for (i, &idx) in g.observed_indices().iter().enumerate() {
+            assert_eq!(yo[i].to_bits(), yg[idx].to_bits());
+        }
+    }
+
+    #[test]
+    fn from_grid_rejects_multidim_and_unsorted() {
+        let kernel = ProductGridKernel::new(2, "rbf", 4);
+        let g2 = well_specified(6, 4, 2, &kernel, 0.01, 0.2, 3);
+        assert!(OffGridDataset::from_grid(&g2).is_err());
+        let mut g1 = grid_1d(5, 0.2);
+        g1.s[(0, 0)] = g1.s[(1, 0)]; // duplicate node
+        assert!(OffGridDataset::from_grid(&g1).is_err());
+    }
+}

@@ -82,6 +82,61 @@ pub fn well_specified(
     dsr
 }
 
+/// An off-grid regression workload for SKI training: `n_train` +
+/// `n_test` points scattered uniformly inside the unit square, targets
+/// from a smooth two-frequency surface plus observation noise of
+/// variance `sigma2`, referenced to a `p x q` linspace inducing grid on
+/// `[0, 1]^2`.
+///
+/// The target surface is deterministic (no kernel draw), so a dense
+/// exact GP and a SKI fit on the same sample disagree only through
+/// their respective approximations — exactly the comparison
+/// `bench_ski` gates.
+pub fn off_grid(
+    n_train: usize,
+    n_test: usize,
+    p: usize,
+    q: usize,
+    sigma2: f64,
+    seed: u64,
+) -> super::offgrid::OffGridDataset {
+    let mut rng = Rng::new(seed ^ 0x0FF6);
+    let surface = |xs: f64, xt: f64| {
+        (3.0 * xs).sin() * (2.0 * xt).cos() + 0.5 * (7.0 * xs * xt).sin()
+    };
+    let noise = sigma2.sqrt();
+    let mut draw = |n: usize| {
+        let mut xs = Vec::with_capacity(n);
+        let mut xt = Vec::with_capacity(n);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let a = rng.uniform();
+            let b = rng.uniform();
+            xs.push(a);
+            xt.push(b);
+            y.push(surface(a, b) + noise * rng.normal());
+        }
+        (xs, xt, y)
+    };
+    let (xs, xt, y) = draw(n_train);
+    let (test_xs, test_xt, test_y) = draw(n_test);
+    let linspace = |m: usize| -> Vec<f64> {
+        (0..m).map(|k| k as f64 / (m.max(2) - 1) as f64).collect()
+    };
+    super::offgrid::OffGridDataset {
+        xs,
+        xt,
+        y,
+        test_xs,
+        test_xt,
+        test_y,
+        grid_s: linspace(p),
+        grid_t: linspace(q),
+        time_family: "rbf".to_string(),
+        name: format!("offgrid(n={n_train},p={p},q={q})"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -123,5 +178,23 @@ mod tests {
     fn fig2_inputs_are_ten_dimensional() {
         let si = fig2_inputs(32, 32, 0);
         assert_eq!(si.s.cols + si.t_multi.cols, 10);
+    }
+
+    #[test]
+    fn off_grid_points_live_inside_the_inducing_box() {
+        let od = off_grid(200, 50, 16, 12, 0.01, 9);
+        od.validate().unwrap();
+        assert_eq!(od.n(), 200);
+        assert_eq!(od.test_y.len(), 50);
+        assert_eq!((od.p(), od.q()), (16, 12));
+        let (s_lo, s_hi) = (od.grid_s[0], *od.grid_s.last().unwrap());
+        let (t_lo, t_hi) = (od.grid_t[0], *od.grid_t.last().unwrap());
+        for i in 0..od.n() {
+            assert!(od.xs[i] >= s_lo && od.xs[i] <= s_hi);
+            assert!(od.xt[i] >= t_lo && od.xt[i] <= t_hi);
+        }
+        // deterministic in the seed
+        let od2 = off_grid(200, 50, 16, 12, 0.01, 9);
+        assert_eq!(od.y[0].to_bits(), od2.y[0].to_bits());
     }
 }

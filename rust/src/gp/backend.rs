@@ -20,6 +20,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::kernels::time::{detect_uniform_spacing, GridSpacing};
 use crate::kernels::ProductGridKernel;
+use crate::kron::interp::{InterpKronSystem, SparseProjection};
 use crate::kron::lazy::LazyGramOp;
 use crate::kron::toeplitz::ToeplitzOp;
 use crate::kron::{KronOp, MaskedKronSystem};
@@ -546,6 +547,256 @@ impl<T: Scalar> KronBackend<T> for RustKronBackend<T> {
         self.sys
             .as_ref()
             .map(|s| (s.op.kss.cast::<f64>(), s.op.ktt.cast::<f64>()))
+    }
+
+    fn time_op_path(&self) -> TimeOpPath {
+        self.time_path
+    }
+}
+
+// ---------------------------------------------------------------------
+// SKI (sparse kernel interpolation) backend
+// ---------------------------------------------------------------------
+
+/// Pure-rust SKI backend: the system operator is
+/// `W (K_SS (x) K_TT) W^T + sigma2 I` over the n-point *data space*
+/// (`dim() == n`), with `W` a [`SparseProjection`] onto the latent
+/// spatial x time inducing grid (see `kron::interp`).
+///
+/// Grid-space ops (`kron_apply`, `prior_sample`) still act on p*q-wide
+/// batches — the pathwise conditioning pipeline projects between the
+/// two spaces with `W`/`W^T` (see `fit_interp_inner` in `gp/lkgp.rs`).
+/// `gram_factors` returns `None` by design: the direct eigensolver and
+/// the `KronEig` preconditioner address the p*q grid system, not the
+/// n-point data system, so both fall back to CG exactly as the
+/// preconditioner fallback chain prescribes.
+pub struct InterpRustBackend<T: Scalar = f64> {
+    /// The product kernel (hyperparameters installed by `set_hypers`).
+    pub kernel: ProductGridKernel,
+    /// Requested time-factor engine (resolved in `set_data`).
+    time_choice: TimeOpChoice,
+    /// Resolved time-factor path actually applied by `system_mvm`.
+    time_path: TimeOpPath,
+    probes: usize,
+    /// Spatial inducing-grid nodes as a p x 1 matrix (SKI interpolation
+    /// requires a 1-D sorted spatial axis).
+    s: Matrix<f64>,
+    t: Vec<f64>,
+    proj: SparseProjection,
+    log_sigma2: f64,
+    sys: Option<InterpKronSystem<T>>,
+    kernel_evals: u64,
+}
+
+impl<T: Scalar> InterpRustBackend<T> {
+    /// Backend over a q-point time grid of the named family with the
+    /// given interpolation projection; `probes` Hutchinson probes for
+    /// the gradient path. The spatial axis is 1-D (`ds = 1`).
+    pub fn new(time_family: &str, q: usize, probes: usize, proj: SparseProjection) -> Self {
+        InterpRustBackend {
+            kernel: ProductGridKernel::new(1, time_family, q),
+            time_choice: TimeOpChoice::Dense,
+            time_path: TimeOpPath::Dense,
+            probes,
+            s: Matrix::zeros(0, 1),
+            t: Vec::new(),
+            proj,
+            log_sigma2: 0.0,
+            sys: None,
+            kernel_evals: 0,
+        }
+    }
+
+    /// Select the time-factor engine (builder style); resolved against
+    /// the actual grid and kernel family when `set_data` runs, exactly
+    /// like [`RustKronBackend::with_time_op`].
+    pub fn with_time_op(mut self, choice: TimeOpChoice) -> Self {
+        self.time_choice = choice;
+        self
+    }
+
+    /// The interpolation projection this backend applies.
+    pub fn proj(&self) -> &SparseProjection {
+        &self.proj
+    }
+
+    fn sys(&self) -> &InterpKronSystem<T> {
+        self.sys.as_ref().expect("set_hypers not called")
+    }
+}
+
+impl<T: Scalar> KronBackend<T> for InterpRustBackend<T> {
+    /// Data-space dimension n (NOT the grid size p*q — the SKI system
+    /// is n x n).
+    fn dim(&self) -> usize {
+        self.proj.n()
+    }
+
+    fn probes(&self) -> usize {
+        self.probes
+    }
+
+    /// Install the inducing grids (`s` is the p x 1 spatial node list,
+    /// `t` the time grid). The mask argument is ignored — the
+    /// projection already encodes which grid cells each data point
+    /// touches.
+    fn set_data(&mut self, s: &Matrix<f64>, t: &[f64], _mask: &[f64]) -> Result<()> {
+        if s.rows != self.proj.grid_p() || s.cols != 1 {
+            bail!(
+                "spatial grid {}x{} does not match projection ({} x 1 expected)",
+                s.rows,
+                s.cols,
+                self.proj.grid_p()
+            );
+        }
+        if t.len() != self.proj.grid_q() {
+            bail!("time grid {} does not match projection ({})", t.len(), self.proj.grid_q());
+        }
+        self.s = s.clone();
+        self.t = t.to_vec();
+        self.time_path = match self.time_choice {
+            TimeOpChoice::Dense => TimeOpPath::Dense,
+            req @ (TimeOpChoice::Auto | TimeOpChoice::Toeplitz) => {
+                let stationary = self.kernel.time.is_stationary();
+                let uniform = !t.is_empty()
+                    && matches!(
+                        detect_uniform_spacing(t, UNIFORM_GRID_REL_TOL),
+                        GridSpacing::Uniform { .. }
+                    );
+                if stationary && uniform {
+                    TimeOpPath::Toeplitz
+                } else {
+                    eprintln!(
+                        "warning: time-op {req:?} requested but K_TT is not Toeplitz \
+                         (stationary kernel: {stationary}, uniform grid: {uniform}); \
+                         using the dense path"
+                    );
+                    TimeOpPath::Dense
+                }
+            }
+        };
+        self.sys = None;
+        Ok(())
+    }
+
+    fn set_hypers(&mut self, theta: &[f64], log_sigma2: f64) -> Result<()> {
+        self.kernel.set_theta(theta);
+        self.log_sigma2 = log_sigma2;
+        let kss: Matrix<T> = self.kernel.gram_s_in(&self.s);
+        let ktt: Matrix<T> = self.kernel.gram_t_in(&self.t);
+        let (p, q) = (kss.rows, ktt.rows);
+        self.kernel_evals = (p * p + q * q) as u64;
+        let mut op = KronOp::new(kss, ktt);
+        if self.time_path == TimeOpPath::Toeplitz {
+            let col: Vec<f64> = (0..q).map(|lag| op.ktt[(0, lag)].to_f64()).collect();
+            op = op.with_toeplitz(ToeplitzOp::new(&col));
+        }
+        self.sys = Some(InterpKronSystem::new(
+            op,
+            self.proj.clone(),
+            T::from_f64(log_sigma2.exp()),
+        ));
+        Ok(())
+    }
+
+    fn system_mvm(&mut self, v: &Matrix<T>) -> Result<Matrix<T>> {
+        let fault = crate::util::failpoint::check("backend_mvm");
+        if matches!(fault, Some(crate::util::failpoint::FaultAction::Error)) {
+            return Err(anyhow::Error::new(crate::util::failpoint::InjectedFault {
+                site: "backend_mvm".into(),
+                action: crate::util::failpoint::FaultAction::Error,
+            }));
+        }
+        let mut out = self.sys().apply_batch(v);
+        if matches!(fault, Some(crate::util::failpoint::FaultAction::Nan)) {
+            out[(0, 0)] = T::from_f64(f64::NAN);
+        }
+        Ok(out)
+    }
+
+    /// Unmasked grid-space cross-covariance apply: `v` is p*q wide
+    /// (not n) — the pathwise pipeline projects into grid space first.
+    fn kron_apply(&mut self, v: &Matrix<T>) -> Result<Matrix<T>> {
+        Ok(self.sys().op.apply_batch(v))
+    }
+
+    /// Grid-space prior sample: `z` is p*q wide (not n).
+    fn prior_sample(&mut self, z: &Matrix<T>) -> Result<Matrix<T>> {
+        let sys = self.sys();
+        let (p, q) = (sys.op.p(), sys.op.q());
+        let mut kss_j: Matrix<f64> = sys.op.kss.cast();
+        kss_j.add_diag(1e-4 * kss_j.trace() / p as f64);
+        let mut ktt_j: Matrix<f64> = sys.op.ktt.cast();
+        ktt_j.add_diag(1e-4 * ktt_j.trace() / q as f64);
+        let ls: Matrix<T> = cholesky(&kss_j).context("K_SS cholesky")?.l.cast();
+        let lt: Matrix<T> = cholesky(&ktt_j).context("K_TT cholesky")?.l.cast();
+        Ok(KronOp::new(ls, lt).apply_batch(z))
+    }
+
+    fn mll_grads(
+        &mut self,
+        alpha: &[T],
+        w: &Matrix<T>,
+        z: &Matrix<T>,
+    ) -> Result<Vec<f64>> {
+        // Kernel gradients: a^T W dK W^T a = (W^T a)^T dK (W^T a), so
+        // projecting every pair vector onto the grid in f64 reduces the
+        // SKI gradient to the existing grid-space contraction. The
+        // noise gradient is the one term that lives in data space
+        // (dA/dlog_s2 = s2 I_n), so it is recomputed below and
+        // overwrites the grid-space value.
+        let sys = self.sys();
+        let kss64: Matrix<f64> = sys.op.kss.cast();
+        let ktt64: Matrix<f64> = sys.op.ktt.cast();
+        let alpha64: Vec<f64> = alpha.iter().map(|a| a.to_f64()).collect();
+        let w64: Matrix<f64> = w.cast();
+        let z64: Matrix<f64> = z.cast();
+        let ga = self.proj.project_vec_f64(&alpha64);
+        let gw = self.proj.interp_apply_t(&w64);
+        let gz = self.proj.interp_apply_t(&z64);
+        let grid_pairs = standard_pairs(&ga, &gw, &gz);
+        let mut grads = mll_surrogate_grads(
+            &self.kernel,
+            &self.s,
+            &self.t,
+            &kss64,
+            &ktt64,
+            self.log_sigma2,
+            &grid_pairs,
+        );
+        // d/dlog_s2 [ s2 * sum coef u^T v ] accumulated over the
+        // data-space pairs, same fold order as mll_surrogate_grads
+        let data_pairs = standard_pairs(&alpha64, &w64, &z64);
+        let mut uv_sum = 0.0;
+        for pair in &data_pairs {
+            let mut d = 0.0;
+            for (a, b) in pair.u.iter().zip(pair.v) {
+                d += a * b;
+            }
+            uv_sum += pair.coef * d;
+        }
+        let last = grads.len() - 1;
+        grads[last] = self.log_sigma2.exp() * uv_sum;
+        Ok(grads)
+    }
+
+    fn system_diag(&self) -> Vec<f64> {
+        self.sys().diag().iter().map(|d| d.to_f64()).collect()
+    }
+
+    fn kernel_col(&self, idx: usize) -> Vec<T> {
+        self.sys().kernel_col(idx)
+    }
+
+    fn kernel_bytes(&self) -> u64 {
+        let (p, q) = (self.proj.grid_p(), self.proj.grid_q());
+        let factors = (p * p + q * q) * std::mem::size_of::<T>();
+        let proj = self.proj.nnz() * (std::mem::size_of::<f64>() + std::mem::size_of::<usize>());
+        (factors + proj) as u64
+    }
+
+    fn kernel_evals(&self) -> u64 {
+        self.kernel_evals
     }
 
     fn time_op_path(&self) -> TimeOpPath {

@@ -170,6 +170,81 @@ impl std::fmt::Display for TimeOpPath {
     }
 }
 
+/// Which observation projection `Lkgp::fit` should build (config
+/// `LkgpConfig::projection`, env `LKGP_PROJECTION`, CLI `--projection`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ProjectionChoice {
+    /// The paper's 0/1 grid mask — training data must lie on (partial)
+    /// grid cells. The default, bit-compatible with the committed
+    /// golden posterior.
+    #[default]
+    Mask,
+    /// Sparse kernel interpolation (SKI) with the given stencil family:
+    /// the system operator becomes `W (K_SS (x) K_TT) W^T + sigma2 I`,
+    /// admitting off-grid training inputs
+    /// (see [`crate::kron::interp::SparseProjection`]).
+    Interp(crate::kron::interp::InterpDegree),
+}
+
+impl ProjectionChoice {
+    /// Parse `"mask"` / `"interp"` (= linear) / `"interp-cubic"`
+    /// (case-insensitive; `"interp-linear"` is accepted as an alias).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        use crate::kron::interp::InterpDegree;
+        match s.to_ascii_lowercase().as_str() {
+            "mask" => Ok(ProjectionChoice::Mask),
+            "interp" | "interp-linear" => Ok(ProjectionChoice::Interp(InterpDegree::Linear)),
+            "interp-cubic" => Ok(ProjectionChoice::Interp(InterpDegree::Cubic)),
+            _ => Err(format!(
+                "invalid projection value {s:?} (expected mask|interp|interp-cubic)"
+            )),
+        }
+    }
+
+    /// Read `LKGP_PROJECTION` from the environment (default Mask; an
+    /// invalid value warns and falls back to Mask).
+    pub fn from_env() -> Self {
+        match std::env::var("LKGP_PROJECTION") {
+            Ok(v) if !v.trim().is_empty() => Self::parse(v.trim()).unwrap_or_else(|e| {
+                eprintln!("warning: {e}; using mask");
+                ProjectionChoice::Mask
+            }),
+            _ => ProjectionChoice::Mask,
+        }
+    }
+}
+
+impl std::fmt::Display for ProjectionChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProjectionChoice::Mask => write!(f, "mask"),
+            ProjectionChoice::Interp(d) => write!(f, "interp-{d}"),
+        }
+    }
+}
+
+/// Which observation projection actually ran (recorded in
+/// [`FitDiagnostics`] and persisted in checkpoints so serve knows how
+/// the posterior was trained; the request lives in
+/// `LkgpConfig::projection`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ProjectionPath {
+    /// 0/1 grid-mask projection (the paper's `P`).
+    #[default]
+    Mask,
+    /// Sparse kernel interpolation with the recorded stencil family.
+    Interp(crate::kron::interp::InterpDegree),
+}
+
+impl std::fmt::Display for ProjectionPath {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProjectionPath::Mask => write!(f, "mask"),
+            ProjectionPath::Interp(d) => write!(f, "interp-{d}"),
+        }
+    }
+}
+
 /// Preconditioner strength levels, ordered by the fallback chain.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PrecondLevel {
@@ -219,6 +294,8 @@ pub struct FitDiagnostics {
     pub solver_path: SolverPath,
     /// Which time-factor engine applied the `K_TT` half of Kron MVMs.
     pub time_op: TimeOpPath,
+    /// Which observation projection tied the data to the latent grid.
+    pub projection: ProjectionPath,
     /// Direct eigendecomposition solves performed (always zero on the
     /// CG path; these contribute zero CG iterations).
     pub eig_solves: usize,
@@ -257,8 +334,8 @@ impl FitDiagnostics {
     /// Multi-line human-readable report (CLI `train` output).
     pub fn render(&self) -> String {
         let mut s = format!(
-            "  solver: {} path, {} eig solves, {} time factor\n",
-            self.solver_path, self.eig_solves, self.time_op
+            "  solver: {} path, {} eig solves, {} time factor, {} projection\n",
+            self.solver_path, self.eig_solves, self.time_op, self.projection
         );
         s += &format!(
             "  cg: {} solves, {} iters, {} mvms, worst rel residual {:.3e}\n",
@@ -451,6 +528,34 @@ mod tests {
         assert_eq!(TimeOpPath::default(), TimeOpPath::Dense);
         assert_eq!(format!("{}", TimeOpPath::Toeplitz), "toeplitz");
         assert!(FitDiagnostics::default().render().contains("dense time factor"));
+    }
+
+    #[test]
+    fn parse_projection() {
+        use crate::kron::interp::InterpDegree;
+        assert_eq!(ProjectionChoice::parse("mask"), Ok(ProjectionChoice::Mask));
+        assert_eq!(
+            ProjectionChoice::parse("INTERP"),
+            Ok(ProjectionChoice::Interp(InterpDegree::Linear))
+        );
+        assert_eq!(
+            ProjectionChoice::parse("interp-linear"),
+            Ok(ProjectionChoice::Interp(InterpDegree::Linear))
+        );
+        assert_eq!(
+            ProjectionChoice::parse("Interp-Cubic"),
+            Ok(ProjectionChoice::Interp(InterpDegree::Cubic))
+        );
+        assert!(ProjectionChoice::parse("ski").is_err());
+        // default must stay Mask: the golden posterior pins mask bits
+        assert_eq!(ProjectionChoice::default(), ProjectionChoice::Mask);
+        assert_eq!(ProjectionPath::default(), ProjectionPath::Mask);
+        assert_eq!(
+            format!("{}", ProjectionPath::Interp(InterpDegree::Cubic)),
+            "interp-cubic"
+        );
+        assert_eq!(format!("{}", ProjectionChoice::Interp(InterpDegree::Linear)), "interp-linear");
+        assert!(FitDiagnostics::default().render().contains("mask projection"));
     }
 
     #[test]

@@ -22,7 +22,8 @@
 
 use anyhow::{Context, Result};
 
-use crate::data::GridDataset;
+use crate::data::{GridDataset, OffGridDataset};
+use crate::kron::interp::SparseProjection;
 use crate::linalg::{Matrix, Scalar};
 use crate::runtime::Runtime;
 use crate::solvers::cg::{
@@ -34,11 +35,12 @@ use crate::util::rng::Rng;
 use crate::util::timer::Profile;
 
 use super::backend::{
-    KronBackend, MvmMode, PjrtKronBackend, Precision, RustKronBackend, SystemOp,
+    InterpRustBackend, KronBackend, MvmMode, PjrtKronBackend, Precision, RustKronBackend,
+    SystemOp,
 };
 use super::diagnostics::{
-    FitDiagnostics, OnNonConverged, PrecondFallback, PrecondLevel, Solver, SolverPath,
-    TimeOpChoice,
+    FitDiagnostics, OnNonConverged, PrecondFallback, PrecondLevel, ProjectionChoice,
+    ProjectionPath, Solver, SolverPath, TimeOpChoice,
 };
 use super::Posterior;
 
@@ -123,6 +125,20 @@ pub struct LkgpConfig {
     /// `Default::default()` does not read the environment. Rust backend
     /// only — PJRT artifacts keep their compiled dense MVM.
     pub time_op: TimeOpChoice,
+    /// Which projection relates the n training targets to the latent
+    /// p*q grid (default [`ProjectionChoice::Mask`]: the paper's 0/1
+    /// observation mask, bit-compatible with the committed golden
+    /// posterior — training data must sit on grid cells).
+    /// [`ProjectionChoice::Interp`] enables SKI training: a sparse
+    /// interpolation matrix `W` onto the inducing grid, so off-grid
+    /// inputs become first-class (`Lkgp::fit_offgrid`); on a
+    /// `GridDataset` the observed cells are converted to
+    /// grid-coincident points first. The path taken is recorded in
+    /// [`FitDiagnostics::projection`] and persisted in checkpoints
+    /// (format v3). The CLI maps `--projection` / `LKGP_PROJECTION`
+    /// here; `Default::default()` does not read the environment. Rust
+    /// Kron backend only.
+    pub projection: ProjectionChoice,
     /// Admission window of the `lkgp serve` daemon's cross-request
     /// batcher, in milliseconds: how long the daemon collects predict
     /// requests from concurrent connections before coalescing them into
@@ -155,6 +171,7 @@ impl Default for LkgpConfig {
             mvm_retry_backoff_ms: 10,
             solver: Solver::Auto,
             time_op: TimeOpChoice::Dense,
+            projection: ProjectionChoice::Mask,
             serve_batch_window_ms: 2,
         }
     }
@@ -197,7 +214,18 @@ pub struct Lkgp;
 
 impl Lkgp {
     /// Fit on `data` with the backend/precision selected by `cfg`.
+    ///
+    /// With [`LkgpConfig::projection`] set to `Interp`, the observed
+    /// cells are converted to grid-coincident off-grid points
+    /// ([`OffGridDataset::from_grid`]) and the fit routes through
+    /// [`Lkgp::fit_offgrid`] — on a fully observed grid the linear
+    /// projection degenerates to the 0/1 mask and the posterior is
+    /// bit-identical to the mask path under [`Solver::Cg`].
     pub fn fit(data: &GridDataset, cfg: LkgpConfig) -> Result<LkgpFit> {
+        if let ProjectionChoice::Interp(_) = cfg.projection {
+            let od = OffGridDataset::from_grid(data)?;
+            return Self::fit_offgrid(&od, cfg);
+        }
         match &cfg.backend {
             Backend::Rust(mode) => match cfg.precision {
                 Precision::F64 => {
@@ -243,6 +271,56 @@ impl Lkgp {
         be: &mut B,
     ) -> Result<LkgpFit> {
         fit_with_backend(data, cfg, be)
+    }
+
+    /// SKI fit on off-grid data: build the sparse interpolation
+    /// projection `W` from the point coordinates and train against the
+    /// data-space system `W (K_SS (x) K_TT) W^T + sigma2 I`. The
+    /// returned posterior lives on the latent p*q inducing grid;
+    /// predictions at arbitrary points are `W_* mu` for a fresh
+    /// projection `W_*` built at the query coordinates (see
+    /// [`SparseProjection::build`]).
+    ///
+    /// Requires [`LkgpConfig::projection`] = `Interp` and the rust Kron
+    /// backend ([`Backend::Rust`] with [`MvmMode::Kron`]); the solver is
+    /// always CG — the direct spectral path addresses the grid system,
+    /// not the n-point data system.
+    pub fn fit_offgrid(data: &OffGridDataset, cfg: LkgpConfig) -> Result<LkgpFit> {
+        data.validate()?;
+        let degree = match cfg.projection {
+            ProjectionChoice::Interp(d) => d,
+            ProjectionChoice::Mask => anyhow::bail!(
+                "off-grid data needs an interpolation projection (--projection interp)"
+            ),
+        };
+        if !matches!(cfg.backend, Backend::Rust(MvmMode::Kron)) {
+            anyhow::bail!(
+                "projection interp supports only the rust Kron backend, got {:?}",
+                cfg.backend
+            );
+        }
+        let proj = SparseProjection::build(
+            &data.xs,
+            &data.xt,
+            &data.grid_s,
+            &data.grid_t,
+            degree,
+        )
+        .map_err(|e| anyhow::anyhow!("building interpolation projection: {e}"))?;
+        match cfg.precision {
+            Precision::F64 => {
+                let mut be =
+                    InterpRustBackend::<f64>::new(&data.time_family, data.q(), cfg.probes, proj)
+                        .with_time_op(cfg.time_op);
+                fit_interp(data, &cfg, &mut be)
+            }
+            Precision::F32 => {
+                let mut be =
+                    InterpRustBackend::<f32>::new(&data.time_family, data.q(), cfg.probes, proj)
+                        .with_time_op(cfg.time_op);
+                fit_interp(data, &cfg, &mut be)
+            }
+        }
     }
 }
 
@@ -751,6 +829,8 @@ fn fit_with_backend_inner<T: Scalar, B: KronBackend<T>>(
             _ => Precision::F64,
         },
         time_op: be.time_op_path(),
+        projection: ProjectionPath::Mask,
+        w: None,
         ds: data.s.cols,
         s: data.s.clone(),
         t: data.t.clone(),
@@ -761,6 +841,256 @@ fn fit_with_backend_inner<T: Scalar, B: KronBackend<T>>(
         y_std,
         n_samples: nsamp,
         masked_alpha: masked_alpha.row(0).iter().map(|x| x.to_f64()).collect(),
+        vm: vm_all.cast(),
+        f_prior: fp_all.cast(),
+        posterior: posterior.clone(),
+    });
+
+    Ok(LkgpFit {
+        posterior,
+        theta: params[..n_theta].to_vec(),
+        log_sigma2: params[n_theta],
+        loss_trace,
+        train_secs,
+        predict_secs,
+        cg_iters_total,
+        mvm_total,
+        kernel_bytes: be.kernel_bytes(),
+        profile: prof,
+        model,
+        diagnostics,
+    })
+}
+
+/// Entry point of the SKI fit: same parallel-region panic capture as
+/// [`fit_with_backend`].
+fn fit_interp<T: Scalar>(
+    data: &OffGridDataset,
+    cfg: &LkgpConfig,
+    be: &mut InterpRustBackend<T>,
+) -> Result<LkgpFit> {
+    crate::par::catch_region(|| fit_interp_inner(data, cfg, be))
+        .map_err(|rp| anyhow::Error::new(rp).context("parallel region fault during fit"))?
+}
+
+/// The SKI fit body: a statement-by-statement mirror of
+/// [`fit_with_backend_inner`] with the 0/1 mask generalized to the
+/// sparse interpolation projection `W`. The system vectors (targets,
+/// probes, CG solutions) live in the n-point *data space*; the prior
+/// samples, representer weights, and posterior live on the latent p*q
+/// grid, with `W` / `W^T` projecting between the two. When every
+/// training point coincides with a grid node the linear `W` is exactly
+/// the mask and (multiplying by a weight of exactly 1.0 being an IEEE
+/// identity) every stage below reproduces the mask path's bits.
+fn fit_interp_inner<T: Scalar>(
+    data: &OffGridDataset,
+    cfg: &LkgpConfig,
+    be: &mut InterpRustBackend<T>,
+) -> Result<LkgpFit> {
+    let mut prof = Profile::new();
+    let t_train = std::time::Instant::now();
+    let (p, q) = (data.p(), data.q());
+    let pq = p * q;
+    let n = data.n();
+    let y = data.y_std();
+    let (y_mean, y_std) = data.target_stats();
+    let s_nodes = data.s_matrix();
+
+    // the backend reads the grids; the mask argument is ignored (the
+    // projection already encodes the data -> grid incidence)
+    be.set_data(&s_nodes, &data.grid_t, &[])?;
+
+    // The direct spectral solver addresses the p*q grid system and
+    // cannot run here (dim() is n); Solver::Eig still requests the
+    // latent-grid KronEig preconditioner, which walks the fallback
+    // chain (the backend exposes no Gram factors by design).
+    let kron_eig_pre = cfg.solver == Solver::Eig;
+
+    // hyperparameter vector: [theta.., log_sigma2]
+    let mut kernel = crate::kernels::ProductGridKernel::new(1, &data.time_family, q);
+    let n_theta = kernel.n_theta();
+    let mut params = vec![0.0; n_theta + 1];
+    params[n_theta] = cfg.init_log_sigma2;
+
+    let mut adam = crate::optim::Adam::new(n_theta + 1, cfg.lr);
+    let mut rng = Rng::new(cfg.seed ^ 0x16C9);
+
+    // fixed Rademacher probes in data space (no mask factor: every
+    // point is observed; when W is the mask this draws the same stream
+    // and the mask path's `* 1.0` is the identity)
+    let n_probes = be.probes();
+    let z_probes = {
+        let mut z = Matrix::<T>::zeros(n_probes, n);
+        for i in 0..n_probes {
+            // drawn in f64, rounded once at the precision boundary
+            let row: Vec<T> =
+                rng.rademacher_f32(n).iter().map(|&r| T::from_f64(r as f64)).collect();
+            z.row_mut(i).copy_from_slice(&row);
+        }
+        z
+    };
+    let y_t: Vec<T> = y.iter().map(|&v| T::from_f64(v)).collect();
+
+    let cg_opts =
+        CgOptions { max_iters: cfg.cg_max_iters, tol: cfg.cg_tol, ..CgOptions::default() };
+    let mut loss_trace = Vec::with_capacity(cfg.train_iters);
+    let mut cg_iters_total = 0;
+    let mut mvm_total = 0;
+    let mut diagnostics = FitDiagnostics {
+        time_op: be.time_op_path(),
+        projection: ProjectionPath::Interp(be.proj().degree()),
+        ..FitDiagnostics::default()
+    };
+    let mut alpha = vec![T::ZERO; n];
+
+    for it in 0..cfg.train_iters + 1 {
+        let theta = &params[..n_theta];
+        let log_s2 = params[n_theta];
+        prof.time("set_hypers", || be.set_hypers(theta, log_s2))?;
+        kernel.set_theta(theta);
+
+        // batched solve: [y | probes]
+        let mut rhs = Matrix::<T>::zeros(1 + n_probes, n);
+        rhs.row_mut(0).copy_from_slice(&y_t);
+        for i in 0..n_probes {
+            rhs.row_mut(1 + i).copy_from_slice(z_probes.row(i));
+        }
+        let (sol, stats) = {
+            let (mut pre, mut level) = prof.time("precond", || {
+                build_precond(be, cfg.precond_rank, log_s2.exp(), kron_eig_pre, &mut diagnostics)
+            });
+            prof.time("cg_solve", || -> Result<(Matrix<T>, CgStats)> {
+                let d = &mut diagnostics;
+                solve_resilient(be, &rhs, &mut pre, &mut level, &cg_opts, cfg, d, "train")
+            })?
+        };
+        cg_iters_total += stats.iters;
+        mvm_total += stats.mvm_count;
+        alpha.copy_from_slice(sol.row(0));
+        // data-fit term accumulates in f64 in both precisions
+        let fit_term =
+            0.5 * y.iter().zip(&alpha).map(|(a, b)| a * b.to_f64()).sum::<f64>();
+        loss_trace.push(fit_term);
+
+        if it == cfg.train_iters {
+            break; // final solve only (alpha for prediction)
+        }
+        let w = {
+            let mut w = Matrix::<T>::zeros(n_probes, n);
+            for i in 0..n_probes {
+                w.row_mut(i).copy_from_slice(sol.row(1 + i));
+            }
+            w
+        };
+        let grads = prof.time("mll_grads", || be.mll_grads(&alpha, &w, &z_probes))?;
+        adam.step(&mut params, &grads);
+    }
+    diagnostics.grads_skipped_nonfinite = adam.skipped_nonfinite();
+    let train_secs = t_train.elapsed().as_secs_f64();
+
+    // ---- prediction via pathwise conditioning ----
+    let t_pred = std::time::Instant::now();
+    let sigma2 = params[n_theta].exp();
+    // exact predictive mean on the grid: mu = (K (x) K) W^T alpha
+    let grid_alpha = {
+        let a = Matrix::<T>::from_vec(1, n, alpha.clone());
+        be.proj().interp_apply_t(&a)
+    };
+    let mean_std = prof.time("predict_mean", || be.kron_apply(&grid_alpha))?;
+
+    // pathwise samples for predictive variance
+    let nsamp = cfg.n_samples.max(2);
+    let mut var_acc = vec![0.0f64; pq];
+    let mut mean_acc = vec![0.0f64; pq];
+    let chunk = PATHWISE_CHUNK;
+    let mut capture: Option<(Matrix<T>, Matrix<T>)> = if cfg.capture_pathwise {
+        Some((Matrix::zeros(nsamp, pq), Matrix::zeros(nsamp, pq)))
+    } else {
+        None
+    };
+    let (mut pre, mut level) =
+        build_precond(be, cfg.precond_rank, sigma2, kron_eig_pre, &mut diagnostics);
+    let mut done = 0;
+    while done < nsamp {
+        let b = chunk.min(nsamp - done);
+        let z = Matrix::<T>::from_vec(
+            b,
+            pq,
+            rng.normals(b * pq).iter().map(|&x| T::from_f64(x)).collect(),
+        );
+        let f_prior = prof.time("prior_sample", || be.prior_sample(&z))?;
+        // prior sample values at the data points: W f
+        let wf = be.proj().interp_apply(&f_prior);
+        // rhs = y - W f - eps, per-row noise streams forked from the
+        // master rng *sequentially* as in the mask path. Each element
+        // is formed in f64 and rounded once at the precision boundary.
+        let row_rngs: Vec<Rng> = (0..b).map(|r| rng.fork(r as u64)).collect();
+        let sigma = sigma2.sqrt();
+        let mut rhs = Matrix::<T>::zeros(b, n);
+        prof.time("rhs_assemble", || {
+            crate::par::par_chunks_mut("lkgp.rhs_assemble", &mut rhs.data, n, |r, row| {
+                let mut noise = row_rngs[r].clone();
+                for (c, x) in row.iter_mut().enumerate() {
+                    let eps = sigma * noise.normal();
+                    *x = T::from_f64(y[c] - wf[(r, c)].to_f64() - eps);
+                }
+            });
+        });
+        let (v, stats) = prof.time("cg_sample", || -> Result<(Matrix<T>, CgStats)> {
+            solve_resilient(
+                be,
+                &rhs,
+                &mut pre,
+                &mut level,
+                &cg_opts,
+                cfg,
+                &mut diagnostics,
+                "pathwise",
+            )
+        })?;
+        mvm_total += stats.mvm_count;
+        // f_post = f_prior + (K (x) K) W^T v
+        let u = be.proj().interp_apply_t(&v);
+        if let Some((vm_all, fp_all)) = capture.as_mut() {
+            for r in 0..b {
+                vm_all.row_mut(done + r).copy_from_slice(u.row(r));
+                fp_all.row_mut(done + r).copy_from_slice(f_prior.row(r));
+            }
+        }
+        let kv = prof.time("predict_apply", || be.kron_apply(&u))?;
+        prof.time("var_accum", || {
+            accumulate_pathwise_moments(&f_prior, &kv, &mut mean_acc, &mut var_acc);
+        });
+        done += b;
+    }
+    // raw scale: mean from exact solve, variance from samples + noise
+    let mean_std64: Vec<f64> = mean_std.row(0).iter().map(|x| x.to_f64()).collect();
+    let posterior =
+        finalize_posterior(&mean_std64, &mean_acc, &var_acc, nsamp, sigma2, y_mean, y_std);
+    let predict_secs = t_pred.elapsed().as_secs_f64();
+
+    let model = capture.map(|(vm_all, fp_all)| crate::model::TrainedModel {
+        name: data.name.clone(),
+        time_family: data.time_family.clone(),
+        precision: match T::NAME {
+            "f32" => Precision::F32,
+            _ => Precision::F64,
+        },
+        time_op: be.time_op_path(),
+        projection: ProjectionPath::Interp(be.proj().degree()),
+        w: Some(be.proj().clone()),
+        ds: 1,
+        s: s_nodes.clone(),
+        t: data.grid_t.clone(),
+        // serve-time replay is entirely grid-space (W^T is already
+        // folded into the stored tensors), so the grid mask is all-ones
+        mask: vec![1.0; pq],
+        theta: params[..n_theta].to_vec(),
+        log_sigma2: params[n_theta],
+        y_mean,
+        y_std,
+        n_samples: nsamp,
+        masked_alpha: grid_alpha.row(0).iter().map(|x| x.to_f64()).collect(),
         vm: vm_all.cast(),
         f_prior: fp_all.cast(),
         posterior: posterior.clone(),

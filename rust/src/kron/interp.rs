@@ -1,0 +1,904 @@
+//! Sparse kernel interpolation (SKI) projection onto the latent grid.
+//!
+//! The paper's projection `P` is a 0/1 mask, which restricts training
+//! data to (partial) grid cells. This module generalizes `P` to a
+//! sparse interpolation matrix `W` (n x p*q) in the KISS-GP lineage:
+//! each off-grid input `(x_s, x_t)` is written as a convex/convolution
+//! combination of nearby inducing-grid nodes, and the observed-space
+//! system operator becomes `W (K_SS (x) K_TT) W^T + sigma2 I`.
+//!
+//! Determinism contract: `W` construction is sequential and depends
+//! only on the inputs; [`SparseProjection::interp_apply`] /
+//! [`SparseProjection::interp_apply_t`] compute every output element by
+//! an independent gather in fixed ascending order, chunked at a fixed
+//! block size under `Schedule::Steal` with one writer per chunk — so
+//! results are bit-identical at any `LKGP_THREADS` setting.
+//!
+//! Degenerate-case guarantee (exercised by the differential test in
+//! `rust/tests/numerics.rs`): when an input coincides bitwise with a
+//! grid node, its linear stencil collapses to a single weight of
+//! exactly `1.0`, and `W` acts as the 0/1 mask — `1.0 * x == x` in IEEE
+//! arithmetic, so the whole SKI fit reproduces the mask fit bit for
+//! bit on grid-coincident data.
+
+use crate::linalg::{Matrix, Scalar};
+
+use super::KronOp;
+
+/// Fixed chunk length (in output elements) for the SpMM sweeps. The
+/// chunk grid depends only on this constant and the output shape —
+/// never on thread count — which is what keeps steal-scheduled runs
+/// bit-identical (each element is an independent gather).
+const SPMM_CHUNK: usize = 256;
+
+/// Interpolation stencil family for [`SparseProjection`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum InterpDegree {
+    /// Two-point-per-axis linear interpolation (tensor stencil <= 4).
+    /// Rows sum to exactly 1.0; grid-coincident inputs collapse to a
+    /// single weight of exactly 1.0 (the mask-degenerate case).
+    #[default]
+    Linear,
+    /// Four-point-per-axis cubic convolution (Keys, a = -1/2; tensor
+    /// stencil <= 16). Rows are normalized to sum to 1.0 up to a few
+    /// ulp; exact for cubics on uniform interior grids.
+    Cubic,
+}
+
+impl InterpDegree {
+    /// Stencil width along one axis (2 linear, 4 cubic).
+    pub fn stencil_1d(self) -> usize {
+        match self {
+            InterpDegree::Linear => 2,
+            InterpDegree::Cubic => 4,
+        }
+    }
+
+    /// Maximum row support of the 2-D tensor-product stencil.
+    pub fn stencil_2d(self) -> usize {
+        self.stencil_1d() * self.stencil_1d()
+    }
+}
+
+impl std::fmt::Display for InterpDegree {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InterpDegree::Linear => write!(f, "linear"),
+            InterpDegree::Cubic => write!(f, "cubic"),
+        }
+    }
+}
+
+/// Deterministic CSR sparse interpolation matrix `W` (n rows over an
+/// n-point dataset, `p*q` columns over the spatial x time inducing
+/// grid, row-major grid layout `j*q + k`).
+///
+/// Invariants (validated on every construction path):
+/// * `indptr` is monotone with `indptr[0] == 0`, `indptr[n] == nnz`;
+/// * every row has between 1 and [`InterpDegree::stencil_2d`] entries,
+///   with strictly ascending in-range column indices;
+/// * rows sum to 1.0 — exactly for `Linear` (the final weight is
+///   computed as `1.0 - partial_sum`), to a few ulp for `Cubic`;
+/// * a prebuilt transpose (CSC with ascending row order per column)
+///   makes [`SparseProjection::interp_apply_t`] an *exact* transpose:
+///   both directions gather in the same fixed order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseProjection {
+    n: usize,
+    grid_p: usize,
+    grid_q: usize,
+    degree: InterpDegree,
+    indptr: Vec<usize>,
+    cols: Vec<usize>,
+    weights: Vec<f64>,
+    // transpose (CSC), rebuilt deterministically from the CSR arrays
+    t_indptr: Vec<usize>,
+    t_rows: Vec<usize>,
+    t_weights: Vec<f64>,
+}
+
+/// One-axis stencil: ascending (node, weight) pairs, merged and
+/// boundary-clamped; exact node hits collapse to a single 1.0 weight.
+fn stencil_1d(x: f64, grid: &[f64], degree: InterpDegree) -> Vec<(usize, f64)> {
+    let len = grid.len();
+    if len == 1 {
+        return vec![(0, 1.0)];
+    }
+    // cell search: largest j with grid[j] <= x, clamped into [0, len-2]
+    let j = match grid.partition_point(|&g| g <= x) {
+        0 => 0,
+        k => (k - 1).min(len - 2),
+    };
+    let step = grid[j + 1] - grid[j];
+    // boundary clamp: inputs outside the grid project onto the edge cell
+    let frac = ((x - grid[j]) / step).clamp(0.0, 1.0);
+    if frac == 0.0 {
+        return vec![(j, 1.0)];
+    }
+    if frac == 1.0 {
+        return vec![(j + 1, 1.0)];
+    }
+    match degree {
+        InterpDegree::Linear => vec![(j, 1.0 - frac), (j + 1, frac)],
+        InterpDegree::Cubic => {
+            // Keys cubic convolution weights (a = -1/2) at t = frac for
+            // nodes j-1 .. j+2; indices clamp to the grid and clamped
+            // duplicates merge by weight accumulation (sum preserved).
+            let t = frac;
+            let w = [
+                ((-0.5 * t + 1.0) * t - 0.5) * t,
+                (1.5 * t - 2.5) * t * t + 1.0,
+                ((-1.5 * t + 2.0) * t + 0.5) * t,
+                (0.5 * t - 0.5) * t * t,
+            ];
+            let mut merged: Vec<(usize, f64)> = Vec::with_capacity(4);
+            for (off, &wk) in w.iter().enumerate() {
+                let idx = (j + off).saturating_sub(1).min(len - 1);
+                match merged.last_mut() {
+                    Some((last, acc)) if *last == idx => *acc += wk,
+                    _ => merged.push((idx, wk)),
+                }
+            }
+            merged.retain(|&(_, wk)| wk != 0.0);
+            merged
+        }
+    }
+}
+
+impl SparseProjection {
+    /// Build `W` for data points `(xs[i], xt[i])` over the inducing
+    /// grid `grid_s x grid_t` (both strictly increasing). Construction
+    /// is sequential and deterministic; rows are normalized to sum to
+    /// 1.0 (see [`SparseProjection`] invariants) and stencils never
+    /// index outside the grid (boundary clamping).
+    pub fn build(
+        xs: &[f64],
+        xt: &[f64],
+        grid_s: &[f64],
+        grid_t: &[f64],
+        degree: InterpDegree,
+    ) -> Result<Self, String> {
+        if xs.len() != xt.len() {
+            return Err(format!(
+                "coordinate length mismatch: {} spatial vs {} time",
+                xs.len(),
+                xt.len()
+            ));
+        }
+        if xs.is_empty() {
+            return Err("no data points to interpolate".into());
+        }
+        for (name, grid) in [("spatial", grid_s), ("time", grid_t)] {
+            if grid.is_empty() {
+                return Err(format!("{name} inducing grid is empty"));
+            }
+            if grid.iter().any(|g| !g.is_finite()) {
+                return Err(format!("{name} inducing grid has non-finite nodes"));
+            }
+            if grid.windows(2).any(|w| w[0] >= w[1]) {
+                return Err(format!("{name} inducing grid is not strictly increasing"));
+            }
+        }
+        if xs.iter().chain(xt).any(|x| !x.is_finite()) {
+            return Err("non-finite data coordinate".into());
+        }
+        let n = xs.len();
+        let q = grid_t.len();
+        let mut indptr = Vec::with_capacity(n + 1);
+        indptr.push(0usize);
+        let mut cols = Vec::with_capacity(n * degree.stencil_2d());
+        let mut weights = Vec::with_capacity(n * degree.stencil_2d());
+        for i in 0..n {
+            let sa = stencil_1d(xs[i], grid_s, degree);
+            let sb = stencil_1d(xt[i], grid_t, degree);
+            let start = weights.len();
+            for &(ja, wa) in &sa {
+                for &(kb, wb) in &sb {
+                    cols.push(ja * q + kb);
+                    weights.push(wa * wb);
+                }
+            }
+            let row = &mut weights[start..];
+            match degree {
+                InterpDegree::Linear => {
+                    // exact unit row sum: the last weight is the
+                    // remainder 1.0 - (ascending partial sum), so the
+                    // same ascending fold recovers exactly 1.0
+                    if row.len() > 1 {
+                        let partial: f64 = row[..row.len() - 1].iter().sum();
+                        let last = row.len() - 1;
+                        row[last] = 1.0 - partial;
+                    }
+                }
+                InterpDegree::Cubic => {
+                    // normalize: the analytic sum is 1, the float sum a
+                    // few ulp off; division pins it to 1.0 +- O(ulp)
+                    let sum: f64 = row.iter().sum();
+                    if row.len() > 1 {
+                        for w in row.iter_mut() {
+                            *w /= sum;
+                        }
+                    }
+                }
+            }
+            indptr.push(weights.len());
+        }
+        Self::from_parts(n, grid_s.len(), q, degree, indptr, cols, weights)
+    }
+
+    /// Reassemble a projection from raw CSR arrays (the checkpoint load
+    /// path). Validates every invariant listed on [`SparseProjection`]
+    /// and rebuilds the transpose deterministically; returns a
+    /// description of the first violation on malformed input.
+    pub fn from_parts(
+        n: usize,
+        grid_p: usize,
+        grid_q: usize,
+        degree: InterpDegree,
+        indptr: Vec<usize>,
+        cols: Vec<usize>,
+        weights: Vec<f64>,
+    ) -> Result<Self, String> {
+        let m = grid_p * grid_q;
+        if n == 0 || m == 0 {
+            return Err("empty projection (zero rows or grid cells)".into());
+        }
+        if indptr.len() != n + 1 {
+            return Err(format!("indptr length {} != n+1 = {}", indptr.len(), n + 1));
+        }
+        if indptr[0] != 0 {
+            return Err(format!("indptr[0] = {} != 0", indptr[0]));
+        }
+        if *indptr.last().unwrap() != cols.len() || cols.len() != weights.len() {
+            return Err(format!(
+                "nnz mismatch: indptr ends at {}, {} cols, {} weights",
+                indptr.last().unwrap(),
+                cols.len(),
+                weights.len()
+            ));
+        }
+        for i in 0..n {
+            let (lo, hi) = (indptr[i], indptr[i + 1]);
+            if hi < lo {
+                return Err(format!("indptr not monotone at row {i}"));
+            }
+            let width = hi - lo;
+            if width == 0 || width > degree.stencil_2d() {
+                return Err(format!(
+                    "row {i} support {width} outside 1..={} for {degree} stencil",
+                    degree.stencil_2d()
+                ));
+            }
+            for e in lo..hi {
+                if cols[e] >= m {
+                    return Err(format!("row {i} column {} >= grid size {m}", cols[e]));
+                }
+                if e > lo && cols[e] <= cols[e - 1] {
+                    return Err(format!("row {i} columns not strictly ascending"));
+                }
+                if !weights[e].is_finite() {
+                    return Err(format!("row {i} has non-finite weight"));
+                }
+            }
+        }
+        // deterministic CSC transpose: counting sort over columns; rows
+        // ascend within each column because CSR rows are visited in order
+        let nnz = cols.len();
+        let mut t_indptr = vec![0usize; m + 1];
+        for &c in &cols {
+            t_indptr[c + 1] += 1;
+        }
+        for c in 0..m {
+            t_indptr[c + 1] += t_indptr[c];
+        }
+        let mut cursor = t_indptr.clone();
+        let mut t_rows = vec![0usize; nnz];
+        let mut t_weights = vec![0.0f64; nnz];
+        for i in 0..n {
+            for e in indptr[i]..indptr[i + 1] {
+                let slot = cursor[cols[e]];
+                t_rows[slot] = i;
+                t_weights[slot] = weights[e];
+                cursor[cols[e]] += 1;
+            }
+        }
+        Ok(SparseProjection {
+            n,
+            grid_p,
+            grid_q,
+            degree,
+            indptr,
+            cols,
+            weights,
+            t_indptr,
+            t_rows,
+            t_weights,
+        })
+    }
+
+    /// Number of data rows n.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Spatial grid size p.
+    pub fn grid_p(&self) -> usize {
+        self.grid_p
+    }
+
+    /// Time grid size q.
+    pub fn grid_q(&self) -> usize {
+        self.grid_q
+    }
+
+    /// Grid dimension p*q (the column count of `W`).
+    pub fn grid_dim(&self) -> usize {
+        self.grid_p * self.grid_q
+    }
+
+    /// Stencil family this projection was built with.
+    pub fn degree(&self) -> InterpDegree {
+        self.degree
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// CSR row pointer array (length n+1) — checkpoint serialization.
+    pub fn indptr(&self) -> &[usize] {
+        &self.indptr
+    }
+
+    /// CSR column indices (length nnz) — checkpoint serialization.
+    pub fn cols(&self) -> &[usize] {
+        &self.cols
+    }
+
+    /// CSR weights (length nnz) — checkpoint serialization.
+    pub fn row_weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    /// Entries of row `i` as parallel (columns, weights) slices.
+    pub fn row(&self, i: usize) -> (&[usize], &[f64]) {
+        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.cols[lo..hi], &self.weights[lo..hi])
+    }
+
+    /// `W v^T` per batch row: `(b x p*q) -> (b x n)`. Each output
+    /// element is one CSR-row gather in fixed ascending entry order;
+    /// the flattened output is chunked at a fixed block size under
+    /// `Schedule::Steal` (one writer per chunk), so the result is
+    /// bit-identical at any thread count.
+    pub fn interp_apply<T: Scalar>(&self, v: &Matrix<T>) -> Matrix<T> {
+        assert_eq!(v.cols, self.grid_dim(), "interp_apply: grid width mismatch");
+        let n = self.n;
+        let mut out = Matrix::zeros(v.rows, n);
+        crate::par::par_chunks_mut_steal("interp.apply", &mut out.data, SPMM_CHUNK, |ci, chunk| {
+            let base = ci * SPMM_CHUNK;
+            for (off, o) in chunk.iter_mut().enumerate() {
+                let e = base + off;
+                let (b, i) = (e / n, e % n);
+                let vrow = v.row(b);
+                let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+                let mut acc = T::from_f64(self.weights[lo]) * vrow[self.cols[lo]];
+                for k in lo + 1..hi {
+                    acc += T::from_f64(self.weights[k]) * vrow[self.cols[k]];
+                }
+                *o = acc;
+            }
+        });
+        out
+    }
+
+    /// `W^T v^T` per batch row: `(b x n) -> (b x p*q)`. Gathers through
+    /// the prebuilt CSC transpose in ascending data-row order — the
+    /// exact transpose of [`SparseProjection::interp_apply`] — with the
+    /// same fixed-chunk steal schedule and determinism guarantee. Grid
+    /// cells no stencil touches come back exactly `+0.0`.
+    pub fn interp_apply_t<T: Scalar>(&self, v: &Matrix<T>) -> Matrix<T> {
+        assert_eq!(v.cols, self.n, "interp_apply_t: data width mismatch");
+        let m = self.grid_dim();
+        let mut out = Matrix::zeros(v.rows, m);
+        crate::par::par_chunks_mut_steal(
+            "interp.apply_t",
+            &mut out.data,
+            SPMM_CHUNK,
+            |ci, chunk| {
+                let base = ci * SPMM_CHUNK;
+                for (off, o) in chunk.iter_mut().enumerate() {
+                    let e = base + off;
+                    let (b, c) = (e / m, e % m);
+                    let vrow = v.row(b);
+                    let (lo, hi) = (self.t_indptr[c], self.t_indptr[c + 1]);
+                    if lo == hi {
+                        *o = T::ZERO;
+                        continue;
+                    }
+                    let mut acc = T::from_f64(self.t_weights[lo]) * vrow[self.t_rows[lo]];
+                    for k in lo + 1..hi {
+                        acc += T::from_f64(self.t_weights[k]) * vrow[self.t_rows[k]];
+                    }
+                    *o = acc;
+                }
+            },
+        );
+        out
+    }
+
+    /// `W^T v` for a single f64 vector (length n) — the gradient
+    /// projection path. Same gather order as
+    /// [`SparseProjection::interp_apply_t`], sequential.
+    pub fn project_vec_f64(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.n, "project_vec_f64: length mismatch");
+        let m = self.grid_dim();
+        let mut out = vec![0.0f64; m];
+        for (c, o) in out.iter_mut().enumerate() {
+            let (lo, hi) = (self.t_indptr[c], self.t_indptr[c + 1]);
+            if lo == hi {
+                continue;
+            }
+            let mut acc = self.t_weights[lo] * v[self.t_rows[lo]];
+            for k in lo + 1..hi {
+                acc += self.t_weights[k] * v[self.t_rows[k]];
+            }
+            *o = acc;
+        }
+        out
+    }
+}
+
+/// SKI system operator `W (K_SS (x) K_TT) W^T + sigma2 I` over the
+/// n-point data space, sharing the CG/`SystemOp` plumbing with
+/// [`super::MaskedKronSystem`] (same `apply_batch`/`diag`/`kernel_col`
+/// surface, so the preconditioner fallback chain and solver resilience
+/// policies apply unchanged).
+#[derive(Clone, Debug)]
+pub struct InterpKronSystem<T: Scalar = f64> {
+    /// The latent Kronecker product in factored form (p*q grid space).
+    pub op: KronOp<T>,
+    /// The sparse interpolation projection (n x p*q).
+    pub proj: SparseProjection,
+    /// Homoskedastic observation-noise variance.
+    pub sigma2: T,
+}
+
+impl<T: Scalar> InterpKronSystem<T> {
+    /// System operator from a factored Kron product and a projection
+    /// (asserts the grid dimensions agree).
+    pub fn new(op: KronOp<T>, proj: SparseProjection, sigma2: T) -> Self {
+        assert_eq!(proj.grid_dim(), op.dim(), "projection/grid dimension mismatch");
+        InterpKronSystem { op, proj, sigma2 }
+    }
+
+    /// Data-space dimension n (the system is n x n).
+    pub fn dim(&self) -> usize {
+        self.proj.n()
+    }
+
+    /// System MVM `W (K (x) K) W^T v + sigma2 v`, batched over rows of
+    /// `v` (each row length n). Mirrors the masked system's arithmetic:
+    /// on a grid-coincident linear projection every gather is a single
+    /// `1.0 * x` multiply, so the result is bit-equal to
+    /// [`super::MaskedKronSystem::apply_batch`] on a full grid.
+    pub fn apply_batch(&self, v: &Matrix<T>) -> Matrix<T> {
+        assert_eq!(v.cols, self.dim(), "system width mismatch");
+        let u = self.proj.interp_apply_t(v);
+        let ku = self.op.apply_batch(&u);
+        let gathered = self.proj.interp_apply(&ku);
+        let n = self.dim();
+        let mut out = gathered;
+        crate::par::par_chunks_mut_cheap("interp.noise", &mut out.data, n.max(1), |b, row| {
+            let vrow = v.row(b);
+            for (x, v0) in row.iter_mut().zip(vrow) {
+                *x = *x + self.sigma2 * *v0;
+            }
+        });
+        out
+    }
+
+    /// Diagonal of the system matrix (for Jacobi preconditioning):
+    /// `diag_i = w_i^T (K_SS (x) K_TT)[rows] w_i + sigma2`, computed
+    /// exactly from the <= stencil^2 x stencil^2 local quadratic form.
+    pub fn diag(&self) -> Vec<T> {
+        let q = self.op.q();
+        let n = self.dim();
+        let mut d = vec![T::ZERO; n];
+        crate::par::par_chunks_mut_steal("interp.diag", &mut d, SPMM_CHUNK, |ci, seg| {
+            let base = ci * SPMM_CHUNK;
+            for (off, out) in seg.iter_mut().enumerate() {
+                let i = base + off;
+                let (cols, ws) = self.proj.row(i);
+                let mut acc: Option<T> = None;
+                for (a, &ca) in cols.iter().enumerate() {
+                    let (ja, ka) = (ca / q, ca % q);
+                    for (b, &cb) in cols.iter().enumerate() {
+                        let (jb, kb) = (cb / q, cb % q);
+                        let wp = T::from_f64(ws[a]) * T::from_f64(ws[b]);
+                        let term = wp * self.op.kss[(ja, jb)] * self.op.ktt[(ka, kb)];
+                        acc = Some(match acc {
+                            None => term,
+                            Some(s) => s + term,
+                        });
+                    }
+                }
+                *out = acc.expect("row support is never empty") + self.sigma2;
+            }
+        });
+        d
+    }
+
+    /// One column of the data-space kernel matrix `W (K (x) K) W^T`
+    /// (no noise), for lazy pivoted Cholesky.
+    pub fn kernel_col(&self, idx: usize) -> Vec<T> {
+        let q = self.op.q();
+        let n = self.dim();
+        let (bcols, bws) = self.proj.row(idx);
+        let mut col = vec![T::ZERO; n];
+        crate::par::par_chunks_mut_steal("interp.kernel_col", &mut col, SPMM_CHUNK, |ci, seg| {
+            let base = ci * SPMM_CHUNK;
+            for (off, out) in seg.iter_mut().enumerate() {
+                let i = base + off;
+                let (acols, aws) = self.proj.row(i);
+                let mut acc: Option<T> = None;
+                for (a, &ca) in acols.iter().enumerate() {
+                    let (ja, ka) = (ca / q, ca % q);
+                    for (b, &cb) in bcols.iter().enumerate() {
+                        let (jb, kb) = (cb / q, cb % q);
+                        let v = self.op.kss[(ja, jb)] * self.op.ktt[(ka, kb)];
+                        let term = v * T::from_f64(aws[a]) * T::from_f64(bws[b]);
+                        acc = Some(match acc {
+                            None => term,
+                            Some(s) => s + term,
+                        });
+                    }
+                }
+                *out = acc.expect("row support is never empty");
+            }
+        });
+        col
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::{assert_close, prop_check};
+
+    /// A strictly increasing grid with `len` nodes on roughly [0, 1].
+    fn linspace(len: usize) -> Vec<f64> {
+        (0..len).map(|k| k as f64 / (len.max(2) - 1) as f64).collect()
+    }
+
+    fn random_projection(g: &mut crate::util::testing::Gen, degree: InterpDegree) -> SparseProjection {
+        let (p, q, n) = (g.size(2, 9), g.size(2, 9), g.size(1, 40));
+        let (gs, gt) = (linspace(p), linspace(q));
+        let xs: Vec<f64> = (0..n).map(|_| g.f64_in(-0.3, 1.3)).collect();
+        let xt: Vec<f64> = (0..n).map(|_| g.f64_in(-0.3, 1.3)).collect();
+        SparseProjection::build(&xs, &xt, &gs, &gt, degree).unwrap()
+    }
+
+    #[test]
+    fn prop_linear_rows_sum_exactly_one() {
+        prop_check("interp-linear-row-sum", 11, 60, |g| {
+            let w = random_projection(g, InterpDegree::Linear);
+            for i in 0..w.n() {
+                let (_, ws) = w.row(i);
+                let sum: f64 = ws.iter().sum();
+                if sum != 1.0 {
+                    return Err(format!("row {i} sums to {sum:?}, not exactly 1.0"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_cubic_rows_sum_to_one_within_1e12() {
+        prop_check("interp-cubic-row-sum", 12, 60, |g| {
+            let w = random_projection(g, InterpDegree::Cubic);
+            for i in 0..w.n() {
+                let (_, ws) = w.row(i);
+                let sum: f64 = ws.iter().sum();
+                if (sum - 1.0).abs() > 1e-12 {
+                    return Err(format!("row {i} sums to {sum}, off by {}", sum - 1.0));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_support_and_bounds() {
+        prop_check("interp-support-bounds", 13, 60, |g| {
+            for degree in [InterpDegree::Linear, InterpDegree::Cubic] {
+                let w = random_projection(g, degree);
+                let m = w.grid_dim();
+                for i in 0..w.n() {
+                    let (cols, _) = w.row(i);
+                    if cols.is_empty() || cols.len() > degree.stencil_2d() {
+                        return Err(format!(
+                            "row {i} support {} outside 1..={}",
+                            cols.len(),
+                            degree.stencil_2d()
+                        ));
+                    }
+                    // boundary clamping: even for inputs drawn outside
+                    // the grid every index stays in range and ascending
+                    for win in cols.windows(2) {
+                        if win[0] >= win[1] {
+                            return Err(format!("row {i} columns not ascending"));
+                        }
+                    }
+                    if *cols.last().unwrap() >= m {
+                        return Err(format!("row {i} indexes past the grid"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_apply_t_is_exact_transpose() {
+        // <Wx, y> == <x, W^T y> in f64 *bits* on integer-exact data:
+        // small-integer weights/values keep every product and sum exact,
+        // so any ordering discrepancy would show up as a bit mismatch.
+        prop_check("interp-transpose-exact", 14, 40, |g| {
+            for degree in [InterpDegree::Linear, InterpDegree::Cubic] {
+                let w = random_projection(g, degree);
+                let (n, m) = (w.n(), w.grid_dim());
+                // integer-exact replacement weights: reuse the sparsity
+                // pattern, substitute small integers via from_parts
+                let iw: Vec<f64> =
+                    (0..w.nnz()).map(|_| (g.size(0, 8) as f64) - 4.0).collect();
+                let w = SparseProjection::from_parts(
+                    n,
+                    w.grid_p(),
+                    w.grid_q(),
+                    degree,
+                    w.indptr().to_vec(),
+                    w.cols().to_vec(),
+                    iw,
+                )
+                .unwrap();
+                let x = Matrix::from_vec(
+                    1,
+                    m,
+                    (0..m).map(|_| (g.size(0, 16) as f64) - 8.0).collect(),
+                );
+                let y = Matrix::from_vec(
+                    1,
+                    n,
+                    (0..n).map(|_| (g.size(0, 16) as f64) - 8.0).collect(),
+                );
+                let wx = w.interp_apply(&x);
+                let wty = w.interp_apply_t(&y);
+                let lhs: f64 = wx.row(0).iter().zip(y.row(0)).map(|(a, b)| a * b).sum();
+                let rhs: f64 = x.row(0).iter().zip(wty.row(0)).map(|(a, b)| a * b).sum();
+                if lhs.to_bits() != rhs.to_bits() {
+                    return Err(format!("<Wx,y> = {lhs:?} != <x,W^T y> = {rhs:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_f32_agrees_with_f64() {
+        prop_check("interp-f32-vs-f64", 15, 30, |g| {
+            for degree in [InterpDegree::Linear, InterpDegree::Cubic] {
+                let w = random_projection(g, degree);
+                let (n, m, b) = (w.n(), w.grid_dim(), g.size(1, 3));
+                let v64 = Matrix::from_vec(b, m, g.vec_normal(b * m));
+                let v32: Matrix<f32> = v64.cast();
+                let got64 = w.interp_apply(&v64);
+                let got32 = w.interp_apply(&v32);
+                let tol = crate::util::testing::prec_tol::<f32>(1e-12, 2e-5);
+                assert_close(
+                    &got32.data.iter().map(|x| *x as f64).collect::<Vec<_>>(),
+                    &got64.data,
+                    tol,
+                )?;
+                let u64m = Matrix::from_vec(b, n, g.vec_normal(b * n));
+                let u32m: Matrix<f32> = u64m.cast();
+                assert_close(
+                    &w.interp_apply_t(&u32m).data.iter().map(|x| *x as f64).collect::<Vec<_>>(),
+                    &w.interp_apply_t(&u64m).data,
+                    tol,
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn grid_coincident_linear_rows_are_unit_masks() {
+        // the degenerate case the differential test relies on: inputs
+        // bitwise on grid nodes collapse to a single exact 1.0 weight
+        let (gs, gt) = (linspace(5), linspace(7));
+        let mut xs = Vec::new();
+        let mut xt = Vec::new();
+        for &a in &gs {
+            for &b in &gt {
+                xs.push(a);
+                xt.push(b);
+            }
+        }
+        let w = SparseProjection::build(&xs, &xt, &gs, &gt, InterpDegree::Linear).unwrap();
+        assert_eq!(w.nnz(), w.n());
+        for i in 0..w.n() {
+            let (cols, ws) = w.row(i);
+            assert_eq!(cols, &[i], "row {i} must hit exactly its own node");
+            assert_eq!(ws[0].to_bits(), 1.0f64.to_bits());
+        }
+    }
+
+    #[test]
+    fn cubic_reproduces_cubics_on_interior() {
+        // Keys interpolation with a = -1/2 is exact for quadratics on
+        // uniform grids; check interior points against x^2 - 0.5 x
+        let gs = linspace(12);
+        let gt = linspace(12);
+        let f = |a: f64, b: f64| a * a - 0.5 * b + 0.25 * a * b;
+        let mut grid_vals = Vec::new();
+        for &a in &gs {
+            for &b in &gt {
+                grid_vals.push(f(a, b));
+            }
+        }
+        let xs = vec![0.31, 0.47, 0.55, 0.68];
+        let xt = vec![0.42, 0.29, 0.61, 0.53];
+        let w = SparseProjection::build(&xs, &xt, &gs, &gt, InterpDegree::Cubic).unwrap();
+        let v = Matrix::from_vec(1, gs.len() * gt.len(), grid_vals);
+        let got = w.interp_apply(&v);
+        let want: Vec<f64> = xs.iter().zip(&xt).map(|(&a, &b)| f(a, b)).collect();
+        assert_close(got.row(0), &want, 1e-10).unwrap();
+    }
+
+    #[test]
+    fn from_parts_rejects_malformed_inputs() {
+        let bad = |r: Result<SparseProjection, String>, needle: &str| {
+            let err = r.expect_err("must reject");
+            assert!(err.contains(needle), "error {err:?} missing {needle:?}");
+        };
+        // non-monotone indptr
+        bad(
+            SparseProjection::from_parts(
+                2,
+                2,
+                2,
+                InterpDegree::Linear,
+                vec![0, 2, 1],
+                vec![0, 1],
+                vec![0.5, 0.5],
+            ),
+            "nnz mismatch",
+        );
+        // column past the grid
+        bad(
+            SparseProjection::from_parts(
+                1,
+                2,
+                2,
+                InterpDegree::Linear,
+                vec![0, 1],
+                vec![4],
+                vec![1.0],
+            ),
+            ">= grid size",
+        );
+        // support wider than the stencil
+        bad(
+            SparseProjection::from_parts(
+                1,
+                3,
+                3,
+                InterpDegree::Linear,
+                vec![0, 5],
+                vec![0, 1, 2, 3, 4],
+                vec![0.2; 5],
+            ),
+            "support",
+        );
+        // unsorted columns
+        bad(
+            SparseProjection::from_parts(
+                1,
+                2,
+                2,
+                InterpDegree::Linear,
+                vec![0, 2],
+                vec![1, 0],
+                vec![0.5, 0.5],
+            ),
+            "ascending",
+        );
+        // non-finite weight
+        bad(
+            SparseProjection::from_parts(
+                1,
+                2,
+                2,
+                InterpDegree::Linear,
+                vec![0, 1],
+                vec![0],
+                vec![f64::NAN],
+            ),
+            "non-finite",
+        );
+    }
+
+    #[test]
+    fn build_rejects_unsorted_grid() {
+        let err = SparseProjection::build(
+            &[0.5],
+            &[0.5],
+            &[0.0, 1.0, 0.5],
+            &[0.0, 1.0],
+            InterpDegree::Linear,
+        )
+        .expect_err("must reject");
+        assert!(err.contains("strictly increasing"), "{err}");
+    }
+
+    #[test]
+    fn interp_system_matches_dense_reference() {
+        prop_check("interp-system-vs-dense", 16, 15, |g| {
+            let (p, q) = (g.size(2, 6), g.size(2, 6));
+            let op = KronOp::new(
+                Matrix::from_vec(p, p, g.spd(p)),
+                Matrix::from_vec(q, q, g.spd(q)),
+            );
+            let n = g.size(1, 12);
+            let (gs, gt) = (linspace(p), linspace(q));
+            let xs: Vec<f64> = (0..n).map(|_| g.f64_in(0.0, 1.0)).collect();
+            let xt: Vec<f64> = (0..n).map(|_| g.f64_in(0.0, 1.0)).collect();
+            let w =
+                SparseProjection::build(&xs, &xt, &gs, &gt, InterpDegree::Cubic).unwrap();
+            let sys = InterpKronSystem::new(op.clone(), w.clone(), 0.3);
+            // dense reference: A = W K W^T + sigma2 I
+            let kdense = op.dense();
+            let m = p * q;
+            let mut wk = Matrix::zeros(n, m); // W K
+            for i in 0..n {
+                let (cols, ws) = w.row(i);
+                for jm in 0..m {
+                    let mut s = 0.0;
+                    for (e, &c) in cols.iter().enumerate() {
+                        s += ws[e] * kdense[(c, jm)];
+                    }
+                    wk[(i, jm)] = s;
+                }
+            }
+            let mut a = Matrix::zeros(n, n); // W K W^T + sigma2 I
+            for i in 0..n {
+                for j in 0..n {
+                    let (cols, ws) = w.row(j);
+                    let mut s = 0.0;
+                    for (e, &c) in cols.iter().enumerate() {
+                        s += wk[(i, c)] * ws[e];
+                    }
+                    a[(i, j)] = s + if i == j { 0.3 } else { 0.0 };
+                }
+            }
+            let v = Matrix::from_vec(1, n, g.vec_normal(n));
+            let got = sys.apply_batch(&v);
+            let want = a.matvec(v.row(0));
+            assert_close(got.row(0), &want, 1e-8)?;
+            // diag agrees with the dense diagonal
+            let dg: Vec<f64> = sys.diag().iter().map(|x| x.to_f64()).collect();
+            let dwant: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
+            assert_close(&dg, &dwant, 1e-8)?;
+            // kernel_col agrees with the noise-free column
+            let idx = g.size(0, n - 1);
+            let cg: Vec<f64> = sys.kernel_col(idx).iter().map(|x| x.to_f64()).collect();
+            let cwant: Vec<f64> = (0..n)
+                .map(|i| a[(i, idx)] - if i == idx { 0.3 } else { 0.0 })
+                .collect();
+            assert_close(&cg, &cwant, 1e-8)
+        });
+    }
+}

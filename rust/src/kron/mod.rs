@@ -8,6 +8,7 @@
 //! to the observed subspace equals `P K P^T + sigma2 I` exactly.
 
 pub mod breakeven;
+pub mod interp;
 pub mod lazy;
 pub mod multi;
 pub mod toeplitz;

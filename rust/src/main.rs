@@ -25,12 +25,14 @@ use lkgp::coordinator::{experiments, ExperimentScale};
 use lkgp::data::climate::ClimateSim;
 use lkgp::data::lcbench::LcBenchSim;
 use lkgp::data::sarcos::SarcosSim;
-use lkgp::data::synthetic::well_specified;
-use lkgp::data::GridDataset;
+use lkgp::data::synthetic::{off_grid, well_specified};
+use lkgp::data::{GridDataset, OffGridDataset};
 use lkgp::gp::backend::{MvmMode, Precision};
-use lkgp::gp::diagnostics::{OnNonConverged, Solver, TimeOpChoice};
-use lkgp::gp::lkgp::{Backend, Lkgp, LkgpConfig};
+use lkgp::gp::diagnostics::{OnNonConverged, ProjectionChoice, Solver, TimeOpChoice};
+use lkgp::gp::lkgp::{Backend, Lkgp, LkgpConfig, LkgpFit};
 use lkgp::kernels::ProductGridKernel;
+use lkgp::kron::interp::{InterpDegree, SparseProjection};
+use lkgp::linalg::Matrix;
 use lkgp::runtime::{Manifest, Runtime};
 use lkgp::serve::daemon::{DaemonOptions, ServeClient, ServeDaemon};
 use lkgp::serve::ServeEngine;
@@ -39,11 +41,13 @@ use lkgp::util::json::Json;
 
 const USAGE: &str = "usage: lkgp <info|train|save|predict|serve|experiment> [flags]
   lkgp info
-  lkgp train --data <climate|climate-precip|lcbench|sarcos|synthetic>
+  lkgp train --data <climate|climate-precip|lcbench|sarcos|synthetic|offgrid>
              [--p N] [--q N] [--missing R] [--seed S]
              [--backend rust|<artifact-config>] [--dense] [--f32]
              [--iters N] [--on-nonconverged warn|error]
              [--solver auto|cg|eig] [--time-op auto|dense|toeplitz]
+             [--projection mask|interp|interp-cubic]
+             [--n N]   (offgrid only: scattered training points)
   lkgp save  [same flags as train] [--out <path>=lkgp_model.ckpt]
   lkgp predict --checkpoint <path> [--cells i,j,k] [--json <path>]
   lkgp predict --addr host:port [--model id] --cells i,j,k
@@ -173,6 +177,12 @@ fn build_train_config(args: &Args, capture_pathwise: bool) -> Result<LkgpConfig,
         None => TimeOpChoice::from_env(),
         Some(s) => TimeOpChoice::parse(&s).map_err(|e| format!("--time-op: {e}"))?,
     };
+    // and for the training projection: --projection beats
+    // LKGP_PROJECTION, which beats the mask default
+    let projection = match args.str_opt("projection") {
+        None => ProjectionChoice::from_env(),
+        Some(s) => ProjectionChoice::parse(&s).map_err(|e| format!("--projection: {e}"))?,
+    };
     Ok(LkgpConfig {
         train_iters: args.usize("iters", 20),
         n_samples: args.usize("samples", 32),
@@ -184,8 +194,101 @@ fn build_train_config(args: &Args, capture_pathwise: bool) -> Result<LkgpConfig,
         on_nonconverged,
         solver,
         time_op,
+        projection,
         ..LkgpConfig::default()
     })
+}
+
+/// Build the off-grid synthetic workload for `--data offgrid`:
+/// `--n` scattered training points (plus n/4 held-out test points) on a
+/// `--p x --q` linspace inducing grid.
+fn load_offgrid(args: &Args) -> OffGridDataset {
+    let n = args.usize("n", 512);
+    off_grid(
+        n,
+        n.div_ceil(4),
+        args.usize("p", 32),
+        args.usize("q", 32),
+        args.f64("noise", 0.02),
+        args.u64("seed", 0),
+    )
+}
+
+/// RMSE of the grid posterior mean interpolated to scattered query
+/// points: `W_query mean` with a fresh stencil built on the same
+/// inducing grid the model was trained against.
+fn offgrid_rmse(
+    mean_grid: &[f64],
+    od: &OffGridDataset,
+    degree: InterpDegree,
+    xs: &[f64],
+    xt: &[f64],
+    y: &[f64],
+) -> Result<f64, String> {
+    let w = SparseProjection::build(xs, xt, &od.grid_s, &od.grid_t, degree)?;
+    let m = Matrix::from_vec(1, mean_grid.len(), mean_grid.to_vec());
+    let pred = w.interp_apply(&m);
+    let mut sq = 0.0;
+    for (i, &yi) in y.iter().enumerate() {
+        let d = pred[(0, i)] - yi;
+        sq += d * d;
+    }
+    Ok((sq / y.len().max(1) as f64).sqrt())
+}
+
+fn print_offgrid_dataset(od: &OffGridDataset) {
+    println!(
+        "dataset {}: n={} (+{} test) on a {} x {} inducing grid",
+        od.name,
+        od.n(),
+        od.test_y.len(),
+        od.p(),
+        od.q()
+    );
+}
+
+/// Shared `train`/`save` path for `--data offgrid`: fit through the SKI
+/// projection and report train/test RMSE at the scattered points.
+fn fit_offgrid_cli(args: &Args, capture_pathwise: bool) -> Result<(OffGridDataset, LkgpFit), i32> {
+    let od = load_offgrid(args);
+    let cfg = match build_train_config(args, capture_pathwise) {
+        Ok(cfg) => cfg,
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            return Err(2);
+        }
+    };
+    let ProjectionChoice::Interp(degree) = cfg.projection else {
+        eprintln!(
+            "--data offgrid needs an interpolation projection: \
+             pass --projection interp (or interp-cubic)\n{USAGE}"
+        );
+        return Err(2);
+    };
+    if let Err(e) = args.finish() {
+        eprintln!("{e}\n{USAGE}");
+        return Err(2);
+    }
+    print_offgrid_dataset(&od);
+    let fit = match Lkgp::fit_offgrid(&od, cfg) {
+        Ok(fit) => fit,
+        Err(e) => {
+            eprintln!("fit failed: {e:#}");
+            return Err(1);
+        }
+    };
+    let report = |tag: &str, xs: &[f64], xt: &[f64], y: &[f64]| {
+        if y.is_empty() {
+            return;
+        }
+        match offgrid_rmse(&fit.posterior.mean, &od, degree, xs, xt, y) {
+            Ok(rmse) => println!("{tag}: rmse {rmse:.4} ({} points)", y.len()),
+            Err(e) => eprintln!("{tag}: rmse unavailable ({e})"),
+        }
+    };
+    report("train", &od.xs, &od.xt, &od.y);
+    report("test ", &od.test_xs, &od.test_xt, &od.test_y);
+    Ok((od, fit))
 }
 
 fn print_dataset(data: &GridDataset) {
@@ -201,6 +304,21 @@ fn print_dataset(data: &GridDataset) {
 }
 
 fn cmd_train(args: &Args) -> i32 {
+    if args.str("data", "synthetic") == "offgrid" {
+        return match fit_offgrid_cli(args, false) {
+            Ok((_, fit)) => {
+                println!("loss trace (0.5 y^T alpha): {:?}", round3(&fit.loss_trace));
+                println!(
+                    "time: train {:.2}s predict {:.2}s | CG iters {} | kernel bytes {}",
+                    fit.train_secs, fit.predict_secs, fit.cg_iters_total, fit.kernel_bytes
+                );
+                println!("\ndiagnostics:\n{}", fit.diagnostics.render());
+                println!("\nprofile:\n{}", fit.profile.render());
+                0
+            }
+            Err(code) => code,
+        };
+    }
     let data = load_dataset(args);
     let cfg = match build_train_config(args, false) {
         Ok(cfg) => cfg,
@@ -243,6 +361,33 @@ fn round3(xs: &[f64]) -> Vec<f64> {
 /// `lkgp save`: fit with pathwise capture on, then write the versioned
 /// binary checkpoint — the train-once half of train-once/serve-many.
 fn cmd_save(args: &Args) -> i32 {
+    if args.str("data", "synthetic") == "offgrid" {
+        let out = args.str("out", "lkgp_model.ckpt");
+        let (_, fit) = match fit_offgrid_cli(args, true) {
+            Ok(v) => v,
+            Err(code) => return code,
+        };
+        let Some(model) = fit.model else {
+            eprintln!("fit returned no pathwise state despite capture_pathwise; cannot checkpoint");
+            return 1;
+        };
+        return match model.save(&out) {
+            Ok(bytes) => {
+                println!(
+                    "checkpoint: {out} ({:.1} KiB, {} pathwise samples, {} projection)",
+                    bytes as f64 / 1024.0,
+                    model.n_samples,
+                    model.projection
+                );
+                println!("serve it with: lkgp predict --checkpoint {out}");
+                0
+            }
+            Err(e) => {
+                eprintln!("save failed: {e:#}");
+                1
+            }
+        };
+    }
     let data = load_dataset(args);
     let cfg = match build_train_config(args, true) {
         Ok(cfg) => cfg,

@@ -5,9 +5,11 @@
 //!
 //! ```text
 //! [0..8)    magic  b"LKGPCKPT"
-//! [8..12)   format version, u32 LE (currently 2)
+//! [8..12)   format version, u32 LE (currently 3; version 2 still reads)
 //! [12..16)  precision u8 (0 = f64, 1 = f32), time-op u8 (0 = dense,
-//!           1 = toeplitz; new in version 2), 2 reserved zero bytes
+//!           1 = toeplitz; new in version 2), projection u8 (0 = mask,
+//!           1 = interp-linear, 2 = interp-cubic; new in version 3),
+//!           1 reserved zero byte
 //! [16..48)  p, q, ds, n_samples       — 4 x u64 LE
 //! [48..72)  log_sigma2, y_mean, y_std — 3 x f64 LE
 //! ...       time_family, name         — 2 x (u32 LE length + UTF-8)
@@ -17,6 +19,12 @@
 //!             rows u64 LE, cols u64 LE, rows*cols scalars LE
 //! [len-8..) FNV-1a 64 checksum of every preceding byte, u64 LE
 //! ```
+//!
+//! A mask checkpoint carries exactly 8 tensors; an interp (SKI)
+//! checkpoint carries 11 — the sparse projection `W` travels as three
+//! extra f64 tensors `w_indptr` (1 x (n+1)), `w_cols` (1 x nnz), and
+//! `w_weights` (1 x nnz), with indices stored as exact f64 integers
+//! (lossless below 2^53, far beyond any realistic nnz).
 //!
 //! Every multi-byte value is little-endian regardless of host
 //! byte order, so checkpoints move between machines. The iterative
@@ -36,8 +44,9 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use crate::gp::backend::Precision;
-use crate::gp::diagnostics::TimeOpPath;
+use crate::gp::diagnostics::{ProjectionPath, TimeOpPath};
 use crate::gp::Posterior;
+use crate::kron::interp::{InterpDegree, SparseProjection};
 use crate::linalg::Matrix;
 use crate::util::convert;
 
@@ -47,9 +56,15 @@ use super::TrainedModel;
 pub const MAGIC: [u8; 8] = *b"LKGPCKPT";
 
 /// Current checkpoint format version. Version 2 assigned the second
-/// header flag byte (offset 13) to the time-op tag; version-1 files
-/// are rejected with [`CheckpointError::UnsupportedVersion`].
-pub const VERSION: u32 = 2;
+/// header flag byte (offset 13) to the time-op tag; version 3 assigned
+/// the third (offset 14) to the projection tag and added the `W`
+/// tensor records of SKI fits. Version-2 files (always mask-projection)
+/// still load; version-1 files are rejected with
+/// [`CheckpointError::UnsupportedVersion`].
+pub const VERSION: u32 = 3;
+
+/// Oldest checkpoint format version this build still reads.
+pub const MIN_VERSION: u32 = 2;
 
 /// FNV-1a 64-bit hash — the checkpoint's trailing checksum function.
 /// Exposed so external tooling (and the format tests) can produce and
@@ -158,6 +173,12 @@ const DTYPE_F32: u8 = 1;
 /// Time-op tags (header byte at offset 13, format version >= 2).
 const TIME_OP_DENSE: u8 = 0;
 const TIME_OP_TOEPLITZ: u8 = 1;
+
+/// Projection tags (header byte at offset 14, format version >= 3;
+/// reserved zero — i.e. mask — in version 2).
+const PROJ_MASK: u8 = 0;
+const PROJ_INTERP_LINEAR: u8 = 1;
+const PROJ_INTERP_CUBIC: u8 = 2;
 
 fn put_tensor(out: &mut Vec<u8>, name: &str, rows: usize, cols: usize, data: &[f64], dtype: u8) {
     // a real assert (not debug): a shape-desynced record would produce a
@@ -285,6 +306,24 @@ fn expect_shape(
     Ok(t)
 }
 
+/// Decode f64-encoded indices back to `usize`, rejecting anything that
+/// is not an exact non-negative integer below 2^53.
+fn as_indices(xs: &[f64], what: &'static str) -> Result<Vec<usize>, CheckpointError> {
+    const MAX_EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+    xs.iter()
+        .map(|&x| {
+            if x.is_finite() && x >= 0.0 && x <= MAX_EXACT && x.fract() == 0.0 {
+                Ok(x as usize)
+            } else {
+                Err(CheckpointError::BadField {
+                    what,
+                    detail: format!("{x} is not a valid index"),
+                })
+            }
+        })
+        .collect()
+}
+
 fn read_tensor(cur: &mut Cursor<'_>) -> Result<(String, Tensor), CheckpointError> {
     let name = cur.string("tensor name")?;
     let dtype = cur.take(1, "tensor dtype")?[0];
@@ -326,7 +365,12 @@ impl TrainedModel {
             TimeOpPath::Dense => TIME_OP_DENSE,
             TimeOpPath::Toeplitz => TIME_OP_TOEPLITZ,
         });
-        out.extend_from_slice(&[0u8; 2]);
+        out.push(match self.projection {
+            ProjectionPath::Mask => PROJ_MASK,
+            ProjectionPath::Interp(InterpDegree::Linear) => PROJ_INTERP_LINEAR,
+            ProjectionPath::Interp(InterpDegree::Cubic) => PROJ_INTERP_CUBIC,
+        });
+        out.push(0u8);
         put_u64(&mut out, self.p() as u64);
         put_u64(&mut out, self.q() as u64);
         put_u64(&mut out, self.ds as u64);
@@ -341,7 +385,8 @@ impl TrainedModel {
             put_f64(&mut out, x);
         }
         let pq = self.grid_len();
-        put_u32(&mut out, 8); // tensor count
+        let n_tensors = 8 + if self.w.is_some() { 3 } else { 0 };
+        put_u32(&mut out, n_tensors); // tensor count
         put_tensor(&mut out, "s", self.p(), self.ds, &self.s.data, DTYPE_F64);
         put_tensor(&mut out, "t", 1, self.q(), &self.t, DTYPE_F64);
         put_tensor(&mut out, "mask", 1, pq, &self.mask, DTYPE_F64);
@@ -350,6 +395,14 @@ impl TrainedModel {
         put_tensor(&mut out, "f_prior", self.n_samples, pq, &self.f_prior.data, state_dtype);
         put_tensor(&mut out, "post_mean", 1, pq, &self.posterior.mean, DTYPE_F64);
         put_tensor(&mut out, "post_var", 1, pq, &self.posterior.var, DTYPE_F64);
+        if let Some(w) = &self.w {
+            // indices as exact f64 integers: lossless below 2^53
+            let indptr: Vec<f64> = w.indptr().iter().map(|&i| i as f64).collect();
+            let cols: Vec<f64> = w.cols().iter().map(|&c| c as f64).collect();
+            put_tensor(&mut out, "w_indptr", 1, indptr.len(), &indptr, DTYPE_F64);
+            put_tensor(&mut out, "w_cols", 1, cols.len(), &cols, DTYPE_F64);
+            put_tensor(&mut out, "w_weights", 1, w.nnz(), w.row_weights(), DTYPE_F64);
+        }
         let sum = fnv64(&out);
         put_u64(&mut out, sum);
         out
@@ -373,7 +426,7 @@ impl TrainedModel {
             return Err(CheckpointError::BadMagic { found });
         }
         let version = u32::from_le_bytes(arr(&bytes[8..12]));
-        if version != VERSION {
+        if !(MIN_VERSION..=VERSION).contains(&version) {
             return Err(CheckpointError::UnsupportedVersion { found: version, supported: VERSION });
         }
         let body = &bytes[..bytes.len() - 8];
@@ -405,6 +458,20 @@ impl TrainedModel {
                 })
             }
         };
+        // the projection byte is reserved zero in version 2, so the
+        // (version, tag) pair decodes uniformly: any nonzero tag in a
+        // v2 file is malformed, as is an unknown tag in a v3 file
+        let projection = match (version, flags[2]) {
+            (_, PROJ_MASK) => ProjectionPath::Mask,
+            (3, PROJ_INTERP_LINEAR) => ProjectionPath::Interp(InterpDegree::Linear),
+            (3, PROJ_INTERP_CUBIC) => ProjectionPath::Interp(InterpDegree::Cubic),
+            (_, other) => {
+                return Err(CheckpointError::BadField {
+                    what: "projection",
+                    detail: format!("unknown projection tag {other} (version {version})"),
+                })
+            }
+        };
         let p = cur.u64("p")? as usize;
         let q = cur.u64("q")? as usize;
         let ds = cur.u64("ds")? as usize;
@@ -418,12 +485,19 @@ impl TrainedModel {
         let theta = cur.f64_vec(n_theta, "theta")?;
 
         let n_tensors = cur.u32("tensor count")? as usize;
-        // version 2 has exactly 8 tensors; checking before allocating
-        // keeps a crafted count from forcing a huge reservation
-        if n_tensors != 8 {
+        // the projection tag pins the exact tensor count (8 for mask,
+        // 11 for interp); checking before allocating keeps a crafted
+        // count from forcing a huge reservation
+        let expect_tensors = match projection {
+            ProjectionPath::Mask => 8,
+            ProjectionPath::Interp(_) => 11,
+        };
+        if n_tensors != expect_tensors {
             return Err(CheckpointError::BadField {
                 what: "tensor count",
-                detail: format!("{n_tensors} != 8 (version {VERSION})"),
+                detail: format!(
+                    "{n_tensors} != {expect_tensors} (version {version}, {projection} projection)"
+                ),
             });
         }
         let mut tensors: Vec<(String, Tensor)> = Vec::with_capacity(n_tensors);
@@ -457,6 +531,44 @@ impl TrainedModel {
         let f_prior = expect_shape(take("f_prior")?, n_samples, pq, "f_prior")?;
         let post_mean = expect_shape(take("post_mean")?, 1, pq, "post_mean")?;
         let post_var = expect_shape(take("post_var")?, 1, pq, "post_var")?;
+        let w = match projection {
+            ProjectionPath::Mask => None,
+            ProjectionPath::Interp(degree) => {
+                let wi = take("w_indptr")?;
+                let wc = take("w_cols")?;
+                let ww = take("w_weights")?;
+                for (t, label) in [(&wi, "w_indptr"), (&wc, "w_cols"), (&ww, "w_weights")] {
+                    if t.dtype != DTYPE_F64 {
+                        return Err(CheckpointError::BadField {
+                            what: "w",
+                            detail: format!("{label} must be f64, got dtype tag {}", t.dtype),
+                        });
+                    }
+                    if t.rows != 1 {
+                        return Err(CheckpointError::BadField {
+                            what: "w",
+                            detail: format!("{label} must be a row vector, got {} rows", t.rows),
+                        });
+                    }
+                }
+                if wi.cols < 2 {
+                    return Err(CheckpointError::BadField {
+                        what: "w",
+                        detail: format!("w_indptr has {} entries, need at least 2", wi.cols),
+                    });
+                }
+                let indptr = as_indices(&wi.data, "w_indptr")?;
+                let cols = as_indices(&wc.data, "w_cols")?;
+                let n = indptr.len() - 1;
+                // from_parts re-validates every CSR invariant (monotone
+                // indptr, per-row support bounds, in-grid columns,
+                // finite weights) so a shape-lying record cannot build
+                let proj =
+                    SparseProjection::from_parts(n, p, q, degree, indptr, cols, ww.data)
+                        .map_err(|detail| CheckpointError::BadField { what: "w", detail })?;
+                Some(proj)
+            }
+        };
         if let Some((extra, _)) = tensors.first() {
             return Err(CheckpointError::BadField {
                 what: "tensor directory",
@@ -485,6 +597,8 @@ impl TrainedModel {
             time_family,
             precision,
             time_op,
+            projection,
+            w,
             ds,
             s: Matrix::from_vec(p, ds, s.data),
             t: t.data,
@@ -578,6 +692,8 @@ mod tests {
             time_family: "rbf".into(),
             precision,
             time_op: TimeOpPath::Dense,
+            projection: ProjectionPath::Mask,
+            w: None,
             ds,
             s: Matrix::from_vec(p, ds, (0..p * ds).map(|i| i as f64 * 0.25).collect()),
             t: (0..q).map(|k| k as f64).collect(),
@@ -601,11 +717,32 @@ mod tests {
         }
     }
 
+    /// A fully consistent interp-projection (SKI) model: 1-D node axis
+    /// of length p, W built from off-grid points, grid-space state.
+    pub(crate) fn dummy_interp_model(degree: InterpDegree) -> TrainedModel {
+        let mut m = dummy_model(Precision::F64);
+        let p = m.p();
+        // interp needs ds == 1 with the nodes as the spatial axis
+        m.ds = 1;
+        m.s = Matrix::from_vec(p, 1, (0..p).map(|j| j as f64).collect());
+        let kernel = crate::kernels::ProductGridKernel::new(1, &m.time_family, m.q());
+        m.theta.truncate(kernel.n_theta());
+        let xs = vec![0.25, 1.5, 1.75, 0.0];
+        let xt = vec![0.5, 0.25, 1.0, 0.75];
+        let w = SparseProjection::build(&xs, &xt, &m.s.data, &m.t, degree).unwrap();
+        m.projection = ProjectionPath::Interp(degree);
+        m.w = Some(w);
+        m.validate().unwrap();
+        m
+    }
+
     fn assert_models_bit_equal(a: &TrainedModel, b: &TrainedModel) {
         assert_eq!(a.name, b.name);
         assert_eq!(a.time_family, b.time_family);
         assert_eq!(a.precision, b.precision);
         assert_eq!(a.time_op, b.time_op);
+        assert_eq!(a.projection, b.projection);
+        assert_eq!(a.w, b.w);
         assert_eq!((a.p(), a.q(), a.ds, a.n_samples), (b.p(), b.q(), b.ds, b.n_samples));
         let bits = |xs: &[f64]| -> Vec<u64> { xs.iter().map(|x| x.to_bits()).collect() };
         assert_eq!(bits(&a.s.data), bits(&b.s.data));
@@ -640,6 +777,114 @@ mod tests {
         assert!(bytes.len() < m64.to_bytes().len());
         let back = TrainedModel::from_bytes(&bytes).unwrap();
         assert_models_bit_equal(&m32, &back);
+    }
+
+    #[test]
+    fn interp_w_record_roundtrips_bitwise() {
+        for degree in [InterpDegree::Linear, InterpDegree::Cubic] {
+            let m = dummy_interp_model(degree);
+            let bytes = m.to_bytes();
+            let tag = match degree {
+                InterpDegree::Linear => PROJ_INTERP_LINEAR,
+                InterpDegree::Cubic => PROJ_INTERP_CUBIC,
+            };
+            assert_eq!(bytes[14], tag, "projection tag lives at offset 14");
+            let back = TrainedModel::from_bytes(&bytes).unwrap();
+            assert_models_bit_equal(&m, &back);
+        }
+    }
+
+    #[test]
+    fn version_2_mask_files_still_load() {
+        // a v2 file is a v3 mask file with the older version stamp (the
+        // projection byte was reserved zero); rewriting the version and
+        // re-stamping the checksum reproduces one byte for byte
+        let m = dummy_model(Precision::F64);
+        let mut bytes = m.to_bytes();
+        bytes[8..12].copy_from_slice(&2u32.to_le_bytes());
+        let n = bytes.len();
+        let sum = fnv64(&bytes[..n - 8]);
+        bytes[n - 8..].copy_from_slice(&sum.to_le_bytes());
+        let back = TrainedModel::from_bytes(&bytes).unwrap();
+        assert_models_bit_equal(&m, &back);
+        assert_eq!(back.projection, ProjectionPath::Mask);
+        assert!(back.w.is_none());
+    }
+
+    #[test]
+    fn unknown_projection_tag_is_typed() {
+        // tag 9 is undefined in any version; tag 1 is defined only in v3
+        for (version, tag) in [(3u32, 9u8), (2u32, 1u8)] {
+            let mut bytes = dummy_model(Precision::F64).to_bytes();
+            bytes[8..12].copy_from_slice(&version.to_le_bytes());
+            bytes[14] = tag;
+            let n = bytes.len();
+            let sum = fnv64(&bytes[..n - 8]);
+            bytes[n - 8..].copy_from_slice(&sum.to_le_bytes());
+            match TrainedModel::from_bytes(&bytes) {
+                Err(CheckpointError::BadField { what: "projection", detail }) => {
+                    assert!(detail.contains(&tag.to_string()), "{detail}");
+                }
+                other => panic!("expected BadField for projection, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn shape_lying_w_records_are_rejected() {
+        // a non-integer column index must fail the typed index decode
+        let m = dummy_interp_model(InterpDegree::Linear);
+        let mut bad = m.clone();
+        let w = bad.w.as_ref().unwrap();
+        let (n, p, q) = (w.n(), w.grid_p(), w.grid_q());
+        let mut indptr = w.indptr().to_vec();
+        let cols = w.cols().to_vec();
+        let weights = w.row_weights().to_vec();
+        // lie about the row structure: last row claims more support
+        // than the stencil allows
+        *indptr.last_mut().unwrap() += 64;
+        assert!(SparseProjection::from_parts(
+            n,
+            p,
+            q,
+            InterpDegree::Linear,
+            indptr,
+            cols,
+            weights
+        )
+        .is_err());
+        // and through the codec: corrupt the stored w_cols bytes into a
+        // non-integer and re-stamp the checksum — typed BadField, not a
+        // panic
+        let bytes = m.to_bytes();
+        let needle = (m.w.as_ref().unwrap().cols()[0] as f64).to_le_bytes();
+        // find the w_cols record by its name marker, then its payload
+        let marker = b"w_cols";
+        let pos = bytes
+            .windows(marker.len())
+            .position(|wnd| wnd == marker)
+            .expect("w_cols record present");
+        let payload = pos + marker.len() + 1 + 16; // dtype + rows + cols
+        assert_eq!(&bytes[payload..payload + 8], &needle);
+        let mut bad_bytes = bytes.clone();
+        bad_bytes[payload..payload + 8].copy_from_slice(&0.5f64.to_le_bytes());
+        let nb = bad_bytes.len();
+        let sum = fnv64(&bad_bytes[..nb - 8]);
+        bad_bytes[nb - 8..].copy_from_slice(&sum.to_le_bytes());
+        match TrainedModel::from_bytes(&bad_bytes) {
+            Err(CheckpointError::BadField { what: "w_cols", detail }) => {
+                assert!(detail.contains("0.5"), "{detail}");
+            }
+            other => panic!("expected BadField for w_cols, got {other:?}"),
+        }
+        // finally: drop the w tensors but keep the interp tag — the
+        // tensor count check rejects before any allocation
+        let mut bad2 = m.clone();
+        bad2.w = None;
+        assert!(matches!(
+            bad2.validate(),
+            Err(CheckpointError::BadField { what: "w", .. })
+        ));
     }
 
     #[test]

@@ -41,9 +41,10 @@
 pub mod io;
 
 use crate::gp::backend::Precision;
-use crate::gp::diagnostics::TimeOpPath;
+use crate::gp::diagnostics::{ProjectionPath, TimeOpPath};
 use crate::gp::Posterior;
 use crate::kernels::ProductGridKernel;
+use crate::kron::interp::SparseProjection;
 use crate::linalg::Matrix;
 
 /// Everything needed to reproduce (and serve) the predictions of a
@@ -70,6 +71,15 @@ pub struct TrainedModel {
     /// reconstruction replays through the same engine so a Toeplitz-
     /// trained checkpoint reproduces its posterior bit for bit.
     pub time_op: TimeOpPath,
+    /// Projection the fit trained through ([`ProjectionPath::Mask`] for
+    /// every pre-v3 checkpoint). Serve-time replay is grid-space either
+    /// way — `W^T` is already folded into `masked_alpha` / `vm` — so
+    /// this is provenance plus the key that gates the `w` record.
+    pub projection: ProjectionPath,
+    /// The interpolation projection of an SKI fit (`None` on mask
+    /// fits), persisted in checkpoint format v3 so a reloaded model can
+    /// project new off-grid query points.
+    pub w: Option<SparseProjection>,
     /// Spatial input dimension d_s.
     pub ds: usize,
     /// Spatial training inputs, p x d_s (standardized).
@@ -172,6 +182,39 @@ impl TrainedModel {
             "theta",
             format!("len {} != {expect_theta} for this kernel", self.theta.len()),
         )?;
+        match (&self.projection, &self.w) {
+            (ProjectionPath::Mask, None) => {}
+            (ProjectionPath::Mask, Some(_)) => {
+                return Err(io::CheckpointError::BadField {
+                    what: "w",
+                    detail: "mask-projection model carries a W record".into(),
+                });
+            }
+            (ProjectionPath::Interp(_), None) => {
+                return Err(io::CheckpointError::BadField {
+                    what: "w",
+                    detail: "interp-projection model is missing its W record".into(),
+                });
+            }
+            (ProjectionPath::Interp(d), Some(w)) => {
+                check(
+                    w.degree() == *d,
+                    "w",
+                    format!("W degree {} != projection {}", w.degree(), d),
+                )?;
+                check(
+                    w.grid_p() == self.p() && w.grid_q() == self.q(),
+                    "w",
+                    format!(
+                        "W grid {}x{} != model grid {}x{}",
+                        w.grid_p(),
+                        w.grid_q(),
+                        self.p(),
+                        self.q()
+                    ),
+                )?;
+            }
+        }
         Ok(())
     }
 }

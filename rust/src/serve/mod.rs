@@ -344,6 +344,11 @@ fn reconstruct<T: Scalar>(m: &TrainedModel, diags: &mut FitDiagnostics) -> Resul
     be.set_data(&m.s, &m.t, &m.mask).context("installing checkpointed data")?;
     be.set_hypers(&m.theta, m.log_sigma2).context("rebuilding Gram factors")?;
     diags.time_op = be.time_op_path();
+    // The replay is identical for mask- and interp-trained models: an
+    // SKI checkpoint stores grid-space state (`W^T` already folded into
+    // masked_alpha / vm, grid mask all-ones), so only the provenance
+    // tag differs.
+    diags.projection = m.projection;
     let to_t = |row: &[f64]| -> Vec<T> { row.iter().map(|&x| T::from_f64(x)).collect() };
 
     let ma = Matrix::from_vec(1, pq, to_t(&m.masked_alpha));
@@ -520,6 +525,51 @@ mod tests {
         assert!(
             rep.bit_identical,
             "toeplitz-trained replay deviates: mean {} var {}",
+            rep.max_mean_diff,
+            rep.max_var_diff
+        );
+    }
+
+    #[test]
+    fn ski_trained_checkpoint_replays_bit_for_bit() {
+        // An interp-projection fit stores grid-space pathwise state plus
+        // its W record; the serve replay must reproduce the fit's
+        // posterior bit for bit and surface the projection provenance.
+        use crate::data::synthetic::off_grid;
+        use crate::gp::diagnostics::{ProjectionChoice, ProjectionPath, Solver};
+        use crate::kron::interp::InterpDegree;
+        let data = off_grid(90, 0, 8, 6, 0.02, 31);
+        let cfg = LkgpConfig {
+            train_iters: 4,
+            n_samples: 8,
+            probes: 4,
+            cg_tol: 1e-3,
+            cg_max_iters: 200,
+            seed: 31,
+            capture_pathwise: true,
+            solver: Solver::Cg,
+            projection: ProjectionChoice::Interp(InterpDegree::Linear),
+            ..LkgpConfig::default()
+        };
+        let fit = Lkgp::fit_offgrid(&data, cfg).unwrap();
+        assert_eq!(fit.diagnostics.projection, ProjectionPath::Interp(InterpDegree::Linear));
+        let model = fit.model.clone().unwrap();
+        assert!(model.w.is_some());
+        let path =
+            std::env::temp_dir().join(format!("lkgp_serve_ski_{}.ckpt", std::process::id()));
+        model.save(&path).unwrap();
+        let loaded = TrainedModel::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.projection, ProjectionPath::Interp(InterpDegree::Linear));
+        let engine = ServeEngine::from_model(loaded).unwrap();
+        assert_eq!(
+            engine.diagnostics().projection,
+            ProjectionPath::Interp(InterpDegree::Linear)
+        );
+        let rep = engine.verify();
+        assert!(
+            rep.bit_identical,
+            "ski-trained replay deviates: mean {} var {}",
             rep.max_mean_diff,
             rep.max_var_diff
         );

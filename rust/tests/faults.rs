@@ -104,6 +104,47 @@ fn transient_recovery_is_thread_invariant() {
     assert_eq!(posterior_bits(&f1), posterior_bits(&f4));
 }
 
+#[test]
+fn ski_backend_mvm_faults_are_typed_and_transients_recover_bitwise() {
+    // The SKI (interp-projection) solve runs its MVMs through the same
+    // `backend_mvm` failpoint site as the mask path: a persistent fault
+    // must fail the fit with a typed InjectedFault, and a transient one
+    // must be retried to a bit-identical posterior.
+    use lkgp::data::synthetic::off_grid;
+    use lkgp::gp::diagnostics::ProjectionChoice;
+    use lkgp::kron::interp::InterpDegree;
+    let data = off_grid(80, 0, 8, 6, 0.02, 13);
+    let c = LkgpConfig {
+        projection: ProjectionChoice::Interp(InterpDegree::Linear),
+        ..cfg(13)
+    };
+
+    let err = with_failpoints("backend_mvm:error", || Lkgp::fit_offgrid(&data, c.clone()))
+        .err()
+        .expect("a persistently failing backend cannot produce a SKI fit");
+    let injected = err
+        .downcast_ref::<InjectedFault>()
+        .unwrap_or_else(|| panic!("expected InjectedFault in chain, got: {err:#}"));
+    assert_eq!(injected.site, "backend_mvm");
+
+    let clean =
+        without_failpoints(|| Lkgp::fit_offgrid(&data, c.clone()).expect("clean SKI fit"));
+    let faulted = with_failpoints("backend_mvm@2:error", || {
+        Lkgp::fit_offgrid(&data, c.clone())
+            .expect("one transient MVM failure is within the retry budget")
+    });
+    assert!(
+        faulted.diagnostics.backend_retries >= 1,
+        "the injected failure must show up as a recorded retry"
+    );
+    assert_eq!(clean.diagnostics.backend_retries, 0);
+    assert_eq!(
+        posterior_bits(&clean),
+        posterior_bits(&faulted),
+        "a retried deterministic SKI MVM must not change a single output bit"
+    );
+}
+
 // ---------------------------------------------------------------------
 // CG divergence detection
 // ---------------------------------------------------------------------

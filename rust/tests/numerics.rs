@@ -13,8 +13,9 @@
 
 use std::path::{Path, PathBuf};
 
-use lkgp::data::synthetic::well_specified;
+use lkgp::data::synthetic::{kron_gp_draw, well_specified};
 use lkgp::data::GridDataset;
+use lkgp::util::rng::Rng;
 use lkgp::gp::backend::Precision;
 use lkgp::gp::lkgp::{Lkgp, LkgpConfig};
 use lkgp::kernels::ProductGridKernel;
@@ -208,6 +209,128 @@ fn prop_precond_spd_woodbury_f64() {
 #[test]
 fn prop_precond_spd_woodbury_f32() {
     precond_spd_and_woodbury_consistent::<f32>();
+}
+
+// ---------------------------------------------------------------------
+// SKI differential test: mask == W in the degenerate case
+// ---------------------------------------------------------------------
+
+/// A fully-observed ds=1 dataset whose spatial inputs sit exactly on
+/// the strictly-increasing linspace nodes the SKI projection induces —
+/// the degenerate case where a linear stencil collapses to a 0/1 mask.
+fn coincident_data(p: usize, q: usize, seed: u64) -> GridDataset {
+    let kernel = ProductGridKernel::new(1, "rbf", q);
+    let s_nodes: Vec<f64> = (0..p).map(|j| j as f64 / (p - 1) as f64).collect();
+    let s = Matrix::from_vec(p, 1, s_nodes);
+    let t: Vec<f64> = (0..q).map(|k| k as f64 / (q - 1) as f64).collect();
+    let kss = kernel.gram_s(&s);
+    let ktt = kernel.gram_t(&t);
+    let mut rng = Rng::new(seed);
+    let y = kron_gp_draw(&kss, &ktt, 0.01, &mut rng);
+    let data = GridDataset {
+        s,
+        t,
+        y_grid: y,
+        mask: vec![true; p * q],
+        time_family: "rbf".to_string(),
+        name: "coincident".to_string(),
+    };
+    data.validate();
+    data
+}
+
+/// Differential test for the SKI projection layer: on grid-coincident,
+/// fully-observed data the linear interpolation matrix `W` degenerates
+/// to the identity permutation (every row a single 1.0), so an interp
+/// fit must reproduce the mask fit **bit for bit** — posterior mean and
+/// variance, loss trace, CG iteration counts, and the captured pathwise
+/// tensors. `Solver::Cg` is forced in BOTH configs because the fully
+/// observed mask path would otherwise take the eigendecomposition
+/// direct solve, which the interp system (data space, no Gram factors)
+/// never does.
+#[test]
+fn interp_on_grid_coincident_data_matches_mask_bitwise() {
+    use lkgp::gp::diagnostics::{ProjectionChoice, ProjectionPath, Solver};
+    use lkgp::kron::interp::InterpDegree;
+
+    let data = coincident_data(10, 7, 77);
+    let base = LkgpConfig {
+        train_iters: 5,
+        n_samples: 8,
+        probes: 4,
+        cg_tol: 1e-3,
+        cg_max_iters: 200,
+        seed: 7,
+        solver: Solver::Cg,
+        capture_pathwise: true,
+        ..LkgpConfig::default()
+    };
+    let mask_fit = Lkgp::fit(&data, base.clone()).unwrap();
+    let interp_fit = Lkgp::fit(
+        &data,
+        LkgpConfig { projection: ProjectionChoice::Interp(InterpDegree::Linear), ..base },
+    )
+    .unwrap();
+
+    assert_eq!(mask_fit.diagnostics.projection, ProjectionPath::Mask);
+    assert_eq!(
+        interp_fit.diagnostics.projection,
+        ProjectionPath::Interp(InterpDegree::Linear)
+    );
+
+    // The W record really is a 0/1 mask: one unit entry per row.
+    let im = interp_fit.model.as_ref().unwrap();
+    let w = im.w.as_ref().expect("interp fit must carry its W record");
+    assert_eq!(w.n(), data.grid_len());
+    for r in 0..w.n() {
+        let (cols, weights) = w.row(r);
+        assert_eq!(cols.len(), 1, "row {r} not degenerate: {cols:?} {weights:?}");
+        assert_eq!(weights[0].to_bits(), 1.0f64.to_bits(), "row {r} weight");
+    }
+
+    // Training trajectory: identical loss trace and CG work.
+    assert_eq!(mask_fit.loss_trace.len(), interp_fit.loss_trace.len());
+    for (i, (a, b)) in mask_fit.loss_trace.iter().zip(&interp_fit.loss_trace).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "loss_trace[{i}]: {a} vs {b}");
+    }
+    assert_eq!(mask_fit.cg_iters_total, interp_fit.cg_iters_total, "CG iteration counters");
+
+    // Posterior: bit-identical mean and variance on every grid cell.
+    for i in 0..data.grid_len() {
+        assert_eq!(
+            mask_fit.posterior.mean[i].to_bits(),
+            interp_fit.posterior.mean[i].to_bits(),
+            "posterior mean[{i}]: {} vs {}",
+            mask_fit.posterior.mean[i],
+            interp_fit.posterior.mean[i]
+        );
+        assert_eq!(
+            mask_fit.posterior.var[i].to_bits(),
+            interp_fit.posterior.var[i].to_bits(),
+            "posterior var[{i}]: {} vs {}",
+            mask_fit.posterior.var[i],
+            interp_fit.posterior.var[i]
+        );
+    }
+
+    // Captured pathwise state: the interp fit's grid-space tensors
+    // (W^T folded in) equal the mask fit's masked tensors bitwise.
+    let mm = mask_fit.model.as_ref().unwrap();
+    assert_eq!(mm.theta.len(), im.theta.len());
+    for (i, (a, b)) in mm.theta.iter().zip(&im.theta).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "theta[{i}]");
+    }
+    assert_eq!(mm.log_sigma2.to_bits(), im.log_sigma2.to_bits(), "log_sigma2");
+    for (i, (a, b)) in mm.masked_alpha.iter().zip(&im.masked_alpha).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "masked_alpha[{i}]");
+    }
+    assert_eq!((mm.vm.rows, mm.vm.cols), (im.vm.rows, im.vm.cols));
+    for (i, (a, b)) in mm.vm.data.iter().zip(&im.vm.data).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "vm[{i}]");
+    }
+    for (i, (a, b)) in mm.f_prior.data.iter().zip(&im.f_prior.data).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "f_prior[{i}]");
+    }
 }
 
 // ---------------------------------------------------------------------

@@ -477,6 +477,106 @@ fn nested_regions_collapse_on_pool() {
 }
 
 #[test]
+fn interp_spmm_bit_identical_across_thread_counts() {
+    // The SKI SpMM kernels in isolation on ragged shapes: flattened
+    // outputs b*n = 903 and b*p*q = 897 both straddle the fixed
+    // SPMM chunk size (256) with remainder chunks, so the one-writer-
+    // per-chunk steal schedule is exercised end to end — for both
+    // stencil degrees, in both precisions.
+    use lkgp::kron::interp::{InterpDegree, SparseProjection};
+    let mut rng = Rng::new(71);
+    let (p, q, n, b) = (23usize, 13usize, 301usize, 3usize);
+    let grid_s: Vec<f64> = (0..p).map(|j| j as f64 / (p - 1) as f64).collect();
+    let grid_t: Vec<f64> = (0..q).map(|k| k as f64 / (q - 1) as f64).collect();
+    let xs: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+    let xt: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+    for degree in [InterpDegree::Linear, InterpDegree::Cubic] {
+        let w = SparseProjection::build(&xs, &xt, &grid_s, &grid_t, degree).unwrap();
+        let vg = Matrix::from_vec(b, p * q, rng.normals(b * p * q));
+        let vd = Matrix::from_vec(b, n, rng.normals(b * n));
+        let base = with_threads(1, || (w.interp_apply(&vg), w.interp_apply_t(&vd)));
+        for t in [2usize, 3, 8] {
+            let got = with_threads(t, || (w.interp_apply(&vg), w.interp_apply_t(&vd)));
+            assert_eq!(
+                bits(&base.0.data),
+                bits(&got.0.data),
+                "{degree} interp_apply differs at t={t}"
+            );
+            assert_eq!(
+                bits(&base.1.data),
+                bits(&got.1.data),
+                "{degree} interp_apply_t differs at t={t}"
+            );
+        }
+        let vg32: Matrix<f32> = vg.cast();
+        let vd32: Matrix<f32> = vd.cast();
+        let base32 = with_threads(1, || (w.interp_apply(&vg32), w.interp_apply_t(&vd32)));
+        for t in [2usize, 3, 8] {
+            let got32 = with_threads(t, || (w.interp_apply(&vg32), w.interp_apply_t(&vd32)));
+            assert_eq!(
+                bits32(&base32.0.data),
+                bits32(&got32.0.data),
+                "{degree} f32 interp_apply differs at t={t}"
+            );
+            assert_eq!(
+                bits32(&base32.1.data),
+                bits32(&got32.1.data),
+                "{degree} f32 interp_apply_t differs at t={t}"
+            );
+        }
+    }
+}
+
+#[test]
+fn ski_fit_bit_identical_across_thread_counts() {
+    // A full off-grid SKI fit — SpMM projection, data-space CG, grid-
+    // space pathwise conditioning — is bit-identical at 1/2/4/8 worker
+    // threads, for both stencil degrees and both compute precisions.
+    use lkgp::data::synthetic::off_grid;
+    use lkgp::gp::diagnostics::{ProjectionChoice, ProjectionPath};
+    use lkgp::kron::interp::InterpDegree;
+    let data = off_grid(150, 0, 10, 8, 0.02, 11);
+    for degree in [InterpDegree::Linear, InterpDegree::Cubic] {
+        for precision in [Precision::F64, Precision::F32] {
+            let cfg = LkgpConfig {
+                train_iters: 3,
+                n_samples: 8,
+                probes: 4,
+                cg_tol: 1e-3,
+                cg_max_iters: 200,
+                seed: 3,
+                precision,
+                projection: ProjectionChoice::Interp(degree),
+                ..LkgpConfig::default()
+            };
+            let f1 = with_threads(1, || Lkgp::fit_offgrid(&data, cfg.clone()).unwrap());
+            assert_eq!(f1.diagnostics.projection, ProjectionPath::Interp(degree));
+            for t in [2usize, 4, 8] {
+                let ft = with_threads(t, || Lkgp::fit_offgrid(&data, cfg.clone()).unwrap());
+                assert_eq!(
+                    bits(&f1.posterior.mean),
+                    bits(&ft.posterior.mean),
+                    "ski {degree}/{precision:?} posterior mean differs at t={t}"
+                );
+                assert_eq!(
+                    bits(&f1.posterior.var),
+                    bits(&ft.posterior.var),
+                    "ski {degree}/{precision:?} posterior var differs at t={t}"
+                );
+                assert_eq!(f1.loss_trace.len(), ft.loss_trace.len());
+                for (a, b) in f1.loss_trace.iter().zip(&ft.loss_trace) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "ski {degree}/{precision:?} loss trace differs at t={t}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn dense_baseline_modes_bit_identical_across_thread_counts() {
     use lkgp::gp::backend::MvmMode;
     use lkgp::gp::lkgp::Backend;

@@ -60,12 +60,26 @@ acceptance field regressed:
     toeplitz.max_abs_diff_vs_dense   FFT-vs-dense agreement (tolerance-level,
                                      never bit-equal: different rounding)
 
+  BENCH_ski.json
+    ski.rmse_within_5pct_of_dense    SKI held-out RMSE within 5% of the dense
+                                     exact-GP baseline on the same off-grid
+                                     sample
+    ski.fit_speedup_ge_2x            SKI fit >= 2x faster than the O(n^3)
+                                     dense Cholesky fit
+    ski.bit_identical_threads        full SKI fit posterior bit-identical at
+                                     1 and 4 worker threads
+
+  also required to be present and numeric in BENCH_ski.json:
+    ski.rmse_ski                     SKI held-out RMSE
+    ski.rmse_dense                   dense exact-GP held-out RMSE
+    ski.fit_speedup                  measured dense-vs-SKI fit speedup
+
 A referenced key that is absent is reported as a named error listing the
 keys that *are* available at the deepest resolvable level, so a renamed
 bench field fails loudly instead of looking like a regression.
 
 Usage: check_bench.py BENCH_par.json BENCH_precision.json BENCH_solver.json \
-       BENCH_serve.json BENCH_toeplitz.json
+       BENCH_serve.json BENCH_toeplitz.json BENCH_ski.json
 """
 
 import json
@@ -108,6 +122,20 @@ GATES = {
             "Toeplitz-path Kron apply bit-identical at 1 and 4 worker threads",
         ),
     ],
+    "BENCH_ski.json": [
+        (
+            ("ski", "rmse_within_5pct_of_dense"),
+            "SKI held-out RMSE within 5% of the dense exact-GP baseline",
+        ),
+        (
+            ("ski", "fit_speedup_ge_2x"),
+            "SKI fit >= 2x faster than the dense O(n^3) Cholesky fit",
+        ),
+        (
+            ("ski", "bit_identical_threads"),
+            "SKI fit posterior bit-identical at 1 and 4 worker threads",
+        ),
+    ],
 }
 
 # numeric metrics that must exist (informational gauges the perf
@@ -131,6 +159,11 @@ REQUIRED_NUMBERS = {
     "BENCH_toeplitz.json": [
         (("toeplitz", "mvm_speedup"), "measured FFT-vs-dense time-factor speedup"),
         (("toeplitz", "max_abs_diff_vs_dense"), "FFT-vs-dense MVM agreement"),
+    ],
+    "BENCH_ski.json": [
+        (("ski", "rmse_ski"), "SKI held-out RMSE"),
+        (("ski", "rmse_dense"), "dense exact-GP held-out RMSE"),
+        (("ski", "fit_speedup"), "measured dense-vs-SKI fit speedup"),
     ],
 }
 

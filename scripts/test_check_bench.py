@@ -79,6 +79,16 @@ def synthetic_artifacts():
                 "max_abs_diff_vs_dense": 2.1e-12,
             },
         },
+        "BENCH_ski.json": {
+            "ski": {
+                "rmse_within_5pct_of_dense": True,
+                "fit_speedup_ge_2x": True,
+                "bit_identical_threads": True,
+                "rmse_ski": 0.146,
+                "rmse_dense": 0.142,
+                "fit_speedup": 11.8,
+            },
+        },
     }
 
 
@@ -233,6 +243,35 @@ class MainTests(unittest.TestCase):
         code, _, err = run_main(docs)
         self.assertEqual(code, 1)
         self.assertIn("mvm_speedup", err)
+
+    def test_ski_regressed_rmse_gate_fails(self):
+        docs = synthetic_artifacts()
+        docs["BENCH_ski.json"]["ski"]["rmse_within_5pct_of_dense"] = False
+        code, _, err = run_main(docs)
+        self.assertEqual(code, 1)
+        self.assertIn("REGRESSED", err)
+        self.assertIn("ski.rmse_within_5pct_of_dense", err)
+
+    def test_ski_regressed_speedup_gate_fails(self):
+        docs = synthetic_artifacts()
+        docs["BENCH_ski.json"]["ski"]["fit_speedup_ge_2x"] = False
+        code, _, err = run_main(docs)
+        self.assertEqual(code, 1)
+        self.assertIn("ski.fit_speedup_ge_2x", err)
+
+    def test_ski_thread_divergence_fails(self):
+        docs = synthetic_artifacts()
+        docs["BENCH_ski.json"]["ski"]["bit_identical_threads"] = False
+        code, _, err = run_main(docs)
+        self.assertEqual(code, 1)
+        self.assertIn("ski.bit_identical_threads", err)
+
+    def test_ski_missing_rmse_number_fails(self):
+        docs = synthetic_artifacts()
+        del docs["BENCH_ski.json"]["ski"]["rmse_ski"]
+        code, _, err = run_main(docs)
+        self.assertEqual(code, 1)
+        self.assertIn("rmse_ski", err)
 
     def test_fit_rows_must_exist(self):
         docs = synthetic_artifacts()
